@@ -1,0 +1,62 @@
+//! Codec throughput — the Figure-6 "compression time" microscope.
+//!
+//! Encodes + decodes a 1M-param update through every uplink codec and
+//! reports median latency and element throughput. Regenerates the
+//! compression-cost ordering of Figure 6 (EDEN/DRIVE pay the rotation,
+//! FedMRN decode pays only noise-regen + masked accumulate).
+
+use fedmrn::bench::Bench;
+use fedmrn::compress::{fedmrn as mrn, GradCodec, MaskType};
+use fedmrn::noise::{NoiseDist, NoiseGen};
+
+fn main() {
+    let d = 1_000_000usize;
+    let mut g = NoiseGen::new(1);
+    let mut x = vec![0.0f32; d];
+    g.fill(NoiseDist::Gaussian { alpha: 0.01 }, &mut x);
+
+    let mut b = Bench::with_iters(2, 9);
+    let codecs = [
+        GradCodec::Identity,
+        GradCodec::SignSgd,
+        GradCodec::TernGrad,
+        GradCodec::TopK { frac: 0.03 },
+        GradCodec::Drive,
+        GradCodec::Eden,
+        GradCodec::PostSm {
+            dist: NoiseDist::Uniform { alpha: 0.01 },
+            mask_type: MaskType::Binary,
+        },
+    ];
+    for codec in codecs {
+        let mut seed = 0u64;
+        b.run(&format!("encode/{}", codec.name()), Some(d as u64), || {
+            seed += 1;
+            std::hint::black_box(codec.encode(&x, seed));
+        });
+        let payload = codec.encode(&x, 7);
+        b.run(&format!("decode/{}", codec.name()), Some(d as u64), || {
+            std::hint::black_box(codec.decode(&payload, d).unwrap());
+        });
+    }
+
+    // FedMRN server path: seed -> noise regen -> fused accumulate
+    let mask: Vec<f32> = (0..d).map(|i| (i % 2) as f32).collect();
+    let payload = mrn::make_payload(&mask, 42, MaskType::Binary);
+    let dist = NoiseDist::Uniform { alpha: 0.01 };
+    let mut acc = vec![0.0f32; d];
+    let mut scratch = Vec::new();
+    b.run("decode/fedmrn (fused accumulate)", Some(d as u64), || {
+        mrn::accumulate(&payload, dist, MaskType::Binary, 0.1, &mut acc,
+                        &mut scratch)
+        .unwrap();
+    });
+    b.run("decode/fedmrn (materialised)", Some(d as u64), || {
+        std::hint::black_box(
+            mrn::decode(&payload, d, dist, MaskType::Binary).unwrap(),
+        );
+    });
+
+    b.report(&format!("uplink codecs @ d = {d}"));
+    b.write_json("results/bench_codec.json").unwrap();
+}

@@ -1,0 +1,25 @@
+//! FWHT scaling (the DRIVE/EDEN rotation substrate): O(d log d) across
+//! sizes, plus the full rotate/rotate_inv round trip.
+
+use fedmrn::bench::Bench;
+use fedmrn::fwht;
+use fedmrn::noise::{NoiseDist, NoiseGen};
+
+fn main() {
+    let mut b = Bench::with_iters(2, 9);
+    for log2 in [14usize, 17, 20] {
+        let d = 1usize << log2;
+        let mut g = NoiseGen::new(log2 as u64);
+        let mut v = vec![0.0f32; d];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut v);
+        b.run(&format!("fwht d=2^{log2}"), Some(d as u64), || {
+            fwht::fwht_inplace(&mut v);
+        });
+        b.run(&format!("rotate+inv d=2^{log2}"), Some(d as u64), || {
+            fwht::rotate(&mut v, 7);
+            fwht::rotate_inv(&mut v, 7);
+        });
+    }
+    b.report("fast Walsh-Hadamard transform");
+    b.write_json("results/bench_fwht.json").unwrap();
+}

@@ -1,0 +1,43 @@
+//! End-to-end federated round latency per method (the Figure-6 frame at
+//! system granularity): one full round — client selection, local
+//! training through XLA, wire encode/decode, aggregation, evaluation —
+//! on the smoke_mlp artifact.
+
+use fedmrn::bench::Bench;
+use fedmrn::cli::Args;
+use fedmrn::coordinator::{Federation, Method, RunConfig};
+use fedmrn::exp;
+use fedmrn::noise::NoiseDist;
+use fedmrn::runtime::Runtime;
+
+fn main() {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let mut args = Args::parse(["--preset", "smoke"].iter().map(|s| s.to_string()))
+        .unwrap();
+    let opts = exp::ExpOpts::from_args(&mut args).unwrap();
+
+    let mut b = Bench::with_iters(1, 3);
+    for method_name in [
+        "fedavg", "fedmrn", "fedmrns", "signsgd", "terngrad", "topk", "drive",
+        "eden", "fedpm", "fedsparsify",
+    ] {
+        let noise = NoiseDist::Uniform { alpha: 0.05 };
+        let method = Method::parse(method_name, noise).unwrap();
+        b.run(&format!("round/{method_name}"), None, || {
+            let (config, split) = exp::dataset_split("smoke", &opts).unwrap();
+            let mut cfg = RunConfig::new(&config, method);
+            cfg.rounds = 1;
+            cfg.n_clients = 8;
+            cfg.clients_per_round = 4;
+            cfg.local_epochs = 2;
+            cfg.lr = 0.3;
+            cfg.noise = noise;
+            cfg.seed = 9;
+            let mut fed = Federation::new(&rt, cfg, split).unwrap();
+            std::hint::black_box(fed.run().unwrap());
+        });
+    }
+    b.report("one federated round, smoke_mlp (4 clients x 2 epochs)");
+    b.write_json("results/bench_round.json").unwrap();
+}

@@ -1,0 +1,121 @@
+//! L2 perf ablation (DESIGN.md §8.2): per-step HLO dispatch vs the fused
+//! lax.scan epoch export.
+//!
+//! The per-step path pays one host↔device round trip (w/u in and out)
+//! per batch; the epoch path amortises it to one dispatch per epoch.
+//! Measured on smoke_mlp and fmnist_cnn4 (the configs exporting the
+//! `*_epoch` variants).
+
+use fedmrn::bench::Bench;
+use fedmrn::noise::{NoiseDist, NoiseGen};
+use fedmrn::runtime::{
+    lit_f32, lit_f32_shaped, lit_i32_shaped, lit_key, lit_scalar, Runtime,
+};
+
+fn main() {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let mut b = Bench::with_iters(1, 2);
+
+    for config in ["smoke_mlp", "fmnist_cnn4"] {
+        let meta = rt.config(config).unwrap().clone();
+        let Some(nb) = meta.epoch_batches else { continue };
+        let d = meta.param_dim;
+        let batch = meta.batch;
+        let fl = meta.features_per_sample();
+        let mut g = NoiseGen::new(3);
+        let mut x = vec![0.0f32; nb * batch * fl];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut x);
+        let y = vec![0i32; nb * batch];
+        let mut noise = vec![0.0f32; d];
+        g.fill(NoiseDist::Uniform { alpha: 0.01 }, &mut noise);
+        let w = rt.init_params(config).unwrap();
+
+        let mut xdims_step = vec![batch];
+        xdims_step.extend_from_slice(&meta.input_shape);
+        let mut xdims_epoch = vec![nb, batch];
+        xdims_epoch.extend_from_slice(&meta.input_shape);
+
+        // pre-build literals
+        let x_batches: Vec<_> = (0..nb)
+            .map(|i| {
+                lit_f32_shaped(&x[i * batch * fl..(i + 1) * batch * fl], &xdims_step)
+                    .unwrap()
+            })
+            .collect();
+        let y_batches: Vec<_> = (0..nb)
+            .map(|i| {
+                lit_i32_shaped(&y[i * batch..(i + 1) * batch], &[batch]).unwrap()
+            })
+            .collect();
+        let xs_epoch = lit_f32_shaped(&x, &xdims_epoch).unwrap();
+        let ys_epoch = lit_i32_shaped(&y, &[nb, batch]).unwrap();
+        let w_lit = lit_f32(&w);
+        let noise_lit = lit_f32(&noise);
+
+        b.run(&format!("{config}: plain {nb}x per-step"), None, || {
+            let mut w_cur = lit_f32(&w);
+            for i in 0..nb {
+                let outs = rt
+                    .execute_refs(config, "plain_step",
+                                  &[&w_cur, &x_batches[i], &y_batches[i],
+                                    &lit_scalar(0.1)])
+                    .unwrap();
+                w_cur = outs.into_iter().next().unwrap();
+            }
+            std::hint::black_box(w_cur);
+        });
+        b.run(&format!("{config}: plain fused epoch"), None, || {
+            let outs = rt
+                .execute_refs(config, "plain_epoch",
+                              &[&w_lit, &xs_epoch, &ys_epoch, &lit_scalar(0.1)])
+                .unwrap();
+            std::hint::black_box(outs);
+        });
+        b.run(&format!("{config}: mrn_psm {nb}x per-step"), None, || {
+            let mut u_cur = lit_f32(&vec![0.0f32; d]);
+            for i in 0..nb {
+                let outs = rt
+                    .execute_refs(
+                        config,
+                        "mrn_bin_psm",
+                        &[
+                            &w_lit,
+                            &u_cur,
+                            &x_batches[i],
+                            &y_batches[i],
+                            &noise_lit,
+                            &lit_key(i as u64),
+                            &lit_scalar((i + 1) as f32 / nb as f32),
+                            &lit_scalar(0.1),
+                        ],
+                    )
+                    .unwrap();
+                u_cur = outs.into_iter().next().unwrap();
+            }
+            std::hint::black_box(u_cur);
+        });
+        b.run(&format!("{config}: mrn_psm fused epoch"), None, || {
+            let outs = rt
+                .execute_refs(
+                    config,
+                    "mrn_bin_psm_epoch",
+                    &[
+                        &w_lit,
+                        &lit_f32(&vec![0.0f32; d]),
+                        &xs_epoch,
+                        &ys_epoch,
+                        &noise_lit,
+                        &lit_key(9),
+                        &lit_scalar(0.0),
+                        &lit_scalar(1.0 / nb as f32),
+                        &lit_scalar(0.1),
+                    ],
+                )
+                .unwrap();
+            std::hint::black_box(outs);
+        });
+    }
+    b.report("per-step dispatch vs fused lax.scan epoch");
+    b.write_json("results/bench_step_granularity.json").unwrap();
+}

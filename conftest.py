@@ -1,0 +1,8 @@
+"""Root conftest: make `pytest python/tests/` work from the repo root by
+putting the python/ package directory (which holds `compile/` and
+`tests/`) on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

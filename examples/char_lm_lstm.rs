@@ -1,0 +1,49 @@
+//! Appendix-style scenario: federated character-LM with an LSTM
+//! (Shakespeare/LEAF stand-in), comparing FedAvg / SignSGD / EDEN /
+//! FedMRN — the Table-3 roster — on next-character accuracy and uplink
+//! bytes.
+//!
+//! ```bash
+//! cargo run --release --example char_lm_lstm [-- --rounds N]
+//! ```
+
+use fedmrn::cli::Args;
+use fedmrn::coordinator::{Federation, Method, RunConfig};
+use fedmrn::data::charlm::{make_charlm, CharLmSpec};
+use fedmrn::noise::NoiseDist;
+use fedmrn::runtime::Runtime;
+
+fn main() -> fedmrn::Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let mut args = Args::from_env()?;
+    let rounds = args.take_usize("rounds", 12)?;
+    args.finish()?;
+
+    let rt = Runtime::load("artifacts")?;
+    println!("federated char-LM (LSTM, d = {})", rt.config("charlm_lstm")?.param_dim);
+    println!("{:<10} {:>10} {:>12} {:>12}", "method", "acc", "bpp", "secs");
+    for method_name in ["fedavg", "signsgd", "eden", "fedmrn"] {
+        let split = make_charlm(CharLmSpec::shakespeare_like(40, 640, 96, 5));
+        let noise = NoiseDist::Uniform { alpha: 1e-2 };
+        let method = Method::parse(method_name, noise)?;
+        let mut cfg = RunConfig::new("charlm_lstm", method);
+        cfg.rounds = rounds;
+        cfg.n_clients = 16;
+        cfg.clients_per_round = 4;
+        cfg.local_epochs = 1;
+        cfg.max_batches_per_epoch = 4;
+        cfg.lr = 0.5;
+        cfg.noise = noise;
+        cfg.seed = 5;
+        let mut fed = Federation::new(&rt, cfg, split)?;
+        let res = fed.run()?;
+        println!(
+            "{:<10} {:>10.4} {:>12.2} {:>12.1}",
+            method_name,
+            res.final_acc(),
+            res.uplink_bpp(),
+            res.wall_secs
+        );
+    }
+    Ok(())
+}

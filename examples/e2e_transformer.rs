@@ -1,0 +1,72 @@
+//! End-to-end driver (DESIGN.md row E2E): federated training of a
+//! ~1M-parameter decoder-only transformer char-LM with FedMRN, logging
+//! the loss curve and communication ledger.
+//!
+//! This is the all-layers-compose proof: Rust coordinator (L3) drives
+//! the AOT'd JAX transformer (L2) whose FedMRN step runs the Pallas PSM
+//! kernel (L1), on a synthetic multi-style character corpus. FedAvg
+//! runs as the reference arm.
+//!
+//! ```bash
+//! cargo run --release --example e2e_transformer [-- --rounds N]
+//! ```
+//!
+//! Outputs: results/e2e_transformer_{fedmrn,fedavg}.csv and a summary on
+//! stdout. Recorded in EXPERIMENTS.md §E2E.
+
+use fedmrn::cli::Args;
+use fedmrn::coordinator::{Federation, Method, RunConfig};
+use fedmrn::data::charlm::{make_charlm, CharLmSpec};
+use fedmrn::noise::NoiseDist;
+use fedmrn::runtime::Runtime;
+
+fn main() -> fedmrn::Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let mut args = Args::from_env()?;
+    let rounds = args.take_usize("rounds", 10)?;
+    let clients = args.take_usize("clients", 8)?;
+    let per_round = args.take_usize("per-round", 3)?;
+    let max_batches = args.take_usize("max-batches", 4)?;
+    let train_seqs = args.take_usize("train-seqs", 512)?;
+    args.finish()?;
+
+    let rt = Runtime::load("artifacts")?;
+    let meta = rt.config("charlm_tf")?;
+    println!(
+        "e2e: transformer char-LM, d = {} params, batch {}x{} tokens",
+        meta.param_dim, meta.batch, meta.input_shape[0]
+    );
+
+    std::fs::create_dir_all("results")?;
+    for method_name in ["fedmrn", "fedavg"] {
+        let split = make_charlm(CharLmSpec::shakespeare_like(64, train_seqs, 96, 11));
+        let noise = NoiseDist::Uniform { alpha: 5e-3 };
+        let method = Method::parse(method_name, noise)?;
+        let mut cfg = RunConfig::new("charlm_tf", method);
+        cfg.rounds = rounds;
+        cfg.n_clients = clients;
+        cfg.clients_per_round = per_round;
+        cfg.local_epochs = 1;
+        cfg.max_batches_per_epoch = max_batches;
+        cfg.lr = 0.25;
+        cfg.noise = noise;
+        cfg.seed = 11;
+        let mut fed = Federation::new(&rt, cfg, split)?;
+        fed.verbose = true;
+        let res = fed.run()?;
+        let path = format!("results/e2e_transformer_{method_name}.csv");
+        res.write_csv(&path)?;
+        println!(
+            "[{method_name}] final next-char acc {:.4} | train loss {:.3} -> {:.3} \
+             | uplink {:.2} bpp, {} B total | {:.0}s",
+            res.final_acc(),
+            res.records.first().map(|r| r.train_loss).unwrap_or(f64::NAN),
+            res.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
+            res.uplink_bpp(),
+            res.uplink_bytes,
+            res.wall_secs,
+        );
+        println!("loss curve -> {path}");
+    }
+    Ok(())
+}

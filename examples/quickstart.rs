@@ -1,0 +1,51 @@
+//! Quickstart: FedMRN vs FedAvg on a toy task in a few seconds.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the library's core loop: build a dataset, configure a
+//! federated run, and compare the 1-bit FedMRN uplink against dense
+//! FedAvg on accuracy and measured wire bytes.
+
+use fedmrn::cli::Args;
+use fedmrn::coordinator::{Federation, Method, RunConfig};
+use fedmrn::exp;
+use fedmrn::noise::NoiseDist;
+use fedmrn::runtime::Runtime;
+
+fn main() -> fedmrn::Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let rt = Runtime::load("artifacts")?;
+
+    // a small linearly-separable task bound to the smoke_mlp artifact
+    let mut args = Args::parse(["--preset", "smoke"].iter().map(|s| s.to_string()))?;
+    let opts = exp::ExpOpts::from_args(&mut args)?;
+
+    println!("method     final_acc   uplink_bpp   uplink_bytes");
+    println!("------     ---------   ----------   ------------");
+    for method_name in ["fedavg", "fedmrn", "fedmrns"] {
+        let (config, split) = exp::dataset_split("smoke", &opts)?;
+        let noise = NoiseDist::Uniform { alpha: 0.05 };
+        let method = Method::parse(method_name, noise)?;
+        let mut cfg = RunConfig::new(&config, method);
+        cfg.rounds = 6;
+        cfg.n_clients = 8;
+        cfg.clients_per_round = 4;
+        cfg.local_epochs = 2;
+        cfg.lr = 0.3;
+        cfg.noise = noise;
+        cfg.seed = 7;
+        let mut fed = Federation::new(&rt, cfg, split)?;
+        let res = fed.run()?;
+        println!(
+            "{:<10} {:>9.4}   {:>10.2}   {:>12}",
+            method_name,
+            res.final_acc(),
+            res.uplink_bpp(),
+            res.uplink_bytes
+        );
+    }
+    println!("\nFedMRN matches FedAvg accuracy at ~1/32 the uplink bytes.");
+    Ok(())
+}

@@ -1,0 +1,185 @@
+"""AOT export: lower every (config, step) pair to XLA HLO *text*.
+
+This is the only place Python touches the pipeline — it runs once at
+build time (``make artifacts``) and writes:
+
+  artifacts/<config>__<step>.hlo.txt    HLO text module
+  artifacts/<config>__<step>.meta.json  input/output shapes + dtypes
+  artifacts/<config>.init.bin           deterministic initial flat params (f32 LE)
+  artifacts/<config>.layout.json        named per-layer layout of the flat vector
+  artifacts/manifest.json               index of everything above
+
+HLO **text** (not ``HloModuleProto.serialize()``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import steps as S
+from .model import build_configs, steps_for
+
+INIT_SEED = 0x5EED_0001
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# step-name -> builder(cfg) -> (fn, example_args)
+def _builders(cfg):
+    m, b = cfg.model, cfg.batch
+    eb = cfg.epoch_batches
+    out = {
+        "plain_step": lambda: S.plain_step(m, b),
+        "eval_step": lambda: S.eval_step(m, b),
+        "grad_step": lambda: S.grad_step(m, b),
+        "mrn_bin_psm": lambda: S.mrn_step(m, b, "psm", "binary"),
+        "mrn_sign_psm": lambda: S.mrn_step(m, b, "psm", "signed"),
+        "mrn_bin_sm": lambda: S.mrn_step(m, b, "sm", "binary"),
+        "mrn_bin_pm": lambda: S.mrn_step(m, b, "pm", "binary"),
+        "mrn_bin_dm": lambda: S.mrn_step(m, b, "dm", "binary"),
+        "mrn_sign_sm": lambda: S.mrn_step(m, b, "sm", "signed"),
+        "mrn_sign_dm": lambda: S.mrn_step(m, b, "dm", "signed"),
+        "finalize_bin": lambda: S.finalize(m, "binary"),
+        "finalize_sign": lambda: S.finalize(m, "signed"),
+        "finalize_bin_dm": lambda: S.finalize(m, "binary", deterministic=True),
+        "fedpm_step": lambda: S.fedpm_step(m, b),
+        "fedpm_sample": lambda: S.fedpm_sample_mask(m),
+    }
+    if eb:
+        out["plain_epoch"] = lambda: S.plain_epoch(m, b, eb)
+        out["mrn_bin_psm_epoch"] = lambda: S.mrn_epoch(m, b, eb, "psm", "binary")
+    return out
+
+
+def _spec_json(sds):
+    dt = np.dtype(sds.dtype).name
+    return {"shape": list(sds.shape), "dtype": dt}
+
+
+def export_one(cfg, step_name, out_dir, force=False):
+    """Lower one (config, step) to HLO text + meta. Returns manifest row."""
+    base = f"{cfg.name}__{step_name}"
+    hlo_path = os.path.join(out_dir, base + ".hlo.txt")
+    meta_path = os.path.join(out_dir, base + ".meta.json")
+
+    fn, args = _builders(cfg)[step_name]()
+    if (not force and os.path.exists(hlo_path) and os.path.exists(meta_path)):
+        with open(meta_path) as f:
+            return json.load(f)
+
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    out_struct = jax.eval_shape(fn, *args)
+    outs = jax.tree_util.tree_leaves(out_struct)
+    meta = {
+        "name": base,
+        "config": cfg.name,
+        "step": step_name,
+        "hlo": os.path.basename(hlo_path),
+        "inputs": [_spec_json(a) for a in args],
+        "outputs": [_spec_json(o) for o in outs],
+        "param_dim": cfg.model.dim,
+        "batch": cfg.batch,
+        "epoch_batches": cfg.epoch_batches,
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "lower_seconds": round(time.time() - t0, 3),
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def export_config(cfg, out_dir, only_steps=None, force=False):
+    rows = []
+    # Initial parameters + layout (deterministic per model name).
+    seed = INIT_SEED ^ int.from_bytes(
+        hashlib.sha256(cfg.name.encode()).digest()[:4], "little")
+    init = cfg.model.spec.init(seed)
+    init_path = os.path.join(out_dir, f"{cfg.name}.init.bin")
+    init.astype("<f4").tofile(init_path)
+    with open(os.path.join(out_dir, f"{cfg.name}.layout.json"), "w") as f:
+        f.write(cfg.model.spec.layout_json())
+
+    for step_name in steps_for(cfg):
+        if only_steps and step_name not in only_steps:
+            continue
+        t0 = time.time()
+        rows.append(export_one(cfg, step_name, out_dir, force=force))
+        print(f"  {cfg.name}__{step_name}: {time.time() - t0:.1f}s",
+              flush=True)
+    return {
+        "config": cfg.name,
+        "param_dim": cfg.model.dim,
+        "batch": cfg.batch,
+        "epoch_batches": cfg.epoch_batches,
+        "init_bin": os.path.basename(init_path),
+        "init_seed": seed,
+        "layout": f"{cfg.name}.layout.json",
+        "loss_kind": cfg.model.loss_kind,
+        "n_classes": cfg.model.n_classes,
+        "input": _spec_json(jax.ShapeDtypeStruct(
+            cfg.model.input_spec[0],
+            {"f32": np.float32, "i32": np.int32}[cfg.model.input_spec[1]])),
+        "label": _spec_json(jax.ShapeDtypeStruct(
+            cfg.model.label_spec[0],
+            {"f32": np.float32, "i32": np.int32}[cfg.model.label_spec[1]])),
+        "steps": rows,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="subset of config names (default: all)")
+    ap.add_argument("--steps", nargs="*", default=None,
+                    help="subset of step names (default: all per config)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact already exists")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    configs = build_configs()
+    names = args.configs or list(configs)
+    manifest = {"format": 1, "configs": []}
+    t0 = time.time()
+    for name in names:
+        if name not in configs:
+            print(f"unknown config {name!r}; have {sorted(configs)}",
+                  file=sys.stderr)
+            return 2
+        print(f"[{name}] dim={configs[name].model.dim}", flush=True)
+        manifest["configs"].append(
+            export_config(configs[name], args.out, args.steps,
+                          force=args.force))
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"exported {len(names)} configs in {time.time() - t0:.1f}s "
+          f"-> {args.out}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,248 @@
+"""L1 Pallas kernels for FedMRN's Progressive Stochastic Masking (PSM).
+
+The paper's compute hot-spot is the per-parameter masking map applied on
+every local SGD step (Algorithm 1, lines 15-18): given the learnable
+update ``u``, the predefined noise ``n = G(s)``, SM Bernoulli draws
+``r_sm``, PM gate draws ``r_pm`` and the gate probability ``p = tau/S``,
+produce the surrogate update ``û``. A naive jnp expression materialises
+5-7 intermediates in HBM; the fused kernel reads each operand once and
+writes once (memory-bound; see DESIGN.md §4 and §9 for the TPU roofline
+analysis).
+
+The kernels run under ``interpret=True`` — mandatory here: CPU PJRT
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+HLO so the AOT artifacts run on the Rust CPU client. On a real TPU the
+same BlockSpecs tile HBM→VMEM in (BLOCK,)-sized lanes.
+
+Every kernel is checked elementwise against the pure-jnp oracle in
+``ref.py`` by ``python/tests/test_kernels.py`` (hypothesis sweeps shapes
+and value ranges).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned block: 8x128 VPU tiles * 4 sublanes. Flat vectors are padded
+# to a multiple of BLOCK by the wrappers below and sliced back afterwards.
+BLOCK = 4096
+
+_EPS = 1e-12
+
+
+def _pad_flat(x, block=BLOCK):
+    """Pad a 1-D array to a multiple of ``block`` (zeros)."""
+    d = x.shape[0]
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x
+
+
+def _grid(d, block=BLOCK):
+    return (d + block - 1) // block
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (operate on one VMEM block)
+# ---------------------------------------------------------------------------
+
+def _safe(n):
+    return jnp.where(jnp.abs(n) < _EPS, jnp.where(n >= 0.0, _EPS, -_EPS), n)
+
+
+def _psm_binary_body(u_ref, n_ref, rs_ref, rp_ref, p_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    # SM: p1 = clip(u/n, 0, 1); m = 1{r_sm < p1}; û_sm = n*m  (divide via
+    # the safed denominator only — multiplies/clips use the raw noise so
+    # n == 0 yields exactly 0, matching ref.py bit-for-bit)
+    p1 = jnp.clip(u / _safe(n), 0.0, 1.0)
+    u_sm = n * (rs_ref[...] < p1).astype(u.dtype)
+    # PM clip: ū = clamp(u, [0, n] or [n, 0])
+    u_bar = jnp.clip(u, jnp.minimum(n, 0.0), jnp.maximum(n, 0.0))
+    gate = (rp_ref[...] < p_ref[0]).astype(u.dtype)
+    o_ref[...] = (1.0 - gate) * u_bar + gate * u_sm
+
+
+def _psm_signed_body(u_ref, n_ref, rs_ref, rp_ref, p_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    # SM: p1 = clip((u+n)/2n, 0, 1); m = 2*1{r<p1}-1; û_sm = n*m
+    p1 = jnp.clip((u + n) / (2.0 * _safe(n)), 0.0, 1.0)
+    m = 2.0 * (rs_ref[...] < p1).astype(u.dtype) - 1.0
+    u_sm = n * m
+    a = jnp.abs(n)
+    u_bar = jnp.clip(u, -a, a)
+    gate = (rp_ref[...] < p_ref[0]).astype(u.dtype)
+    o_ref[...] = (1.0 - gate) * u_bar + gate * u_sm
+
+
+def _sm_binary_body(u_ref, n_ref, rs_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    p1 = jnp.clip(u / _safe(n), 0.0, 1.0)
+    o_ref[...] = n * (rs_ref[...] < p1).astype(u.dtype)
+
+
+def _sm_signed_body(u_ref, n_ref, rs_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    p1 = jnp.clip((u + n) / (2.0 * _safe(n)), 0.0, 1.0)
+    o_ref[...] = n * (2.0 * (rs_ref[...] < p1).astype(u.dtype) - 1.0)
+
+
+def _pm_dm_binary_body(u_ref, n_ref, rp_ref, p_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    u_dm = n * (u * n > 0.0).astype(u.dtype)
+    u_bar = jnp.clip(u, jnp.minimum(n, 0.0), jnp.maximum(n, 0.0))
+    gate = (rp_ref[...] < p_ref[0]).astype(u.dtype)
+    o_ref[...] = (1.0 - gate) * u_bar + gate * u_dm
+
+
+def _pm_dm_signed_body(u_ref, n_ref, rp_ref, p_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    m = 2.0 * (u * n > 0.0).astype(u.dtype) - 1.0
+    a = jnp.abs(n)
+    u_bar = jnp.clip(u, -a, a)
+    gate = (rp_ref[...] < p_ref[0]).astype(u.dtype)
+    o_ref[...] = (1.0 - gate) * u_bar + gate * n * m
+
+
+def _dm_binary_body(u_ref, n_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    o_ref[...] = n * (u * n > 0.0).astype(u.dtype)
+
+
+def _dm_signed_body(u_ref, n_ref, o_ref):
+    u = u_ref[...]
+    n = n_ref[...]
+    o_ref[...] = n * (2.0 * (u * n > 0.0).astype(u.dtype) - 1.0)
+
+
+def _finalize_binary_body(u_ref, n_ref, rs_ref, o_ref):
+    u = u_ref[...]
+    n = _safe(n_ref[...])
+    p1 = jnp.clip(u / n, 0.0, 1.0)
+    o_ref[...] = (rs_ref[...] < p1).astype(u.dtype)
+
+
+def _finalize_signed_body(u_ref, n_ref, rs_ref, o_ref):
+    u = u_ref[...]
+    n = _safe(n_ref[...])
+    p1 = jnp.clip((u + n) / (2.0 * n), 0.0, 1.0)
+    o_ref[...] = 2.0 * (rs_ref[...] < p1).astype(u.dtype) - 1.0
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (pad → tile → slice)
+# ---------------------------------------------------------------------------
+
+def _vec_spec():
+    return pl.BlockSpec((BLOCK,), lambda i: (i,))
+
+
+def _scalar_spec():
+    # Broadcast scalar: every block sees the same (1,)-block.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _call_elementwise(body, vec_args, scalar_args=()):
+    """Run ``body`` over equally-shaped flat f32 vectors (+ scalars)."""
+    d = vec_args[0].shape[0]
+    padded = [_pad_flat(a) for a in vec_args]
+    scalars = [jnp.asarray(s, jnp.float32).reshape((1,)) for s in scalar_args]
+    out = pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct(padded[0].shape, jnp.float32),
+        grid=(_grid(padded[0].shape[0]),),
+        in_specs=[_vec_spec() for _ in padded] + [_scalar_spec() for _ in scalars],
+        out_specs=_vec_spec(),
+        interpret=True,
+    )(*padded, *scalars)
+    return out[:d]
+
+
+def psm_binary(u, n, r_sm, r_pm, p_gate):
+    """Fused PSM forward map, binary masks (Eq. 10)."""
+    return _call_elementwise(_psm_binary_body, (u, n, r_sm, r_pm), (p_gate,))
+
+
+def psm_signed(u, n, r_sm, r_pm, p_gate):
+    """Fused PSM forward map, signed masks (Eq. 10 with Eq. 7 inside)."""
+    return _call_elementwise(_psm_signed_body, (u, n, r_sm, r_pm), (p_gate,))
+
+
+def sm_only_binary(u, n, r_sm, r_pm=None, p_gate=None):
+    """Ablation: FedMRN w/o PM — pure stochastic masking."""
+    del r_pm, p_gate
+    return _call_elementwise(_sm_binary_body, (u, n, r_sm))
+
+
+def sm_only_signed(u, n, r_sm, r_pm=None, p_gate=None):
+    del r_pm, p_gate
+    return _call_elementwise(_sm_signed_body, (u, n, r_sm))
+
+
+def pm_dm_binary(u, n, r_sm, r_pm, p_gate):
+    """Ablation: FedMRN w/o SM — PM gate over deterministic masking."""
+    del r_sm
+    return _call_elementwise(_pm_dm_binary_body, (u, n, r_pm), (p_gate,))
+
+
+def pm_dm_signed(u, n, r_sm, r_pm, p_gate):
+    del r_sm
+    return _call_elementwise(_pm_dm_signed_body, (u, n, r_pm), (p_gate,))
+
+
+def dm_only_binary(u, n, r_sm=None, r_pm=None, p_gate=None):
+    """Ablation: FedMRN w/o PSM — plain deterministic masking."""
+    del r_sm, r_pm, p_gate
+    return _call_elementwise(_dm_binary_body, (u, n))
+
+
+def dm_only_signed(u, n, r_sm=None, r_pm=None, p_gate=None):
+    del r_sm, r_pm, p_gate
+    return _call_elementwise(_dm_signed_body, (u, n))
+
+
+def finalize_binary(u, n, r_sm):
+    """Final wire mask, binary {0,1} as f32."""
+    return _call_elementwise(_finalize_binary_body, (u, n, r_sm))
+
+
+def finalize_signed(u, n, r_sm):
+    """Final wire mask, signed {-1,+1} as f32."""
+    return _call_elementwise(_finalize_signed_body, (u, n, r_sm))
+
+
+MASK_FNS = {
+    ("psm", "binary"): psm_binary,
+    ("psm", "signed"): psm_signed,
+    ("sm", "binary"): sm_only_binary,
+    ("sm", "signed"): sm_only_signed,
+    ("pm", "binary"): pm_dm_binary,
+    ("pm", "signed"): pm_dm_signed,
+    ("dm", "binary"): dm_only_binary,
+    ("dm", "signed"): dm_only_signed,
+}
+
+FINALIZE_FNS = {
+    "binary": finalize_binary,
+    "signed": finalize_signed,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes_per_block(n_operands=5):
+    """VMEM footprint estimate for one grid step (DESIGN.md §9).
+
+    Each operand block is BLOCK f32 = 16 KiB; with double buffering the
+    working set is 2 * (n_operands + 1 output) blocks.
+    """
+    return 2 * (n_operands + 1) * BLOCK * 4

@@ -1,0 +1,191 @@
+"""Pure-jnp reference oracle for the FedMRN masking kernels.
+
+These are the CORRECTNESS ground truth for the Pallas kernels in
+``psm.py`` (pytest/hypothesis compare the two elementwise). Everything is
+written with *explicit* uniform random inputs so the kernels are pure
+functions — the Rust coordinator (or the L2 step functions) supply the
+randomness.
+
+Notation follows the paper (MM'24, §3.2):
+  u      — learnable model update (the trainable copy, initialised to 0)
+  n      — predefined random noise G(s)
+  r_sm   — U[0,1) draws for Stochastic Masking's Bernoulli sampling
+  r_pm   — U[0,1) draws for Progressive Masking's per-element gate
+  p_gate — scalar in [0,1], the PM probability tau/S
+  m      — the binary {0,1} or signed {-1,+1} mask
+  u_hat  — masked random noise n ⊙ m (the surrogate model update)
+"""
+
+import jax.numpy as jnp
+
+# Guard against division by (near-)zero noise. Uniform/Gaussian noise is
+# almost surely nonzero; Bernoulli {-a,+a} noise is exactly nonzero. The
+# epsilon only matters for adversarial inputs and keeps the kernel total.
+_EPS = 1e-12
+
+
+def _safe_div(a, b):
+    return a / jnp.where(jnp.abs(b) < _EPS, jnp.where(b >= 0, _EPS, -_EPS), b)
+
+
+# ---------------------------------------------------------------------------
+# Mask probabilities (Eq. 6 / Eq. 7)
+# ---------------------------------------------------------------------------
+
+def prob_binary(u, n):
+    """P[m = 1] for binary masks: clip(u/n, 0, 1)  (Eq. 6)."""
+    return jnp.clip(_safe_div(u, n), 0.0, 1.0)
+
+
+def prob_signed(u, n):
+    """P[m = +1] for signed masks: clip((u+n)/(2n), 0, 1)  (Eq. 7)."""
+    return jnp.clip(_safe_div(u + n, 2.0 * n), 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic Masking (SM) — Eq. 8
+# ---------------------------------------------------------------------------
+
+def sm_mask_binary(u, n, r_sm):
+    """Sample the binary mask m ∈ {0,1} via Bernoulli(prob_binary)."""
+    return (r_sm < prob_binary(u, n)).astype(u.dtype)
+
+
+def sm_mask_signed(u, n, r_sm):
+    """Sample the signed mask m ∈ {-1,+1} via Bernoulli(prob_signed)."""
+    return 2.0 * (r_sm < prob_signed(u, n)).astype(u.dtype) - 1.0
+
+
+def sm_binary(u, n, r_sm):
+    """û = n ⊙ m with binary stochastic masks (unbiased when u/n ∈ [0,1])."""
+    return n * sm_mask_binary(u, n, r_sm)
+
+
+def sm_signed(u, n, r_sm):
+    """û = n ⊙ m with signed stochastic masks (unbiased when u/n ∈ [-1,1])."""
+    return n * sm_mask_signed(u, n, r_sm)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic Masking (DM) — the ablation baseline (§3.2.1)
+# ---------------------------------------------------------------------------
+
+def dm_mask_binary(u, n):
+    """m = 1 iff u and n share a sign (u·n > 0)."""
+    return (u * n > 0.0).astype(u.dtype)
+
+
+def dm_mask_signed(u, n):
+    """m = sign(u)·sign(n), mapping the u·n ≤ 0 case to -1 so m ∈ {-1,+1}."""
+    same = (u * n > 0.0).astype(u.dtype)
+    return 2.0 * same - 1.0
+
+
+def dm_binary(u, n):
+    return n * dm_mask_binary(u, n)
+
+
+def dm_signed(u, n):
+    return n * dm_mask_signed(u, n)
+
+
+# ---------------------------------------------------------------------------
+# Progressive Masking (PM) clip targets — ū = clip(u, G(s)) (Eq. 10)
+# ---------------------------------------------------------------------------
+
+def pm_clip_binary(u, n):
+    """Clamp u into [0, n] (or [n, 0] when n < 0)."""
+    lo = jnp.minimum(n, 0.0)
+    hi = jnp.maximum(n, 0.0)
+    return jnp.clip(u, lo, hi)
+
+
+def pm_clip_signed(u, n):
+    """Clamp u into [-|n|, |n|]."""
+    a = jnp.abs(n)
+    return jnp.clip(u, -a, a)
+
+
+# ---------------------------------------------------------------------------
+# Full PSM forward map (Eq. 10): û = (1-P) ⊙ ū + P ⊙ SM(u, n)
+# ---------------------------------------------------------------------------
+
+def psm_binary(u, n, r_sm, r_pm, p_gate):
+    gate = (r_pm < p_gate).astype(u.dtype)
+    return (1.0 - gate) * pm_clip_binary(u, n) + gate * sm_binary(u, n, r_sm)
+
+
+def psm_signed(u, n, r_sm, r_pm, p_gate):
+    gate = (r_pm < p_gate).astype(u.dtype)
+    return (1.0 - gate) * pm_clip_signed(u, n) + gate * sm_signed(u, n, r_sm)
+
+
+# Ablation variants used by the Figure-4 study -------------------------------
+
+def sm_only_binary(u, n, r_sm, r_pm, p_gate):
+    """FedMRN w/o PM: every element is always stochastically masked."""
+    del r_pm, p_gate
+    return sm_binary(u, n, r_sm)
+
+
+def sm_only_signed(u, n, r_sm, r_pm, p_gate):
+    del r_pm, p_gate
+    return sm_signed(u, n, r_sm)
+
+
+def pm_dm_binary(u, n, r_sm, r_pm, p_gate):
+    """FedMRN w/o SM: PM gating, but deterministic masking inside."""
+    del r_sm
+    gate = (r_pm < p_gate).astype(u.dtype)
+    return (1.0 - gate) * pm_clip_binary(u, n) + gate * dm_binary(u, n)
+
+
+def pm_dm_signed(u, n, r_sm, r_pm, p_gate):
+    del r_sm
+    gate = (r_pm < p_gate).astype(u.dtype)
+    return (1.0 - gate) * pm_clip_signed(u, n) + gate * dm_signed(u, n)
+
+
+def dm_only_binary(u, n, r_sm, r_pm, p_gate):
+    """FedMRN w/o PSM: plain deterministic masking every step."""
+    del r_sm, r_pm, p_gate
+    return dm_binary(u, n)
+
+
+def dm_only_signed(u, n, r_sm, r_pm, p_gate):
+    del r_sm, r_pm, p_gate
+    return dm_signed(u, n)
+
+
+# ---------------------------------------------------------------------------
+# Mask finalisation (Algorithm 1, line 20): the bits that go on the wire
+# ---------------------------------------------------------------------------
+
+def finalize_binary(u, n, r_sm):
+    """Final binary mask m ∈ {0,1} as f32 — the Rust side packs to bits."""
+    return sm_mask_binary(u, n, r_sm)
+
+
+def finalize_signed(u, n, r_sm):
+    """Final signed mask in {-1,+1} as f32 (bit = m > 0 on the wire)."""
+    return sm_mask_signed(u, n, r_sm)
+
+
+def finalize_binary_dm(u, n):
+    return dm_mask_binary(u, n)
+
+
+def finalize_signed_dm(u, n):
+    return dm_mask_signed(u, n)
+
+
+MASK_FNS = {
+    ("psm", "binary"): psm_binary,
+    ("psm", "signed"): psm_signed,
+    ("sm", "binary"): sm_only_binary,
+    ("sm", "signed"): sm_only_signed,
+    ("pm", "binary"): pm_dm_binary,
+    ("pm", "signed"): pm_dm_signed,
+    ("dm", "binary"): dm_only_binary,
+    ("dm", "signed"): dm_only_signed,
+}

@@ -1,0 +1,74 @@
+"""Model/experiment configuration registry — the single source of truth
+for what gets AOT-exported.
+
+A *config* pairs a model with the batch geometry the Rust runtime will
+drive it at. ``aot.py`` walks ``EXPORTS`` and lowers each listed step
+variant for each config. The Rust side discovers everything through the
+``artifacts/manifest.json`` written at export time; nothing here is
+imported at runtime.
+"""
+
+from .models.cnn import cnn4, cnn8
+from .models.lstm import lstm
+from .models.mlp import mlp
+from .models.segnet import segnet
+from .models.transformer import transformer
+
+BATCH = 32          # images per batch (paper uses 64; scaled for CPU)
+SEQ_BATCH = 16      # sequences per batch for the char-LM models
+
+
+class Config:
+    def __init__(self, name, model, batch, epoch_batches=None):
+        self.name = name
+        self.model = model
+        self.batch = batch
+        # If set, also export the fused lax.scan epoch variants with this
+        # many stacked batches per dispatch.
+        self.epoch_batches = epoch_batches
+
+
+def build_configs():
+    """Instantiate every dataset/model pairing used by the experiments."""
+    return {c.name: c for c in [
+        # Paper §5.1.1: 4-conv CNN for FMNIST (1x28x28) and SVHN (3x32x32)
+        Config("fmnist_cnn4", cnn4(1, 28, 10, width=16, name="fmnist_cnn4"), BATCH,
+               epoch_batches=8),
+        Config("svhn_cnn4", cnn4(3, 32, 10, width=16, name="svhn_cnn4"), BATCH),
+        # Paper §5.1.1: 8-conv CNN for CIFAR-10/100
+        Config("cifar10_cnn8", cnn8(3, 32, 10, width=12, name="cifar10_cnn8"), BATCH),
+        Config("cifar100_cnn8", cnn8(3, 32, 100, width=12, name="cifar100_cnn8"), BATCH),
+        # Appendix Table 3: char-LM LSTM + dense-prediction segnet
+        Config("charlm_lstm", lstm(64, 40, name="charlm_lstm"), SEQ_BATCH),
+        Config("seg_segnet", segnet(3, 32, 4, name="seg_segnet"), BATCH),
+        # E2E driver: decoder-only transformer char-LM
+        Config("charlm_tf", transformer(64, 64, d_model=192, n_heads=4,
+                                        n_layers=2, name="charlm_tf"),
+               SEQ_BATCH),
+        # Smoke/integration-test model (runs in milliseconds)
+        Config("smoke_mlp", mlp(16, 4, hidden=(32, 16), name="smoke_mlp"), 16,
+               epoch_batches=4),
+    ]}
+
+
+# Which step variants to export per config. Keys match builders in aot.py.
+# The ablation variants (sm / pm / dm / signed ablations) are exported for
+# the four image configs (Figure 4); fedpm for the image configs (Table 1);
+# epoch variants where epoch_batches is set (perf §8.2).
+BASE_STEPS = [
+    "plain_step", "eval_step",
+    "mrn_bin_psm", "mrn_sign_psm",
+    "finalize_bin", "finalize_sign", "finalize_bin_dm",
+]
+ABLATION_STEPS = ["mrn_bin_sm", "mrn_bin_pm", "mrn_bin_dm"]
+FEDPM_STEPS = ["fedpm_step", "fedpm_sample"]
+IMAGE_CONFIGS = {"fmnist_cnn4", "svhn_cnn4", "cifar10_cnn8", "cifar100_cnn8"}
+
+
+def steps_for(cfg):
+    steps = list(BASE_STEPS)
+    if cfg.name in IMAGE_CONFIGS or cfg.name == "smoke_mlp":
+        steps += ABLATION_STEPS + FEDPM_STEPS
+    if cfg.epoch_batches:
+        steps += ["plain_epoch", "mrn_bin_psm_epoch"]
+    return steps

@@ -1,0 +1,15 @@
+"""L2 model zoo: pure-JAX models over a single flat f32 parameter vector.
+
+Every model exposes:
+  - ``spec``: a :class:`compile.models.common.ParamSpec` describing the
+    named parameter tensors and their layout inside the flat vector;
+  - ``apply(params_dict, x)``: the forward pass returning logits;
+  - ``loss_kind``: "classify" (softmax CE over trailing logits) or
+    "seq_classify" (per-position CE for language models) or "dense"
+    (per-pixel CE for segmentation).
+
+The flat-vector convention keeps the Rust hot path to contiguous f32
+buffers and makes every uplink codec model-agnostic (DESIGN.md §2).
+"""
+
+from . import common, mlp, cnn, lstm, transformer, segnet  # noqa: F401

@@ -1,0 +1,94 @@
+"""The paper's CNN backbones (§5.1.1).
+
+``cnn4``: four conv layers + one FC head — used for FMNIST and SVHN.
+``cnn8``: eight conv layers + one FC head — used for CIFAR-10/100.
+
+GroupNorm replaces the paper's BatchNorm (see common.group_norm for why);
+ReLU activations throughout, max-pooling between stages, matching the
+paper's "CNN with four/eight convolution layers and one fully connected
+layer" description.
+"""
+
+import jax
+
+from .common import (Model, ParamSpec, conv2d, dense, group_norm, max_pool)
+
+
+def _conv_block_spec(name, cin, cout):
+    return [
+        (f"{name}.w", (3, 3, cin, cout), "fan_in"),
+        (f"{name}.b", (cout,), "zeros"),
+        (f"{name}.gn_scale", (cout,), "ones"),
+        (f"{name}.gn_bias", (cout,), "zeros"),
+    ]
+
+
+def _conv_block(p, name, x):
+    x = conv2d(x, p[f"{name}.w"]) + p[f"{name}.b"]
+    x = group_norm(x, p[f"{name}.gn_scale"], p[f"{name}.gn_bias"])
+    return jax.nn.relu(x)
+
+
+def cnn4(in_ch, hw, n_classes, width=32, name=None):
+    """conv(w)-conv(2w)-pool-conv(4w)-conv(4w)-pool-fc."""
+    w1, w2, w3 = width, width * 2, width * 4
+    final_hw = hw // 4
+    entries = (
+        _conv_block_spec("c1", in_ch, w1)
+        + _conv_block_spec("c2", w1, w2)
+        + _conv_block_spec("c3", w2, w3)
+        + _conv_block_spec("c4", w3, w3)
+        + [("fc.w", (final_hw * final_hw * w3, n_classes), "fan_in"),
+           ("fc.b", (n_classes,), "zeros")]
+    )
+    spec = ParamSpec(entries)
+
+    def apply(p, x):
+        x = _conv_block(p, "c1", x)
+        x = _conv_block(p, "c2", x)
+        x = max_pool(x)
+        x = _conv_block(p, "c3", x)
+        x = _conv_block(p, "c4", x)
+        x = max_pool(x)
+        x = x.reshape(x.shape[0], -1)
+        return dense(x, p["fc.w"], p["fc.b"])
+
+    return Model(name or f"cnn4_{in_ch}x{hw}_{n_classes}", spec, apply,
+                 ((hw, hw, in_ch), "f32"), ((), "i32"), n_classes)
+
+
+def cnn8(in_ch, hw, n_classes, width=24, name=None):
+    """Eight conv layers in three pooled stages + fc (CIFAR backbone)."""
+    w1, w2, w3 = width, width * 2, width * 4
+    final_hw = hw // 8
+    entries = (
+        _conv_block_spec("c1", in_ch, w1)
+        + _conv_block_spec("c2", w1, w1)
+        + _conv_block_spec("c3", w1, w2)
+        + _conv_block_spec("c4", w2, w2)
+        + _conv_block_spec("c5", w2, w3)
+        + _conv_block_spec("c6", w3, w3)
+        + _conv_block_spec("c7", w3, w3)
+        + _conv_block_spec("c8", w3, w3)
+        + [("fc.w", (final_hw * final_hw * w3, n_classes), "fan_in"),
+           ("fc.b", (n_classes,), "zeros")]
+    )
+    spec = ParamSpec(entries)
+
+    def apply(p, x):
+        x = _conv_block(p, "c1", x)
+        x = _conv_block(p, "c2", x)
+        x = max_pool(x)
+        x = _conv_block(p, "c3", x)
+        x = _conv_block(p, "c4", x)
+        x = max_pool(x)
+        x = _conv_block(p, "c5", x)
+        x = _conv_block(p, "c6", x)
+        x = _conv_block(p, "c7", x)
+        x = _conv_block(p, "c8", x)
+        x = max_pool(x)
+        x = x.reshape(x.shape[0], -1)
+        return dense(x, p["fc.w"], p["fc.b"])
+
+    return Model(name or f"cnn8_{in_ch}x{hw}_{n_classes}", spec, apply,
+                 ((hw, hw, in_ch), "f32"), ((), "i32"), n_classes)

@@ -1,0 +1,161 @@
+"""Flat-parameter plumbing shared by every L2 model.
+
+A :class:`ParamSpec` is an ordered list of named f32 tensors. Models are
+pure functions over the *unflattened* dict; the exported step functions
+take the parameters as one flat ``f32[d]`` vector and unflatten with
+static slices (free at HLO level — XLA folds reshapes of contiguous
+slices). The same layout is mirrored in ``artifacts/<model>.layout.json``
+so the Rust side can introspect per-layer structure (e.g. for per-chunk
+codec scales).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec:
+    """Ordered named-tensor layout inside a flat f32 parameter vector."""
+
+    def __init__(self, entries):
+        # entries: list of (name, shape, init_kind)
+        self.entries = [(n, tuple(s), k) for (n, s, k) in entries]
+        self.offsets = {}
+        off = 0
+        for name, shape, _ in self.entries:
+            size = int(np.prod(shape)) if shape else 1
+            self.offsets[name] = (off, size)
+            off += size
+        self.dim = off
+
+    def unflatten(self, flat):
+        """flat f32[d] -> {name: tensor} via static slices."""
+        out = {}
+        for name, shape, _ in self.entries:
+            off, size = self.offsets[name]
+            out[name] = flat[off:off + size].reshape(shape)
+        return out
+
+    def flatten(self, params):
+        return jnp.concatenate(
+            [params[name].reshape(-1) for name, _, _ in self.entries])
+
+    def init(self, seed):
+        """Deterministic initial parameters (numpy, host-side)."""
+        rng = np.random.default_rng(seed)
+        parts = []
+        for name, shape, kind in self.entries:
+            size = int(np.prod(shape)) if shape else 1
+            if kind == "zeros":
+                p = np.zeros(size, np.float32)
+            elif kind == "ones":
+                p = np.ones(size, np.float32)
+            elif kind == "fan_in":
+                # He/Kaiming-normal on the leading fan-in axes: for conv
+                # HWIO the fan-in is H*W*I; for dense (I, O) it is I.
+                fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else size
+                std = np.sqrt(2.0 / max(fan_in, 1))
+                p = rng.normal(0.0, std, size).astype(np.float32)
+            elif kind == "embed":
+                p = rng.normal(0.0, 0.02, size).astype(np.float32)
+            else:
+                raise ValueError(f"unknown init kind {kind!r} for {name}")
+            parts.append(p)
+        return np.concatenate(parts) if parts else np.zeros(0, np.float32)
+
+    def layout_json(self):
+        return json.dumps({
+            "dim": self.dim,
+            "params": [
+                {"name": n, "shape": list(s), "offset": self.offsets[n][0],
+                 "size": self.offsets[n][1], "init": k}
+                for n, s, k in self.entries
+            ],
+        }, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Shared layers
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """NHWC conv with HWIO kernel."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    """GroupNorm over NHWC. Used in place of the paper's BatchNorm: BN
+    carries non-parameter running statistics that would have to ride
+    alongside the masked updates; GN is stateless, so *every* piece of
+    model state is covered by the 1-bit mask codec (DESIGN.md §3)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def dense(x, w, b):
+    return x @ w + b
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy; labels int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def softmax_xent_sum_and_correct(logits, labels):
+    """(summed CE, count of argmax hits) — used by the eval step."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss_sum = jnp.sum(logz - gold)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss_sum, correct
+
+
+class Model:
+    """Bundle of spec + apply + metadata consumed by steps.py/aot.py."""
+
+    def __init__(self, name, spec, apply_fn, input_spec, label_spec,
+                 n_classes, loss_kind="classify"):
+        self.name = name
+        self.spec = spec
+        self.apply = apply_fn
+        self.input_spec = input_spec    # (shape-without-batch, dtype)
+        self.label_spec = label_spec    # (shape-without-batch, dtype)
+        self.n_classes = n_classes
+        self.loss_kind = loss_kind
+
+    @property
+    def dim(self):
+        return self.spec.dim
+
+    def loss(self, flat, x, y):
+        logits = self.apply(self.spec.unflatten(flat), x)
+        return softmax_xent(logits, y)
+
+    def eval_sums(self, flat, x, y):
+        logits = self.apply(self.spec.unflatten(flat), x)
+        return softmax_xent_sum_and_correct(logits, y)

@@ -1,0 +1,61 @@
+"""Character-level LSTM for the appendix Table-3 task (Shakespeare→LEAF).
+
+A single-layer LSTM over embedded characters with a dense head applied
+at every position; loss/accuracy are averaged over all positions (LEAF's
+next-character-prediction convention).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import Model, ParamSpec, softmax_xent, softmax_xent_sum_and_correct
+
+
+def lstm(vocab, seq_len, embed=32, hidden=128, name=None):
+    entries = [
+        ("embed", (vocab, embed), "embed"),
+        ("wx", (embed, 4 * hidden), "fan_in"),
+        ("wh", (hidden, 4 * hidden), "fan_in"),
+        ("b", (4 * hidden,), "zeros"),
+        ("out.w", (hidden, vocab), "fan_in"),
+        ("out.b", (vocab,), "zeros"),
+    ]
+    spec = ParamSpec(entries)
+
+    def cell(p, carry, x_t):
+        h, c = carry
+        z = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    def apply(p, x):
+        # x: (B, T) int32 token ids -> (B, T, vocab) logits
+        emb = p["embed"][x]                     # (B, T, E)
+        emb_t = jnp.swapaxes(emb, 0, 1)          # (T, B, E)
+        b = x.shape[0]
+        h0 = jnp.zeros((b, hidden), jnp.float32)
+        c0 = jnp.zeros((b, hidden), jnp.float32)
+        (_, _), hs = jax.lax.scan(lambda s, xt: cell(p, s, xt), (h0, c0), emb_t)
+        hs = jnp.swapaxes(hs, 0, 1)              # (B, T, H)
+        return hs @ p["out.w"] + p["out.b"]
+
+    m = Model(name or f"lstm_{vocab}", spec, apply,
+              ((seq_len,), "i32"), ((seq_len,), "i32"), vocab,
+              loss_kind="seq_classify")
+
+    # Sequence losses: average / sum over (B, T) positions.
+    def loss(flat, x, y):
+        logits = apply(spec.unflatten(flat), x)
+        return softmax_xent(logits, y)
+
+    def eval_sums(flat, x, y):
+        logits = apply(spec.unflatten(flat), x)
+        return softmax_xent_sum_and_correct(logits, y)
+
+    m.loss = loss
+    m.eval_sums = eval_sums
+    return m

@@ -1,0 +1,31 @@
+"""Small MLP — the smoke-test / theory-adjacent model.
+
+Used by the quickstart example and the fast integration tests: small
+enough (~10k params) that a full federated run finishes in seconds on
+the CPU PJRT client, while still exercising every code path (PSM step,
+finalize, eval, all codecs).
+"""
+
+import jax
+
+from .common import Model, ParamSpec, dense
+
+
+def mlp(d_in, n_classes, hidden=(64, 32), name=None):
+    entries = []
+    sizes = [d_in, *hidden, n_classes]
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        entries.append((f"l{i}.w", (a, b), "fan_in"))
+        entries.append((f"l{i}.b", (b,), "zeros"))
+    spec = ParamSpec(entries)
+    n_layers = len(sizes) - 1
+
+    def apply(p, x):
+        for i in range(n_layers):
+            x = dense(x, p[f"l{i}.w"], p[f"l{i}.b"])
+            if i + 1 < n_layers:
+                x = jax.nn.relu(x)
+        return x
+
+    return Model(name or f"mlp_{d_in}_{n_classes}", spec, apply,
+                 ((d_in,), "f32"), ((), "i32"), n_classes)

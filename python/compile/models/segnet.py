@@ -1,0 +1,52 @@
+"""Small dense-prediction (segmentation) head for the Table-3 appendix row.
+
+Stands in for the paper's BiSeNetV2 on PascalVOC (infeasible on a CPU
+testbed): a fully-convolutional encoder-decoder that predicts a class per
+pixel. The row's purpose — showing FedMRN works on dense-prediction
+tasks, not just classification — is preserved (DESIGN.md §3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Model, ParamSpec, conv2d, group_norm,
+                     softmax_xent, softmax_xent_sum_and_correct)
+
+
+def segnet(in_ch, hw, n_classes, width=16, name=None):
+    w1, w2 = width, width * 2
+    entries = [
+        ("c1.w", (3, 3, in_ch, w1), "fan_in"), ("c1.b", (w1,), "zeros"),
+        ("c1.gs", (w1,), "ones"), ("c1.gb", (w1,), "zeros"),
+        ("c2.w", (3, 3, w1, w2), "fan_in"), ("c2.b", (w2,), "zeros"),
+        ("c2.gs", (w2,), "ones"), ("c2.gb", (w2,), "zeros"),
+        ("c3.w", (3, 3, w2, w2), "fan_in"), ("c3.b", (w2,), "zeros"),
+        ("c3.gs", (w2,), "ones"), ("c3.gb", (w2,), "zeros"),
+        ("head.w", (1, 1, w2, n_classes), "fan_in"),
+        ("head.b", (n_classes,), "zeros"),
+    ]
+    spec = ParamSpec(entries)
+
+    def apply(p, x):
+        # x: (B, H, W, C) -> (B, H, W, n_classes) per-pixel logits
+        h = jax.nn.relu(group_norm(conv2d(x, p["c1.w"]) + p["c1.b"],
+                                   p["c1.gs"], p["c1.gb"]))
+        h = jax.nn.relu(group_norm(conv2d(h, p["c2.w"]) + p["c2.b"],
+                                   p["c2.gs"], p["c2.gb"]))
+        h = jax.nn.relu(group_norm(conv2d(h, p["c3.w"]) + p["c3.b"],
+                                   p["c3.gs"], p["c3.gb"]))
+        return conv2d(h, p["head.w"]) + p["head.b"]
+
+    m = Model(name or f"segnet_{hw}_{n_classes}", spec, apply,
+              ((hw, hw, in_ch), "f32"), ((hw, hw), "i32"), n_classes,
+              loss_kind="dense")
+
+    def loss(flat, x, y):
+        return softmax_xent(apply(spec.unflatten(flat), x), y)
+
+    def eval_sums(flat, x, y):
+        return softmax_xent_sum_and_correct(apply(spec.unflatten(flat), x), y)
+
+    m.loss = loss
+    m.eval_sums = eval_sums
+    return m

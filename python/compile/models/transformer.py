@@ -1,0 +1,90 @@
+"""Decoder-only transformer for the end-to-end federated char-LM driver.
+
+Pre-LN causal transformer (GPT-style): token + learned positional
+embeddings, ``n_layers`` blocks of multi-head self-attention + GELU MLP,
+final LayerNorm and an untied unembedding head. Sized by config — the
+e2e example uses a multi-million-parameter variant, the integration
+tests a tiny one (DESIGN.md E2E row).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Model, ParamSpec, layer_norm, softmax_xent,
+                     softmax_xent_sum_and_correct)
+
+
+def transformer(vocab, seq_len, d_model=192, n_heads=4, n_layers=2,
+                d_ff=None, name=None):
+    d_ff = d_ff or 4 * d_model
+    assert d_model % n_heads == 0
+    head = d_model // n_heads
+
+    entries = [
+        ("embed", (vocab, d_model), "embed"),
+        ("pos", (seq_len, d_model), "embed"),
+    ]
+    for i in range(n_layers):
+        entries += [
+            (f"b{i}.ln1_s", (d_model,), "ones"),
+            (f"b{i}.ln1_b", (d_model,), "zeros"),
+            (f"b{i}.qkv", (d_model, 3 * d_model), "fan_in"),
+            (f"b{i}.proj", (d_model, d_model), "fan_in"),
+            (f"b{i}.ln2_s", (d_model,), "ones"),
+            (f"b{i}.ln2_b", (d_model,), "zeros"),
+            (f"b{i}.ff1", (d_model, d_ff), "fan_in"),
+            (f"b{i}.ff1_b", (d_ff,), "zeros"),
+            (f"b{i}.ff2", (d_ff, d_model), "fan_in"),
+            (f"b{i}.ff2_b", (d_model,), "zeros"),
+        ]
+    entries += [
+        ("lnf_s", (d_model,), "ones"),
+        ("lnf_b", (d_model,), "zeros"),
+        ("unembed", (d_model, vocab), "fan_in"),
+    ]
+    spec = ParamSpec(entries)
+
+    causal = jnp.tril(jnp.ones((seq_len, seq_len), jnp.float32))
+
+    def block(p, i, x):
+        # x: (B, T, D)
+        h = layer_norm(x, p[f"b{i}.ln1_s"], p[f"b{i}.ln1_b"])
+        qkv = h @ p[f"b{i}.qkv"]                      # (B, T, 3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        b, t, _ = q.shape
+
+        def heads(z):
+            return z.reshape(b, t, n_heads, head).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)        # (B, H, T, hd)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(head))
+        att = jnp.where(causal[None, None, :t, :t] > 0, att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d_model)
+        x = x + out @ p[f"b{i}.proj"]
+        h = layer_norm(x, p[f"b{i}.ln2_s"], p[f"b{i}.ln2_b"])
+        h = jax.nn.gelu(h @ p[f"b{i}.ff1"] + p[f"b{i}.ff1_b"])
+        return x + h @ p[f"b{i}.ff2"] + p[f"b{i}.ff2_b"]
+
+    def apply(p, x):
+        # x: (B, T) int32 -> (B, T, vocab) logits
+        t = x.shape[1]
+        h = p["embed"][x] + p["pos"][None, :t, :]
+        for i in range(n_layers):
+            h = block(p, i, h)
+        h = layer_norm(h, p["lnf_s"], p["lnf_b"])
+        return h @ p["unembed"]
+
+    m = Model(name or f"tf_{d_model}x{n_layers}", spec, apply,
+              ((seq_len,), "i32"), ((seq_len,), "i32"), vocab,
+              loss_kind="seq_classify")
+
+    def loss(flat, x, y):
+        return softmax_xent(apply(spec.unflatten(flat), x), y)
+
+    def eval_sums(flat, x, y):
+        return softmax_xent_sum_and_correct(apply(spec.unflatten(flat), x), y)
+
+    m.loss = loss
+    m.eval_sums = eval_sums
+    return m

@@ -1,0 +1,248 @@
+"""L2 step-function builders — the units that get AOT-exported to HLO.
+
+Each builder returns ``(fn, example_args)`` where every example arg is a
+``jax.ShapeDtypeStruct``; ``aot.py`` lowers ``jax.jit(fn)`` on those specs
+to HLO text. All functions are *pure*: model parameters arrive as a flat
+``f32[d]`` vector, and any stochasticity comes in as explicit inputs
+(``key_bits`` u32[2] → threefry uniforms, or pre-drawn noise vectors).
+
+Step inventory (per model config; DESIGN.md §5):
+  plain_step     FedAvg local SGD step (also drives every post-training codec)
+  mrn_step       FedMRN local step: û = Mask(u, n) via the Pallas kernel,
+                 straight-through gradient to u (Eq. 9); variants psm/sm/pm/dm
+                 × binary/signed
+  finalize       final wire mask from (u, noise, key)  (Algorithm 1 line 20)
+  fedpm_step     FedPM baseline: trains mask scores s over frozen init weights
+  eval_step      summed loss + correct count over one batch
+  plain_epoch /  fused lax.scan over a stack of batches — one PJRT dispatch
+  mrn_epoch      per local epoch instead of one per step (perf ablation §8.2)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import psm as kern
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _xy_specs(model, batch):
+    xs, xd = model.input_spec
+    ys, yd = model.label_spec
+    dt = {"f32": F32, "i32": I32}
+    return _sds((batch, *xs), dt[xd]), _sds((batch, *ys), dt[yd])
+
+
+def _uniforms(key_bits, d, n=2):
+    """Derive n independent U[0,1) f32[d] vectors from a u32[2] key."""
+    key = jax.random.wrap_key_data(key_bits.astype(jnp.uint32))
+    keys = jax.random.split(key, n)
+    return [jax.random.uniform(k, (d,), F32) for k in keys]
+
+
+# ---------------------------------------------------------------------------
+# FedAvg / baselines
+# ---------------------------------------------------------------------------
+
+def plain_step(model, batch):
+    """(w, x, y, lr) -> (w', loss): one local SGD step on the full params."""
+    d = model.dim
+
+    def fn(w, x, y, lr):
+        loss, g = jax.value_and_grad(model.loss)(w, x, y)
+        return w - lr * g, loss
+
+    x, y = _xy_specs(model, batch)
+    return fn, (_sds((d,), F32), x, y, _sds((), F32))
+
+
+def eval_step(model, batch):
+    """(w, x, y) -> (loss_sum, correct_count) over one batch."""
+    d = model.dim
+
+    def fn(w, x, y):
+        return model.eval_sums(w, x, y)
+
+    x, y = _xy_specs(model, batch)
+    return fn, (_sds((d,), F32), x, y)
+
+
+def grad_step(model, batch):
+    """(w, x, y) -> (grad, loss): raw gradient (theory + debugging)."""
+    d = model.dim
+
+    def fn(w, x, y):
+        loss, g = jax.value_and_grad(model.loss)(w, x, y)
+        return g, loss
+
+    x, y = _xy_specs(model, batch)
+    return fn, (_sds((d,), F32), x, y)
+
+
+# ---------------------------------------------------------------------------
+# FedMRN local step (Eq. 9 + Eq. 10)
+# ---------------------------------------------------------------------------
+
+def mrn_step(model, batch, mode="psm", mask_type="binary"):
+    """(w, u, x, y, noise, key_bits, p_gate, lr) -> (u', loss).
+
+    ``w`` is the frozen global parameter vector; ``u`` the learnable
+    update copy. Forward uses û = Mask(u, noise) computed by the fused
+    Pallas kernel; the backward pass treats the masking map as identity
+    (straight-through estimator), so u is updated with ∂F/∂û (Eq. 9).
+    """
+    d = model.dim
+    mask_fn = kern.MASK_FNS[(mode, mask_type)]
+
+    def fn(w, u, x, y, noise, key_bits, p_gate, lr):
+        r_sm, r_pm = _uniforms(key_bits, d, 2)
+
+        def fwd(u_in):
+            # STE: run the (non-differentiable) Pallas masking kernel on a
+            # detached copy, then re-attach so the forward value is û while
+            # the gradient flows to u as identity (∂S/∂u = 1, Eq. 9).
+            u_stop = jax.lax.stop_gradient(u_in)
+            u_hat_val = mask_fn(u_stop, noise, r_sm, r_pm, p_gate)
+            u_hat = u_in + (u_hat_val - u_stop)
+            return model.loss(w + u_hat, x, y)
+
+        loss, g = jax.value_and_grad(fwd)(u)
+        # Anchor inputs the ablation modes don't consume (sm ignores
+        # p_gate; dm ignores the PRNG key too): XLA prunes unused
+        # parameters at compile time, which would desynchronise the
+        # artifact's calling convention from the manifest.
+        anchor = 0.0 * (p_gate + jnp.sum(key_bits.astype(F32)))
+        return u - lr * g, loss + anchor
+
+    x, y = _xy_specs(model, batch)
+    return fn, (_sds((d,), F32), _sds((d,), F32), x, y, _sds((d,), F32),
+                _sds((2,), U32), _sds((), F32), _sds((), F32))
+
+
+def finalize(model, mask_type="binary", deterministic=False):
+    """(u, noise, key_bits) -> mask f32[d] in {0,1} or {-1,+1}."""
+    d = model.dim
+
+    def fn(u, noise, key_bits):
+        if deterministic:
+            from .kernels import ref
+            m = (ref.dm_mask_binary(u, noise) if mask_type == "binary"
+                 else ref.dm_mask_signed(u, noise))
+            # keep the (unused) key parameter alive — see mrn_step
+            return m + 0.0 * jnp.sum(key_bits.astype(F32))
+        (r_sm,) = _uniforms(key_bits, d, 1)
+        return kern.FINALIZE_FNS[mask_type](u, noise, r_sm)
+
+    return fn, (_sds((d,), F32), _sds((d,), F32), _sds((2,), U32))
+
+
+# ---------------------------------------------------------------------------
+# FedPM baseline (§2.2): supermask over frozen init weights
+# ---------------------------------------------------------------------------
+
+def fedpm_step(model, batch):
+    """(w_init, s, x, y, key_bits, lr) -> (s', loss).
+
+    FedPM's local step: sample m = Bern(sigmoid(s)), forward with
+    w_init ⊙ m, straight-through gradient to the scores s. The client
+    uploads sampled masks; the server reconstitutes probabilities —
+    that aggregation lives in the Rust ``compress::fedpm`` codec.
+    """
+    d = model.dim
+
+    def fn(w_init, s, x, y, key_bits, lr):
+        (r,) = _uniforms(key_bits, d, 1)
+
+        def fwd(s_in):
+            p = jax.nn.sigmoid(s_in)
+            m = (r < p).astype(F32)
+            m = p + jax.lax.stop_gradient(m - p)   # STE through Bernoulli
+            return model.loss(w_init * m, x, y)
+
+        loss, g = jax.value_and_grad(fwd)(s)
+        return s - lr * g, loss
+
+    x, y = _xy_specs(model, batch)
+    return fn, (_sds((d,), F32), _sds((d,), F32), x, y, _sds((2,), U32),
+                _sds((), F32))
+
+
+def fedpm_sample_mask(model):
+    """(s, key_bits) -> m ∈ {0,1}^d : the client's uplink sample."""
+    d = model.dim
+
+    def fn(s, key_bits):
+        (r,) = _uniforms(key_bits, d, 1)
+        return (r < jax.nn.sigmoid(s)).astype(F32)
+
+    return fn, (_sds((d,), F32), _sds((2,), U32))
+
+
+# ---------------------------------------------------------------------------
+# Fused epoch variants (perf ablation: one dispatch per epoch)
+# ---------------------------------------------------------------------------
+
+def plain_epoch(model, batch, n_batches):
+    """(w, xs, ys, lr) -> (w', mean_loss) : lax.scan over stacked batches."""
+    d = model.dim
+
+    def fn(w, xs, ys, lr):
+        def body(w_c, xy):
+            x, y = xy
+            loss, g = jax.value_and_grad(model.loss)(w_c, x, y)
+            return w_c - lr * g, loss
+
+        w2, losses = jax.lax.scan(body, w, (xs, ys))
+        return w2, jnp.mean(losses)
+
+    x, y = _xy_specs(model, batch)
+    xs = _sds((n_batches, *x.shape), x.dtype)
+    ys = _sds((n_batches, *y.shape), y.dtype)
+    return fn, (_sds((d,), F32), xs, ys, _sds((), F32))
+
+
+def mrn_epoch(model, batch, n_batches, mode="psm", mask_type="binary"):
+    """(w, u, xs, ys, noise, key_bits, p0, dp, lr) -> (u', mean_loss).
+
+    One PJRT dispatch per local epoch: scans the mrn_step body over
+    ``n_batches`` stacked batches, advancing the PM gate probability by
+    ``dp`` per step and folding the step index into the PRNG key.
+    """
+    d = model.dim
+    mask_fn = kern.MASK_FNS[(mode, mask_type)]
+
+    def fn(w, u, xs, ys, noise, key_bits, p0, dp, lr):
+        key = jax.random.wrap_key_data(key_bits.astype(jnp.uint32))
+
+        def body(carry, inp):
+            u_c, p_c = carry
+            x, yb, i = inp
+            k = jax.random.fold_in(key, i)
+            k1, k2 = jax.random.split(k)
+            r_sm = jax.random.uniform(k1, (d,), F32)
+            r_pm = jax.random.uniform(k2, (d,), F32)
+
+            def fwd(u_in):
+                u_stop = jax.lax.stop_gradient(u_in)
+                u_hat_val = mask_fn(u_stop, noise, r_sm, r_pm, p_c)
+                u_hat = u_in + (u_hat_val - u_stop)
+                return model.loss(w + u_hat, x, yb)
+
+            loss, g = jax.value_and_grad(fwd)(u_c)
+            return (u_c - lr * g, p_c + dp), loss
+
+        idx = jnp.arange(n_batches, dtype=I32)
+        (u2, _), losses = jax.lax.scan(body, (u, p0), (xs, ys, idx))
+        return u2, jnp.mean(losses)
+
+    x, y = _xy_specs(model, batch)
+    xs = _sds((n_batches, *x.shape), x.dtype)
+    ys = _sds((n_batches, *y.shape), y.dtype)
+    return fn, (_sds((d,), F32), _sds((d,), F32), xs, ys, _sds((d,), F32),
+                _sds((2,), U32), _sds((), F32), _sds((), F32), _sds((), F32))

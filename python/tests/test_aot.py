@@ -1,0 +1,89 @@
+"""AOT export pipeline: manifest integrity and HLO-text well-formedness."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PY_DIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--configs", "smoke_mlp", "--force"],
+        cwd=PY_DIR, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    return out
+
+
+def test_manifest_shape(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    assert man["format"] == 1
+    cfg = man["configs"][0]
+    assert cfg["config"] == "smoke_mlp"
+    assert cfg["param_dim"] > 0
+    names = {s["step"] for s in cfg["steps"]}
+    assert {"plain_step", "eval_step", "mrn_bin_psm", "finalize_bin"} <= names
+
+
+def test_hlo_text_wellformed(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    for step in man["configs"][0]["steps"]:
+        path = exported / step["hlo"]
+        text = path.read_text()
+        assert text.startswith("HloModule"), step["name"]
+        assert "ENTRY" in text
+        # 64-bit-id regression guard: the text parser reassigns ids, but the
+        # text itself must exist and be non-trivial.
+        assert len(text) > 200
+
+
+def test_meta_matches_builder_specs(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    cfg = man["configs"][0]
+    d = cfg["param_dim"]
+    by_step = {s["step"]: s for s in cfg["steps"]}
+    ps = by_step["plain_step"]
+    assert ps["inputs"][0] == {"shape": [d], "dtype": "float32"}
+    assert ps["outputs"][0] == {"shape": [d], "dtype": "float32"}
+    assert ps["outputs"][1] == {"shape": [], "dtype": "float32"}
+    mrn = by_step["mrn_bin_psm"]
+    # (w, u, x, y, noise, key, p_gate, lr)
+    assert len(mrn["inputs"]) == 8
+    assert mrn["inputs"][5] == {"shape": [2], "dtype": "uint32"}
+
+
+def test_init_bin_size_and_determinism(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    cfg = man["configs"][0]
+    init = np.fromfile(exported / cfg["init_bin"], dtype="<f4")
+    assert init.shape[0] == cfg["param_dim"]
+    assert np.all(np.isfinite(init))
+    # layout must tile the vector exactly
+    with open(exported / cfg["layout"]) as f:
+        layout = json.load(f)
+    assert layout["dim"] == cfg["param_dim"]
+    assert sum(p["size"] for p in layout["params"]) == cfg["param_dim"]
+
+
+def test_incremental_export_skips(exported):
+    """Re-running without --force must be a cheap no-op (Make contract)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(exported),
+         "--configs", "smoke_mlp"],
+        cwd=PY_DIR, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    # all steps cached -> every per-step line reports instantly; the
+    # easiest robust check: stdout mentions the config and exits ok.
+    assert "smoke_mlp" in r.stdout

@@ -1,0 +1,103 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps vector lengths (including the padding edge cases around
+the BLOCK boundary), value ranges, and gate probabilities; every kernel
+must match ``ref.py`` *bit-exactly* (same ops, same order — interpret
+mode executes the identical arithmetic).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import psm, ref
+
+MODES = ["psm", "sm", "pm", "dm"]
+MASK_TYPES = ["binary", "signed"]
+
+# Sizes probing the BLOCK padding logic: sub-block, exact, off-by-one.
+SIZES = [1, 7, psm.BLOCK - 1, psm.BLOCK, psm.BLOCK + 1, 3 * psm.BLOCK + 17]
+
+
+def _inputs(d, seed, scale=0.01):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(0, scale, d).astype(np.float32))
+    n = jnp.asarray(rng.uniform(-scale, scale, d).astype(np.float32))
+    rs = jnp.asarray(rng.random(d).astype(np.float32))
+    rp = jnp.asarray(rng.random(d).astype(np.float32))
+    return u, n, rs, rp
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("mask_type", MASK_TYPES)
+@pytest.mark.parametrize("d", SIZES)
+def test_kernel_matches_ref(mode, mask_type, d):
+    u, n, rs, rp = _inputs(d, seed=hash((mode, mask_type, d)) % 2**31)
+    got = np.asarray(psm.MASK_FNS[(mode, mask_type)](u, n, rs, rp, 0.5))
+    want = np.asarray(ref.MASK_FNS[(mode, mask_type)](u, n, rs, rp, 0.5))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mask_type", MASK_TYPES)
+@pytest.mark.parametrize("d", [64, psm.BLOCK + 3])
+def test_finalize_matches_ref(mask_type, d):
+    u, n, rs, _ = _inputs(d, seed=1234 + d)
+    got = np.asarray(psm.FINALIZE_FNS[mask_type](u, n, rs))
+    want_fn = (ref.finalize_binary if mask_type == "binary"
+               else ref.finalize_signed)
+    np.testing.assert_array_equal(got, np.asarray(want_fn(u, n, rs)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=2 * psm.BLOCK + 5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    p_gate=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    scale=st.sampled_from([1e-4, 1e-2, 1.0, 100.0]),
+    mode=st.sampled_from(MODES),
+    mask_type=st.sampled_from(MASK_TYPES),
+)
+def test_kernel_matches_ref_hypothesis(d, seed, p_gate, scale, mode, mask_type):
+    u, n, rs, rp = _inputs(d, seed, scale)
+    got = np.asarray(psm.MASK_FNS[(mode, mask_type)](u, n, rs, rp, p_gate))
+    want = np.asarray(ref.MASK_FNS[(mode, mask_type)](u, n, rs, rp, p_gate))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=psm.BLOCK + 5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_handles_extreme_values(d, seed):
+    rng = np.random.default_rng(seed)
+    # include zeros, huge and tiny (but normal — XLA flushes denormals to
+    # zero while the Pallas interpreter preserves them) magnitudes
+    pool = np.array([0.0, 1e-20, -1e-20, 1e30, -1e30, 1.0, -1.0], np.float32)
+    u = jnp.asarray(rng.choice(pool, d))
+    n = jnp.asarray(rng.choice(pool, d))
+    rs = jnp.asarray(rng.random(d).astype(np.float32))
+    rp = jnp.asarray(rng.random(d).astype(np.float32))
+    for mt in MASK_TYPES:
+        got = np.asarray(psm.MASK_FNS[("psm", mt)](u, n, rs, rp, 0.3))
+        want = np.asarray(ref.MASK_FNS[("psm", mt)](u, n, rs, rp, 0.3))
+        np.testing.assert_array_equal(got, want)
+        assert np.all(np.isfinite(got))
+
+
+def test_kernel_jit_composes():
+    """The kernels must lower inside jit (the AOT path relies on this)."""
+    import jax
+    d = psm.BLOCK + 9
+    u, n, rs, rp = _inputs(d, seed=7)
+    f = jax.jit(lambda *a: psm.psm_binary(*a))
+    got = np.asarray(f(u, n, rs, rp, 0.5))
+    want = np.asarray(ref.psm_binary(u, n, rs, rp, 0.5))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vmem_estimate_within_budget():
+    """DESIGN.md §9: double-buffered working set must fit VMEM (16 MiB)."""
+    assert psm.vmem_bytes_per_block(n_operands=5) < 16 * 2**20

@@ -1,0 +1,110 @@
+"""L2 model zoo: shapes, parameter layout, and gradient sanity."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.cnn import cnn4, cnn8
+from compile.models.lstm import lstm
+from compile.models.mlp import mlp
+from compile.models.segnet import segnet
+from compile.models.transformer import transformer
+
+
+def _models():
+    return [
+        ("mlp", mlp(16, 4), (3, 16), "f32", (3,)),
+        ("cnn4", cnn4(1, 28, 10), (2, 28, 28, 1), "f32", (2,)),
+        ("cnn4_rgb", cnn4(3, 32, 10), (2, 32, 32, 3), "f32", (2,)),
+        ("cnn8", cnn8(3, 32, 10), (2, 32, 32, 3), "f32", (2,)),
+        ("lstm", lstm(64, 12), (2, 12), "i32", (2, 12)),
+        ("tf", transformer(64, 16, d_model=32, n_heads=2, n_layers=1),
+         (2, 16), "i32", (2, 16)),
+        ("segnet", segnet(3, 16, 4), (2, 16, 16, 3), "f32", (2, 16, 16)),
+    ]
+
+
+def _batch(shape, kind, n_classes, seed=0):
+    rng = np.random.default_rng(seed)
+    if kind == "f32":
+        return jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+    return jnp.asarray(rng.integers(0, n_classes, shape).astype(np.int32))
+
+
+@pytest.mark.parametrize("name,model,xshape,xkind,yshape", _models())
+def test_forward_shapes_and_finite(name, model, xshape, xkind, yshape):
+    flat = jnp.asarray(model.spec.init(seed=1))
+    assert flat.shape == (model.dim,)
+    x = _batch(xshape, xkind, model.n_classes)
+    logits = model.apply(model.spec.unflatten(flat), x)
+    assert logits.shape[-1] == model.n_classes
+    assert logits.shape[0] == xshape[0]
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("name,model,xshape,xkind,yshape", _models())
+def test_loss_and_grad(name, model, xshape, xkind, yshape):
+    flat = jnp.asarray(model.spec.init(seed=2))
+    x = _batch(xshape, xkind, model.n_classes, seed=3)
+    y = _batch(yshape, "i32", model.n_classes, seed=4)
+    loss, g = jax.value_and_grad(model.loss)(flat, x, y)
+    assert np.isfinite(float(loss))
+    # loss near ln(n_classes) at init (roughly uniform logits)
+    assert 0.0 < float(loss) < 3.0 * np.log(model.n_classes) + 2.0
+    gn = np.linalg.norm(np.asarray(g))
+    assert np.isfinite(gn) and gn > 0.0
+
+
+@pytest.mark.parametrize("name,model,xshape,xkind,yshape", _models())
+def test_eval_sums(name, model, xshape, xkind, yshape):
+    flat = jnp.asarray(model.spec.init(seed=5))
+    x = _batch(xshape, xkind, model.n_classes, seed=6)
+    y = _batch(yshape, "i32", model.n_classes, seed=7)
+    loss_sum, correct = model.eval_sums(flat, x, y)
+    n_preds = int(np.prod(yshape))
+    assert 0.0 <= float(correct) <= n_preds
+    assert float(loss_sum) > 0.0
+
+
+def test_flatten_unflatten_roundtrip():
+    model = cnn4(1, 28, 10)
+    flat = jnp.asarray(model.spec.init(seed=8))
+    params = model.spec.unflatten(flat)
+    flat2 = model.spec.flatten(params)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(flat2))
+
+
+def test_layout_json_consistent():
+    import json
+    model = cnn8(3, 32, 10)
+    layout = json.loads(model.spec.layout_json())
+    assert layout["dim"] == model.dim
+    total = sum(p["size"] for p in layout["params"])
+    assert total == model.dim
+    # offsets are contiguous and ordered
+    off = 0
+    for p in layout["params"]:
+        assert p["offset"] == off
+        off += p["size"]
+
+
+def test_init_deterministic():
+    m1, m2 = mlp(16, 4), mlp(16, 4)
+    np.testing.assert_array_equal(m1.spec.init(9), m2.spec.init(9))
+    assert not np.array_equal(m1.spec.init(9), m1.spec.init(10))
+
+
+def test_cnn4_learns_single_batch():
+    """A few SGD steps on one batch must reduce the loss (overfit check)."""
+    model = mlp(16, 4, hidden=(32,))
+    flat = jnp.asarray(model.spec.init(seed=11))
+    x = _batch((32, 16), "f32", 4, seed=12)
+    y = _batch((32,), "i32", 4, seed=13)
+    step = jax.jit(lambda w: (w - 0.5 * jax.grad(model.loss)(w, x, y)))
+    l0 = float(model.loss(flat, x, y))
+    for _ in range(40):
+        flat = step(flat)
+    l1 = float(model.loss(flat, x, y))
+    assert l1 < 0.5 * l0

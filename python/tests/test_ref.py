@@ -1,0 +1,183 @@
+"""Oracle-level invariants of the FedMRN masking math (paper §3.2).
+
+These tests pin down the *mathematical* properties the paper claims —
+unbiasedness of SM inside the representable range, value sets of the
+masks, PM gate boundary behaviour, and the binary/signed equivalence
+identity G⊙m_s = 2·G⊙m − G — independent of the Pallas implementation.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+
+def _rand(d, seed, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, d).astype(np.float32))
+
+
+class TestProbabilities:
+    def test_prob_binary_range(self):
+        u, n = _rand(4096, 1), _rand(4096, 2)
+        p = np.asarray(ref.prob_binary(u, n))
+        assert np.all(p >= 0.0) and np.all(p <= 1.0)
+
+    def test_prob_signed_range(self):
+        u, n = _rand(4096, 3), _rand(4096, 4)
+        p = np.asarray(ref.prob_signed(u, n))
+        assert np.all(p >= 0.0) and np.all(p <= 1.0)
+
+    def test_prob_binary_exact(self):
+        # u/n = 0.25 -> p = 0.25; opposite signs -> p = 0
+        u = jnp.asarray([0.25, -0.25, 0.5, 1.0], jnp.float32)
+        n = jnp.asarray([1.0, 1.0, -1.0, 0.5], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ref.prob_binary(u, n)), [0.25, 0.0, 0.0, 1.0])
+
+    def test_prob_signed_exact(self):
+        # p = clip((u+n)/(2n), 0, 1): u=0 -> 1/2 regardless of n's sign
+        u = jnp.asarray([0.0, 0.0, 0.5, -1.0], jnp.float32)
+        n = jnp.asarray([1.0, -2.0, 1.0, 1.0], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ref.prob_signed(u, n)), [0.5, 0.5, 0.75, 0.0])
+
+    def test_zero_noise_guard_total(self):
+        u = jnp.asarray([0.5, -0.5], jnp.float32)
+        n = jnp.asarray([0.0, 0.0], jnp.float32)
+        for f in (ref.prob_binary, ref.prob_signed):
+            p = np.asarray(f(u, n))
+            assert np.all(np.isfinite(p))
+
+
+class TestStochasticMasking:
+    def test_mask_value_sets(self):
+        u, n, r = _rand(4096, 5), _rand(4096, 6), _rand(4096, 7, 0, 1)
+        mb = np.asarray(ref.sm_mask_binary(u, n, r))
+        ms = np.asarray(ref.sm_mask_signed(u, n, r))
+        assert set(np.unique(mb)) <= {0.0, 1.0}
+        assert set(np.unique(ms)) <= {-1.0, 1.0}
+
+    @pytest.mark.parametrize("mask_type", ["binary", "signed"])
+    def test_sm_unbiased_in_range(self, mask_type):
+        # E[n*M(u,n) - u] = 0 when u/n in [0,1] (binary) / [-1,1] (signed).
+        rng = np.random.default_rng(11)
+        d = 2000
+        n = jnp.asarray(rng.uniform(0.5, 1.0, d).astype(np.float32))
+        if mask_type == "binary":
+            u = jnp.asarray((rng.uniform(0, 1, d) * np.asarray(n)).astype(np.float32))
+            fn = ref.sm_binary
+        else:
+            u = jnp.asarray((rng.uniform(-1, 1, d) * np.asarray(n)).astype(np.float32))
+            fn = ref.sm_signed
+        reps = 600
+        acc = np.zeros(d, np.float64)
+        for i in range(reps):
+            r = jnp.asarray(rng.random(d).astype(np.float32))
+            acc += np.asarray(fn(u, n, r), np.float64)
+        mean_err = acc / reps - np.asarray(u, np.float64)
+        # CLT bound: sd of each term <= |n| <= 1, so the mean of the
+        # per-element errors should be ~ N(0, 1/sqrt(reps*d)).
+        assert abs(mean_err.mean()) < 5e-3
+        assert np.abs(mean_err).max() < 0.2
+
+    def test_sm_binary_out_of_range_saturates(self):
+        # u > n > 0 -> p = 1 -> mask always 1 -> û = n exactly.
+        u = jnp.full((64,), 2.0, jnp.float32)
+        n = jnp.full((64,), 1.0, jnp.float32)
+        r = _rand(64, 12, 0, 1)
+        np.testing.assert_allclose(np.asarray(ref.sm_binary(u, n, r)), 1.0)
+
+
+class TestDeterministicMasking:
+    def test_dm_binary_sign_agreement(self):
+        u = jnp.asarray([1.0, -1.0, 1.0, -1.0], jnp.float32)
+        n = jnp.asarray([0.5, -0.5, -0.5, 0.5], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ref.dm_binary(u, n)), [0.5, -0.5, 0.0, 0.0])
+
+    def test_dm_signed_always_full_magnitude(self):
+        u, n = _rand(1024, 20), _rand(1024, 21)
+        out = np.asarray(ref.dm_signed(u, n))
+        np.testing.assert_allclose(np.abs(out), np.abs(np.asarray(n)),
+                                   rtol=1e-6)
+
+    def test_dm_signed_is_abs_noise_along_u(self):
+        # dm_signed(u, n) = |n| * sign(u): flipping the mask when signs
+        # disagree always re-points the noise along the update direction.
+        u, n = _rand(1024, 22), _rand(1024, 23)
+        out = np.asarray(ref.dm_signed(u, n))
+        uu, nn = np.asarray(u), np.asarray(n)
+        nz = np.abs(uu * nn) > 1e-9
+        np.testing.assert_allclose(out[nz],
+                                   np.abs(nn[nz]) * np.sign(uu[nz]),
+                                   rtol=1e-6)
+
+
+class TestProgressiveMasking:
+    def test_pm_clip_binary_interval(self):
+        u, n = _rand(4096, 30, -2, 2), _rand(4096, 31)
+        c = np.asarray(ref.pm_clip_binary(u, n))
+        nn = np.asarray(n)
+        assert np.all(c >= np.minimum(nn, 0.0) - 1e-7)
+        assert np.all(c <= np.maximum(nn, 0.0) + 1e-7)
+
+    def test_pm_clip_signed_interval(self):
+        u, n = _rand(4096, 32, -2, 2), _rand(4096, 33)
+        c = np.asarray(ref.pm_clip_signed(u, n))
+        assert np.all(np.abs(c) <= np.abs(np.asarray(n)) + 1e-7)
+
+    def test_psm_gate_zero_is_pure_clip(self):
+        u, n = _rand(4096, 34), _rand(4096, 35)
+        r1, r2 = _rand(4096, 36, 0, 1), _rand(4096, 37, 0, 1)
+        out = ref.psm_binary(u, n, r1, r2, 0.0)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.pm_clip_binary(u, n)))
+
+    def test_psm_gate_one_is_pure_sm(self):
+        u, n = _rand(4096, 38), _rand(4096, 39)
+        r1, r2 = _rand(4096, 40, 0, 1), _rand(4096, 41, 0, 1)
+        out = ref.psm_binary(u, n, r1, r2, 1.0)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.sm_binary(u, n, r1)))
+
+    def test_psm_signed_gate_boundaries(self):
+        u, n = _rand(4096, 42), _rand(4096, 43)
+        r1, r2 = _rand(4096, 44, 0, 1), _rand(4096, 45, 0, 1)
+        np.testing.assert_allclose(
+            np.asarray(ref.psm_signed(u, n, r1, r2, 0.0)),
+            np.asarray(ref.pm_clip_signed(u, n)))
+        np.testing.assert_allclose(
+            np.asarray(ref.psm_signed(u, n, r1, r2, 1.0)),
+            np.asarray(ref.sm_signed(u, n, r1)))
+
+
+class TestEquivalenceIdentity:
+    def test_binary_signed_identity(self):
+        """G⊙m_s = 2·G⊙m − G when m = (m_s+1)/2 (paper §3.1)."""
+        n = _rand(4096, 50)
+        rng = np.random.default_rng(51)
+        m_s = jnp.asarray(rng.choice([-1.0, 1.0], 4096).astype(np.float32))
+        m = (m_s + 1.0) / 2.0
+        lhs = np.asarray(n * m_s)
+        rhs = np.asarray(2.0 * n * m - n)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-6)
+
+
+class TestFinalize:
+    def test_finalize_binary_bits(self):
+        u, n, r = _rand(4096, 60), _rand(4096, 61), _rand(4096, 62, 0, 1)
+        m = np.asarray(ref.finalize_binary(u, n, r))
+        assert set(np.unique(m)) <= {0.0, 1.0}
+        # masked noise = n*m must be reconstructible from bits alone
+        np.testing.assert_allclose(np.asarray(n) * m,
+                                   np.asarray(ref.sm_binary(u, n, r)))
+
+    def test_finalize_signed_bits(self):
+        u, n, r = _rand(4096, 63), _rand(4096, 64), _rand(4096, 65, 0, 1)
+        m = np.asarray(ref.finalize_signed(u, n, r))
+        assert set(np.unique(m)) <= {-1.0, 1.0}
+        np.testing.assert_allclose(np.asarray(n) * m,
+                                   np.asarray(ref.sm_signed(u, n, r)))

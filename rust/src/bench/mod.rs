@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (criterion is unavailable offline; DESIGN.md §3).
+//!
+//! Used by the `benches/*.rs` targets (compiled with `harness = false`)
+//! and by the Figure-6 experiment runner. Methodology: warmup runs, then
+//! fixed-count timed iterations; reports median / p10 / p90 and derived
+//! throughput. Results can be emitted as human tables or JSON rows.
+
+use std::time::Instant;
+
+use crate::jsonx::Value;
+use crate::stats;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median_ms: f64,
+    pub p10_ms: f64,
+    pub p90_ms: f64,
+    pub mean_ms: f64,
+    /// Optional element count for throughput (elems/s at the median).
+    pub elems: Option<u64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / (self.median_ms / 1e3))
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("median_ms", self.median_ms)
+            .set("p10_ms", self.p10_ms)
+            .set("p90_ms", self.p90_ms)
+            .set("mean_ms", self.mean_ms);
+        if let Some(t) = self.throughput() {
+            v = v.set("throughput_per_s", t);
+        }
+        v
+    }
+
+    pub fn row(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {t:8.0} elem/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10.4} ms  [p10 {:>9.4}, p90 {:>9.4}]{}",
+            self.name, self.median_ms, self.p10_ms, self.p90_ms, tput
+        )
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        Bench { warmup: 3, iters: 10, results: Vec::new() }
+    }
+
+    pub fn with_iters(warmup: usize, iters: usize) -> Bench {
+        Bench { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f` (called once per iteration). `elems` enables throughput.
+    pub fn run<F: FnMut()>(&mut self, name: &str, elems: Option<u64>, mut f: F)
+        -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            median_ms: stats::percentile(&samples, 0.5),
+            p10_ms: stats::percentile(&samples, 0.1),
+            p90_ms: stats::percentile(&samples, 0.9),
+            mean_ms: stats::mean(&samples),
+            elems,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print all collected rows as a table.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        for m in &self.results {
+            println!("{}", m.row());
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::Arr(self.results.iter().map(|m| m.to_json()).collect())
+    }
+
+    /// Write results JSON under `results/` (created if needed).
+    pub fn write_json(&self, path: &str) -> crate::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_json())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_orders_percentiles() {
+        let mut b = Bench::with_iters(1, 5);
+        let mut x = 0u64;
+        let m = b.run("spin", Some(1000), || {
+            for i in 0..10_000u64 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(m.median_ms >= 0.0);
+        assert!(m.p10_ms <= m.median_ms && m.median_ms <= m.p90_ms);
+        assert!(m.throughput().unwrap() > 0.0);
+        assert!(std::hint::black_box(x) != 1);
+    }
+
+    #[test]
+    fn json_emission() {
+        let mut b = Bench::with_iters(0, 2);
+        b.run("noop", None, || {});
+        let v = b.to_json();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "noop");
+        assert_eq!(arr[0].get("iters").unwrap().as_usize().unwrap(), 2);
+    }
+}

@@ -1,0 +1,227 @@
+//! Tiny CLI argument parser + experiment configuration (clap is not
+//! available offline; DESIGN.md §3).
+//!
+//! Grammar: `prog [subcommand ...] [--key value | --key=value | --flag]`.
+//! Subcommands are the leading bare words; everything after the first
+//! `--` option is key/value pairs. `Args::take_*` consume options so
+//! `finish()` can reject typos (unknown options are hard errors).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Leading bare words (subcommand path).
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    seen: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut opts = BTreeMap::new();
+        let mut it = argv.into_iter().peekable();
+        let mut in_opts = false;
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                in_opts = true;
+                if stripped.is_empty() {
+                    return Err(Error::Config("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // value is the next token unless it is another option
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            opts.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            opts.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if !in_opts {
+                positional.push(arg);
+            } else {
+                return Err(Error::Config(format!(
+                    "positional argument {arg:?} after options"
+                )));
+            }
+        }
+        let seen = opts.keys().map(|k| (k.clone(), false)).collect();
+        Ok(Args { positional, opts, seen })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn mark(&mut self, key: &str) {
+        if let Some(s) = self.seen.get_mut(key) {
+            *s = true;
+        }
+    }
+
+    pub fn take_str(&mut self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn take_opt_str(&mut self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    pub fn take_usize(&mut self, key: &str, default: usize) -> Result<usize> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key}: expected integer, got {v:?}"))
+            }),
+        }
+    }
+
+    pub fn take_u64(&mut self, key: &str, default: u64) -> Result<u64> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key}: expected integer, got {v:?}"))
+            }),
+        }
+    }
+
+    pub fn take_f32(&mut self, key: &str, default: f32) -> Result<f32> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key}: expected float, got {v:?}"))
+            }),
+        }
+    }
+
+    pub fn take_f64(&mut self, key: &str, default: f64) -> Result<f64> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key}: expected float, got {v:?}"))
+            }),
+        }
+    }
+
+    pub fn take_bool(&mut self, key: &str, default: bool) -> Result<bool> {
+        self.mark(key);
+        match self.opts.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => Err(Error::Config(format!(
+                "--{key}: expected bool, got {v:?}"
+            ))),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn take_list(&mut self, key: &str, default: &[&str]) -> Vec<String> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        }
+    }
+
+    /// Error on any option that was provided but never consumed.
+    pub fn finish(&self) -> Result<()> {
+        let unknown: Vec<&String> = self
+            .seen
+            .iter()
+            .filter(|(_, &used)| !used)
+            .map(|(k, _)| k)
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Config(format!("unknown option(s): {unknown:?}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommands_and_options() {
+        let mut a = parse(&["exp", "table1", "--rounds", "20", "--lr=0.1",
+                            "--verbose"]);
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positional[1], "table1");
+        assert_eq!(a.take_usize("rounds", 5).unwrap(), 20);
+        assert!((a.take_f32("lr", 0.0).unwrap() - 0.1).abs() < 1e-9);
+        assert!(a.take_bool("verbose", false).unwrap());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let mut a = parse(&["run"]);
+        assert_eq!(a.take_usize("rounds", 7).unwrap(), 7);
+        assert_eq!(a.take_str("method", "fedavg"), "fedavg");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse(&["run", "--oops", "1"]);
+        let _ = a.take_usize("rounds", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_config_error() {
+        let mut a = parse(&["run", "--rounds", "abc"]);
+        assert!(a.take_usize("rounds", 1).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let mut a = parse(&["x", "--methods", "fedavg, signsgd,eden"]);
+        assert_eq!(a.take_list("methods", &["all"]),
+                   vec!["fedavg", "signsgd", "eden"]);
+        let mut b = parse(&["x"]);
+        assert_eq!(b.take_list("methods", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let mut a = parse(&["x", "--quick", "--rounds", "3"]);
+        assert!(a.take_bool("quick", false).unwrap());
+        assert_eq!(a.take_usize("rounds", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn positional_after_option_rejected() {
+        assert!(Args::parse(
+            ["--a", "1", "oops"].iter().map(|s| s.to_string())
+        ).is_err());
+    }
+}

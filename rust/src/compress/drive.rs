@@ -1,0 +1,108 @@
+//! DRIVE (Vargaftik et al., NeurIPS'21): 1-bit distributed mean
+//! estimation via random rotation.
+//!
+//! Encode: pad to a power of two, rotate `z = R x` with the seeded
+//! randomized-Hadamard rotation, send `sign(z)` plus the deterministic
+//! min-MSE scale `α = ‖z‖₁ / d'`. Decode: `x̂ = R⁻¹ (α · sign(z))`.
+//! The scale minimises `‖x − x̂‖₂` given the signs (biased but lowest
+//! error — EDEN's unbiased scale is the contrast, see `eden.rs`).
+
+use crate::error::{Error, Result};
+use crate::fwht;
+use crate::transport::Payload;
+
+pub fn encode(x: &[f32], seed: u64) -> Payload {
+    let d = x.len();
+    let dp = fwht::next_pow2(d.max(1));
+    let mut z = vec![0.0f32; dp];
+    z[..d].copy_from_slice(x);
+    fwht::rotate(&mut z, seed);
+    let l1: f64 = z.iter().map(|v| v.abs() as f64).sum();
+    let alpha = (l1 / dp as f64) as f32;
+    let mut bits = vec![0u64; dp.div_ceil(64)];
+    for (i, v) in z.iter().enumerate() {
+        if *v > 0.0 {
+            bits[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    // `d` on the wire is the *padded* dimension (the decoder truncates).
+    Payload::SignBits { d: dp as u32, bits, scales: vec![alpha], seed }
+}
+
+pub fn decode(p: &Payload, d: usize) -> Result<Vec<f32>> {
+    let Payload::SignBits { d: dp, bits, scales, seed } = p else {
+        return Err(Error::Codec("drive: wrong payload".into()));
+    };
+    let dp = *dp as usize;
+    if dp < d || !dp.is_power_of_two() {
+        return Err(Error::Codec(format!("drive: bad padded dim {dp} for {d}")));
+    }
+    let alpha = *scales
+        .first()
+        .ok_or_else(|| Error::Codec("drive: missing scale".into()))?;
+    let mut y = vec![0.0f32; dp];
+    for (i, v) in y.iter_mut().enumerate() {
+        let bit = (bits[i / 64] >> (i % 64)) & 1;
+        *v = if bit == 1 { alpha } else { -alpha };
+    }
+    fwht::rotate_inv(&mut y, *seed);
+    y.truncate(d);
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noise::{NoiseDist, NoiseGen};
+    use crate::stats::{cosine, l2, l2_dist};
+
+    fn gauss(d: usize, seed: u64) -> Vec<f32> {
+        let mut g = NoiseGen::new(seed);
+        let mut x = vec![0.0f32; d];
+        g.fill(NoiseDist::Gaussian { alpha: 0.1 }, &mut x);
+        x
+    }
+
+    #[test]
+    fn reconstruction_correlates() {
+        let x = gauss(3000, 1);
+        let y = decode(&encode(&x, 42), 3000).unwrap();
+        assert!(cosine(&x, &y) > 0.7, "cos {}", cosine(&x, &y));
+    }
+
+    #[test]
+    fn error_below_norm() {
+        // DRIVE's guarantee: ||x - x̂|| < ||x|| (strictly, for any x) —
+        // the min-MSE scale can only shrink the residual.
+        for seed in 0..10 {
+            let x = gauss(1111, 100 + seed);
+            let y = decode(&encode(&x, seed), 1111).unwrap();
+            assert!(l2_dist(&x, &y) < l2(&x));
+        }
+    }
+
+    #[test]
+    fn seed_must_match() {
+        let x = gauss(512, 2);
+        let p = encode(&x, 7);
+        let y_ok = decode(&p, 512).unwrap();
+        // tamper with the seed -> garbage (low correlation)
+        if let Payload::SignBits { d, bits, scales, .. } = p {
+            let bad = Payload::SignBits { d, bits, scales, seed: 8 };
+            let y_bad = decode(&bad, 512).unwrap();
+            assert!(cosine(&x, &y_ok) > cosine(&x, &y_bad) + 0.3);
+        } else {
+            panic!("wrong payload");
+        }
+    }
+
+    #[test]
+    fn pow2_input_unpadded() {
+        let x = gauss(1024, 3);
+        let p = encode(&x, 1);
+        if let Payload::SignBits { d, .. } = &p {
+            assert_eq!(*d, 1024);
+        }
+        assert_eq!(decode(&p, 1024).unwrap().len(), 1024);
+    }
+}

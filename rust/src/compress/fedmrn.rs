@@ -1,0 +1,153 @@
+//! FedMRN server-side decoder: seed + mask bits → masked random noise.
+//!
+//! The client side of FedMRN is *not* here — masks are learned during
+//! local training (coordinator::client) and finalised by the AOT'd
+//! Pallas kernel. This module implements the server half of Eq. 5:
+//! regenerate `G(s)` from the 8-byte seed with the shared [`NoiseGen`]
+//! and apply the 1-bit masks, either materialised or fused directly into
+//! the aggregation accumulator (the hot path).
+
+use crate::bitpack;
+use crate::error::{Error, Result};
+use crate::noise::{NoiseDist, NoiseGen};
+use crate::transport::Payload;
+
+use super::MaskType;
+
+/// Materialise the update `G(seed) ⊙ m` (binary) or `G(seed) ⊙ m_s`
+/// (signed) from a [`Payload::MaskedSeed`].
+pub fn decode(
+    p: &Payload,
+    d: usize,
+    dist: NoiseDist,
+    mask_type: MaskType,
+) -> Result<Vec<f32>> {
+    let Payload::MaskedSeed { seed, d: pd, bits } = p else {
+        return Err(Error::Codec("fedmrn: wrong payload".into()));
+    };
+    if *pd as usize != d {
+        return Err(Error::Codec(format!("fedmrn: d {pd} != {d}")));
+    }
+    let mut noise = vec![0.0f32; d];
+    NoiseGen::new(*seed).fill(dist, &mut noise);
+    let mut out = vec![0.0f32; d];
+    match mask_type {
+        MaskType::Binary => bitpack::apply_binary(bits, &noise, &mut out),
+        MaskType::Signed => bitpack::apply_signed(bits, &noise, &mut out),
+    }
+    Ok(out)
+}
+
+/// Fused aggregation inner loop: `acc += scale * (G(seed) ⊙ m)` without
+/// materialising the reconstructed update (Eq. 5, hot path). `scratch`
+/// must be a `d`-sized buffer reused across clients (noise regen target).
+pub fn accumulate(
+    p: &Payload,
+    dist: NoiseDist,
+    mask_type: MaskType,
+    scale: f32,
+    acc: &mut [f32],
+    scratch: &mut Vec<f32>,
+) -> Result<()> {
+    let Payload::MaskedSeed { seed, d: pd, bits } = p else {
+        return Err(Error::Codec("fedmrn: wrong payload".into()));
+    };
+    let d = acc.len();
+    if *pd as usize != d {
+        return Err(Error::Codec(format!("fedmrn: d {pd} != {d}")));
+    }
+    scratch.clear();
+    scratch.resize(d, 0.0);
+    NoiseGen::new(*seed).fill(dist, scratch);
+    match mask_type {
+        MaskType::Binary => bitpack::accumulate_binary(bits, scratch, scale, acc),
+        MaskType::Signed => bitpack::accumulate_signed(bits, scratch, scale, acc),
+    }
+    Ok(())
+}
+
+/// Client-side helper: pack an f32 mask (from the HLO finalize step) into
+/// the wire payload.
+pub fn make_payload(mask: &[f32], seed: u64, mask_type: MaskType) -> Payload {
+    let mut bits = Vec::new();
+    match mask_type {
+        MaskType::Binary => bitpack::pack_binary(mask, &mut bits),
+        MaskType::Signed => bitpack::pack_signed(mask, &mut bits),
+    }
+    Payload::MaskedSeed { seed, d: mask.len() as u32, bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask(d: usize, seed: u64, mt: MaskType) -> Vec<f32> {
+        let mut g = NoiseGen::new(seed);
+        (0..d)
+            .map(|_| {
+                let b = g.next_u64() & 1 == 1;
+                match mt {
+                    MaskType::Binary => if b { 1.0 } else { 0.0 },
+                    MaskType::Signed => if b { 1.0 } else { -1.0 },
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn decode_matches_manual_reconstruction() {
+        let d = 1000;
+        let dist = NoiseDist::Uniform { alpha: 0.01 };
+        for mt in [MaskType::Binary, MaskType::Signed] {
+            let m = mask(d, 1, mt);
+            let p = make_payload(&m, 0xABCD, mt);
+            let got = decode(&p, d, dist, mt).unwrap();
+            let mut noise = vec![0.0f32; d];
+            NoiseGen::new(0xABCD).fill(dist, &mut noise);
+            for i in 0..d {
+                assert_eq!(got[i], noise[i] * m[i], "{mt:?} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_matches_decode() {
+        let d = 513;
+        let dist = NoiseDist::Gaussian { alpha: 0.005 };
+        for mt in [MaskType::Binary, MaskType::Signed] {
+            let m = mask(d, 2, mt);
+            let p = make_payload(&m, 42, mt);
+            let dec = decode(&p, d, dist, mt).unwrap();
+            let mut acc = vec![0.25f32; d];
+            let mut scratch = Vec::new();
+            accumulate(&p, dist, mt, 0.5, &mut acc, &mut scratch).unwrap();
+            for i in 0..d {
+                let want = 0.25 + 0.5 * dec[i];
+                assert!((acc[i] - want).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_bit_exact() {
+        // through actual bytes: client packs -> serialize -> parse -> decode
+        let d = 300;
+        let dist = NoiseDist::Bernoulli { alpha: 0.02 };
+        let m = mask(d, 3, MaskType::Binary);
+        let p = make_payload(&m, 7, MaskType::Binary);
+        let bytes = p.encode();
+        let p2 = Payload::decode(&bytes).unwrap();
+        assert_eq!(
+            decode(&p, d, dist, MaskType::Binary).unwrap(),
+            decode(&p2, d, dist, MaskType::Binary).unwrap()
+        );
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let m = mask(64, 4, MaskType::Binary);
+        let p = make_payload(&m, 1, MaskType::Binary);
+        assert!(decode(&p, 65, NoiseDist::Uniform { alpha: 1.0 }, MaskType::Binary)
+            .is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! FedPM (Isik et al., ICLR'23): probabilistic-mask federated learning.
+//!
+//! The *model compression* baseline: the global state is a vector of
+//! mask scores `s`; clients train `s` locally (HLO `fedpm_step`), sample
+//! a Bernoulli mask `m ~ Bern(sigmoid(s))` and upload only the bits.
+//! The server estimates the mean probability and inverts the sigmoid:
+//! `s ← logit(clamp(mean(m), ε, 1−ε))` — the lossy aggregation the
+//! paper's §2.2 criticises (score updates are crushed to 1 bit).
+
+use crate::bitpack;
+use crate::error::{Error, Result};
+use crate::transport::Payload;
+
+/// Client uplink: pack the sampled mask (f32 {0,1} from `fedpm_sample`).
+pub fn make_payload(mask: &[f32]) -> Payload {
+    let mut bits = Vec::new();
+    bitpack::pack_binary(mask, &mut bits);
+    Payload::MaskBits { d: mask.len() as u32, bits }
+}
+
+/// Server aggregation: mean of the sampled masks → logit → new scores.
+pub fn aggregate(payloads: &[Payload], d: usize) -> Result<Vec<f32>> {
+    if payloads.is_empty() {
+        return Err(Error::Codec("fedpm: no payloads".into()));
+    }
+    let mut counts = vec![0u32; d];
+    for p in payloads {
+        let Payload::MaskBits { d: pd, bits } = p else {
+            return Err(Error::Codec("fedpm: wrong payload".into()));
+        };
+        if *pd as usize != d {
+            return Err(Error::Codec(format!("fedpm: d {pd} != {d}")));
+        }
+        for (i, c) in counts.iter_mut().enumerate() {
+            *c += ((bits[i / 64] >> (i % 64)) & 1) as u32;
+        }
+    }
+    let k = payloads.len() as f32;
+    const EPS: f32 = 1e-4;
+    Ok(counts
+        .iter()
+        .map(|&c| {
+            let p = (c as f32 / k).clamp(EPS, 1.0 - EPS);
+            (p / (1.0 - p)).ln() // logit
+        })
+        .collect())
+}
+
+/// Deterministic effective parameters for evaluation:
+/// `w_eff = w_init ⊙ 1{sigmoid(s) > 0.5}` (= `s > 0`).
+pub fn effective_params(w_init: &[f32], scores: &[f32], out: &mut [f32]) {
+    for ((o, &w), &s) in out.iter_mut().zip(w_init).zip(scores) {
+        *o = if s > 0.0 { w } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noise::NoiseGen;
+
+    #[test]
+    fn aggregate_recovers_probabilities() {
+        // many clients sampling from the same underlying p -> logit(p)
+        let d = 200;
+        let p_true: Vec<f32> = (0..d).map(|i| 0.05 + 0.9 * i as f32 / d as f32).collect();
+        let mut g = NoiseGen::new(1);
+        let payloads: Vec<Payload> = (0..500)
+            .map(|_| {
+                let mask: Vec<f32> = p_true
+                    .iter()
+                    .map(|&p| if g.next_f32() < p { 1.0 } else { 0.0 })
+                    .collect();
+                make_payload(&mask)
+            })
+            .collect();
+        let scores = aggregate(&payloads, d).unwrap();
+        for i in 0..d {
+            let p_est = 1.0 / (1.0 + (-scores[i]).exp());
+            assert!((p_est - p_true[i]).abs() < 0.08, "i={i}");
+        }
+    }
+
+    #[test]
+    fn logit_clamped_at_extremes() {
+        let mask_all = vec![1.0f32; 64];
+        let scores = aggregate(&[make_payload(&mask_all)], 64).unwrap();
+        assert!(scores.iter().all(|s| s.is_finite() && *s > 5.0));
+        let mask_none = vec![0.0f32; 64];
+        let scores = aggregate(&[make_payload(&mask_none)], 64).unwrap();
+        assert!(scores.iter().all(|s| s.is_finite() && *s < -5.0));
+    }
+
+    #[test]
+    fn effective_params_threshold() {
+        let w = [1.0f32, 2.0, 3.0];
+        let s = [0.5f32, -0.5, 0.0];
+        let mut out = [9.0f32; 3];
+        effective_params(&w, &s, &mut out);
+        assert_eq!(out, [1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dimension_checked() {
+        let p = make_payload(&vec![1.0f32; 64]);
+        assert!(aggregate(&[p], 65).is_err());
+        assert!(aggregate(&[], 64).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Post-training stochastic masking — the `FedAvg w. SM` arm of the
+//! Figure-4 study.
+//!
+//! Applies FedMRN's SM map (Eq. 6/7) to the dense update *after* plain
+//! local training, instead of learning through it. Same wire format and
+//! decoder as FedMRN; only the timing of the masking differs — which is
+//! exactly the comparison §5.4 makes (during-training masking wins).
+
+use crate::bitpack;
+use crate::error::Result;
+use crate::noise::{NoiseDist, NoiseGen};
+use crate::transport::Payload;
+
+use super::{fedmrn, MaskType};
+
+pub fn encode(update: &[f32], seed: u64, dist: NoiseDist, mask_type: MaskType) -> Payload {
+    let d = update.len();
+    let mut noise = vec![0.0f32; d];
+    NoiseGen::new(seed).fill(dist, &mut noise);
+    // independent Bernoulli stream (NOT the noise stream — the server
+    // only ever regenerates the noise)
+    let mut bern = NoiseGen::new(seed ^ 0x0505_5353_4d4d_u64);
+    let mut bits = vec![0u64; bitpack::words_for(d)];
+    match mask_type {
+        MaskType::Binary => {
+            for i in 0..d {
+                let n = noise[i];
+                let p = if n == 0.0 { 0.0 } else { (update[i] / n).clamp(0.0, 1.0) };
+                if bern.next_f32() < p {
+                    bits[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        MaskType::Signed => {
+            for i in 0..d {
+                let n = noise[i];
+                let p = if n == 0.0 {
+                    0.5
+                } else {
+                    ((update[i] + n) / (2.0 * n)).clamp(0.0, 1.0)
+                };
+                if bern.next_f32() < p {
+                    bits[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+    }
+    Payload::MaskedSeed { seed, d: d as u32, bits }
+}
+
+pub fn decode(p: &Payload, d: usize, dist: NoiseDist, mask_type: MaskType) -> Result<Vec<f32>> {
+    fedmrn::decode(p, d, dist, mask_type)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{l2, l2_dist};
+
+    #[test]
+    fn unbiased_when_update_inside_noise_range() {
+        // if |u_i| <= alpha and sign-compatible, SM is unbiased
+        let d = 256;
+        let alpha = 0.1f32;
+        let dist = NoiseDist::Bernoulli { alpha };
+        // u inside [-alpha, alpha]: signed masks are unbiased
+        let mut g = NoiseGen::new(1);
+        let mut u = vec![0.0f32; d];
+        g.fill(NoiseDist::Uniform { alpha: alpha * 0.9 }, &mut u);
+        let mut acc = vec![0.0f64; d];
+        let reps = 2000;
+        for r in 0..reps {
+            let y = decode(&encode(&u, r, dist, MaskType::Signed), d, dist,
+                           MaskType::Signed).unwrap();
+            for (a, v) in acc.iter_mut().zip(&y) {
+                *a += *v as f64;
+            }
+        }
+        for i in 0..d {
+            let mean = acc[i] / reps as f64;
+            assert!((mean - u[i] as f64).abs() < 0.02, "i={i} {mean} {}", u[i]);
+        }
+    }
+
+    #[test]
+    fn error_scales_with_norm() {
+        // Assumption 4 sanity: masked error grows with ||u||
+        let d = 2048;
+        let dist = NoiseDist::Uniform { alpha: 0.01 };
+        let errs: Vec<f64> = [0.005f32, 0.02, 0.08]
+            .iter()
+            .map(|&s| {
+                let mut g = NoiseGen::new(7);
+                let mut u = vec![0.0f32; d];
+                g.fill(NoiseDist::Gaussian { alpha: s }, &mut u);
+                let y = decode(&encode(&u, 3, dist, MaskType::Binary), d, dist,
+                               MaskType::Binary).unwrap();
+                l2_dist(&u, &y) / l2(&u).max(1e-12)
+            })
+            .collect();
+        // relative error grows once updates exceed the noise envelope
+        assert!(errs[2] > errs[0], "{errs:?}");
+    }
+
+    #[test]
+    fn wire_is_one_bpp() {
+        let d = 64_000;
+        let u = vec![0.001f32; d];
+        let p = encode(&u, 1, NoiseDist::Uniform { alpha: 0.01 }, MaskType::Binary);
+        let bpp = p.encoded_len() as f64 * 8.0 / d as f64;
+        assert!(bpp < 1.01, "{bpp}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Stochastic sign binarisation (the paper's SignSGD baseline, [32]).
+//!
+//! Per chunk of [`CHUNK`](super::CHUNK) params: scale `α = mean|x|` (the
+//! min-MSE magnitude for fixed signs, as in EF-SignSGD's scaled sign);
+//! each coordinate is encoded as +α with probability `(1 + x/α)/2`
+//! (clipped) and −α otherwise. Coordinates with |x| ≤ α are unbiased;
+//! larger ones saturate to ±α — the norm-bounded error/variance mix that
+//! makes sign methods trainable yet visibly lossier than the rotation
+//! codecs (Table 1's ordering). Bernoulli draws derive from the payload
+//! seed so the encoding is reproducible.
+
+use crate::bitpack;
+use crate::error::{Error, Result};
+use crate::noise::NoiseGen;
+use crate::transport::Payload;
+
+use super::CHUNK;
+
+pub fn encode(x: &[f32], seed: u64) -> Payload {
+    let d = x.len();
+    let n_chunks = d.div_ceil(CHUNK);
+    let mut scales = Vec::with_capacity(n_chunks);
+    let mut bits = vec![0u64; bitpack::words_for(d)];
+    let mut rng = NoiseGen::new(seed ^ 0x5157_5349_474e_u64);
+    for c in 0..n_chunks {
+        let lo = c * CHUNK;
+        let hi = (lo + CHUNK).min(d);
+        let b = x[lo..hi].iter().map(|v| v.abs()).sum::<f32>() / (hi - lo) as f32;
+        scales.push(b);
+        if b == 0.0 {
+            continue; // bits stay 0; decode treats scale 0 as all-zero
+        }
+        for i in lo..hi {
+            let p_plus = (0.5 * (1.0 + x[i] / b)).clamp(0.0, 1.0);
+            if rng.next_f32() < p_plus {
+                bits[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+    Payload::SignBits { d: d as u32, bits, scales, seed }
+}
+
+pub fn decode(p: &Payload, d: usize) -> Result<Vec<f32>> {
+    let Payload::SignBits { d: pd, bits, scales, .. } = p else {
+        return Err(Error::Codec("signsgd: wrong payload".into()));
+    };
+    if *pd as usize != d {
+        return Err(Error::Codec(format!("signsgd: d {pd} != {d}")));
+    }
+    let mut out = vec![0.0f32; d];
+    for (c, &b) in scales.iter().enumerate() {
+        let lo = c * CHUNK;
+        let hi = (lo + CHUNK).min(d);
+        if b == 0.0 {
+            continue;
+        }
+        for (i, o) in out[lo..hi].iter_mut().enumerate() {
+            let gi = lo + i;
+            let bit = (bits[gi / 64] >> (gi % 64)) & 1;
+            *o = if bit == 1 { b } else { -b };
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noise::{NoiseDist, NoiseGen};
+
+    #[test]
+    fn unbiased_inside_scale() {
+        // constant-|x| input: alpha = mean|x| = |x| everywhere, so every
+        // coordinate is inside the unbiased regime
+        let d = 64;
+        let mut g = NoiseGen::new(1);
+        let x: Vec<f32> = (0..d)
+            .map(|_| if g.next_u64() & 1 == 0 { 0.3 } else { -0.3 })
+            .collect();
+        let mut acc = vec![0.0f64; d];
+        let reps = 3000;
+        for r in 0..reps {
+            let y = decode(&encode(&x, r), d).unwrap();
+            for (a, v) in acc.iter_mut().zip(&y) {
+                *a += *v as f64;
+            }
+        }
+        for i in 0..d {
+            let mean = acc[i] / reps as f64;
+            assert!(
+                (mean - x[i] as f64).abs() < 0.05,
+                "i={i} mean={mean} x={}", x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn error_norm_bounded() {
+        // Assumption 4: ||C(x) - x|| <= q||x|| with modest q for the
+        // mean-scale variant
+        let mut g = NoiseGen::new(5);
+        let mut x = vec![0.0f32; 4096];
+        g.fill(NoiseDist::Gaussian { alpha: 0.02 }, &mut x);
+        let y = decode(&encode(&x, 1), 4096).unwrap();
+        let q = crate::stats::l2_dist(&x, &y) / crate::stats::l2(&x);
+        assert!(q < 1.3, "q={q}");
+    }
+
+    #[test]
+    fn zero_chunk_stays_zero() {
+        let x = vec![0.0f32; 100];
+        let y = decode(&encode(&x, 3), 100).unwrap();
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn magnitudes_equal_chunk_mean() {
+        let mut x = vec![0.01f32; 5000];
+        x[4999] = -2.0; // second chunk has a big value raising its mean
+        let y = decode(&encode(&x, 4), 5000).unwrap();
+        let mean2 = (0.01 * (5000 - CHUNK - 1) as f32 + 2.0) / (5000 - CHUNK) as f32;
+        for (i, v) in y.iter().enumerate() {
+            let bound = if i < CHUNK { 0.01 } else { mean2 };
+            assert!(v.abs() <= bound + 1e-5, "i={i} v={v}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut g = NoiseGen::new(2);
+        let mut x = vec![0.0f32; 300];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut x);
+        assert_eq!(encode(&x, 9).encode(), encode(&x, 9).encode());
+        assert_ne!(encode(&x, 9).encode(), encode(&x, 10).encode());
+    }
+}

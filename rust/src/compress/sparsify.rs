@@ -1,0 +1,125 @@
+//! FedSparsify (Stripelis et al., NeurIPS'22 FL workshop): progressive
+//! magnitude pruning of the *model weights* during local training.
+//!
+//! The second model-compression baseline: clients prune `w` toward a
+//! target sparsity on a schedule while training, then upload only the
+//! surviving (index, value) pairs. The server averages the sparse
+//! models. Heavy pruning visibly caps accuracy — the paper's Table 1/2
+//! shape this module must reproduce.
+
+use crate::error::{Error, Result};
+use crate::transport::Payload;
+
+use super::topk;
+
+/// Polynomial pruning schedule (Zhu & Gupta): sparsity at step `t` of
+/// `total`, ramping from 0 to `target` with cubic easing.
+pub fn schedule(target: f32, t: usize, total: usize) -> f32 {
+    if total == 0 {
+        return target;
+    }
+    let frac = (t as f32 / total as f32).clamp(0.0, 1.0);
+    target * (1.0 - (1.0 - frac).powi(3))
+}
+
+/// Zero the smallest-|w| entries in place so that `sparsity` fraction of
+/// the entries are zero. Returns the number of surviving entries.
+pub fn prune_to_sparsity(w: &mut [f32], sparsity: f32) -> usize {
+    let d = w.len();
+    let keep = ((1.0 - sparsity as f64) * d as f64).round() as usize;
+    let keep = keep.clamp(1, d);
+    if keep == d {
+        return d;
+    }
+    let idx = topk::top_k_indices(w, keep);
+    let mut mask = vec![false; d];
+    for &i in &idx {
+        mask[i as usize] = true;
+    }
+    for (v, m) in w.iter_mut().zip(&mask) {
+        if !m {
+            *v = 0.0;
+        }
+    }
+    keep
+}
+
+/// Encode the nonzero entries of a pruned weight vector.
+pub fn encode_sparse(w: &[f32]) -> Payload {
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    for (i, &v) in w.iter().enumerate() {
+        if v != 0.0 {
+            idx.push(i as u32);
+            val.push(v);
+        }
+    }
+    Payload::Sparse { d: w.len() as u32, idx, val }
+}
+
+/// Decode a sparse weight vector (dense, zeros elsewhere).
+pub fn decode_sparse(p: &Payload, d: usize) -> Result<Vec<f32>> {
+    let Payload::Sparse { d: pd, idx, val } = p else {
+        return Err(Error::Codec("fedsparsify: wrong payload".into()));
+    };
+    if *pd as usize != d {
+        return Err(Error::Codec(format!("fedsparsify: d {pd} != {d}")));
+    }
+    let mut out = vec![0.0f32; d];
+    for (&i, &v) in idx.iter().zip(val) {
+        if i as usize >= d {
+            return Err(Error::Codec("fedsparsify: index out of range".into()));
+        }
+        out[i as usize] = v;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noise::{NoiseDist, NoiseGen};
+
+    #[test]
+    fn schedule_ramps_to_target() {
+        assert_eq!(schedule(0.97, 0, 100), 0.0);
+        assert!((schedule(0.97, 100, 100) - 0.97).abs() < 1e-6);
+        // monotone
+        let mut prev = -1.0f32;
+        for t in 0..=100 {
+            let s = schedule(0.97, t, 100);
+            assert!(s >= prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn prune_hits_requested_sparsity() {
+        let mut g = NoiseGen::new(1);
+        let mut w = vec![0.0f32; 10_000];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+        let kept = prune_to_sparsity(&mut w, 0.97);
+        assert_eq!(kept, 300);
+        assert_eq!(w.iter().filter(|v| **v != 0.0).count(), 300);
+    }
+
+    #[test]
+    fn prune_keeps_largest() {
+        let mut w = vec![0.1f32, -9.0, 0.2, 8.0, 0.3];
+        prune_to_sparsity(&mut w, 0.6);
+        assert_eq!(w, vec![0.0, -9.0, 0.0, 8.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let mut g = NoiseGen::new(2);
+        let mut w = vec![0.0f32; 500];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+        prune_to_sparsity(&mut w, 0.9);
+        let p = encode_sparse(&w);
+        let back = decode_sparse(&p, 500).unwrap();
+        assert_eq!(back, w);
+        // wire size ≈ 8 bytes per survivor
+        assert!(p.encoded_len() < 60 * 8 + 32);
+    }
+}

@@ -1,0 +1,167 @@
+//! Top-k magnitude sparsification (Aji & Heafield, EMNLP'17).
+//!
+//! Keeps the `frac` fraction (paper: 3% ⇒ 97% sparsity) of coordinates
+//! with the largest magnitude; the wire carries (u32 index, f32 value)
+//! pairs. Selection is an O(d) quickselect on |x| with a deterministic
+//! pivot schedule (median-of-three), no allocation beyond the output.
+
+use crate::error::{Error, Result};
+use crate::transport::Payload;
+
+/// Number of kept coordinates for a given fraction (at least 1).
+pub fn k_for(d: usize, frac: f32) -> usize {
+    (((d as f64) * frac as f64).ceil() as usize).clamp(1, d)
+}
+
+pub fn encode(x: &[f32], frac: f32) -> Payload {
+    let d = x.len();
+    let k = k_for(d, frac);
+    let idx = top_k_indices(x, k);
+    let val: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+    Payload::Sparse { d: d as u32, idx, val }
+}
+
+pub fn decode(p: &Payload, d: usize) -> Result<Vec<f32>> {
+    let Payload::Sparse { d: pd, idx, val } = p else {
+        return Err(Error::Codec("topk: wrong payload".into()));
+    };
+    if *pd as usize != d {
+        return Err(Error::Codec(format!("topk: d {pd} != {d}")));
+    }
+    if idx.len() != val.len() {
+        return Err(Error::Codec("topk: idx/val length mismatch".into()));
+    }
+    let mut out = vec![0.0f32; d];
+    for (&i, &v) in idx.iter().zip(val) {
+        let i = i as usize;
+        if i >= d {
+            return Err(Error::Codec(format!("topk: index {i} out of range")));
+        }
+        out[i] = v;
+    }
+    Ok(out)
+}
+
+/// Indices of the k largest-|x| entries (ascending index order).
+pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let d = x.len();
+    let k = k.min(d);
+    if k == d {
+        return (0..d as u32).collect();
+    }
+    // quickselect over an index permutation, comparing |x|
+    let mut perm: Vec<u32> = (0..d as u32).collect();
+    let mut lo = 0usize;
+    let mut hi = d;
+    let target = k; // want the k largest at the front
+    while hi - lo > 1 {
+        let pivot = median_of_three(x, &perm, lo, hi);
+        let mid = partition_desc(x, &mut perm, lo, hi, pivot);
+        match mid.cmp(&target) {
+            std::cmp::Ordering::Equal => break,
+            std::cmp::Ordering::Less => lo = mid.max(lo + 1),
+            std::cmp::Ordering::Greater => hi = mid,
+        }
+    }
+    let mut top: Vec<u32> = perm[..target].to_vec();
+    top.sort_unstable();
+    top
+}
+
+fn median_of_three(x: &[f32], perm: &[u32], lo: usize, hi: usize) -> f32 {
+    let a = x[perm[lo] as usize].abs();
+    let b = x[perm[(lo + hi) / 2] as usize].abs();
+    let c = x[perm[hi - 1] as usize].abs();
+    let (mut lo_v, mut hi_v) = if a < b { (a, b) } else { (b, a) };
+    if c < lo_v {
+        hi_v = lo_v;
+        lo_v = c;
+    } else if c < hi_v {
+        hi_v = c;
+    }
+    let _ = lo_v;
+    hi_v.min(a.max(b).max(c)) // the median
+}
+
+/// Partition perm[lo..hi] so entries with |x| > pivot come first; returns
+/// the boundary (global index).
+fn partition_desc(x: &[f32], perm: &mut [u32], lo: usize, hi: usize, pivot: f32) -> usize {
+    let mut i = lo;
+    let mut j = hi;
+    while i < j {
+        if x[perm[i] as usize].abs() > pivot {
+            i += 1;
+        } else {
+            j -= 1;
+            perm.swap(i, j);
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noise::{NoiseDist, NoiseGen};
+
+    #[test]
+    fn keeps_exactly_the_largest() {
+        let x = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 4.0];
+        let idx = top_k_indices(&x, 3);
+        assert_eq!(idx, vec![1, 3, 5]);
+        let y = decode(&encode(&x, 0.5), 6).unwrap();
+        assert_eq!(y, vec![0.0, -5.0, 0.0, 3.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn kept_values_exact_zero_elsewhere() {
+        let mut g = NoiseGen::new(1);
+        let d = 10_000;
+        let mut x = vec![0.0f32; d];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut x);
+        let y = decode(&encode(&x, 0.03), d).unwrap();
+        let k = k_for(d, 0.03);
+        let nonzero = y.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nonzero, k);
+        // threshold property: every kept |v| >= every dropped |x|
+        let min_kept = y
+            .iter()
+            .filter(|v| **v != 0.0)
+            .map(|v| v.abs())
+            .fold(f32::INFINITY, f32::min);
+        let max_dropped = x
+            .iter()
+            .zip(&y)
+            .filter(|(_, yv)| **yv == 0.0)
+            .map(|(xv, _)| xv.abs())
+            .fold(0.0f32, f32::max);
+        assert!(min_kept >= max_dropped, "{min_kept} vs {max_dropped}");
+        // kept entries are copied exactly
+        for (xv, yv) in x.iter().zip(&y) {
+            if *yv != 0.0 {
+                assert_eq!(xv, yv);
+            }
+        }
+    }
+
+    #[test]
+    fn k_at_least_one() {
+        let x = vec![1.0f32; 5];
+        assert_eq!(k_for(5, 0.0001), 1);
+        let y = decode(&encode(&x, 0.0001), 5).unwrap();
+        assert_eq!(y.iter().filter(|v| **v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn ties_handled() {
+        let x = vec![1.0f32; 128];
+        let idx = top_k_indices(&x, 10);
+        assert_eq!(idx.len(), 10);
+    }
+
+    #[test]
+    fn decode_rejects_bad_index() {
+        let p = Payload::Sparse { d: 4, idx: vec![9], val: vec![1.0] };
+        assert!(decode(&p, 4).is_err());
+    }
+}

@@ -1,0 +1,379 @@
+//! Client-side local training drivers (Algorithm 1, ClientLocalUpdate).
+//!
+//! Each driver runs the client's local epochs through the AOT'd HLO step
+//! functions and produces the uplink [`Payload`]:
+//!
+//! * [`train_plain`] — FedAvg-style dense local SGD; the base for every
+//!   post-training codec and FedSparsify.
+//! * [`train_mrn`] — FedMRN: the update copy `u` is optimised through
+//!   the PSM Pallas kernel (inside `mrn_*` HLO); after the last step the
+//!   `finalize_*` kernel samples the wire mask (Algorithm 1, line 20)
+//!   and the payload is just `{seed, packed bits}`.
+//! * [`train_fedpm`] — FedPM score training + Bernoulli mask sampling.
+//!
+//! All Bernoulli/PRNG inputs are derived from the per-(client, round)
+//! stream; the *noise* seed is the only randomness the server ever needs
+//! to reproduce.
+
+use xla::Literal;
+
+use crate::compress::{fedmrn, fedpm as fedpm_codec, sparsify, MaskType};
+use crate::data::{Dataset, Features};
+use crate::error::Result;
+use crate::noise::{NoiseDist, NoiseGen};
+use crate::runtime::{
+    lit_f32, lit_f32_shaped, lit_i32_shaped, lit_key, lit_scalar, scalar_f32,
+    to_vec_f32, ConfigMeta, Runtime,
+};
+use crate::stats::Timer;
+use crate::transport::Payload;
+
+use super::config::MrnMode;
+
+/// Outcome of one client's local round.
+pub struct TrainOutcome {
+    pub payload: Payload,
+    pub train_loss: f64,
+    pub train_ms: f64,
+    /// Time spent producing the compressed uplink after training (the
+    /// Figure-6 "compression time" series).
+    pub compress_ms: f64,
+    pub n_samples: usize,
+}
+
+/// Mini-batches as literals, rebuilt per round from the client's shard.
+pub struct Batches {
+    pub x: Vec<Literal>,
+    pub y: Vec<Literal>,
+    pub n_samples: usize,
+}
+
+/// Assemble shuffled full batches from a client shard. The tail that
+/// doesn't fill a batch is wrapped with samples from the shard head
+/// (standard FL practice; shards are guaranteed ≥ 1 batch by the
+/// partitioner's `min_per_client`).
+pub fn make_batches(
+    ds: &Dataset,
+    shard: &[usize],
+    meta: &ConfigMeta,
+    max_batches: usize,
+    rng: &mut NoiseGen,
+) -> Result<Batches> {
+    let b = meta.batch;
+    let mut order: Vec<usize> = shard.to_vec();
+    rng.shuffle(&mut order);
+    let n_batches = order.len().div_ceil(b).max(1);
+    let n_batches = if max_batches > 0 { n_batches.min(max_batches) } else { n_batches };
+    let feat_len = meta.features_per_sample();
+    let lab_len = meta.labels_per_sample();
+    let mut xs = Vec::with_capacity(n_batches);
+    let mut ys = Vec::with_capacity(n_batches);
+    let mut xdims = vec![b];
+    xdims.extend_from_slice(&meta.input_shape);
+    let mut ydims = vec![b];
+    ydims.extend_from_slice(&meta.label_shape);
+    for bi in 0..n_batches {
+        let mut ybuf = vec![0i32; b * lab_len];
+        let take = |j: usize| order[(bi * b + j) % order.len()];
+        match &ds.feats {
+            Features::F32(_) => {
+                let mut xbuf = vec![0.0f32; b * feat_len];
+                for j in 0..b {
+                    let i = take(j);
+                    ds.copy_feats_f32(i, &mut xbuf[j * feat_len..(j + 1) * feat_len]);
+                    ds.copy_labels(i, &mut ybuf[j * lab_len..(j + 1) * lab_len]);
+                }
+                xs.push(lit_f32_shaped(&xbuf, &xdims)?);
+            }
+            Features::I32(_) => {
+                let mut xbuf = vec![0i32; b * feat_len];
+                for j in 0..b {
+                    let i = take(j);
+                    ds.copy_feats_i32(i, &mut xbuf[j * feat_len..(j + 1) * feat_len]);
+                    ds.copy_labels(i, &mut ybuf[j * lab_len..(j + 1) * lab_len]);
+                }
+                xs.push(lit_i32_shaped(&xbuf, &xdims)?);
+            }
+        }
+        ys.push(lit_i32_shaped(&ybuf, &ydims)?);
+    }
+    Ok(Batches { x: xs, y: ys, n_samples: shard.len() })
+}
+
+/// Plain local SGD over `epochs`; returns the trained local weights and
+/// the mean step loss. Parameters stay device-side literals between
+/// steps; only the final state is copied back to the host.
+pub fn train_plain(
+    rt: &Runtime,
+    meta: &ConfigMeta,
+    w_global: &[f32],
+    batches: &Batches,
+    epochs: usize,
+    lr: f32,
+) -> Result<(Vec<f32>, f64)> {
+    let mut w_lit = lit_f32(w_global);
+    let lr_lit = lit_scalar(lr);
+    let mut loss_sum = 0.0f64;
+    let mut steps = 0usize;
+    for _ in 0..epochs {
+        for (x, y) in batches.x.iter().zip(&batches.y) {
+            let outs = rt.execute_refs(
+                &meta.name,
+                "plain_step",
+                &[&w_lit, x, y, &lr_lit],
+            )?;
+            let mut outs = outs.into_iter();
+            w_lit = outs.next().unwrap();
+            loss_sum += scalar_f32(&outs.next().unwrap())? as f64;
+            steps += 1;
+        }
+    }
+    Ok((to_vec_f32(&w_lit)?, loss_sum / steps.max(1) as f64))
+}
+
+/// FedMRN local training (Algorithm 1 lines 11-20).
+///
+/// `noise_seed` determines `G(s)`; the PM gate probability advances
+/// linearly `τ/S` over the S = epochs × batches local steps.
+#[allow(clippy::too_many_arguments)]
+pub fn train_mrn(
+    rt: &Runtime,
+    meta: &ConfigMeta,
+    w_global: &[f32],
+    batches: &Batches,
+    epochs: usize,
+    lr: f32,
+    mask_type: MaskType,
+    mode: MrnMode,
+    noise_dist: NoiseDist,
+    noise_seed: u64,
+    rng: &mut NoiseGen,
+) -> Result<(Payload, f64, f64)> {
+    let d = meta.param_dim;
+    let step_name = mrn_step_name(mask_type, mode);
+    let mut noise = vec![0.0f32; d];
+    NoiseGen::new(noise_seed).fill(noise_dist, &mut noise);
+    let noise_lit = lit_f32(&noise);
+    let w_lit = lit_f32(w_global);
+    let lr_lit = lit_scalar(lr);
+    let mut u_lit = lit_f32(&vec![0.0f32; d]);
+    let total_steps = (epochs * batches.x.len()).max(1);
+    let mut tau = 0usize;
+    let mut loss_sum = 0.0f64;
+    for _ in 0..epochs {
+        for (x, y) in batches.x.iter().zip(&batches.y) {
+            tau += 1;
+            let p_gate = tau as f32 / total_steps as f32;
+            let outs = rt.execute_refs(
+                &meta.name,
+                step_name,
+                &[
+                    &w_lit,
+                    &u_lit,
+                    x,
+                    y,
+                    &noise_lit,
+                    &lit_key(rng.next_u64()),
+                    &lit_scalar(p_gate),
+                    &lr_lit,
+                ],
+            )?;
+            let mut outs = outs.into_iter();
+            u_lit = outs.next().unwrap();
+            loss_sum += scalar_f32(&outs.next().unwrap())? as f64;
+        }
+    }
+    // Finalize: sample the wire mask from the final u (line 20).
+    let t_fin = Timer::new();
+    let fin_name = finalize_step_name(mask_type, mode);
+    let outs = rt.execute_refs(
+        &meta.name,
+        fin_name,
+        &[&u_lit, &noise_lit, &lit_key(rng.next_u64())],
+    )?;
+    let mask = to_vec_f32(&outs[0])?;
+    let payload = fedmrn::make_payload(&mask, noise_seed, mask_type);
+    let fin_ms = t_fin.ms();
+    Ok((payload, loss_sum / (total_steps) as f64, fin_ms))
+}
+
+pub fn mrn_step_name(mask_type: MaskType, mode: MrnMode) -> &'static str {
+    match (mask_type, mode) {
+        (MaskType::Binary, MrnMode::Psm) => "mrn_bin_psm",
+        (MaskType::Binary, MrnMode::Sm) => "mrn_bin_sm",
+        (MaskType::Binary, MrnMode::Pm) => "mrn_bin_pm",
+        (MaskType::Binary, MrnMode::Dm) => "mrn_bin_dm",
+        (MaskType::Signed, _) => "mrn_sign_psm",
+    }
+}
+
+pub fn finalize_step_name(mask_type: MaskType, mode: MrnMode) -> &'static str {
+    match (mask_type, mode) {
+        // stochastic finalize matches SM-bearing modes; deterministic
+        // (sign-agreement) finalize matches the DM-only ablations
+        (MaskType::Binary, MrnMode::Psm | MrnMode::Sm) => "finalize_bin",
+        (MaskType::Binary, MrnMode::Pm | MrnMode::Dm) => "finalize_bin_dm",
+        (MaskType::Signed, _) => "finalize_sign",
+    }
+}
+
+/// FedPM local training: score SGD + mask sampling.
+pub fn train_fedpm(
+    rt: &Runtime,
+    meta: &ConfigMeta,
+    w_init: &[f32],
+    scores: &[f32],
+    batches: &Batches,
+    epochs: usize,
+    lr: f32,
+    rng: &mut NoiseGen,
+) -> Result<(Payload, f64, f64)> {
+    let w_lit = lit_f32(w_init);
+    let lr_lit = lit_scalar(lr);
+    let mut s_lit = lit_f32(scores);
+    let mut loss_sum = 0.0f64;
+    let mut steps = 0usize;
+    for _ in 0..epochs {
+        for (x, y) in batches.x.iter().zip(&batches.y) {
+            let outs = rt.execute_refs(
+                &meta.name,
+                "fedpm_step",
+                &[&w_lit, &s_lit, x, y, &lit_key(rng.next_u64()), &lr_lit],
+            )?;
+            let mut outs = outs.into_iter();
+            s_lit = outs.next().unwrap();
+            loss_sum += scalar_f32(&outs.next().unwrap())? as f64;
+            steps += 1;
+        }
+    }
+    let t_fin = Timer::new();
+    let outs = rt.execute_refs(
+        &meta.name,
+        "fedpm_sample",
+        &[&s_lit, &lit_key(rng.next_u64())],
+    )?;
+    let mask = to_vec_f32(&outs[0])?;
+    let payload = fedpm_codec::make_payload(&mask);
+    Ok((payload, loss_sum / steps.max(1) as f64, t_fin.ms()))
+}
+
+/// Dispatch one client's full local round for any method.
+#[allow(clippy::too_many_arguments)]
+pub fn run_client(
+    rt: &Runtime,
+    meta: &ConfigMeta,
+    method: &super::Method,
+    cfg: &super::RunConfig,
+    round: usize,
+    w_global: &[f32],
+    fedpm_state: Option<(&[f32], &[f32])>, // (w_init, scores)
+    batches: &Batches,
+    noise_seed: u64,
+    rng: &mut NoiseGen,
+) -> Result<TrainOutcome> {
+    use super::Method;
+    let t_all = Timer::new();
+    let (payload, train_loss, compress_ms) = match method {
+        Method::FedAvg => {
+            let (w_local, loss) =
+                train_plain(rt, meta, w_global, batches, cfg.local_epochs, cfg.lr)?;
+            let t = Timer::new();
+            let delta: Vec<f32> =
+                w_local.iter().zip(w_global).map(|(a, b)| a - b).collect();
+            (Payload::Dense(delta), loss, t.ms())
+        }
+        Method::Grad(codec) => {
+            let (w_local, loss) =
+                train_plain(rt, meta, w_global, batches, cfg.local_epochs, cfg.lr)?;
+            let t = Timer::new();
+            let delta: Vec<f32> =
+                w_local.iter().zip(w_global).map(|(a, b)| a - b).collect();
+            let p = codec.encode(&delta, noise_seed);
+            (p, loss, t.ms())
+        }
+        Method::FedMrn { mask_type, mode } => train_mrn(
+            rt, meta, w_global, batches, cfg.local_epochs, cfg.lr, *mask_type,
+            *mode, cfg.noise, noise_seed, rng,
+        )?,
+        Method::FedPm => {
+            let (w_init, scores) = fedpm_state.expect("fedpm state missing");
+            train_fedpm(rt, meta, w_init, scores, batches, cfg.local_epochs,
+                        cfg.lr, rng)?
+        }
+        Method::FedSparsify { target } => {
+            // prune during local training: train one epoch, prune to the
+            // round-scheduled sparsity, repeat; upload surviving weights
+            let sched =
+                sparsify::schedule(*target, round + 1, cfg.rounds.max(1));
+            let mut w_local = w_global.to_vec();
+            let mut loss = 0.0;
+            for _ in 0..cfg.local_epochs {
+                let (w2, l) = train_plain(rt, meta, &w_local, batches, 1, cfg.lr)?;
+                w_local = w2;
+                sparsify::prune_to_sparsity(&mut w_local, sched);
+                loss = l;
+            }
+            let t = Timer::new();
+            let p = sparsify::encode_sparse(&w_local);
+            (p, loss, t.ms())
+        }
+    };
+    let total_ms = t_all.ms();
+    Ok(TrainOutcome {
+        payload,
+        train_loss,
+        train_ms: total_ms - compress_ms,
+        compress_ms,
+        n_samples: batches.n_samples,
+    })
+}
+
+/// Evaluate global parameters on a test set (full batches only).
+pub fn evaluate(
+    rt: &Runtime,
+    meta: &ConfigMeta,
+    w: &[f32],
+    test: &Dataset,
+) -> Result<(f64, f64)> {
+    let b = meta.batch;
+    let n_batches = test.n / b;
+    assert!(n_batches > 0, "test set smaller than one batch");
+    let w_lit = lit_f32(w);
+    let feat_len = meta.features_per_sample();
+    let lab_len = meta.labels_per_sample();
+    let mut xdims = vec![b];
+    xdims.extend_from_slice(&meta.input_shape);
+    let mut ydims = vec![b];
+    ydims.extend_from_slice(&meta.label_shape);
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    for bi in 0..n_batches {
+        let mut ybuf = vec![0i32; b * lab_len];
+        let x_lit = match &test.feats {
+            Features::F32(_) => {
+                let mut xbuf = vec![0.0f32; b * feat_len];
+                for j in 0..b {
+                    let i = bi * b + j;
+                    test.copy_feats_f32(i, &mut xbuf[j * feat_len..(j + 1) * feat_len]);
+                    test.copy_labels(i, &mut ybuf[j * lab_len..(j + 1) * lab_len]);
+                }
+                lit_f32_shaped(&xbuf, &xdims)?
+            }
+            Features::I32(_) => {
+                let mut xbuf = vec![0i32; b * feat_len];
+                for j in 0..b {
+                    let i = bi * b + j;
+                    test.copy_feats_i32(i, &mut xbuf[j * feat_len..(j + 1) * feat_len]);
+                    test.copy_labels(i, &mut ybuf[j * lab_len..(j + 1) * lab_len]);
+                }
+                lit_i32_shaped(&xbuf, &xdims)?
+            }
+        };
+        let y_lit = lit_i32_shaped(&ybuf, &ydims)?;
+        let outs = rt.execute_refs(&meta.name, "eval_step", &[&w_lit, &x_lit, &y_lit])?;
+        loss_sum += scalar_f32(&outs[0])? as f64;
+        correct += scalar_f32(&outs[1])? as f64;
+    }
+    let n_preds = (n_batches * b * lab_len) as f64;
+    Ok((loss_sum / n_preds, correct / n_preds))
+}

@@ -1,0 +1,233 @@
+//! Run configuration: one struct fully describing a federated run.
+
+use crate::compress::{GradCodec, MaskType};
+use crate::data::partition::Partition;
+use crate::error::{Error, Result};
+use crate::noise::NoiseDist;
+
+/// FedMRN masking mode (the Figure-4 ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MrnMode {
+    /// Full progressive stochastic masking (the paper's method).
+    Psm,
+    /// w/o PM: stochastic masking only.
+    Sm,
+    /// w/o SM: PM gate over deterministic masking.
+    Pm,
+    /// w/o PSM: deterministic masking only.
+    Dm,
+}
+
+impl MrnMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MrnMode::Psm => "psm",
+            MrnMode::Sm => "sm",
+            MrnMode::Pm => "pm",
+            MrnMode::Dm => "dm",
+        }
+    }
+}
+
+/// Federated training method (row of Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// FedAvg — dense uplink, the accuracy reference.
+    FedAvg,
+    /// Plain local training + post-training gradient codec.
+    Grad(GradCodec),
+    /// FedMRN: learn masks over seeded noise during local training.
+    FedMrn { mask_type: MaskType, mode: MrnMode },
+    /// FedPM: supermask over frozen init weights (model compression).
+    FedPm,
+    /// FedSparsify: progressive magnitude pruning of the weights.
+    FedSparsify { target: f32 },
+}
+
+impl Method {
+    /// Parse a method name. `noise` parameterises the methods that need a
+    /// noise distribution (fedmrn*, postsm).
+    pub fn parse(name: &str, noise: NoiseDist) -> Result<Method> {
+        Ok(match name {
+            "fedavg" => Method::FedAvg,
+            "signsgd" => Method::Grad(GradCodec::SignSgd),
+            "terngrad" => Method::Grad(GradCodec::TernGrad),
+            "topk" => Method::Grad(GradCodec::TopK { frac: 0.03 }),
+            "drive" => Method::Grad(GradCodec::Drive),
+            "eden" => Method::Grad(GradCodec::Eden),
+            "postsm" | "fedavg_sm" => Method::Grad(GradCodec::PostSm {
+                dist: noise,
+                mask_type: MaskType::Binary,
+            }),
+            "fedmrn" => Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Psm },
+            "fedmrns" => Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Psm },
+            "fedmrn_sm" | "fedmrn_wo_pm" => {
+                Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Sm }
+            }
+            "fedmrn_pm" | "fedmrn_wo_sm" => {
+                Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Pm }
+            }
+            "fedmrn_dm" | "fedmrn_wo_psm" => {
+                Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Dm }
+            }
+            "fedpm" => Method::FedPm,
+            "fedsparsify" => Method::FedSparsify { target: 0.97 },
+            other => {
+                return Err(Error::Config(format!("unknown method {other:?}")))
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::FedAvg => "fedavg".into(),
+            Method::Grad(c) => c.name().into(),
+            Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Psm } => {
+                "fedmrn".into()
+            }
+            Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Psm } => {
+                "fedmrns".into()
+            }
+            Method::FedMrn { mask_type, mode } => {
+                format!("fedmrn_{}_{}", mask_type.name(), mode.name())
+            }
+            Method::FedPm => "fedpm".into(),
+            Method::FedSparsify { .. } => "fedsparsify".into(),
+        }
+    }
+
+    /// The Table-1 roster in paper order.
+    pub fn table1_roster(noise: NoiseDist) -> Vec<Method> {
+        [
+            "fedavg", "fedpm", "fedsparsify", "signsgd", "topk", "terngrad",
+            "drive", "eden", "fedmrn", "fedmrns",
+        ]
+        .iter()
+        .map(|m| Method::parse(m, noise).unwrap())
+        .collect()
+    }
+}
+
+/// Full description of one federated run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact config name (e.g. "fmnist_cnn4").
+    pub config: String,
+    pub method: Method,
+    pub rounds: usize,
+    pub n_clients: usize,
+    pub clients_per_round: usize,
+    pub local_epochs: usize,
+    pub lr: f32,
+    /// Noise distribution for FedMRN / PostSM (paper default:
+    /// Uniform[-1e-2,1e-2] binary, [-5e-3,5e-3] signed).
+    pub noise: NoiseDist,
+    pub partition: Partition,
+    pub seed: u64,
+    /// Evaluate every `eval_every` rounds (and always on the last).
+    pub eval_every: usize,
+    /// Cap batches per local epoch (0 = all available).
+    pub max_batches_per_epoch: usize,
+}
+
+impl RunConfig {
+    /// Paper-shaped defaults scaled for the CPU testbed.
+    pub fn new(config: &str, method: Method) -> RunConfig {
+        RunConfig {
+            config: config.to_string(),
+            method,
+            rounds: 15,
+            n_clients: 20,
+            clients_per_round: 5,
+            local_epochs: 1,
+            lr: 0.1,
+            noise: NoiseDist::Uniform { alpha: 0.01 },
+            partition: Partition::Iid,
+            seed: 1,
+            eval_every: 1,
+            max_batches_per_epoch: 0,
+        }
+    }
+
+    /// Default noise magnitude per paper §5.1.4: signed masks use half
+    /// the binary magnitude.
+    pub fn default_noise_for(method: &Method) -> NoiseDist {
+        match method {
+            Method::FedMrn { mask_type: MaskType::Signed, .. } => {
+                NoiseDist::Uniform { alpha: 5e-3 }
+            }
+            _ => NoiseDist::Uniform { alpha: 1e-2 },
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients_per_round == 0 || self.clients_per_round > self.n_clients {
+            return Err(Error::Config(format!(
+                "clients_per_round {} out of range (n_clients {})",
+                self.clients_per_round, self.n_clients
+            )));
+        }
+        if self.rounds == 0 || self.local_epochs == 0 {
+            return Err(Error::Config("rounds/local_epochs must be > 0".into()));
+        }
+        if self.lr <= 0.0 {
+            return Err(Error::Config("lr must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NOISE: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+    #[test]
+    fn parse_all_table1_methods() {
+        let roster = Method::table1_roster(NOISE);
+        assert_eq!(roster.len(), 10);
+        let names: Vec<String> = roster.iter().map(|m| m.name()).collect();
+        assert_eq!(
+            names,
+            vec!["fedavg", "fedpm", "fedsparsify", "signsgd", "topk",
+                 "terngrad", "drive", "eden", "fedmrn", "fedmrns"]
+        );
+    }
+
+    #[test]
+    fn parse_ablations() {
+        assert_eq!(
+            Method::parse("fedmrn_wo_pm", NOISE).unwrap(),
+            Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Sm }
+        );
+        assert_eq!(
+            Method::parse("fedmrn_wo_sm", NOISE).unwrap(),
+            Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Pm }
+        );
+        assert_eq!(
+            Method::parse("fedmrn_wo_psm", NOISE).unwrap(),
+            Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Dm }
+        );
+        assert!(Method::parse("nope", NOISE).is_err());
+    }
+
+    #[test]
+    fn validate_ranges() {
+        let mut cfg = RunConfig::new("smoke_mlp", Method::FedAvg);
+        cfg.validate().unwrap();
+        cfg.clients_per_round = 0;
+        assert!(cfg.validate().is_err());
+        cfg.clients_per_round = 5;
+        cfg.rounds = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn signed_noise_default_is_half() {
+        let signed = Method::parse("fedmrns", NOISE).unwrap();
+        let binary = Method::parse("fedmrn", NOISE).unwrap();
+        assert_eq!(RunConfig::default_noise_for(&signed).alpha(), 5e-3);
+        assert_eq!(RunConfig::default_noise_for(&binary).alpha(), 1e-2);
+    }
+}

@@ -1,0 +1,218 @@
+//! Per-round records and run-level results (JSON / CSV emission).
+
+use crate::jsonx::Value;
+
+/// One federated round's observations.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean local training loss over the selected clients.
+    pub train_loss: f64,
+    /// Global-model test loss (NaN when not evaluated this round).
+    pub test_loss: f64,
+    /// Global-model test accuracy in [0,1] (NaN when not evaluated).
+    pub test_acc: f64,
+    pub uplink_bytes: u64,
+    pub train_ms: f64,
+    pub compress_ms: f64,
+}
+
+impl RoundRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("round", self.round)
+            .set("train_loss", self.train_loss)
+            .set("test_loss", self.test_loss)
+            .set("test_acc", self.test_acc)
+            .set("uplink_bytes", self.uplink_bytes)
+            .set("train_ms", self.train_ms)
+            .set("compress_ms", self.compress_ms)
+    }
+}
+
+/// Result of a full federated run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub config: String,
+    pub method: String,
+    pub partition: String,
+    pub records: Vec<RoundRecord>,
+    pub param_dim: usize,
+    pub wall_secs: f64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    /// Total uplink messages (rounds × participating clients).
+    pub uplink_msgs: u64,
+}
+
+impl RunResult {
+    /// Final accuracy: mean of the last up-to-3 evaluated rounds (the
+    /// paper averages over runs; we smooth over rounds within one run).
+    pub fn final_acc(&self) -> f64 {
+        let evals: Vec<f64> = self
+            .records
+            .iter()
+            .rev()
+            .filter(|r| !r.test_acc.is_nan())
+            .take(3)
+            .map(|r| r.test_acc)
+            .collect();
+        if evals.is_empty() {
+            f64::NAN
+        } else {
+            evals.iter().sum::<f64>() / evals.len() as f64
+        }
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Measured uplink bits per parameter per client message.
+    pub fn uplink_bpp(&self) -> f64 {
+        if self.uplink_msgs == 0 || self.param_dim == 0 {
+            return 0.0;
+        }
+        (self.uplink_bytes as f64 * 8.0)
+            / (self.uplink_msgs as f64 * self.param_dim as f64)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("config", self.config.as_str())
+            .set("method", self.method.as_str())
+            .set("partition", self.partition.as_str())
+            .set("param_dim", self.param_dim)
+            .set("final_acc", self.final_acc())
+            .set("best_acc", self.best_acc())
+            .set("uplink_bytes", self.uplink_bytes)
+            .set("downlink_bytes", self.downlink_bytes)
+            .set("uplink_bpp", self.uplink_bpp())
+            .set("wall_secs", self.wall_secs)
+            .set(
+                "rounds",
+                Value::Arr(self.records.iter().map(|r| r.to_json()).collect()),
+            )
+    }
+
+    /// Write a CSV of the per-round series (for the Figure-3 curves).
+    pub fn write_csv(&self, path: &str) -> crate::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from(
+            "round,train_loss,test_loss,test_acc,uplink_bytes,train_ms,compress_ms\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{},{:.3},{:.3}\n",
+                r.round, r.train_loss, r.test_loss, r.test_acc, r.uplink_bytes,
+                r.train_ms, r.compress_ms
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Builder-style message-count setter (used by the server and tests).
+    pub fn with_msgs(mut self, msgs: u64) -> Self {
+        self.uplink_msgs = msgs;
+        self
+    }
+
+    pub fn new(
+        config: String,
+        method: String,
+        partition: String,
+        records: Vec<RoundRecord>,
+        param_dim: usize,
+        wall_secs: f64,
+        uplink_bytes: u64,
+        downlink_bytes: u64,
+    ) -> Self {
+        RunResult {
+            config,
+            method,
+            partition,
+            records,
+            param_dim,
+            wall_secs,
+            uplink_bytes,
+            downlink_bytes,
+            uplink_msgs: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0,
+            test_loss: 1.0,
+            test_acc: acc,
+            uplink_bytes: 100,
+            train_ms: 1.0,
+            compress_ms: 0.1,
+        }
+    }
+
+    #[test]
+    fn final_acc_averages_last_evals() {
+        let records = vec![
+            record(0, 0.1),
+            record(1, f64::NAN),
+            record(2, 0.5),
+            record(3, 0.6),
+            record(4, 0.7),
+        ];
+        let r = RunResult::new(
+            "c".into(), "m".into(), "iid".into(), records, 10, 1.0, 500, 100,
+        );
+        assert!((r.final_acc() - 0.6).abs() < 1e-9);
+        assert!((r.best_acc() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bpp_uses_message_count() {
+        let r = RunResult::new(
+            "c".into(), "m".into(), "iid".into(), vec![record(0, 0.5)],
+            100, 1.0, 800, 0,
+        )
+        .with_msgs(2);
+        // 800 bytes over 2 msgs × 100 params = 32 bpp
+        assert!((r.uplink_bpp() - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_has_series() {
+        let r = RunResult::new(
+            "c".into(), "m".into(), "iid".into(),
+            vec![record(0, 0.5), record(1, 0.6)], 10, 1.0, 100, 50,
+        );
+        let v = r.to_json();
+        assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("final_acc").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let r = RunResult::new(
+            "c".into(), "m".into(), "iid".into(), vec![record(0, 0.5)],
+            10, 1.0, 100, 50,
+        );
+        let path = std::env::temp_dir().join("fedmrn_metrics_test.csv");
+        r.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the federated runtime (Algorithm 1).
+//!
+//! [`server::Federation`] owns the round loop: client selection,
+//! downlink broadcast, per-client local training through the AOT'd HLO
+//! steps ([`client`]), wire-metered uplink, aggregation (Eq. 3 / Eq. 5),
+//! and periodic evaluation. One [`config::RunConfig`] fully describes a
+//! run; [`metrics::RunResult`] is the structured output every experiment
+//! harness consumes.
+
+pub mod client;
+pub mod config;
+pub mod metrics;
+pub mod server;
+
+pub use config::{Method, MrnMode, RunConfig};
+pub use metrics::{RoundRecord, RunResult};
+pub use server::Federation;

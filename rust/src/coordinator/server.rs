@@ -1,0 +1,420 @@
+//! The federated server: round loop, aggregation, evaluation.
+//!
+//! Implements Algorithm 1's server side. Aggregation follows Eq. 3 / Eq. 5
+//! with data-proportional weights `p'_k = n_k / Σ_{j∈C_t} n_j`. For
+//! FedMRN payloads the reconstruction `G(s_k) ⊙ m_k` is fused into the
+//! accumulator without materialising per-client updates
+//! ([`crate::compress::fedmrn::accumulate`]).
+
+use crate::compress::{fedmrn, fedpm as fedpm_codec, sparsify};
+use crate::data::{partition, Split};
+use crate::error::{Error, Result};
+use crate::noise::{derive_seed, NoiseGen};
+use crate::runtime::{ConfigMeta, Runtime};
+use crate::stats::Timer;
+use crate::transport::Meter;
+
+use super::client::{self, Batches, TrainOutcome};
+use super::config::{Method, RunConfig};
+use super::metrics::{RoundRecord, RunResult};
+
+/// One federated training run in flight.
+pub struct Federation<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    meta: ConfigMeta,
+    split: Split,
+    shards: Vec<Vec<usize>>,
+    /// Global parameters (FedAvg family) — for FedPM these are the mask
+    /// *scores* and `w_init` holds the frozen random weights.
+    pub w: Vec<f32>,
+    w_init: Option<Vec<f32>>,
+    meter: Meter,
+    rng: NoiseGen,
+    /// Per-round client-visible logging (quiet by default).
+    pub verbose: bool,
+}
+
+impl<'rt> Federation<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: RunConfig, split: Split) -> Result<Federation<'rt>> {
+        cfg.validate()?;
+        let meta = rt.config(&cfg.config)?.clone();
+        split.train.validate()?;
+        split.test.validate()?;
+        if split.test.n < meta.batch {
+            return Err(Error::Data(format!(
+                "test set ({}) smaller than one batch ({})",
+                split.test.n, meta.batch
+            )));
+        }
+        let shards = partition::partition(
+            &split.train,
+            cfg.partition,
+            cfg.n_clients,
+            meta.batch.min(split.train.n / cfg.n_clients.max(1)).max(1),
+            cfg.seed,
+        );
+        let init = rt.init_params(&cfg.config)?;
+        let (w, w_init) = match cfg.method {
+            Method::FedPm => {
+                // global state = scores (zeros ⇒ p = 0.5); frozen random
+                // init weights scaled up (supermask convention: weights
+                // must be large enough that masked subnetworks are
+                // expressive)
+                let scores = vec![0.0f32; meta.param_dim];
+                let w_init: Vec<f32> = init.iter().map(|x| x * 3.0).collect();
+                (scores, Some(w_init))
+            }
+            _ => (init, None),
+        };
+        let rng = NoiseGen::new(cfg.seed ^ 0xFEDE_7A7E);
+        Ok(Federation {
+            rt,
+            cfg,
+            meta,
+            split,
+            shards,
+            w,
+            w_init,
+            meter: Meter::new(),
+            rng,
+            verbose: false,
+        })
+    }
+
+    /// Shard sizes (diagnostics / tests).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+
+    /// Select `clients_per_round` distinct clients for a round.
+    fn select_clients(&mut self) -> Vec<usize> {
+        let mut ids: Vec<usize> = (0..self.cfg.n_clients).collect();
+        self.rng.shuffle(&mut ids);
+        ids.truncate(self.cfg.clients_per_round);
+        ids
+    }
+
+    /// Model parameters used for evaluation (FedPM: thresholded masked
+    /// init weights; everyone else: `w` itself).
+    pub fn eval_params(&self) -> Vec<f32> {
+        match (&self.cfg.method, &self.w_init) {
+            (Method::FedPm, Some(w_init)) => {
+                let mut out = vec![0.0f32; self.w.len()];
+                fedpm_codec::effective_params(w_init, &self.w, &mut out);
+                out
+            }
+            _ => self.w.clone(),
+        }
+    }
+
+    /// Run one round; returns its record.
+    pub fn round(&mut self, r: usize) -> Result<RoundRecord> {
+        let t_round = Timer::new();
+        self.meter.begin_round();
+        let selected = self.select_clients();
+        self.meter.downlink_dense(self.meta.param_dim, selected.len());
+
+        let mut outcomes: Vec<(usize, TrainOutcome)> = Vec::new();
+        let mut train_ms = 0.0;
+        let mut compress_ms = 0.0;
+        for &c in &selected {
+            let batches: Batches = client::make_batches(
+                &self.split.train,
+                &self.shards[c],
+                &self.meta,
+                self.cfg.max_batches_per_epoch,
+                &mut self.rng,
+            )?;
+            let noise_seed = derive_seed(self.cfg.seed, c as u64, r as u64, 1);
+            let outcome = client::run_client(
+                self.rt,
+                &self.meta,
+                &self.cfg.method,
+                &self.cfg,
+                r,
+                &self.w,
+                self.w_init.as_deref().map(|wi| (wi, self.w.as_slice())),
+                &batches,
+                noise_seed,
+                &mut self.rng,
+            )?;
+            train_ms += outcome.train_ms;
+            compress_ms += outcome.compress_ms;
+            outcomes.push((c, outcome));
+        }
+        let train_loss = crate::stats::mean(
+            &outcomes.iter().map(|(_, o)| o.train_loss).collect::<Vec<_>>(),
+        );
+
+        self.aggregate(&outcomes, r)?;
+
+        let do_eval = self.cfg.eval_every > 0
+            && ((r + 1) % self.cfg.eval_every == 0 || r + 1 == self.cfg.rounds);
+        let (test_loss, test_acc) = if do_eval {
+            let w_eval = self.eval_params();
+            client::evaluate(self.rt, &self.meta, &w_eval, &self.split.test)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        let rec = RoundRecord {
+            round: r,
+            train_loss,
+            test_loss,
+            test_acc,
+            uplink_bytes: *self.meter.round_uplink.last().unwrap_or(&0),
+            train_ms,
+            compress_ms,
+        };
+        if self.verbose {
+            eprintln!(
+                "[{}/{} {}] round {r}: train_loss {:.4} acc {:.4} uplink {} B ({:.1} ms)",
+                self.cfg.config,
+                self.cfg.method.name(),
+                self.cfg.partition.name(),
+                rec.train_loss,
+                rec.test_acc,
+                rec.uplink_bytes,
+                t_round.ms(),
+            );
+        }
+        Ok(rec)
+    }
+
+    /// Aggregate the selected clients' uplinks into the global state.
+    fn aggregate(&mut self, outcomes: &[(usize, TrainOutcome)], _round: usize) -> Result<()> {
+        let d = self.meta.param_dim;
+        let total: f64 = outcomes.iter().map(|(_, o)| o.n_samples as f64).sum();
+        match self.cfg.method {
+            Method::FedPm => {
+                // collect mask payloads through the metered wire, then
+                // re-estimate scores
+                let mut decoded = Vec::with_capacity(outcomes.len());
+                for (_, o) in outcomes {
+                    decoded.push(self.meter.uplink(&o.payload)?);
+                }
+                self.w = fedpm_codec::aggregate(&decoded, d)?;
+            }
+            Method::FedSparsify { .. } => {
+                // weighted average of the (sparse) client weight vectors
+                let mut acc = vec![0.0f32; d];
+                for (_, o) in outcomes {
+                    let p = self.meter.uplink(&o.payload)?;
+                    let w_k = sparsify::decode_sparse(&p, d)?;
+                    let scale = (o.n_samples as f64 / total) as f32;
+                    for (a, v) in acc.iter_mut().zip(&w_k) {
+                        *a += scale * v;
+                    }
+                }
+                self.w = acc;
+            }
+            Method::FedMrn { mask_type, .. } => {
+                // Eq. 5 with the fused accumulate (no per-client vectors)
+                let mut scratch = Vec::new();
+                for (_, o) in outcomes {
+                    let p = self.meter.uplink(&o.payload)?;
+                    let scale = (o.n_samples as f64 / total) as f32;
+                    fedmrn::accumulate(
+                        &p, self.cfg.noise, mask_type, scale, &mut self.w,
+                        &mut scratch,
+                    )?;
+                }
+            }
+            Method::FedAvg | Method::Grad(_) => {
+                let codec = match self.cfg.method {
+                    Method::Grad(c) => c,
+                    _ => crate::compress::GradCodec::Identity,
+                };
+                for (_, o) in outcomes {
+                    let p = self.meter.uplink(&o.payload)?;
+                    let update = codec.decode(&p, d)?;
+                    let scale = (o.n_samples as f64 / total) as f32;
+                    for (a, v) in self.w.iter_mut().zip(&update) {
+                        *a += scale * v;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the full configured number of rounds.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let t = Timer::new();
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        for r in 0..self.cfg.rounds {
+            records.push(self.round(r)?);
+        }
+        Ok(RunResult::new(
+            self.cfg.config.clone(),
+            self.cfg.method.name(),
+            self.cfg.partition.name().to_string(),
+            records,
+            self.meta.param_dim,
+            t.secs(),
+            self.meter.uplink_bytes,
+            self.meter.downlink_bytes,
+        )
+        .with_msgs(self.meter.uplink_msgs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_images, ImageSpec};
+    use crate::noise::NoiseDist;
+
+    fn artifacts() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("manifest.json").exists()
+    }
+
+    /// Tiny linearly-separable dataset matching smoke_mlp's 16-dim input.
+    fn mlp_split(n_train: usize, n_test: usize, seed: u64) -> Split {
+        use crate::data::{Dataset, Features};
+        let mut g = NoiseGen::new(seed);
+        let classes = 4;
+        let dim = 16;
+        let mut centers = vec![0.0f32; classes * dim];
+        g.fill(NoiseDist::Gaussian { alpha: 2.0 }, &mut centers);
+        let build = |g: &mut NoiseGen, n: usize| {
+            let mut feats = vec![0.0f32; n * dim];
+            let mut labels = vec![0i32; n];
+            for i in 0..n {
+                let c = i % classes;
+                labels[i] = c as i32;
+                for j in 0..dim {
+                    feats[i * dim + j] =
+                        centers[c * dim + j] + 0.5 * (g.next_f32() - 0.5);
+                }
+            }
+            Dataset {
+                feats: Features::F32(feats),
+                labels,
+                sample_len: dim,
+                label_len: 1,
+                n,
+                n_classes: classes,
+            }
+        };
+        let train = build(&mut g, n_train);
+        let test = build(&mut g, n_test);
+        Split { train, test }
+    }
+
+    fn quick_cfg(method: &str) -> RunConfig {
+        let noise = NoiseDist::Uniform { alpha: 0.05 };
+        let m = Method::parse(method, noise).unwrap();
+        let mut cfg = RunConfig::new("smoke_mlp", m);
+        cfg.rounds = 6;
+        cfg.n_clients = 8;
+        cfg.clients_per_round = 4;
+        cfg.local_epochs = 2;
+        cfg.lr = 0.3;
+        cfg.noise = noise;
+        cfg.seed = 42;
+        cfg
+    }
+
+    fn run_method(method: &str) -> RunResult {
+        let rt = Runtime::load(artifacts()).unwrap();
+        let split = mlp_split(512, 64, 7);
+        let mut fed = Federation::new(&rt, quick_cfg(method), split).unwrap();
+        fed.run().unwrap()
+    }
+
+    #[test]
+    fn fedavg_learns_the_task() {
+        if !have_artifacts() {
+            return;
+        }
+        let res = run_method("fedavg");
+        assert!(res.final_acc() > 0.8, "fedavg acc {}", res.final_acc());
+        // dense uplink ≈ 32 bpp
+        assert!(res.uplink_bpp() > 31.0, "bpp {}", res.uplink_bpp());
+    }
+
+    #[test]
+    fn fedmrn_learns_at_one_bpp() {
+        if !have_artifacts() {
+            return;
+        }
+        let res = run_method("fedmrn");
+        assert!(res.final_acc() > 0.7, "fedmrn acc {}", res.final_acc());
+        // ~1 bpp + 13-byte header (noticeable only at tiny d = 1140)
+        assert!(res.uplink_bpp() < 1.2, "bpp {}", res.uplink_bpp());
+    }
+
+    #[test]
+    fn fedmrn_signed_learns() {
+        if !have_artifacts() {
+            return;
+        }
+        let res = run_method("fedmrns");
+        assert!(res.final_acc() > 0.7, "fedmrns acc {}", res.final_acc());
+        assert!(res.uplink_bpp() < 1.2);
+    }
+
+    #[test]
+    fn every_method_runs_and_improves_over_chance() {
+        if !have_artifacts() {
+            return;
+        }
+        for m in [
+            "signsgd", "terngrad", "topk", "drive", "eden", "postsm",
+            "fedpm", "fedsparsify", "fedmrn_wo_pm", "fedmrn_wo_sm",
+            "fedmrn_wo_psm",
+        ] {
+            let res = run_method(m);
+            assert!(
+                res.final_acc() > 0.3,
+                "{m} acc {} (chance 0.25)",
+                res.final_acc()
+            );
+        }
+    }
+
+    #[test]
+    fn noniid_partitions_run() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts()).unwrap();
+        let split = mlp_split(512, 64, 8);
+        let mut cfg = quick_cfg("fedmrn");
+        cfg.partition = crate::data::partition::Partition::LabelK { k: 2 };
+        let mut fed = Federation::new(&rt, cfg, split).unwrap();
+        let res = fed.run().unwrap();
+        assert!(res.final_acc() > 0.4, "noniid acc {}", res.final_acc());
+    }
+
+    #[test]
+    fn image_pipeline_cnn_smoke() {
+        // one round on the real cnn4 path to prove the image plumbing
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts()).unwrap();
+        let split = make_images(ImageSpec::fmnist_like(16, 4, 3)); // 160/40
+        let noise = NoiseDist::Uniform { alpha: 0.01 };
+        let mut cfg = RunConfig::new(
+            "fmnist_cnn4",
+            Method::parse("fedmrn", noise).unwrap(),
+        );
+        cfg.rounds = 1;
+        cfg.n_clients = 4;
+        cfg.clients_per_round = 2;
+        cfg.local_epochs = 1;
+        cfg.noise = noise;
+        let mut fed = Federation::new(&rt, cfg, split).unwrap();
+        let res = fed.run().unwrap();
+        assert_eq!(res.records.len(), 1);
+        assert!(res.records[0].test_acc >= 0.0);
+        assert!(res.uplink_bpp() < 1.1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Synthetic character-LM corpus (Shakespeare/LEAF stand-in).
+//!
+//! A seeded order-1 Markov chain over a 64-symbol alphabet generates
+//! text; per-"style" transition matrices (a handful of styles, one per
+//! client group) give the federation realistic inter-client
+//! heterogeneity. Sequences are (x = tokens[0..T], y = tokens[1..T+1])
+//! next-character prediction pairs, and the style id is carried in the
+//! *first label position's role as partition key* — see
+//! `Dataset::partition_label`.
+
+use crate::noise::NoiseGen;
+
+use super::{Dataset, Features};
+
+pub const VOCAB: usize = 64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CharLmSpec {
+    pub seq_len: usize,
+    pub train_seqs: usize,
+    pub test_seqs: usize,
+    /// Number of distinct "author styles" (transition matrices).
+    pub styles: usize,
+    pub seed: u64,
+}
+
+impl CharLmSpec {
+    pub fn shakespeare_like(seq_len: usize, train_seqs: usize, test_seqs: usize,
+                            seed: u64) -> Self {
+        CharLmSpec { seq_len, train_seqs, test_seqs, styles: 8, seed }
+    }
+}
+
+/// Build one style's transition table: each row is a sparse-ish
+/// distribution concentrated on ~6 successors (so the task has real
+/// structure: per-position entropy ≈ 2.5 bits ≪ log2(64)).
+fn style_table(g: &mut NoiseGen) -> Vec<[f32; VOCAB]> {
+    let mut table = Vec::with_capacity(VOCAB);
+    for _ in 0..VOCAB {
+        let mut row = [1e-3f32; VOCAB];
+        for rank in 0..6 {
+            let j = g.next_below(VOCAB as u64) as usize;
+            row[j] += match rank {
+                0 => 0.45,
+                1 => 0.25,
+                2 => 0.12,
+                _ => 0.06,
+            };
+        }
+        let sum: f32 = row.iter().sum();
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+        table.push(row);
+    }
+    table
+}
+
+fn sample_row(g: &mut NoiseGen, row: &[f32; VOCAB]) -> i32 {
+    let mut r = g.next_f32();
+    for (j, &p) in row.iter().enumerate() {
+        if r < p {
+            return j as i32;
+        }
+        r -= p;
+    }
+    (VOCAB - 1) as i32
+}
+
+/// Generate the corpus. Sample `i` belongs to style `i % styles`; the
+/// partitioners use that as the class key, so Non-IID splits give each
+/// client a subset of styles — the FL heterogeneity the appendix task
+/// needs.
+pub fn make_charlm(spec: CharLmSpec) -> super::Split {
+    let mut g = NoiseGen::new(spec.seed ^ 0xC0DE);
+    let tables: Vec<_> = (0..spec.styles).map(|_| style_table(&mut g)).collect();
+
+    let build = |g: &mut NoiseGen, n: usize| -> Dataset {
+        let t = spec.seq_len;
+        let mut feats = vec![0i32; n * t];
+        let mut labels = vec![0i32; n * t];
+        for i in 0..n {
+            let style = i % spec.styles;
+            let table = &tables[style];
+            let mut tok = g.next_below(VOCAB as u64) as i32;
+            for j in 0..t {
+                feats[i * t + j] = tok;
+                let next = sample_row(g, &table[tok as usize]);
+                labels[i * t + j] = next;
+                tok = next;
+            }
+            // partition key: stash the style in the first label? No — the
+            // labels must stay true next-chars for training. Instead the
+            // style key is recoverable because style = i % styles and
+            // partitioners receive it via partition_label; we override
+            // that by construction: the first *feature* token does not
+            // matter, so we keep labels honest and rely on index order.
+        }
+        Dataset {
+            feats: Features::I32(feats),
+            labels,
+            sample_len: t,
+            label_len: t,
+            n,
+            n_classes: VOCAB,
+        }
+    };
+    let train = build(&mut g, spec.train_seqs);
+    let test = build(&mut g, spec.test_seqs);
+    super::Split { train, test }
+}
+
+/// Style of sample `i` (partition key for char-LM datasets).
+pub fn style_of(i: usize, styles: usize) -> usize {
+    i % styles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_shift_property() {
+        let spec = CharLmSpec::shakespeare_like(20, 32, 8, 1);
+        let split = make_charlm(spec);
+        split.train.validate().unwrap();
+        let Features::I32(x) = &split.train.feats else { panic!() };
+        let y = &split.train.labels;
+        // y[j] must equal x[j+1] within each sequence
+        for i in 0..split.train.n {
+            for j in 0..19 {
+                assert_eq!(y[i * 20 + j], x[i * 20 + j + 1], "i={i} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let split = make_charlm(CharLmSpec::shakespeare_like(10, 16, 4, 2));
+        let Features::I32(x) = &split.train.feats else { panic!() };
+        assert!(x.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = make_charlm(CharLmSpec::shakespeare_like(10, 8, 2, 3));
+        let b = make_charlm(CharLmSpec::shakespeare_like(10, 8, 2, 3));
+        assert_eq!(a.train.labels, b.train.labels);
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // a bigram table fitted on train beats uniform by a wide margin
+        let spec = CharLmSpec::shakespeare_like(30, 200, 50, 4);
+        let split = make_charlm(spec);
+        // fit one bigram table per style (style id = i % styles)
+        let Features::I32(xt) = &split.train.feats else { panic!() };
+        let styles = spec.styles;
+        let mut counts = vec![vec![[0u32; VOCAB]; VOCAB]; styles];
+        for i in 0..split.train.n {
+            let s = style_of(i, styles);
+            for j in 0..30 {
+                let a = xt[i * 30 + j] as usize;
+                let b = split.train.labels[i * 30 + j] as usize;
+                counts[s][a][b] += 1;
+            }
+        }
+        let Features::I32(xe) = &split.test.feats else { panic!() };
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for i in 0..split.test.n {
+            let s = style_of(i, styles);
+            for j in 0..30 {
+                let a = xe[i * 30 + j] as usize;
+                let want = split.test.labels[i * 30 + j];
+                let pred = counts[s][a]
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .unwrap()
+                    .0 as i32;
+                correct += (pred == want) as usize;
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        // per-style bigram oracle ≈ top-transition mass (~0.45); mixing
+        // uncertainty keeps the empirical value lower but far above chance
+        assert!(acc > 0.25, "bigram acc {acc} (chance {})", 1.0 / VOCAB as f64);
+    }
+}

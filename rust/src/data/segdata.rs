@@ -1,0 +1,148 @@
+//! Synthetic dense-prediction (segmentation) dataset — the PascalVOC
+//! stand-in for the appendix Table-3 row (DESIGN.md §3).
+//!
+//! Scenes are a textured background plus 1-3 axis-aligned shapes
+//! (rectangles / discs) of distinct foreground classes; the label map
+//! assigns each pixel its shape's class (0 = background). Pixel noise
+//! and shape jitter make the task non-trivial while staying learnable by
+//! the small segnet.
+
+use crate::noise::NoiseGen;
+
+use super::{Dataset, Features};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SegSpec {
+    pub hw: usize,
+    pub channels: usize,
+    /// Total classes including background class 0.
+    pub classes: usize,
+    pub train: usize,
+    pub test: usize,
+    pub seed: u64,
+}
+
+impl SegSpec {
+    pub fn voc_like(train: usize, test: usize, seed: u64) -> SegSpec {
+        SegSpec { hw: 32, channels: 3, classes: 4, train, test, seed }
+    }
+}
+
+fn render(g: &mut NoiseGen, spec: &SegSpec, feats: &mut [f32], labels: &mut [i32]) {
+    let hw = spec.hw;
+    let ch = spec.channels;
+    // background texture
+    for v in feats.iter_mut() {
+        *v = 0.2 * (g.next_f32() - 0.5);
+    }
+    labels.fill(0);
+    let n_shapes = 1 + g.next_below(3) as usize;
+    for _ in 0..n_shapes {
+        let class = 1 + g.next_below(spec.classes as u64 - 1) as usize;
+        let cx = g.next_below(hw as u64) as i64;
+        let cy = g.next_below(hw as u64) as i64;
+        let r = 3 + g.next_below((hw / 4) as u64) as i64;
+        let disc = g.next_u64() & 1 == 0;
+        // class-specific colour signature
+        let colour: Vec<f32> = (0..ch)
+            .map(|c| {
+                let phase = (class * (c + 1)) as f32;
+                0.9 * (phase * 1.7).sin()
+            })
+            .collect();
+        for y in 0..hw as i64 {
+            for x in 0..hw as i64 {
+                let inside = if disc {
+                    (x - cx).pow(2) + (y - cy).pow(2) <= r * r
+                } else {
+                    (x - cx).abs() <= r && (y - cy).abs() <= r
+                };
+                if inside {
+                    let pix = (y as usize * hw + x as usize) * ch;
+                    for c in 0..ch {
+                        feats[pix + c] = colour[c] + 0.15 * (g.next_f32() - 0.5);
+                    }
+                    labels[y as usize * hw + x as usize] = class as i32;
+                }
+            }
+        }
+    }
+}
+
+pub fn make_seg(spec: SegSpec) -> super::Split {
+    let mut g = NoiseGen::new(spec.seed ^ 0x5E6);
+    let sample_len = spec.hw * spec.hw * spec.channels;
+    let label_len = spec.hw * spec.hw;
+    let build = |g: &mut NoiseGen, n: usize| {
+        let mut feats = vec![0.0f32; n * sample_len];
+        let mut labels = vec![0i32; n * label_len];
+        for i in 0..n {
+            render(
+                g,
+                &spec,
+                &mut feats[i * sample_len..(i + 1) * sample_len],
+                &mut labels[i * label_len..(i + 1) * label_len],
+            );
+        }
+        Dataset {
+            feats: Features::F32(feats),
+            labels,
+            sample_len,
+            label_len,
+            n,
+            n_classes: spec.classes,
+        }
+    };
+    let train = build(&mut g, spec.train);
+    let test = build(&mut g, spec.test);
+    super::Split { train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_classes() {
+        let split = make_seg(SegSpec::voc_like(8, 4, 1));
+        split.train.validate().unwrap();
+        assert_eq!(split.train.label_len, 32 * 32);
+        assert_eq!(split.train.sample_len, 32 * 32 * 3);
+        // both background and foreground present
+        let has_bg = split.train.labels.iter().any(|&l| l == 0);
+        let has_fg = split.train.labels.iter().any(|&l| l > 0);
+        assert!(has_bg && has_fg);
+    }
+
+    #[test]
+    fn foreground_pixels_colour_coded() {
+        // mean colour distance between class-1 and class-2 pixels should
+        // be large relative to intra-class noise
+        let split = make_seg(SegSpec::voc_like(32, 1, 2));
+        let Features::F32(f) = &split.train.feats else { panic!() };
+        let hw2 = 32 * 32;
+        let mut sums = vec![[0.0f64; 3]; 4];
+        let mut counts = vec![0usize; 4];
+        for i in 0..split.train.n {
+            for p in 0..hw2 {
+                let class = split.train.labels[i * hw2 + p] as usize;
+                counts[class] += 1;
+                for c in 0..3 {
+                    sums[class][c] += f[(i * hw2 + p) * 3 + c] as f64;
+                }
+            }
+        }
+        let mean = |k: usize| -> [f64; 3] {
+            let n = counts[k].max(1) as f64;
+            [sums[k][0] / n, sums[k][1] / n, sums[k][2] / n]
+        };
+        let (m1, m2) = (mean(1), mean(2));
+        let dist: f64 = m1
+            .iter()
+            .zip(&m2)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 0.3, "class colours too close: {dist}");
+    }
+}

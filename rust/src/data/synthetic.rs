@@ -1,0 +1,285 @@
+//! Seeded class-conditional image generator (FMNIST/SVHN/CIFAR stand-in).
+//!
+//! Per class: a smooth random template (low-frequency field bilinearly
+//! upsampled from a coarse grid) plus a class-specific sinusoidal
+//! pattern. Per sample: a random circular shift of the template, scaled
+//! template mixing, and pixel noise — enough intra-class variation that
+//! the CNNs must actually learn translation-tolerant features, while
+//! keeping the task learnable in a few federated rounds.
+
+use crate::noise::NoiseGen;
+
+use super::{Dataset, Features};
+
+/// Geometry + difficulty of a synthetic image dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct ImageSpec {
+    pub classes: usize,
+    pub hw: usize,
+    pub channels: usize,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    /// Pixel noise std (higher = harder).
+    pub noise: f32,
+    /// Max circular shift in pixels (higher = harder).
+    pub max_shift: usize,
+    pub seed: u64,
+}
+
+impl ImageSpec {
+    /// FMNIST-like: 1×28×28, 10 classes.
+    pub fn fmnist_like(train_per_class: usize, test_per_class: usize, seed: u64) -> Self {
+        ImageSpec {
+            classes: 10,
+            hw: 28,
+            channels: 1,
+            train_per_class,
+            test_per_class,
+            noise: 0.35,
+            max_shift: 3,
+            seed,
+        }
+    }
+
+    /// SVHN-like: 3×32×32, 10 classes (noisier).
+    pub fn svhn_like(train_per_class: usize, test_per_class: usize, seed: u64) -> Self {
+        ImageSpec {
+            classes: 10,
+            hw: 32,
+            channels: 3,
+            train_per_class,
+            test_per_class,
+            noise: 0.45,
+            max_shift: 3,
+            seed,
+        }
+    }
+
+    /// CIFAR-10-like: 3×32×32, 10 classes, hardest single-template task.
+    pub fn cifar10_like(train_per_class: usize, test_per_class: usize, seed: u64) -> Self {
+        ImageSpec {
+            classes: 10,
+            hw: 32,
+            channels: 3,
+            train_per_class,
+            test_per_class,
+            noise: 0.55,
+            max_shift: 4,
+            seed,
+        }
+    }
+
+    /// CIFAR-100-like: 100 classes.
+    pub fn cifar100_like(train_per_class: usize, test_per_class: usize, seed: u64) -> Self {
+        ImageSpec {
+            classes: 100,
+            hw: 32,
+            channels: 3,
+            train_per_class,
+            test_per_class,
+            noise: 0.45,
+            max_shift: 3,
+            seed,
+        }
+    }
+}
+
+/// Low-frequency template: coarse grid -> bilinear upsample.
+fn template(g: &mut NoiseGen, hw: usize, channels: usize, class: usize) -> Vec<f32> {
+    const COARSE: usize = 7;
+    let mut grid = vec![0.0f32; COARSE * COARSE * channels];
+    g.fill(crate::noise::NoiseDist::Gaussian { alpha: 1.0 }, &mut grid);
+    let mut out = vec![0.0f32; hw * hw * channels];
+    let scale = (COARSE - 1) as f32 / (hw - 1) as f32;
+    // class-specific frequency signature so classes are separable even
+    // under heavy pixel noise
+    let fx = 1.0 + (class % 5) as f32;
+    let fy = 1.0 + (class / 5 % 5) as f32;
+    for y in 0..hw {
+        for x in 0..hw {
+            let gy = y as f32 * scale;
+            let gx = x as f32 * scale;
+            let y0 = (gy as usize).min(COARSE - 2);
+            let x0 = (gx as usize).min(COARSE - 2);
+            let dy = gy - y0 as f32;
+            let dx = gx - x0 as f32;
+            for c in 0..channels {
+                let at = |yy: usize, xx: usize| grid[(yy * COARSE + xx) * channels + c];
+                let v = at(y0, x0) * (1.0 - dy) * (1.0 - dx)
+                    + at(y0 + 1, x0) * dy * (1.0 - dx)
+                    + at(y0, x0 + 1) * (1.0 - dy) * dx
+                    + at(y0 + 1, x0 + 1) * dy * dx;
+                let wave = 0.6
+                    * ((fx * x as f32 * std::f32::consts::TAU / hw as f32).sin()
+                        * (fy * y as f32 * std::f32::consts::TAU / hw as f32).cos());
+                out[(y * hw + x) * channels + c] = v + wave;
+            }
+        }
+    }
+    out
+}
+
+fn render_sample(
+    g: &mut NoiseGen,
+    tpl: &[f32],
+    hw: usize,
+    channels: usize,
+    noise: f32,
+    max_shift: usize,
+    out: &mut [f32],
+) {
+    let sx = if max_shift == 0 {
+        0
+    } else {
+        g.next_below(2 * max_shift as u64 + 1) as i64 - max_shift as i64
+    };
+    let sy = if max_shift == 0 {
+        0
+    } else {
+        g.next_below(2 * max_shift as u64 + 1) as i64 - max_shift as i64
+    };
+    let gain = 0.8 + 0.4 * g.next_f32();
+    for y in 0..hw {
+        for x in 0..hw {
+            let yy = ((y as i64 + sy).rem_euclid(hw as i64)) as usize;
+            let xx = ((x as i64 + sx).rem_euclid(hw as i64)) as usize;
+            for c in 0..channels {
+                let (z0, _) = {
+                    // cheap gaussian-ish noise: sum of 2 uniforms, centred
+                    let a = g.next_f32();
+                    let b = g.next_f32();
+                    ((a + b - 1.0) * 1.73, 0.0)
+                };
+                out[(y * hw + x) * channels + c] =
+                    gain * tpl[(yy * hw + xx) * channels + c] + noise * z0;
+            }
+        }
+    }
+}
+
+/// Generate a (train, test) pair. Samples are interleaved by class so
+/// IID partitions are balanced by construction.
+pub fn make_images(spec: ImageSpec) -> super::Split {
+    let mut g = NoiseGen::new(spec.seed);
+    let templates: Vec<Vec<f32>> = (0..spec.classes)
+        .map(|c| template(&mut g, spec.hw, spec.channels, c))
+        .collect();
+    let sample_len = spec.hw * spec.hw * spec.channels;
+    let build = |g: &mut NoiseGen, per_class: usize| -> Dataset {
+        let n = per_class * spec.classes;
+        let mut feats = vec![0.0f32; n * sample_len];
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let class = i % spec.classes;
+            labels[i] = class as i32;
+            render_sample(
+                g,
+                &templates[class],
+                spec.hw,
+                spec.channels,
+                spec.noise,
+                spec.max_shift,
+                &mut feats[i * sample_len..(i + 1) * sample_len],
+            );
+        }
+        Dataset {
+            feats: Features::F32(feats),
+            labels,
+            sample_len,
+            label_len: 1,
+            n,
+            n_classes: spec.classes,
+        }
+    };
+    let train = build(&mut g, spec.train_per_class);
+    let test = build(&mut g, spec.test_per_class);
+    super::Split { train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats;
+
+    #[test]
+    fn shapes_and_labels() {
+        let spec = ImageSpec::fmnist_like(6, 3, 1);
+        let split = make_images(spec);
+        split.train.validate().unwrap();
+        split.test.validate().unwrap();
+        assert_eq!(split.train.n, 60);
+        assert_eq!(split.test.n, 30);
+        assert_eq!(split.train.sample_len, 28 * 28);
+        // balanced classes
+        let mut counts = [0usize; 10];
+        for i in 0..split.train.n {
+            counts[split.train.partition_label(i)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 6));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = make_images(ImageSpec::fmnist_like(2, 1, 7));
+        let b = make_images(ImageSpec::fmnist_like(2, 1, 7));
+        let (Features::F32(fa), Features::F32(fb)) = (&a.train.feats, &b.train.feats)
+        else {
+            panic!()
+        };
+        assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-template classification on clean samples must beat
+        // chance by a wide margin — otherwise no model can learn it
+        let spec = ImageSpec::cifar10_like(10, 10, 3);
+        let split = make_images(spec);
+        let sample_len = split.train.sample_len;
+        // build per-class mean from train
+        let mut means = vec![vec![0.0f32; sample_len]; 10];
+        let mut counts = vec![0usize; 10];
+        let Features::F32(tr) = &split.train.feats else { panic!() };
+        for i in 0..split.train.n {
+            let c = split.train.partition_label(i);
+            counts[c] += 1;
+            for (m, v) in means[c]
+                .iter_mut()
+                .zip(&tr[i * sample_len..(i + 1) * sample_len])
+            {
+                *m += v;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f32;
+            }
+        }
+        let Features::F32(te) = &split.test.feats else { panic!() };
+        let mut correct = 0;
+        for i in 0..split.test.n {
+            let s = &te[i * sample_len..(i + 1) * sample_len];
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    stats::l2_dist(s, &means[a])
+                        .partial_cmp(&stats::l2_dist(s, &means[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if best == split.test.partition_label(i) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / split.test.n as f64;
+        assert!(acc > 0.35, "nearest-mean acc {acc} (chance 0.1)");
+    }
+
+    #[test]
+    fn pixel_stats_reasonable() {
+        let split = make_images(ImageSpec::svhn_like(4, 2, 9));
+        let Features::F32(f) = &split.train.feats else { panic!() };
+        let mean = stats::mean(&f.iter().map(|&x| x as f64).collect::<Vec<_>>());
+        assert!(mean.abs() < 0.5, "mean {mean}");
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+}

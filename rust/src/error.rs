@@ -1,0 +1,41 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Error bubbled up from the `xla` crate / PJRT runtime.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact registry problems (missing files, bad manifest).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// JSON parsing / shape mismatches in manifests or results.
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Command-line / configuration errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Wire-format decode failures.
+    #[error("codec: {0}")]
+    Codec(String),
+
+    /// Dataset / partitioning invariant violations.
+    #[error("data: {0}")]
+    Data(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

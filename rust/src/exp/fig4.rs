@@ -1,0 +1,63 @@
+//! Figure 4 — PSM ablations and the post-training-masking comparison.
+//!
+//! Arms (all under the Non-IID-2 partition, per §5.3-5.4):
+//!   fedavg            reference
+//!   fedmrn            full PSM
+//!   fedmrn_wo_pm      SM only
+//!   fedmrn_wo_sm      PM + deterministic masking
+//!   fedmrn_wo_psm     deterministic masking only
+//!   postsm            FedAvg w. SM (masking *after* local training)
+//!   signsgd           the paper's extra comparison line
+
+use crate::cli::Args;
+use crate::error::Result;
+use crate::jsonx::Value;
+use crate::runtime::Runtime;
+
+use super::{dataset_split, markdown_table, partition_for, run_arm, save_json,
+            ExpOpts};
+
+pub const ARMS: [&str; 7] = [
+    "fedavg", "fedmrn", "fedmrn_wo_pm", "fedmrn_wo_sm", "fedmrn_wo_psm",
+    "postsm", "signsgd",
+];
+
+pub fn fig4(rt: &Runtime, args: &mut Args) -> Result<()> {
+    let o = ExpOpts::from_args(args)?;
+    let datasets = args.take_list("datasets", &["fmnist", "svhn", "cifar10", "cifar100"]);
+    let arms = args.take_list("methods", &ARMS);
+    args.finish()?;
+
+    let mut rows_json = Vec::new();
+    let mut acc = vec![vec![f64::NAN; datasets.len()]; arms.len()];
+    for (di, ds) in datasets.iter().enumerate() {
+        let part = partition_for("noniid2", ds)?;
+        for (ai, arm) in arms.iter().enumerate() {
+            let (config, split) = dataset_split(ds, &o)?;
+            let res = run_arm(rt, &config, split, arm, part, &o, None)?;
+            eprintln!("fig4 [{ds}/{arm}] acc {:.4}", res.final_acc());
+            acc[ai][di] = res.final_acc();
+            res.write_csv(&format!("{}/fig4_{ds}_{arm}.csv", o.out_dir))?;
+            rows_json.push(
+                Value::obj()
+                    .set("dataset", ds.as_str())
+                    .set("arm", arm.as_str())
+                    .set("result", res.to_json()),
+            );
+        }
+    }
+    save_json(&o.out_dir, "fig4.json",
+              &Value::obj().set("runs", Value::Arr(rows_json)))?;
+    let rows: Vec<(String, Vec<f64>)> = arms
+        .iter()
+        .enumerate()
+        .map(|(ai, a)| (a.clone(), acc[ai].clone()))
+        .collect();
+    let md = markdown_table(
+        "Figure 4 — ablation accuracy (%) under Non-IID-2",
+        &datasets.to_vec(), &rows, true,
+    );
+    std::fs::write(format!("{}/fig4.md", o.out_dir), &md)?;
+    println!("{md}");
+    Ok(())
+}

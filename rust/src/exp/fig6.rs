@@ -1,0 +1,100 @@
+//! Figure 6 — local-training time vs update-compression time (§5.6).
+//!
+//! For each method: run one client's local round on a fixed workload,
+//! separating (a) local training time and (b) the time to produce the
+//! compressed uplink. Expected shape: EDEN/DRIVE pay visible
+//! compression latency (rotation of a d-vector); FedMRN's cost rides
+//! inside training and its finalize is negligible; FedPM/FedSparsify/
+//! FedMRN training is slightly slower than plain SGD.
+
+use crate::cli::Args;
+use crate::coordinator::client::{self, Batches};
+use crate::coordinator::{Method, RunConfig};
+use crate::error::Result;
+use crate::jsonx::Value;
+use crate::noise::{NoiseDist, NoiseGen};
+use crate::runtime::Runtime;
+use crate::stats;
+
+use super::{dataset_split, save_json, ExpOpts};
+
+pub fn fig6(rt: &Runtime, args: &mut Args) -> Result<()> {
+    let mut o = ExpOpts::from_args(args)?;
+    let dataset = args.take_str("dataset", "fmnist");
+    let reps = args.take_usize("reps", 10)?;
+    let methods = args.take_list("methods", &super::table1::METHODS);
+    args.finish()?;
+    o.rounds = 1;
+
+    let (config, split) = dataset_split(&dataset, &o)?;
+    let meta = rt.config(&config)?.clone();
+    let w = rt.init_params(&config)?;
+    let mut rng = NoiseGen::new(o.seed ^ 0xF16);
+    // fixed client shard: first 4 batches worth of samples
+    let shard: Vec<usize> = (0..(meta.batch * 4).min(split.train.n)).collect();
+    let batches: Batches =
+        client::make_batches(&split.train, &shard, &meta, 0, &mut rng)?;
+
+    let noise = NoiseDist::Uniform { alpha: 1e-2 };
+    let mut rows = Vec::new();
+    let mut md = String::from(
+        "### Figure 6 — per-client local-training vs compression time (ms)\n\n\
+         | method | train_ms (median) | compress_ms (median) | compress share |\n\
+         |---|---|---|---|\n",
+    );
+    for name in &methods {
+        let method = Method::parse(name, noise)?;
+        let mut cfg = RunConfig::new(&config, method);
+        cfg.local_epochs = 1;
+        cfg.lr = o.lr;
+        cfg.noise = noise;
+        cfg.rounds = 10;
+        let mut train_samples = Vec::new();
+        let mut comp_samples = Vec::new();
+        for r in 0..reps {
+            let fedpm_state: Option<(Vec<f32>, Vec<f32>)> = match method {
+                Method::FedPm => {
+                    Some((w.iter().map(|x| x * 3.0).collect(),
+                          vec![0.0f32; meta.param_dim]))
+                }
+                _ => None,
+            };
+            let out = client::run_client(
+                rt,
+                &meta,
+                &method,
+                &cfg,
+                r,
+                &w,
+                fedpm_state.as_ref().map(|(a, b)| (a.as_slice(), b.as_slice())),
+                &batches,
+                1000 + r as u64,
+                &mut rng,
+            )?;
+            train_samples.push(out.train_ms);
+            comp_samples.push(out.compress_ms);
+        }
+        let train_med = stats::median(&train_samples);
+        let comp_med = stats::median(&comp_samples);
+        let share = comp_med / (train_med + comp_med).max(1e-9);
+        eprintln!("fig6 [{name}] train {train_med:.1} ms compress {comp_med:.2} ms");
+        md.push_str(&format!(
+            "| {name} | {train_med:.1} | {comp_med:.2} | {:.1}% |\n",
+            share * 100.0
+        ));
+        rows.push(
+            Value::obj()
+                .set("method", name.as_str())
+                .set("train_ms", train_med)
+                .set("compress_ms", comp_med)
+                .set("reps", reps),
+        );
+    }
+    save_json(&o.out_dir, "fig6.json",
+              &Value::obj()
+                  .set("dataset", dataset.as_str())
+                  .set("rows", Value::Arr(rows)))?;
+    std::fs::write(format!("{}/fig6.md", o.out_dir), &md)?;
+    println!("{md}");
+    Ok(())
+}

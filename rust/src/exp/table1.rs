@@ -1,0 +1,131 @@
+//! Table 1 + Table 2 + Figure 3 — the paper's headline comparison.
+//!
+//! Runs the full method roster over `datasets × {iid, noniid1, noniid2}`,
+//! emits:
+//!   results/table1.json   — every RunResult (curves included)
+//!   results/table1.md     — Table 1 (accuracy) and Table 2 (cumulative
+//!                           accuracy loss vs FedAvg)
+//!   results/fig3_<ds>_<method>.csv — Non-IID-2 convergence curves
+
+use crate::cli::Args;
+use crate::error::Result;
+use crate::jsonx::Value;
+use crate::runtime::Runtime;
+use crate::stats::Timer;
+
+use super::{
+    dataset_split, markdown_table, partition_for, run_arm, save_json, ExpOpts,
+};
+
+pub const METHODS: [&str; 10] = [
+    "fedavg", "fedpm", "fedsparsify", "signsgd", "topk", "terngrad", "drive",
+    "eden", "fedmrn", "fedmrns",
+];
+
+pub fn table1(rt: &Runtime, args: &mut Args) -> Result<()> {
+    let o = ExpOpts::from_args(args)?;
+    let datasets = args.take_list("datasets",
+        &["fmnist", "svhn", "cifar10", "cifar100"]);
+    let methods = args.take_list("methods", &METHODS);
+    let partitions = args.take_list("partitions", &["iid", "noniid1", "noniid2"]);
+    args.finish()?;
+
+    let t_all = Timer::new();
+    let mut results = Vec::new(); // (dataset, partition, method, RunResult)
+    for ds in &datasets {
+        for part_name in &partitions {
+            let part = partition_for(part_name, ds)?;
+            for m in &methods {
+                let (config, split) = dataset_split(ds, &o)?;
+                let t = Timer::new();
+                let res = run_arm(rt, &config, split, m, part, &o, None)?;
+                eprintln!(
+                    "table1 [{ds}/{part_name}/{m}] acc {:.4} bpp {:.2} ({:.0}s)",
+                    res.final_acc(),
+                    res.uplink_bpp(),
+                    t.secs()
+                );
+                // Figure 3: per-round curves for the Non-IID-2 arm
+                if *part_name == "noniid2" {
+                    res.write_csv(&format!("{}/fig3_{ds}_{m}.csv", o.out_dir))?;
+                }
+                results.push((ds.clone(), part_name.clone(), m.clone(), res));
+            }
+        }
+    }
+
+    // ---- emit JSON ----
+    let rows: Vec<Value> = results
+        .iter()
+        .map(|(ds, p, m, r)| {
+            Value::obj()
+                .set("dataset", ds.as_str())
+                .set("partition", p.as_str())
+                .set("method", m.as_str())
+                .set("result", r.to_json())
+        })
+        .collect();
+    save_json(&o.out_dir, "table1.json",
+              &Value::obj()
+                  .set("wall_secs", t_all.secs())
+                  .set("runs", Value::Arr(rows)))?;
+
+    // ---- Table 1 markdown: columns = dataset × partition ----
+    let mut cols = Vec::new();
+    for ds in &datasets {
+        for p in &partitions {
+            cols.push(format!("{ds}/{p}"));
+        }
+    }
+    let acc_of = |m: &str, ds: &str, p: &str| -> f64 {
+        results
+            .iter()
+            .find(|(d, q, mm, _)| d == ds && q == p && mm == m)
+            .map(|(_, _, _, r)| r.final_acc())
+            .unwrap_or(f64::NAN)
+    };
+    let t1_rows: Vec<(String, Vec<f64>)> = methods
+        .iter()
+        .map(|m| {
+            let vals = datasets
+                .iter()
+                .flat_map(|ds| partitions.iter().map(move |p| (ds, p)))
+                .map(|(ds, p)| acc_of(m, ds, p))
+                .collect();
+            (m.clone(), vals)
+        })
+        .collect();
+    let mut md = markdown_table(
+        "Table 1 — accuracy (%) per method × dataset/partition",
+        &cols, &t1_rows, true,
+    );
+
+    // ---- Table 2: cumulative accuracy loss vs FedAvg per dataset ----
+    let t2_rows: Vec<(String, Vec<f64>)> = methods
+        .iter()
+        .filter(|m| *m != "fedavg")
+        .map(|m| {
+            let vals: Vec<f64> = datasets
+                .iter()
+                .map(|ds| {
+                    partitions
+                        .iter()
+                        .map(|p| (acc_of(m, ds, p) - acc_of("fedavg", ds, p)) * 100.0)
+                        .sum::<f64>()
+                })
+                .collect();
+            (m.clone(), vals)
+        })
+        .collect();
+    md.push('\n');
+    md.push_str(&markdown_table(
+        "Table 2 — cumulative accuracy loss vs FedAvg (percentage points, \
+         summed over partitions)",
+        &datasets.to_vec(), &t2_rows, false,
+    ));
+    std::fs::create_dir_all(&o.out_dir)?;
+    std::fs::write(format!("{}/table1.md", o.out_dir), &md)?;
+    println!("{md}");
+    eprintln!("table1 total {:.0}s", t_all.secs());
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Table 3 (appendix) — FedMRN beyond classification: char-LM (LSTM) and
+//! dense prediction (segnet), vs FedAvg / SignSGD / EDEN.
+
+use crate::cli::Args;
+use crate::data::partition::Partition;
+use crate::error::Result;
+use crate::jsonx::Value;
+use crate::runtime::Runtime;
+
+use super::{dataset_split, markdown_table, run_arm, save_json, ExpOpts};
+
+pub const ARMS: [&str; 4] = ["fedavg", "signsgd", "eden", "fedmrn"];
+
+pub fn table3(rt: &Runtime, args: &mut Args) -> Result<()> {
+    let o = ExpOpts::from_args(args)?;
+    let datasets = args.take_list("datasets", &["charlm", "seg"]);
+    let arms = args.take_list("methods", &ARMS);
+    args.finish()?;
+
+    let mut acc = vec![vec![f64::NAN; arms.len()]; datasets.len()];
+    let mut rows_json = Vec::new();
+    for (di, ds) in datasets.iter().enumerate() {
+        for (ai, arm) in arms.iter().enumerate() {
+            let (config, split) = dataset_split(ds, &o)?;
+            let res = run_arm(rt, &config, split, arm, Partition::Iid, &o, None)?;
+            eprintln!("table3 [{ds}/{arm}] acc {:.4}", res.final_acc());
+            acc[di][ai] = res.final_acc();
+            rows_json.push(
+                Value::obj()
+                    .set("dataset", ds.as_str())
+                    .set("arm", arm.as_str())
+                    .set("result", res.to_json()),
+            );
+        }
+    }
+    save_json(&o.out_dir, "table3.json",
+              &Value::obj().set("runs", Value::Arr(rows_json)))?;
+    let rows: Vec<(String, Vec<f64>)> = datasets
+        .iter()
+        .enumerate()
+        .map(|(di, ds)| (ds.clone(), acc[di].clone()))
+        .collect();
+    let md = markdown_table(
+        "Table 3 — other tasks: accuracy (%) (rows = dataset, cols = method)",
+        &arms.to_vec(), &rows, true,
+    );
+    std::fs::write(format!("{}/table3.md", o.out_dir), &md)?;
+    println!("{md}");
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Fast Walsh–Hadamard transform — the random-rotation substrate for the
+//! DRIVE and EDEN baselines.
+//!
+//! Both baselines rotate the update vector with a structured random
+//! rotation `R = H·D` (D a random ±1 diagonal, H the normalized Hadamard
+//! matrix), binarize `sign(Rx)` and invert with `R⁻¹ = D·H` on the
+//! server. The in-place FWHT is O(d log d); vectors are zero-padded to
+//! the next power of two.
+
+/// Next power of two ≥ n (n ≥ 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// In-place unnormalised Walsh–Hadamard butterfly. `data.len()` must be a
+/// power of two.
+pub fn fwht_inplace(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT needs a power-of-two length");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = data[j];
+                let y = data[j + h];
+                data[j] = x + y;
+                data[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Orthonormal FWHT: H/√n, an involution (applying twice = identity).
+pub fn fwht_orthonormal(data: &mut [f32]) {
+    fwht_inplace(data);
+    let scale = 1.0 / (data.len() as f32).sqrt();
+    for v in data.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Apply the randomized rotation `R = H_norm · D(seed)` in place.
+/// `D` is a ±1 diagonal derived from `seed`.
+pub fn rotate(data: &mut [f32], seed: u64) {
+    apply_diagonal(data, seed);
+    fwht_orthonormal(data);
+}
+
+/// Apply the inverse rotation `R⁻¹ = D(seed) · H_norm` in place.
+pub fn rotate_inv(data: &mut [f32], seed: u64) {
+    fwht_orthonormal(data);
+    apply_diagonal(data, seed);
+}
+
+fn apply_diagonal(data: &mut [f32], seed: u64) {
+    let mut rng = crate::noise::Xoshiro256pp::seed_from(seed);
+    // consume 64 signs per draw
+    let mut i = 0;
+    while i < data.len() {
+        let word = rng.next_u64();
+        let hi = (i + 64).min(data.len());
+        for (bit, v) in data[i..hi].iter_mut().enumerate() {
+            if (word >> bit) & 1 == 1 {
+                *v = -*v;
+            }
+        }
+        i = hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noise::{NoiseDist, NoiseGen};
+
+    #[test]
+    fn hadamard_2x2() {
+        let mut v = vec![1.0f32, 2.0];
+        fwht_inplace(&mut v);
+        assert_eq!(v, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn orthonormal_is_involution() {
+        let mut g = NoiseGen::new(1);
+        let mut v = vec![0.0f32; 256];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut v);
+        let orig = v.clone();
+        fwht_orthonormal(&mut v);
+        fwht_orthonormal(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut g = NoiseGen::new(2);
+        let mut v = vec![0.0f32; 1024];
+        g.fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut v);
+        let n0 = crate::stats::l2(&v);
+        rotate(&mut v, 99);
+        let n1 = crate::stats::l2(&v);
+        assert!((n0 - n1).abs() / n0 < 1e-5, "{n0} vs {n1}");
+    }
+
+    #[test]
+    fn rotate_roundtrips() {
+        let mut g = NoiseGen::new(3);
+        let mut v = vec![0.0f32; 512];
+        g.fill(NoiseDist::Uniform { alpha: 1.0 }, &mut v);
+        let orig = v.clone();
+        rotate(&mut v, 7);
+        rotate_inv(&mut v, 7);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_mixes_coordinates() {
+        // a unit impulse must spread over all coordinates
+        let mut v = vec![0.0f32; 256];
+        v[17] = 1.0;
+        rotate(&mut v, 5);
+        let nonzero = v.iter().filter(|x| x.abs() > 1e-9).count();
+        assert_eq!(nonzero, 256);
+        // all entries have equal magnitude 1/sqrt(n)
+        for x in &v {
+            assert!((x.abs() - 1.0 / 16.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        let mut v = vec![0.0f32; 100];
+        fwht_inplace(&mut v);
+    }
+}

@@ -1,0 +1,42 @@
+//! # fedmrn — Masked Random Noise for Communication-Efficient Federated Learning
+//!
+//! A from-scratch reproduction of FedMRN (Li et al., ACM MM '24,
+//! DOI 10.1145/3664647.3680608) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated runtime: server round loop, client
+//!   local-training drivers, uplink codecs (FedMRN + seven baselines),
+//!   simulated transport with exact byte metering, synthetic datasets and
+//!   Non-IID partitioners.
+//! * **L2/L1 (`python/compile`)** — JAX models + Pallas PSM kernels, AOT
+//!   lowered once to HLO text under `artifacts/` and executed here through
+//!   the PJRT C API ([`runtime`]). Python never runs on the request path.
+//!
+//! The paper in one line: clients learn a 1-bit mask over seeded random
+//! noise during local training (progressive stochastic masking) and upload
+//! `{seed, mask bits}` instead of dense FP32 updates — 32× uplink
+//! compression at FedAvg-level accuracy.
+//!
+//! Quick start (after `make artifacts && cargo build --release`):
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! cargo run --release -- exp table1 --preset quick
+//! ```
+
+pub mod bench;
+pub mod bitpack;
+pub mod cli;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod exp;
+pub mod fwht;
+pub mod jsonx;
+pub mod noise;
+pub mod runtime;
+pub mod stats;
+pub mod theory;
+pub mod transport;
+
+pub use error::{Error, Result};

@@ -1,0 +1,169 @@
+//! fedmrn CLI — the leader entrypoint.
+//!
+//! ```text
+//! fedmrn info                         list artifacts and configs
+//! fedmrn run    [--flags]             one federated run, any method
+//! fedmrn exp <table1|fig4|fig5|fig6|table3|theory|all> [--flags]
+//! ```
+//!
+//! Run `fedmrn help` for the flag reference. Requires `make artifacts`
+//! to have produced `artifacts/` first.
+
+use fedmrn::cli::Args;
+use fedmrn::error::{Error, Result};
+use fedmrn::exp;
+use fedmrn::noise::NoiseDist;
+use fedmrn::runtime::Runtime;
+
+const HELP: &str = "\
+fedmrn — Masked Random Noise for Communication-Efficient Federated Learning
+(reproduction of Li et al., ACM MM'24)
+
+USAGE:
+  fedmrn info [--artifacts DIR]
+  fedmrn run  [--artifacts DIR] [--dataset NAME] [--method NAME]
+              [--partition iid|noniid1|noniid2] [--preset smoke|quick|full]
+              [--rounds N] [--clients N] [--per-round N] [--epochs N]
+              [--lr F] [--noise-dist uniform|gaussian|bernoulli] [--alpha F]
+              [--seed N] [--verbose] [--csv PATH]
+  fedmrn exp table1|fig4|fig5|fig6|table3|theory|all [--preset ...] [...]
+
+METHODS:
+  fedavg fedpm fedsparsify signsgd topk terngrad drive eden fedmrn fedmrns
+  fedmrn_wo_pm fedmrn_wo_sm fedmrn_wo_psm postsm
+
+DATASETS (synthetic stand-ins, see DESIGN.md §3):
+  fmnist svhn cifar10 cifar100 charlm charlm_tf seg smoke
+";
+
+fn main() {
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        // silence the PJRT client-creation info lines
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    }
+    let code = match real_main() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn real_main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    match args.subcommand() {
+        None | Some("help") => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some("info") => cmd_info(&mut args),
+        Some("run") => cmd_run(&mut args),
+        Some("exp") => cmd_exp(&mut args),
+        Some(other) => Err(Error::Config(format!(
+            "unknown subcommand {other:?} (try `fedmrn help`)"
+        ))),
+    }
+}
+
+fn load_runtime(args: &mut Args) -> Result<Runtime> {
+    let dir = args.take_str("artifacts", "artifacts");
+    Runtime::load(dir)
+}
+
+fn cmd_info(args: &mut Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    args.finish()?;
+    println!("platform: cpu (PJRT)");
+    for name in rt.registry().config_names() {
+        let c = rt.config(name)?;
+        let mut steps: Vec<&String> = c.steps.keys().collect();
+        steps.sort();
+        println!(
+            "{name}: d={} batch={} loss={} classes={}\n  steps: {}",
+            c.param_dim,
+            c.batch,
+            c.loss_kind,
+            c.n_classes,
+            steps.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &mut Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let o = exp::ExpOpts::from_args(args)?;
+    let dataset = args.take_str("dataset", "smoke");
+    let method_name = args.take_str("method", "fedmrn");
+    let part_name = args.take_str("partition", "iid");
+    let dist_name = args.take_str("noise-dist", "uniform");
+    let alpha = args.take_f32("alpha", 0.0)?;
+    let csv = args.take_opt_str("csv");
+    args.finish()?;
+
+    let (config, split) = exp::dataset_split(&dataset, &o)?;
+    let part = exp::partition_for(&part_name, &dataset)?;
+    let noise = if alpha > 0.0 {
+        Some(NoiseDist::parse(&dist_name, alpha).ok_or_else(|| {
+            Error::Config(format!("bad noise dist {dist_name:?}"))
+        })?)
+    } else {
+        None
+    };
+    let res = exp::run_arm(&rt, &config, split, &method_name, part, &o, noise)?;
+    println!(
+        "{dataset}/{method_name}/{part_name}: final_acc {:.4} best {:.4} \
+         uplink {:.2} bpp ({} B total) wall {:.1}s",
+        res.final_acc(),
+        res.best_acc(),
+        res.uplink_bpp(),
+        res.uplink_bytes,
+        res.wall_secs
+    );
+    for r in &res.records {
+        if !r.test_acc.is_nan() {
+            println!(
+                "  round {:>3}: train_loss {:.4} test_acc {:.4}",
+                r.round, r.train_loss, r.test_acc
+            );
+        }
+    }
+    if let Some(path) = csv {
+        res.write_csv(&path)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &mut Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| Error::Config("exp needs a name (try `fedmrn help`)".into()))?;
+    if which == "theory" {
+        // closed-form testbed; no XLA needed
+        return exp::theory_exp(args);
+    }
+    let rt = load_runtime(args)?;
+    match which.as_str() {
+        "table1" => exp::table1(&rt, args),
+        "fig4" => exp::fig4(&rt, args),
+        "fig5" => exp::fig5(&rt, args),
+        "fig6" => exp::fig6(&rt, args),
+        "table3" => exp::table3(&rt, args),
+        "all" => {
+            // `all` shares one flag set; clone per runner
+            let snapshot = args.clone();
+            exp::table1(&rt, &mut snapshot.clone())?;
+            exp::fig4(&rt, &mut snapshot.clone())?;
+            exp::fig5(&rt, &mut snapshot.clone())?;
+            exp::fig6(&rt, &mut snapshot.clone())?;
+            exp::table3(&rt, &mut snapshot.clone())?;
+            exp::theory_exp(&mut snapshot.clone())
+        }
+        other => Err(Error::Config(format!("unknown experiment {other:?}"))),
+    }
+}

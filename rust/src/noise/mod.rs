@@ -1,0 +1,344 @@
+//! Seeded RNG and noise distributions — the `G(s)` of the paper.
+//!
+//! FedMRN's uplink consists of a **seed** plus mask bits; the server must
+//! regenerate the client's noise vector *bit-exactly* from that seed
+//! (Eq. 5). Both sides therefore share this module: a splitmix64-seeded
+//! xoshiro256++ generator and deterministic transforms for the three
+//! noise distributions studied in §5.5 (Uniform[-α,α], Gaussian N(0,α),
+//! Bernoulli {-α,+α}).
+//!
+//! Nothing here depends on platform state: the same seed produces the
+//! same bytes on every build, which the round-trip tests pin down.
+
+mod rng;
+
+pub use rng::{SplitMix64, Xoshiro256pp};
+
+/// Noise distribution for `G(s)` (paper §5.5, Figure 5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseDist {
+    /// Uniform on `[-alpha, alpha]` — the paper's default.
+    Uniform { alpha: f32 },
+    /// Gaussian `N(0, alpha)` (alpha is the standard deviation).
+    Gaussian { alpha: f32 },
+    /// Two-point `{-alpha, +alpha}` with equal probability — the
+    /// distribution used by the convergence theorems.
+    Bernoulli { alpha: f32 },
+}
+
+impl NoiseDist {
+    pub fn parse(kind: &str, alpha: f32) -> Option<NoiseDist> {
+        match kind {
+            "uniform" => Some(NoiseDist::Uniform { alpha }),
+            "gaussian" => Some(NoiseDist::Gaussian { alpha }),
+            "bernoulli" => Some(NoiseDist::Bernoulli { alpha }),
+            _ => None,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            NoiseDist::Uniform { .. } => "uniform",
+            NoiseDist::Gaussian { .. } => "gaussian",
+            NoiseDist::Bernoulli { .. } => "bernoulli",
+        }
+    }
+
+    pub fn alpha(&self) -> f32 {
+        match *self {
+            NoiseDist::Uniform { alpha }
+            | NoiseDist::Gaussian { alpha }
+            | NoiseDist::Bernoulli { alpha } => alpha,
+        }
+    }
+}
+
+/// Deterministic noise generator: `G(seed)` reproducible on both ends.
+pub struct NoiseGen {
+    rng: Xoshiro256pp,
+}
+
+impl NoiseGen {
+    pub fn new(seed: u64) -> Self {
+        NoiseGen { rng: Xoshiro256pp::seed_from(seed) }
+    }
+
+    /// Fill `out` with `G(seed)` samples of the given distribution.
+    pub fn fill(&mut self, dist: NoiseDist, out: &mut [f32]) {
+        match dist {
+            NoiseDist::Uniform { alpha } => {
+                for v in out.iter_mut() {
+                    *v = (2.0 * self.rng.next_f32() - 1.0) * alpha;
+                }
+            }
+            NoiseDist::Gaussian { alpha } => {
+                // Box-Muller, pairwise; deterministic given the stream.
+                let mut i = 0;
+                while i < out.len() {
+                    let (z0, z1) = self.next_gaussian_pair();
+                    out[i] = z0 * alpha;
+                    if i + 1 < out.len() {
+                        out[i + 1] = z1 * alpha;
+                    }
+                    i += 2;
+                }
+            }
+            NoiseDist::Bernoulli { alpha } => {
+                for v in out.iter_mut() {
+                    *v = if self.rng.next_u64() & 1 == 0 { alpha } else { -alpha };
+                }
+            }
+        }
+    }
+
+    /// Fill with U[0,1) draws (used for SM/PM randomness in Rust-side
+    /// codecs, e.g. post-training stochastic masking).
+    pub fn fill_uniform01(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.rng.next_f32();
+        }
+    }
+
+    /// Next raw u64 (for deriving PRNG keys handed to the HLO steps).
+    pub fn next_u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        self.rng.next_u64() as u32
+    }
+
+    /// U[0,1) f32 with 24-bit mantissa resolution.
+    pub fn next_f32(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire-style rejection (unbiased).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let threshold = n.wrapping_neg() % n;
+        loop {
+            let r = self.rng.next_u64();
+            let (hi, lo) = mul_hi_lo(r, n);
+            if lo >= threshold {
+                return hi;
+            }
+        }
+    }
+
+    fn next_gaussian_pair(&mut self) -> (f32, f32) {
+        // u1 in (0,1] to keep ln finite.
+        let u1 = (self.rng.next_f64_open01()).max(1e-300);
+        let u2 = self.rng.next_f64_open01();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        ((r * theta.cos()) as f32, (r * theta.sin()) as f32)
+    }
+
+    /// Fisher-Yates shuffle of a slice (used by client samplers/partitioners).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample a Gamma(shape, 1) variate (Marsaglia-Tsang); building block
+    /// for the Dirichlet partitioner.
+    pub fn next_gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.rng.next_f64_open01();
+            return self.next_gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let (z0, _) = self.next_gaussian_pair();
+            let x = z0 as f64;
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.rng.next_f64_open01();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(beta) sample of length `k` (normalised Gammas).
+    pub fn next_dirichlet(&mut self, beta: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.next_gamma(beta).max(1e-12)).collect();
+        let s: f64 = g.iter().sum();
+        for v in g.iter_mut() {
+            *v /= s;
+        }
+        g
+    }
+}
+
+#[inline]
+fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+/// Derive a per-(client, round) noise seed from the run seed — stable,
+/// collision-resistant mixing so concurrent clients never share noise.
+pub fn derive_seed(run_seed: u64, client: u64, round: u64, stream: u64) -> u64 {
+    let mut x = SplitMix64::new(run_seed);
+    // fold in the coordinates through independent splitmix steps
+    let a = x.next().wrapping_add(client.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut y = SplitMix64::new(a ^ round.rotate_left(17) ^ stream.rotate_left(41));
+    y.next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproducible_across_instances() {
+        let mut a = NoiseGen::new(42);
+        let mut b = NoiseGen::new(42);
+        let mut va = vec![0.0f32; 1024];
+        let mut vb = vec![0.0f32; 1024];
+        a.fill(NoiseDist::Uniform { alpha: 0.01 }, &mut va);
+        b.fill(NoiseDist::Uniform { alpha: 0.01 }, &mut vb);
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = NoiseGen::new(1);
+        let mut b = NoiseGen::new(2);
+        let mut va = vec![0.0f32; 256];
+        let mut vb = vec![0.0f32; 256];
+        a.fill(NoiseDist::Uniform { alpha: 1.0 }, &mut va);
+        b.fill(NoiseDist::Uniform { alpha: 1.0 }, &mut vb);
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut g = NoiseGen::new(7);
+        let mut v = vec![0.0f32; 200_000];
+        g.fill(NoiseDist::Uniform { alpha: 0.01 }, &mut v);
+        assert!(v.iter().all(|x| x.abs() <= 0.01));
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 1e-4, "mean {mean}");
+        let var: f64 =
+            v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        // Var[U(-a,a)] = a^2/3
+        let want = 0.01f64.powi(2) / 3.0;
+        assert!((var - want).abs() / want < 0.05, "var {var} want {want}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut g = NoiseGen::new(8);
+        let mut v = vec![0.0f32; 200_000];
+        g.fill(NoiseDist::Gaussian { alpha: 0.5 }, &mut v);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let var: f64 =
+            v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 5e-3, "mean {mean}");
+        assert!((var - 0.25).abs() / 0.25 < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn bernoulli_two_point() {
+        let mut g = NoiseGen::new(9);
+        let mut v = vec![0.0f32; 100_000];
+        g.fill(NoiseDist::Bernoulli { alpha: 0.25 }, &mut v);
+        assert!(v.iter().all(|&x| x == 0.25 || x == -0.25));
+        let pos = v.iter().filter(|&&x| x > 0.0).count() as f64 / v.len() as f64;
+        assert!((pos - 0.5).abs() < 0.01, "pos frac {pos}");
+    }
+
+    #[test]
+    fn bernoulli_never_zero() {
+        // FedMRN's masking divides by the noise; the Bernoulli two-point
+        // distribution must never emit zero.
+        let mut g = NoiseGen::new(10);
+        let mut v = vec![0.0f32; 4096];
+        g.fill(NoiseDist::Bernoulli { alpha: 1e-3 }, &mut v);
+        assert!(v.iter().all(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn next_below_unbiased_small_n() {
+        let mut g = NoiseGen::new(11);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[g.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = NoiseGen::new(12);
+        let mut v: Vec<u32> = (0..1000).collect();
+        g.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<u32>>());
+        assert_ne!(v, (0..1000).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut g = NoiseGen::new(13);
+        for beta in [0.1, 0.3, 1.0, 10.0] {
+            let p = g.next_dirichlet(beta, 20);
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_effect() {
+        // small beta -> spiky; large beta -> flat
+        let mut g = NoiseGen::new(14);
+        let spiky: f64 = (0..200)
+            .map(|_| {
+                g.next_dirichlet(0.1, 10).iter().cloned().fold(0.0, f64::max)
+            })
+            .sum::<f64>()
+            / 200.0;
+        let flat: f64 = (0..200)
+            .map(|_| {
+                g.next_dirichlet(50.0, 10).iter().cloned().fold(0.0, f64::max)
+            })
+            .sum::<f64>()
+            / 200.0;
+        assert!(spiky > 0.5, "spiky {spiky}");
+        assert!(flat < 0.2, "flat {flat}");
+    }
+
+    #[test]
+    fn derive_seed_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..50u64 {
+            for r in 0..50u64 {
+                assert!(seen.insert(derive_seed(99, c, r, 0)));
+            }
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut g = NoiseGen::new(15);
+        for _ in 0..10_000 {
+            let x = g.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them from the
+//! Rust hot path.
+//!
+//! Pipeline per artifact (see /opt/xla-example/load_hlo):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Compiled executables are cached
+//! per step name, so each variant compiles exactly once per process.
+//!
+//! The [`ArtifactRegistry`] mirrors `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`): per config — parameter dimension, batch
+//! geometry, init params, input/label specs; per step — input/output
+//! tensor specs used to validate calls before they reach XLA.
+
+mod registry;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+pub use registry::{ArtifactRegistry, ConfigMeta, StepMeta, TensorSpec};
+
+use crate::error::{Error, Result};
+
+/// Lazily-compiling executor over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative host↔device + execute statistics (perf accounting).
+    pub exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Load the registry and spin up the CPU PJRT client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let registry = ArtifactRegistry::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            registry,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigMeta> {
+        self.registry.config(name)
+    }
+
+    /// Initial flat parameters for a config (from `<config>.init.bin`).
+    pub fn init_params(&self, config: &str) -> Result<Vec<f32>> {
+        let meta = self.config(config)?;
+        let path = self.dir.join(&meta.init_bin);
+        let bytes = std::fs::read(&path)?;
+        if bytes.len() != meta.param_dim * 4 {
+            return Err(Error::Artifact(format!(
+                "{}: init bin has {} bytes, want {}",
+                path.display(),
+                bytes.len(),
+                meta.param_dim * 4
+            )));
+        }
+        let mut out = vec![0.0f32; meta.param_dim];
+        byteorder::LittleEndian::read_f32_into2(&bytes, &mut out);
+        Ok(out)
+    }
+
+    /// Compile (or fetch from cache) the executable for `config__step`.
+    pub fn executable(
+        &self,
+        config: &str,
+        step: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{config}__{step}");
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let meta = self.registry.step(config, step)?;
+        let path = self.dir.join(&meta.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a step with literal inputs; returns the untupled outputs.
+    pub fn execute(
+        &self,
+        config: &str,
+        step: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.execute_refs(config, step, &refs)
+    }
+
+    /// Execute with borrowed inputs (lets callers keep state literals
+    /// alive across steps without cloning).
+    pub fn execute_refs(
+        &self,
+        config: &str,
+        step: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let meta = self.registry.step(config, step)?;
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{config}__{step}: got {} inputs, want {}",
+                inputs.len(),
+                meta.inputs.len()
+            )));
+        }
+        let exe = self.executable(config, step)?;
+        *self.exec_count.borrow_mut() += 1;
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// byteorder's read_f32_into requires exact length; tiny extension trait to
+// keep the call site clean.
+trait ReadF32Ext {
+    fn read_f32_into2(bytes: &[u8], out: &mut [f32]);
+}
+
+impl ReadF32Ext for byteorder::LittleEndian {
+    fn read_f32_into2(bytes: &[u8], out: &mut [f32]) {
+        use byteorder::ByteOrder;
+        byteorder::LittleEndian::read_f32_into(bytes, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction helpers (the L3 ⇄ XLA boundary)
+// ---------------------------------------------------------------------------
+
+/// 1-D f32 literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 literal with explicit dims (row-major).
+pub fn lit_f32_shaped(v: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+/// i32 literal with explicit dims.
+pub fn lit_i32_shaped(v: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// u32[2] PRNG key literal from a u64 seed.
+pub fn lit_key(seed: u64) -> xla::Literal {
+    let parts = [(seed >> 32) as u32, seed as u32];
+    xla::Literal::vec1(&parts)
+}
+
+/// Copy a literal's f32 contents to a host vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 output.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_registry_and_init_params() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::load(artifacts_dir()).unwrap();
+        let meta = rt.config("smoke_mlp").unwrap();
+        assert!(meta.param_dim > 0);
+        let w = rt.init_params("smoke_mlp").unwrap();
+        assert_eq!(w.len(), meta.param_dim);
+        assert!(w.iter().all(|x| x.is_finite()));
+        assert!(crate::stats::l2(&w) > 0.0);
+    }
+
+    #[test]
+    fn execute_eval_step() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts_dir()).unwrap();
+        let meta = rt.config("smoke_mlp").unwrap();
+        let d = meta.param_dim;
+        let b = meta.batch;
+        let in_dim = meta.input_shape[0];
+        let w = rt.init_params("smoke_mlp").unwrap();
+        let x = vec![0.1f32; b * in_dim];
+        let y = vec![0i32; b];
+        let outs = rt
+            .execute(
+                "smoke_mlp",
+                "eval_step",
+                &[
+                    lit_f32(&w),
+                    lit_f32_shaped(&x, &[b, in_dim]).unwrap(),
+                    lit_i32_shaped(&y, &[b]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        let loss_sum = scalar_f32(&outs[0]).unwrap();
+        let correct = scalar_f32(&outs[1]).unwrap();
+        assert!(loss_sum > 0.0);
+        assert!((0.0..=b as f32).contains(&correct));
+        assert_eq!(rt.cached_executables(), 1);
+        let _ = d;
+    }
+
+    #[test]
+    fn plain_step_reduces_loss_over_iterations() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts_dir()).unwrap();
+        let meta = rt.config("smoke_mlp").unwrap();
+        let b = meta.batch;
+        let in_dim = meta.input_shape[0];
+        let mut w = rt.init_params("smoke_mlp").unwrap();
+        // deterministic separable batch
+        let mut g = crate::noise::NoiseGen::new(5);
+        let mut x = vec![0.0f32; b * in_dim];
+        g.fill(crate::noise::NoiseDist::Gaussian { alpha: 1.0 }, &mut x);
+        let y: Vec<i32> = (0..b).map(|i| (i % meta.n_classes) as i32).collect();
+        // encode class into the first feature so the task is learnable
+        for i in 0..b {
+            x[i * in_dim] = y[i] as f32 * 2.0;
+        }
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let outs = rt
+                .execute(
+                    "smoke_mlp",
+                    "plain_step",
+                    &[
+                        lit_f32(&w),
+                        lit_f32_shaped(&x, &[b, in_dim]).unwrap(),
+                        lit_i32_shaped(&y, &[b]).unwrap(),
+                        lit_scalar(0.3),
+                    ],
+                )
+                .unwrap();
+            w = to_vec_f32(&outs[0]).unwrap();
+            last = scalar_f32(&outs[1]).unwrap();
+            first.get_or_insert(last);
+        }
+        assert!(
+            last < 0.5 * first.unwrap(),
+            "loss {} -> {last}",
+            first.unwrap()
+        );
+    }
+
+    #[test]
+    fn mrn_step_and_finalize_roundtrip() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts_dir()).unwrap();
+        let meta = rt.config("smoke_mlp").unwrap();
+        let d = meta.param_dim;
+        let b = meta.batch;
+        let in_dim = meta.input_shape[0];
+        let w = rt.init_params("smoke_mlp").unwrap();
+        let mut g = crate::noise::NoiseGen::new(7);
+        let mut x = vec![0.0f32; b * in_dim];
+        g.fill(crate::noise::NoiseDist::Gaussian { alpha: 1.0 }, &mut x);
+        let y: Vec<i32> = (0..b).map(|i| (i % meta.n_classes) as i32).collect();
+        let mut noise = vec![0.0f32; d];
+        g.fill(crate::noise::NoiseDist::Uniform { alpha: 0.02 }, &mut noise);
+        let mut u = vec![0.0f32; d];
+        let steps = 12;
+        for t in 0..steps {
+            let outs = rt
+                .execute(
+                    "smoke_mlp",
+                    "mrn_bin_psm",
+                    &[
+                        lit_f32(&w),
+                        lit_f32(&u),
+                        lit_f32_shaped(&x, &[b, in_dim]).unwrap(),
+                        lit_i32_shaped(&y, &[b]).unwrap(),
+                        lit_f32(&noise),
+                        lit_key(1000 + t as u64),
+                        lit_scalar((t + 1) as f32 / steps as f32),
+                        lit_scalar(0.3),
+                    ],
+                )
+                .unwrap();
+            u = to_vec_f32(&outs[0]).unwrap();
+        }
+        assert!(crate::stats::l2(&u) > 0.0, "u must move");
+        // finalize -> strict {0,1} mask
+        let outs = rt
+            .execute(
+                "smoke_mlp",
+                "finalize_bin",
+                &[lit_f32(&u), lit_f32(&noise), lit_key(77)],
+            )
+            .unwrap();
+        let mask = to_vec_f32(&outs[0]).unwrap();
+        assert_eq!(mask.len(), d);
+        assert!(mask.iter().all(|&m| m == 0.0 || m == 1.0));
+        let density = mask.iter().sum::<f32>() / d as f32;
+        assert!(density > 0.0 && density < 1.0, "density {density}");
+    }
+
+    #[test]
+    fn unknown_step_is_artifact_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts_dir()).unwrap();
+        assert!(rt.execute("smoke_mlp", "nope", &[]).is_err());
+        assert!(rt.config("not_a_config").is_err());
+    }
+}

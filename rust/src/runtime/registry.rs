@@ -1,0 +1,250 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::jsonx::{self, Value};
+
+/// Tensor shape + dtype as exported by aot.py.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("shape not an array".into()))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| Error::Json("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Json("dtype not a string".into()))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported step function.
+#[derive(Clone, Debug)]
+pub struct StepMeta {
+    pub step: String,
+    pub hlo_file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One model configuration (init params + all its steps).
+#[derive(Clone, Debug)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub param_dim: usize,
+    pub batch: usize,
+    pub epoch_batches: Option<usize>,
+    pub init_bin: String,
+    pub init_seed: u64,
+    pub loss_kind: String,
+    pub n_classes: usize,
+    /// Per-sample feature shape (no batch dim) and dtype.
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String,
+    /// Per-sample label shape (no batch dim).
+    pub label_shape: Vec<usize>,
+    pub steps: HashMap<String, StepMeta>,
+}
+
+impl ConfigMeta {
+    /// Label elements per sample (1 for classification, T for LM, H·W for
+    /// dense prediction).
+    pub fn labels_per_sample(&self) -> usize {
+        self.label_shape.iter().product()
+    }
+
+    pub fn features_per_sample(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// Parsed manifest over an artifact directory.
+pub struct ArtifactRegistry {
+    configs: HashMap<String, ConfigMeta>,
+}
+
+impl ArtifactRegistry {
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest = jsonx::parse_file(&dir.join("manifest.json"))?;
+        let mut configs = HashMap::new();
+        for cfg in manifest
+            .req("configs")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("configs not an array".into()))?
+        {
+            let meta = Self::parse_config(cfg)?;
+            configs.insert(meta.name.clone(), meta);
+        }
+        if configs.is_empty() {
+            return Err(Error::Artifact(
+                "manifest has no configs — run `make artifacts`".into(),
+            ));
+        }
+        Ok(ArtifactRegistry { configs })
+    }
+
+    fn parse_config(cfg: &Value) -> Result<ConfigMeta> {
+        let name = cfg
+            .req("config")?
+            .as_str()
+            .ok_or_else(|| Error::Json("config name".into()))?
+            .to_string();
+        let mut steps = HashMap::new();
+        for s in cfg
+            .req("steps")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("steps not an array".into()))?
+        {
+            let step = s
+                .req("step")?
+                .as_str()
+                .ok_or_else(|| Error::Json("step name".into()))?
+                .to_string();
+            let inputs = s
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Json("inputs".into()))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = s
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Json("outputs".into()))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let hlo_file = s
+                .req("hlo")?
+                .as_str()
+                .ok_or_else(|| Error::Json("hlo file".into()))?
+                .to_string();
+            steps.insert(step.clone(), StepMeta { step, hlo_file, inputs, outputs });
+        }
+        let input = TensorSpec::from_json(cfg.req("input")?)?;
+        let label = TensorSpec::from_json(cfg.req("label")?)?;
+        Ok(ConfigMeta {
+            name,
+            param_dim: cfg
+                .req("param_dim")?
+                .as_usize()
+                .ok_or_else(|| Error::Json("param_dim".into()))?,
+            batch: cfg
+                .req("batch")?
+                .as_usize()
+                .ok_or_else(|| Error::Json("batch".into()))?,
+            epoch_batches: cfg
+                .get("epoch_batches")
+                .and_then(|v| v.as_usize())
+                .filter(|&n| n > 0),
+            init_bin: cfg
+                .req("init_bin")?
+                .as_str()
+                .ok_or_else(|| Error::Json("init_bin".into()))?
+                .to_string(),
+            init_seed: cfg
+                .get("init_seed")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64,
+            loss_kind: cfg
+                .req("loss_kind")?
+                .as_str()
+                .unwrap_or("classify")
+                .to_string(),
+            n_classes: cfg
+                .req("n_classes")?
+                .as_usize()
+                .ok_or_else(|| Error::Json("n_classes".into()))?,
+            input_shape: input.shape,
+            input_dtype: input.dtype,
+            label_shape: label.shape,
+            steps,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigMeta> {
+        self.configs.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "unknown config {name:?}; have {:?}",
+                self.config_names()
+            ))
+        })
+    }
+
+    pub fn step(&self, config: &str, step: &str) -> Result<&StepMeta> {
+        let cfg = self.config(config)?;
+        cfg.steps.get(step).ok_or_else(|| {
+            let mut have: Vec<&String> = cfg.steps.keys().collect();
+            have.sort();
+            Error::Artifact(format!(
+                "config {config}: unknown step {step:?}; have {have:?}"
+            ))
+        })
+    }
+
+    pub fn config_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.configs.keys().map(|s| s.as_str()).collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("fedmrn_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":1,"configs":[{
+                "config":"m","param_dim":10,"batch":4,"epoch_batches":null,
+                "init_bin":"m.init.bin","init_seed":3,"layout":"m.layout.json",
+                "loss_kind":"classify","n_classes":2,
+                "input":{"shape":[5],"dtype":"float32"},
+                "label":{"shape":[],"dtype":"int32"},
+                "steps":[{"name":"m__plain_step","config":"m","step":"plain_step",
+                          "hlo":"m__plain_step.hlo.txt",
+                          "inputs":[{"shape":[10],"dtype":"float32"}],
+                          "outputs":[{"shape":[10],"dtype":"float32"},
+                                     {"shape":[],"dtype":"float32"}]}]}]}"#,
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        let cfg = reg.config("m").unwrap();
+        assert_eq!(cfg.param_dim, 10);
+        assert_eq!(cfg.batch, 4);
+        assert_eq!(cfg.epoch_batches, None);
+        assert_eq!(cfg.labels_per_sample(), 1);
+        assert_eq!(cfg.features_per_sample(), 5);
+        let step = reg.step("m", "plain_step").unwrap();
+        assert_eq!(step.outputs.len(), 2);
+        assert!(reg.step("m", "zzz").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("fedmrn_no_such_dir_xyz");
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Descriptive statistics, timers, and convergence-rate fits.
+//!
+//! Used by the metrics logger (per-round accuracy / loss aggregation),
+//! the micro-bench harness (median / percentile timing), and the theory
+//! experiment (fitting the O(1/T) rate of Theorem 1).
+
+use std::time::Instant;
+
+/// Online mean/variance (Welford). Numerically stable for long streams.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile of a sample (linear interpolation); `q` in [0,1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&v, 0.5)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Ordinary least squares y = a + b x; returns (a, b, r2).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = sxy / sxx.max(1e-300);
+    let a = my - b * mx;
+    let r2 = if syy <= 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Fit the convergence-rate exponent p in `err_t ≈ C / t^p` by regressing
+/// log err on log t. Returns (p, r2). Theorem 1 predicts p ≈ 1 for
+/// strongly-convex FedMRN; vanilla SGD on smooth non-convex gives ~0.5.
+pub fn rate_exponent(errs: &[f64]) -> (f64, f64) {
+    let pts: Vec<(f64, f64)> = errs
+        .iter()
+        .enumerate()
+        .filter(|(_, &e)| e > 0.0)
+        .map(|(t, &e)| (((t + 1) as f64).ln(), e.ln()))
+        .collect();
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (_, b, r2) = linfit(&xs, &ys);
+    (-b, r2)
+}
+
+/// Wall-clock stopwatch in ms.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// l2 norm of a slice.
+pub fn l2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// l2 distance between slices.
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let dlt = x as f64 - y as f64;
+            dlt * dlt
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Cosine similarity (0 if either vector is ~0).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = l2(a);
+    let nb = l2(b);
+    if na < 1e-12 || nb < 1e-12 {
+        return 0.0;
+    }
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    dot / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((r.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 10.0);
+        assert_eq!(r.count(), 5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert!((percentile(&v, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linfit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_exponent_recovers_power_law() {
+        // err_t = 5 / t  -> p = 1
+        let errs: Vec<f64> = (1..200).map(|t| 5.0 / t as f64).collect();
+        let (p, r2) = rate_exponent(&errs);
+        assert!((p - 1.0).abs() < 1e-6, "p={p}");
+        assert!(r2 > 0.999);
+        // err_t = 2 / sqrt(t) -> p = 0.5
+        let errs: Vec<f64> = (1..200).map(|t| 2.0 / (t as f64).sqrt()).collect();
+        let (p, _) = rate_exponent(&errs);
+        assert!((p - 0.5).abs() < 1e-6, "p={p}");
+    }
+
+    #[test]
+    fn vector_ops() {
+        let a = [3.0f32, 4.0];
+        assert!((l2(&a) - 5.0).abs() < 1e-9);
+        assert!((l2_dist(&a, &[0.0, 0.0]) - 5.0).abs() < 1e-9);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-9);
+        assert!((cosine(&a, &[-3.0, -4.0]) + 1.0).abs() < 1e-9);
+        assert_eq!(cosine(&a, &[0.0, 0.0]), 0.0);
+    }
+}
