@@ -1,0 +1,28 @@
+//! End-to-end FedMRN server aggregation (Eq. 5) at production shape:
+//! d = 4M parameters, 32 clients, sweeping the worker-thread count.
+//! Every thread count produces byte-identical global weights (pinned by
+//! `coordinator::parallel` tests); this target measures the wall-clock
+//! side of that contract and writes `BENCH_aggregate.json` at the repo
+//! root (schema: docs/BENCH.md).
+
+use fedmrn::bench::suites;
+
+fn main() {
+    let d = 4_000_000usize;
+    let clients = 32usize;
+    let threads = [1usize, 2, 4, 8];
+    let b = suites::aggregate_suite(d, clients, &threads, 2, 9);
+    b.report(&format!("fedmrn aggregate @ d = {d}, {clients} clients"));
+    for &t in &threads[1..] {
+        if let Some(s) = suites::speedup(
+            &b,
+            "aggregate fedmrn threads=1",
+            &format!("aggregate fedmrn threads={t}"),
+        ) {
+            println!("speedup threads={t}: {s:.2}x vs sequential");
+        }
+    }
+    let path = suites::repo_root_file("BENCH_aggregate.json");
+    b.write_json(&path).unwrap();
+    eprintln!("wrote {path}");
+}

@@ -1,45 +1,26 @@
 //! Bit-packing hot path (DESIGN.md §8.4): pack / unpack / fused apply /
-//! fused accumulate at wire scale.
+//! fused accumulate at wire scale, word-parallel kernels vs the seed's
+//! scalar oracles. Writes `BENCH_bitpack.json` at the repo root (schema:
+//! docs/BENCH.md).
 
-use fedmrn::bench::Bench;
-use fedmrn::bitpack;
-use fedmrn::noise::{NoiseDist, NoiseGen};
+use fedmrn::bench::suites;
 
 fn main() {
     let d = 4_000_000usize;
-    let mut g = NoiseGen::new(1);
-    let mask: Vec<f32> = (0..d).map(|_| (g.next_u64() & 1) as f32).collect();
-    let mut noise = vec![0.0f32; d];
-    g.fill(NoiseDist::Uniform { alpha: 0.01 }, &mut noise);
-
-    let mut bits = Vec::new();
-    bitpack::pack_binary(&mask, &mut bits);
-    let mut out = vec![0.0f32; d];
-    let mut acc = vec![0.0f32; d];
-    let mut words = Vec::new();
-
-    let mut b = Bench::with_iters(2, 9);
-    b.run("pack_binary", Some(d as u64), || {
-        bitpack::pack_binary(&mask, &mut words);
-    });
-    b.run("unpack_binary", Some(d as u64), || {
-        bitpack::unpack_binary(&bits, d, &mut out);
-    });
-    b.run("apply_binary (fused n*m)", Some(d as u64), || {
-        bitpack::apply_binary(&bits, &noise, &mut out);
-    });
-    b.run("accumulate_binary (Eq.5 inner)", Some(d as u64), || {
-        bitpack::accumulate_binary(&bits, &noise, 0.1, &mut acc);
-    });
-    b.run("apply_signed", Some(d as u64), || {
-        bitpack::apply_signed(&bits, &noise, &mut out);
-    });
-    b.run("naive unpack+multiply", Some(d as u64), || {
-        bitpack::unpack_binary(&bits, d, &mut out);
-        for (o, n) in out.iter_mut().zip(&noise) {
-            *o *= n;
-        }
-    });
+    let b = suites::bitpack_suite(d, 2, 9);
     b.report(&format!("bitpack @ d = {d}"));
-    b.write_json("results/bench_bitpack.json").unwrap();
+    for (base, word) in [
+        ("apply_binary (seed scalar)", "apply_binary (word, fused n*m)"),
+        ("accumulate_signed (seed scalar)", "accumulate_signed (word)"),
+        ("accumulate_binary (seed scalar)", "accumulate_binary (word, Eq.5 inner)"),
+        ("unpack_binary (seed scalar)", "unpack_binary (word)"),
+        ("apply_signed (seed scalar)", "apply_signed (word)"),
+    ] {
+        if let Some(s) = suites::speedup(&b, base, word) {
+            println!("speedup {word}: {s:.2}x vs seed scalar");
+        }
+    }
+    let path = suites::repo_root_file("BENCH_bitpack.json");
+    b.write_json(&path).unwrap();
+    eprintln!("wrote {path}");
 }

@@ -5,6 +5,8 @@
 //! fixed-count timed iterations; reports median / p10 / p90 and derived
 //! throughput. Results can be emitted as human tables or JSON rows.
 
+pub mod suites;
+
 use std::time::Instant;
 
 use crate::jsonx::Value;

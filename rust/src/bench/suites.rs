@@ -1,0 +1,183 @@
+//! Canonical benchmark suites, shared by the `benches/*.rs` targets and
+//! the `fedmrn bench` CLI subcommand so both emit the same rows into the
+//! same `BENCH_*.json` files (schema: docs/BENCH.md).
+
+use crate::bench::Bench;
+use crate::bitpack;
+use crate::coordinator::parallel::{aggregate_masked, MaskedUpdate};
+use crate::compress::MaskType;
+use crate::noise::{NoiseDist, NoiseGen};
+
+/// Path of `name` at the repository root (one level above the crate).
+/// The perf trajectory files `BENCH_bitpack.json` /
+/// `BENCH_aggregate.json` live there so successive PRs diff cleanly.
+/// The build-time crate dir only exists on the build machine, so a
+/// relocated binary falls back to the current directory instead of
+/// recreating the build host's tree.
+pub fn repo_root_file(name: &str) -> String {
+    let baked = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+    if std::path::Path::new(baked).is_dir() {
+        format!("{baked}/{name}")
+    } else {
+        name.to_string()
+    }
+}
+
+fn random_mask_bits(d: usize, seed: u64, signed: bool) -> Vec<u64> {
+    let mut g = NoiseGen::new(seed);
+    let mask: Vec<f32> = (0..d)
+        .map(|_| {
+            let b = g.next_u64() & 1 == 1;
+            if signed {
+                if b { 1.0 } else { -1.0 }
+            } else if b {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut bits = Vec::new();
+    if signed {
+        bitpack::pack_signed(&mask, &mut bits);
+    } else {
+        bitpack::pack_binary(&mask, &mut bits);
+    }
+    bits
+}
+
+/// Bit-packing hot path at wire scale: word-parallel kernels next to the
+/// seed's per-bit scalar oracles (`bitpack::scalar`), so the JSON rows
+/// carry the before/after speedup in one file.
+pub fn bitpack_suite(d: usize, warmup: usize, iters: usize) -> Bench {
+    let mut g = NoiseGen::new(1);
+    let mask: Vec<f32> = (0..d).map(|_| (g.next_u64() & 1) as f32).collect();
+    let mut noise = vec![0.0f32; d];
+    g.fill(NoiseDist::Uniform { alpha: 0.01 }, &mut noise);
+
+    let mut bits = Vec::new();
+    bitpack::pack_binary(&mask, &mut bits);
+    let mut out = vec![0.0f32; d];
+    let mut acc = vec![0.0f32; d];
+    let mut words = Vec::new();
+    let e = Some(d as u64);
+
+    let mut b = Bench::with_iters(warmup, iters);
+    b.run("pack_binary", e, || {
+        bitpack::pack_binary(&mask, &mut words);
+    });
+    b.run("unpack_binary (word)", e, || {
+        bitpack::unpack_binary(&bits, d, &mut out).unwrap();
+    });
+    b.run("unpack_binary (seed scalar)", e, || {
+        bitpack::scalar::unpack_binary(&bits, d, &mut out);
+    });
+    b.run("apply_binary (word, fused n*m)", e, || {
+        bitpack::apply_binary(&bits, &noise, &mut out).unwrap();
+    });
+    b.run("apply_binary (seed scalar)", e, || {
+        bitpack::scalar::apply_binary(&bits, &noise, &mut out);
+    });
+    b.run("apply_signed (word)", e, || {
+        bitpack::apply_signed(&bits, &noise, &mut out).unwrap();
+    });
+    b.run("apply_signed (seed scalar)", e, || {
+        bitpack::scalar::apply_signed(&bits, &noise, &mut out);
+    });
+    b.run("accumulate_binary (word, Eq.5 inner)", e, || {
+        bitpack::accumulate_binary(&bits, &noise, 0.1, &mut acc).unwrap();
+    });
+    b.run("accumulate_binary (seed scalar)", e, || {
+        bitpack::scalar::accumulate_binary(&bits, &noise, 0.1, &mut acc);
+    });
+    b.run("accumulate_signed (word)", e, || {
+        bitpack::accumulate_signed(&bits, &noise, 0.1, &mut acc).unwrap();
+    });
+    b.run("accumulate_signed (seed scalar)", e, || {
+        bitpack::scalar::accumulate_signed(&bits, &noise, 0.1, &mut acc);
+    });
+    b.run("noise_fill uniform (block)", e, || {
+        NoiseGen::new(7).fill(NoiseDist::Uniform { alpha: 0.01 }, &mut out);
+    });
+    b.run("naive unpack+multiply", e, || {
+        bitpack::unpack_binary(&bits, d, &mut out).unwrap();
+        for (o, n) in out.iter_mut().zip(&noise) {
+            *o *= n;
+        }
+    });
+    b
+}
+
+/// End-to-end Eq. 5 server aggregation: regenerate `G(s_k)` for each of
+/// `clients` payloads and fuse the masks into the global accumulator, at
+/// each thread count in `threads` (1 = the sequential reference path).
+/// Throughput elems = `d × clients` fused parameters per pass.
+pub fn aggregate_suite(
+    d: usize,
+    clients: usize,
+    threads: &[usize],
+    warmup: usize,
+    iters: usize,
+) -> Bench {
+    let all_bits: Vec<Vec<u64>> = (0..clients)
+        .map(|k| random_mask_bits(d, 0xB17_5EED + k as u64, false))
+        .collect();
+    let updates: Vec<MaskedUpdate> = all_bits
+        .iter()
+        .enumerate()
+        .map(|(k, bits)| MaskedUpdate {
+            seed: 0x5EED_0000 + k as u64,
+            bits,
+            scale: 1.0 / clients as f32,
+        })
+        .collect();
+    let dist = NoiseDist::Uniform { alpha: 0.01 };
+    let mut w = vec![0.0f32; d];
+    let elems = Some((d as u64) * (clients as u64));
+
+    let mut b = Bench::with_iters(warmup, iters);
+    for &t in threads {
+        b.run(&format!("aggregate fedmrn threads={t}"), elems, || {
+            aggregate_masked(&updates, dist, MaskType::Binary, &mut w, t).unwrap();
+        });
+    }
+    b
+}
+
+/// Median-time ratio `base / other` between two named rows (speedup of
+/// `other` over `base`), if both rows exist.
+pub fn speedup(b: &Bench, base: &str, other: &str) -> Option<f64> {
+    let find = |name: &str| b.results.iter().find(|m| m.name == name);
+    match (find(base), find(other)) {
+        (Some(a), Some(o)) if o.median_ms > 0.0 => Some(a.median_ms / o.median_ms),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_run_small() {
+        // tiny sizes so the suite itself stays test-fast
+        let b = bitpack_suite(10_007, 0, 1);
+        assert!(b.results.len() >= 12);
+        assert!(speedup(
+            &b,
+            "apply_binary (seed scalar)",
+            "apply_binary (word, fused n*m)"
+        )
+        .unwrap()
+            > 0.0);
+        let a = aggregate_suite(10_007, 4, &[1, 2], 0, 1);
+        assert_eq!(a.results.len(), 2);
+        assert!(a.results.iter().all(|m| m.median_ms >= 0.0));
+    }
+
+    #[test]
+    fn repo_root_file_is_one_level_up() {
+        let p = repo_root_file("BENCH_bitpack.json");
+        assert!(p.ends_with("/../BENCH_bitpack.json"));
+    }
+}

@@ -8,6 +8,25 @@
 //! The unpack side fuses the mask application with the noise multiply
 //! (`apply_*`) so the server never materialises an intermediate f32 mask
 //! vector (hot-path alloc discipline, DESIGN.md §9).
+//!
+//! # Kernel layout (perf log, PR 1)
+//!
+//! Every kernel runs **word-at-a-time**: the driver walks whole u64
+//! words and hands each word plus its 64-element f32 lane to a branchless
+//! `*_word` body with a compile-time trip count (`chunks_exact` keeps the
+//! length known to LLVM, so the bodies autovectorise). The seed's per-bit
+//! loops — `bits[i / 64] >> (i % 64)` per element — live on in
+//! [`scalar`] as the reference oracle for equivalence tests and for the
+//! before/after rows in `benches/bench_bitpack.rs`.
+//!
+//! # Malformed input
+//!
+//! These functions sit at the transport boundary: `bits` comes off the
+//! wire, so a truncated or mis-sized payload must surface as
+//! [`Error::Codec`], never a panic. All unpack/apply/accumulate entry
+//! points are `Result`-checked once per call (not per element).
+
+use crate::error::{Error, Result};
 
 /// Number of u64 words needed for `d` bits.
 #[inline]
@@ -19,6 +38,16 @@ pub fn words_for(d: usize) -> usize {
 #[inline]
 pub fn wire_bytes(d: usize) -> usize {
     words_for(d) * 8
+}
+
+#[cold]
+fn short_bits(have: usize, want: usize) -> Error {
+    Error::Codec(format!("mask bits truncated: {have} words, need {want}"))
+}
+
+#[cold]
+fn bad_len(what: &str, have: usize, want: usize) -> Error {
+    Error::Codec(format!("{what} length {have}, need {want}"))
 }
 
 /// Pack a `{0,1}`-valued f32 mask into u64 words (LSB-first).
@@ -68,88 +97,220 @@ pub fn pack_signed(mask: &[f32], out: &mut Vec<u64>) {
     }
 }
 
-/// Unpack to f32 `{0,1}`.
-pub fn unpack_binary(bits: &[u64], d: usize, out: &mut [f32]) {
-    assert!(out.len() >= d && bits.len() >= words_for(d));
-    for (i, o) in out.iter_mut().take(d).enumerate() {
-        *o = ((bits[i / 64] >> (i % 64)) & 1) as f32;
+// ---------------------------------------------------------------------------
+// Word-wide kernel bodies (branchless, fixed trip count at call sites)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn unpack_binary_word(word: u64, out: &mut [f32]) {
+    for (bit, o) in out.iter_mut().enumerate() {
+        *o = ((word >> bit) & 1) as f32;
     }
 }
 
-/// Unpack to f32 `{-1,+1}`.
-pub fn unpack_signed(bits: &[u64], d: usize, out: &mut [f32]) {
-    assert!(out.len() >= d && bits.len() >= words_for(d));
-    for (i, o) in out.iter_mut().take(d).enumerate() {
-        *o = if (bits[i / 64] >> (i % 64)) & 1 == 1 { 1.0 } else { -1.0 };
+#[inline(always)]
+fn unpack_signed_word(word: u64, out: &mut [f32]) {
+    for (bit, o) in out.iter_mut().enumerate() {
+        // +1.0 with the IEEE sign bit set when the mask bit is 0
+        let sign = ((((word >> bit) & 1) ^ 1) as u32) << 31;
+        *o = f32::from_bits(0x3F80_0000 | sign);
     }
+}
+
+#[inline(always)]
+fn apply_binary_word(word: u64, noise: &[f32], out: &mut [f32]) {
+    for (bit, (o, n)) in out.iter_mut().zip(noise).enumerate() {
+        // 0 -> 0x0000_0000, 1 -> 0xFFFF_FFFF
+        let keep = (((word >> bit) & 1) as u32).wrapping_neg();
+        *o = f32::from_bits(n.to_bits() & keep);
+    }
+}
+
+#[inline(always)]
+fn apply_signed_word(word: u64, noise: &[f32], out: &mut [f32]) {
+    for (bit, (o, n)) in out.iter_mut().zip(noise).enumerate() {
+        // flip the IEEE sign bit when the mask bit is 0
+        let flip = ((((word >> bit) & 1) ^ 1) as u32) << 31;
+        *o = f32::from_bits(n.to_bits() ^ flip);
+    }
+}
+
+#[inline(always)]
+fn accumulate_binary_word(word: u64, noise: &[f32], scale: f32, acc: &mut [f32]) {
+    for (bit, (a, n)) in acc.iter_mut().zip(noise).enumerate() {
+        let keep = (((word >> bit) & 1) as u32).wrapping_neg();
+        *a += scale * f32::from_bits(n.to_bits() & keep);
+    }
+}
+
+#[inline(always)]
+fn accumulate_signed_word(word: u64, noise: &[f32], scale: f32, acc: &mut [f32]) {
+    for (bit, (a, n)) in acc.iter_mut().zip(noise).enumerate() {
+        let flip = ((((word >> bit) & 1) ^ 1) as u32) << 31;
+        *a += scale * f32::from_bits(n.to_bits() ^ flip);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked drivers
+// ---------------------------------------------------------------------------
+
+/// Unpack to f32 `{0,1}`. Writes `out[..d]`; `out` may be longer.
+pub fn unpack_binary(bits: &[u64], d: usize, out: &mut [f32]) -> Result<()> {
+    let words = words_for(d);
+    if bits.len() < words {
+        return Err(short_bits(bits.len(), words));
+    }
+    if out.len() < d {
+        return Err(bad_len("unpack out", out.len(), d));
+    }
+    let out = &mut out[..d];
+    let mut chunks = out.chunks_exact_mut(64);
+    for (chunk, &word) in (&mut chunks).zip(bits) {
+        unpack_binary_word(word, chunk);
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        unpack_binary_word(bits[words - 1], rem);
+    }
+    Ok(())
+}
+
+/// Unpack to f32 `{-1,+1}`. Writes `out[..d]`; `out` may be longer.
+pub fn unpack_signed(bits: &[u64], d: usize, out: &mut [f32]) -> Result<()> {
+    let words = words_for(d);
+    if bits.len() < words {
+        return Err(short_bits(bits.len(), words));
+    }
+    if out.len() < d {
+        return Err(bad_len("unpack out", out.len(), d));
+    }
+    let out = &mut out[..d];
+    let mut chunks = out.chunks_exact_mut(64);
+    for (chunk, &word) in (&mut chunks).zip(bits) {
+        unpack_signed_word(word, chunk);
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        unpack_signed_word(bits[words - 1], rem);
+    }
+    Ok(())
 }
 
 /// Fused server-side reconstruction, binary masks: `out[i] = n[i] * m[i]`.
-/// Branchless sign-bit arithmetic (perf log: 182 → 1500+ Melem/s): the
-/// mask bit selects the noise value via an all-ones/zero f32 bitmask.
-pub fn apply_binary(bits: &[u64], noise: &[f32], out: &mut [f32]) {
+/// Branchless sign-bit arithmetic: the mask bit selects the noise value
+/// via an all-ones/zero f32 bitmask.
+pub fn apply_binary(bits: &[u64], noise: &[f32], out: &mut [f32]) -> Result<()> {
     let d = noise.len();
-    assert!(out.len() == d && bits.len() >= words_for(d));
-    let mut i = 0usize;
-    for &word in bits.iter().take(words_for(d)) {
-        let end = (i + 64).min(d);
-        for bit in 0..(end - i) {
-            // 0 -> 0x0000_0000, 1 -> 0xFFFF_FFFF
-            let keep = (((word >> bit) & 1) as u32).wrapping_neg();
-            out[i + bit] = f32::from_bits(noise[i + bit].to_bits() & keep);
-        }
-        i = end;
+    let words = words_for(d);
+    if bits.len() < words {
+        return Err(short_bits(bits.len(), words));
     }
+    if out.len() != d {
+        return Err(bad_len("apply out", out.len(), d));
+    }
+    let mut o = out.chunks_exact_mut(64);
+    let mut n = noise.chunks_exact(64);
+    for ((oc, nc), &word) in (&mut o).zip(&mut n).zip(bits) {
+        apply_binary_word(word, nc, oc);
+    }
+    let orem = o.into_remainder();
+    if !orem.is_empty() {
+        apply_binary_word(bits[words - 1], n.remainder(), orem);
+    }
+    Ok(())
 }
 
 /// Fused reconstruction, signed masks: `out[i] = ±n[i]`.
 /// Branchless: flip the IEEE sign bit when the mask bit is 0.
-pub fn apply_signed(bits: &[u64], noise: &[f32], out: &mut [f32]) {
+pub fn apply_signed(bits: &[u64], noise: &[f32], out: &mut [f32]) -> Result<()> {
     let d = noise.len();
-    assert!(out.len() == d && bits.len() >= words_for(d));
-    let mut i = 0usize;
-    for &word in bits.iter().take(words_for(d)) {
-        let end = (i + 64).min(d);
-        for bit in 0..(end - i) {
-            let flip = ((((word >> bit) & 1) ^ 1) as u32) << 31;
-            out[i + bit] = f32::from_bits(noise[i + bit].to_bits() ^ flip);
-        }
-        i = end;
+    let words = words_for(d);
+    if bits.len() < words {
+        return Err(short_bits(bits.len(), words));
     }
+    if out.len() != d {
+        return Err(bad_len("apply out", out.len(), d));
+    }
+    let mut o = out.chunks_exact_mut(64);
+    let mut n = noise.chunks_exact(64);
+    for ((oc, nc), &word) in (&mut o).zip(&mut n).zip(bits) {
+        apply_signed_word(word, nc, oc);
+    }
+    let orem = o.into_remainder();
+    if !orem.is_empty() {
+        apply_signed_word(bits[words - 1], n.remainder(), orem);
+    }
+    Ok(())
 }
 
 /// Fused *accumulating* reconstruction: `acc[i] += scale * n[i] * m[i]`
 /// (binary). This is the aggregation inner loop of Eq. 5.
-pub fn accumulate_binary(bits: &[u64], noise: &[f32], scale: f32, acc: &mut [f32]) {
+///
+/// Unset lanes contribute an exact `+0.0` (masked value), so this is
+/// bit-identical to the skip-unset-bits formulation except that a `-0.0`
+/// accumulator lane normalises to `+0.0`. All-zero words are skipped.
+///
+/// The slices may be word-aligned *sub-ranges* of a larger vector — the
+/// parallel aggregator shards the d-dimension on 64-bit boundaries and
+/// calls this kernel per shard, which performs exactly the per-element
+/// operations the full-vector call would.
+pub fn accumulate_binary(
+    bits: &[u64],
+    noise: &[f32],
+    scale: f32,
+    acc: &mut [f32],
+) -> Result<()> {
     let d = noise.len();
-    assert!(acc.len() == d && bits.len() >= words_for(d));
-    for w in 0..words_for(d) {
-        let mut word = bits[w];
-        if word == 0 {
-            continue;
-        }
-        let base = w * 64;
-        // iterate set bits only
-        while word != 0 {
-            let t = word.trailing_zeros() as usize;
-            let i = base + t;
-            if i < d {
-                acc[i] += scale * noise[i];
-            }
-            word &= word - 1;
-        }
+    let words = words_for(d);
+    if bits.len() < words {
+        return Err(short_bits(bits.len(), words));
     }
+    if acc.len() != d {
+        return Err(bad_len("accumulate acc", acc.len(), d));
+    }
+    let mut a = acc.chunks_exact_mut(64);
+    let mut n = noise.chunks_exact(64);
+    for ((ac, nc), &word) in (&mut a).zip(&mut n).zip(bits) {
+        if word == 0 {
+            continue; // dense masks almost never hit this; sparse ones fly
+        }
+        accumulate_binary_word(word, nc, scale, ac);
+    }
+    let arem = a.into_remainder();
+    if !arem.is_empty() && bits[words - 1] != 0 {
+        accumulate_binary_word(bits[words - 1], n.remainder(), scale, arem);
+    }
+    Ok(())
 }
 
 /// Fused accumulating reconstruction, signed: `acc[i] += scale * (±n[i])`.
-pub fn accumulate_signed(bits: &[u64], noise: &[f32], scale: f32, acc: &mut [f32]) {
+/// Word-at-a-time (the seed re-derived `bits[i/64] >> (i%64)` per
+/// element; see `scalar::accumulate_signed` for the regression oracle).
+pub fn accumulate_signed(
+    bits: &[u64],
+    noise: &[f32],
+    scale: f32,
+    acc: &mut [f32],
+) -> Result<()> {
     let d = noise.len();
-    assert!(acc.len() == d && bits.len() >= words_for(d));
-    for i in 0..d {
-        let bit = (bits[i / 64] >> (i % 64)) & 1;
-        let s = if bit == 1 { scale } else { -scale };
-        acc[i] += s * noise[i];
+    let words = words_for(d);
+    if bits.len() < words {
+        return Err(short_bits(bits.len(), words));
     }
+    if acc.len() != d {
+        return Err(bad_len("accumulate acc", acc.len(), d));
+    }
+    let mut a = acc.chunks_exact_mut(64);
+    let mut n = noise.chunks_exact(64);
+    for ((ac, nc), &word) in (&mut a).zip(&mut n).zip(bits) {
+        accumulate_signed_word(word, nc, scale, ac);
+    }
+    let arem = a.into_remainder();
+    if !arem.is_empty() {
+        accumulate_signed_word(bits[words - 1], n.remainder(), scale, arem);
+    }
+    Ok(())
 }
 
 /// Count of set bits (mask density diagnostics).
@@ -165,19 +326,118 @@ pub fn words_to_bytes(bits: &[u64], out: &mut Vec<u8>) {
     }
 }
 
-/// Parse little-endian bytes back to words.
-pub fn bytes_to_words(bytes: &[u8]) -> Vec<u64> {
-    assert!(bytes.len() % 8 == 0, "mask byte length not word-aligned");
-    bytes
+/// Parse little-endian bytes back to words. A payload whose length is not
+/// word-aligned is a transport error, not a panic.
+pub fn bytes_to_words(bytes: &[u8]) -> Result<Vec<u64>> {
+    if bytes.len() % 8 != 0 {
+        return Err(Error::Codec(format!(
+            "mask byte length {} not word-aligned",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
         .chunks_exact(8)
         .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-        .collect()
+        .collect())
+}
+
+/// Seed-era scalar kernels, kept verbatim as the reference oracle.
+///
+/// These are the per-bit implementations the word-parallel kernels above
+/// replaced. They exist for two consumers only: the equivalence property
+/// tests in this module, and the before/after comparison rows in
+/// `benches/bench_bitpack.rs`. Do not call them from the hot path.
+pub mod scalar {
+    use super::words_for;
+
+    /// Per-bit unpack to `{0,1}` (seed implementation).
+    pub fn unpack_binary(bits: &[u64], d: usize, out: &mut [f32]) {
+        assert!(out.len() >= d && bits.len() >= words_for(d));
+        for (i, o) in out.iter_mut().take(d).enumerate() {
+            *o = ((bits[i / 64] >> (i % 64)) & 1) as f32;
+        }
+    }
+
+    /// Per-bit unpack to `{-1,+1}` (seed implementation).
+    pub fn unpack_signed(bits: &[u64], d: usize, out: &mut [f32]) {
+        assert!(out.len() >= d && bits.len() >= words_for(d));
+        for (i, o) in out.iter_mut().take(d).enumerate() {
+            *o = if (bits[i / 64] >> (i % 64)) & 1 == 1 { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// Seed `apply_binary`: per-word outer loop, per-bit indexed inner.
+    pub fn apply_binary(bits: &[u64], noise: &[f32], out: &mut [f32]) {
+        let d = noise.len();
+        assert!(out.len() == d && bits.len() >= words_for(d));
+        let mut i = 0usize;
+        for &word in bits.iter().take(words_for(d)) {
+            let end = (i + 64).min(d);
+            for bit in 0..(end - i) {
+                let keep = (((word >> bit) & 1) as u32).wrapping_neg();
+                out[i + bit] = f32::from_bits(noise[i + bit].to_bits() & keep);
+            }
+            i = end;
+        }
+    }
+
+    /// Seed `apply_signed`.
+    pub fn apply_signed(bits: &[u64], noise: &[f32], out: &mut [f32]) {
+        let d = noise.len();
+        assert!(out.len() == d && bits.len() >= words_for(d));
+        let mut i = 0usize;
+        for &word in bits.iter().take(words_for(d)) {
+            let end = (i + 64).min(d);
+            for bit in 0..(end - i) {
+                let flip = ((((word >> bit) & 1) ^ 1) as u32) << 31;
+                out[i + bit] = f32::from_bits(noise[i + bit].to_bits() ^ flip);
+            }
+            i = end;
+        }
+    }
+
+    /// Seed `accumulate_binary`: iterate set bits only.
+    pub fn accumulate_binary(bits: &[u64], noise: &[f32], scale: f32, acc: &mut [f32]) {
+        let d = noise.len();
+        assert!(acc.len() == d && bits.len() >= words_for(d));
+        for w in 0..words_for(d) {
+            let mut word = bits[w];
+            if word == 0 {
+                continue;
+            }
+            let base = w * 64;
+            while word != 0 {
+                let t = word.trailing_zeros() as usize;
+                let i = base + t;
+                if i < d {
+                    acc[i] += scale * noise[i];
+                }
+                word &= word - 1;
+            }
+        }
+    }
+
+    /// Seed `accumulate_signed` — the known-slow form that re-derives the
+    /// word and bit position per element (`bits[i/64] >> (i%64)`).
+    pub fn accumulate_signed(bits: &[u64], noise: &[f32], scale: f32, acc: &mut [f32]) {
+        let d = noise.len();
+        assert!(acc.len() == d && bits.len() >= words_for(d));
+        for i in 0..d {
+            let bit = (bits[i / 64] >> (i % 64)) & 1;
+            let s = if bit == 1 { scale } else { -scale };
+            acc[i] += s * noise[i];
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::noise::NoiseGen;
+
+    /// The odd-size ladder every equivalence test walks: word-exact,
+    /// straddling, sub-word, and large-prime sizes.
+    const SIZES: [usize; 7] = [1, 63, 64, 65, 127, 1000, 10_007];
 
     fn random_mask(d: usize, seed: u64, signed: bool) -> Vec<f32> {
         let mut g = NoiseGen::new(seed);
@@ -195,14 +455,43 @@ mod tests {
             .collect()
     }
 
+    fn random_noise(d: usize, seed: u64) -> Vec<f32> {
+        let mut g = NoiseGen::new(seed);
+        let mut noise = vec![0.0f32; d];
+        g.fill(crate::noise::NoiseDist::Gaussian { alpha: 0.5 }, &mut noise);
+        noise
+    }
+
+    fn bits_of(mask: &[f32], signed: bool) -> Vec<u64> {
+        let mut bits = Vec::new();
+        if signed {
+            pack_signed(mask, &mut bits);
+        } else {
+            pack_binary(mask, &mut bits);
+        }
+        bits
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for i in 0..a.len() {
+            assert_eq!(
+                a[i].to_bits(),
+                b[i].to_bits(),
+                "{ctx}: lane {i}: {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
     #[test]
     fn roundtrip_binary_odd_sizes() {
         for d in [1usize, 63, 64, 65, 127, 128, 1000, 4096, 10_007] {
             let mask = random_mask(d, d as u64, false);
-            let mut bits = Vec::new();
-            pack_binary(&mask, &mut bits);
+            let bits = bits_of(&mask, false);
             let mut back = vec![9.0f32; d];
-            unpack_binary(&bits, d, &mut back);
+            unpack_binary(&bits, d, &mut back).unwrap();
             assert_eq!(mask, back, "d={d}");
         }
     }
@@ -211,13 +500,132 @@ mod tests {
     fn roundtrip_signed_odd_sizes() {
         for d in [1usize, 64, 65, 4097] {
             let mask = random_mask(d, 100 + d as u64, true);
-            let mut bits = Vec::new();
-            pack_signed(&mask, &mut bits);
+            let bits = bits_of(&mask, true);
             let mut back = vec![9.0f32; d];
-            unpack_signed(&bits, d, &mut back);
+            unpack_signed(&bits, d, &mut back).unwrap();
             assert_eq!(mask, back, "d={d}");
         }
     }
+
+    // -- kernel equivalence: word-parallel vs seed scalar oracle ----------
+
+    #[test]
+    fn unpack_matches_scalar_oracle() {
+        for d in SIZES {
+            for signed in [false, true] {
+                let mask = random_mask(d, 1000 + d as u64, signed);
+                let bits = bits_of(&mask, signed);
+                let mut fast = vec![7.0f32; d];
+                let mut slow = vec![7.0f32; d];
+                if signed {
+                    unpack_signed(&bits, d, &mut fast).unwrap();
+                    scalar::unpack_signed(&bits, d, &mut slow);
+                } else {
+                    unpack_binary(&bits, d, &mut fast).unwrap();
+                    scalar::unpack_binary(&bits, d, &mut slow);
+                }
+                assert_bits_eq(&fast, &slow, &format!("unpack d={d} signed={signed}"));
+            }
+        }
+    }
+
+    #[test]
+    fn apply_matches_scalar_oracle() {
+        for d in SIZES {
+            for signed in [false, true] {
+                let mask = random_mask(d, 2000 + d as u64, signed);
+                let noise = random_noise(d, 3000 + d as u64);
+                let bits = bits_of(&mask, signed);
+                let mut fast = vec![0.0f32; d];
+                let mut slow = vec![0.0f32; d];
+                if signed {
+                    apply_signed(&bits, &noise, &mut fast).unwrap();
+                    scalar::apply_signed(&bits, &noise, &mut slow);
+                } else {
+                    apply_binary(&bits, &noise, &mut fast).unwrap();
+                    scalar::apply_binary(&bits, &noise, &mut slow);
+                }
+                assert_bits_eq(&fast, &slow, &format!("apply d={d} signed={signed}"));
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_matches_scalar_oracle() {
+        for d in SIZES {
+            for signed in [false, true] {
+                let mask = random_mask(d, 4000 + d as u64, signed);
+                let noise = random_noise(d, 5000 + d as u64);
+                let bits = bits_of(&mask, signed);
+                // non-zero accumulator start so the exact-addition claim
+                // is exercised on real values
+                let start = random_noise(d, 6000 + d as u64);
+                let mut fast = start.clone();
+                let mut slow = start.clone();
+                if signed {
+                    accumulate_signed(&bits, &noise, 0.37, &mut fast).unwrap();
+                    scalar::accumulate_signed(&bits, &noise, 0.37, &mut slow);
+                } else {
+                    accumulate_binary(&bits, &noise, 0.37, &mut fast).unwrap();
+                    scalar::accumulate_binary(&bits, &noise, 0.37, &mut slow);
+                }
+                assert_bits_eq(&fast, &slow, &format!("acc d={d} signed={signed}"));
+            }
+        }
+    }
+
+    /// Regression for the seed bug this PR fixes: `accumulate_signed`
+    /// re-derived `bits[i/64]` per element; the word-level rewrite must
+    /// produce bit-identical results on every size class.
+    #[test]
+    fn accumulate_signed_regression_vs_seed_form() {
+        for d in [5usize, 64, 65, 777, 4096, 10_007] {
+            let mask = random_mask(d, 60 + d as u64, true);
+            let noise = random_noise(d, 61 + d as u64);
+            let bits = bits_of(&mask, true);
+            let mut fast = vec![0.5f32; d];
+            let mut slow = vec![0.5f32; d];
+            accumulate_signed(&bits, &noise, 2.0, &mut fast).unwrap();
+            scalar::accumulate_signed(&bits, &noise, 2.0, &mut slow);
+            assert_bits_eq(&fast, &slow, &format!("regression d={d}"));
+            // and the semantics are still Eq. 5
+            for i in 0..d {
+                let want = 0.5 + 2.0 * mask[i] * noise[i];
+                assert!((fast[i] - want).abs() < 1e-6, "i={i}");
+            }
+        }
+    }
+
+    // -- word-aligned sub-range calls (parallel aggregation contract) -----
+
+    #[test]
+    fn subrange_accumulate_equals_full() {
+        let d = 10_007usize;
+        for signed in [false, true] {
+            let mask = random_mask(d, 70, signed);
+            let noise = random_noise(d, 71);
+            let bits = bits_of(&mask, signed);
+            let mut full = vec![0.25f32; d];
+            let run = |bits: &[u64], noise: &[f32], acc: &mut [f32]| {
+                if signed {
+                    accumulate_signed(bits, noise, 1.5, acc).unwrap();
+                } else {
+                    accumulate_binary(bits, noise, 1.5, acc).unwrap();
+                }
+            };
+            run(&bits, &noise, &mut full);
+            // shard on word boundaries: [0, 4096), [4096, d)
+            let mut sharded = vec![0.25f32; d];
+            let cut_words = 64;
+            let cut = cut_words * 64;
+            let (lo, hi) = sharded.split_at_mut(cut);
+            run(&bits[..cut_words], &noise[..cut], lo);
+            run(&bits[cut_words..], &noise[cut..], hi);
+            assert_bits_eq(&full, &sharded, &format!("subrange signed={signed}"));
+        }
+    }
+
+    // -- fused semantics ---------------------------------------------------
 
     #[test]
     fn apply_matches_unpack_multiply() {
@@ -226,10 +634,9 @@ mod tests {
         let mut g = NoiseGen::new(8);
         let mut noise = vec![0.0f32; d];
         g.fill(crate::noise::NoiseDist::Uniform { alpha: 0.01 }, &mut noise);
-        let mut bits = Vec::new();
-        pack_binary(&mask, &mut bits);
+        let bits = bits_of(&mask, false);
         let mut fused = vec![0.0f32; d];
-        apply_binary(&bits, &noise, &mut fused);
+        apply_binary(&bits, &noise, &mut fused).unwrap();
         let naive: Vec<f32> = mask.iter().zip(&noise).map(|(m, n)| m * n).collect();
         assert_eq!(fused, naive);
     }
@@ -238,13 +645,10 @@ mod tests {
     fn apply_signed_matches() {
         let d = 511;
         let mask = random_mask(d, 9, true);
-        let mut g = NoiseGen::new(10);
-        let mut noise = vec![0.0f32; d];
-        g.fill(crate::noise::NoiseDist::Gaussian { alpha: 1.0 }, &mut noise);
-        let mut bits = Vec::new();
-        pack_signed(&mask, &mut bits);
+        let noise = random_noise(d, 10);
+        let bits = bits_of(&mask, true);
         let mut fused = vec![0.0f32; d];
-        apply_signed(&bits, &noise, &mut fused);
+        apply_signed(&bits, &noise, &mut fused).unwrap();
         let naive: Vec<f32> = mask.iter().zip(&noise).map(|(m, n)| m * n).collect();
         assert_eq!(fused, naive);
     }
@@ -256,10 +660,9 @@ mod tests {
         let mut g = NoiseGen::new(12);
         let mut noise = vec![0.0f32; d];
         g.fill(crate::noise::NoiseDist::Uniform { alpha: 0.5 }, &mut noise);
-        let mut bits = Vec::new();
-        pack_binary(&mask, &mut bits);
+        let bits = bits_of(&mask, false);
         let mut acc = vec![1.0f32; d];
-        accumulate_binary(&bits, &noise, 0.25, &mut acc);
+        accumulate_binary(&bits, &noise, 0.25, &mut acc).unwrap();
         for i in 0..d {
             let want = 1.0 + 0.25 * mask[i] * noise[i];
             assert!((acc[i] - want).abs() < 1e-7);
@@ -273,14 +676,51 @@ mod tests {
         let mut g = NoiseGen::new(14);
         let mut noise = vec![0.0f32; d];
         g.fill(crate::noise::NoiseDist::Uniform { alpha: 0.5 }, &mut noise);
-        let mut bits = Vec::new();
-        pack_signed(&mask, &mut bits);
+        let bits = bits_of(&mask, true);
         let mut acc = vec![0.5f32; d];
-        accumulate_signed(&bits, &noise, 2.0, &mut acc);
+        accumulate_signed(&bits, &noise, 2.0, &mut acc).unwrap();
         for i in 0..d {
             let want = 0.5 + 2.0 * mask[i] * noise[i];
             assert!((acc[i] - want).abs() < 1e-6);
         }
+    }
+
+    // -- transport-boundary error paths -----------------------------------
+
+    #[test]
+    fn truncated_bits_is_codec_error_not_panic() {
+        let d = 130usize; // needs 3 words
+        let noise = random_noise(d, 20);
+        let short = vec![0u64; 2];
+        let mut out = vec![0.0f32; d];
+        assert!(unpack_binary(&short, d, &mut out).is_err());
+        assert!(unpack_signed(&short, d, &mut out).is_err());
+        assert!(apply_binary(&short, &noise, &mut out).is_err());
+        assert!(apply_signed(&short, &noise, &mut out).is_err());
+        assert!(accumulate_binary(&short, &noise, 1.0, &mut out).is_err());
+        assert!(accumulate_signed(&short, &noise, 1.0, &mut out).is_err());
+    }
+
+    #[test]
+    fn wrong_out_len_is_codec_error() {
+        let d = 64usize;
+        let bits = vec![u64::MAX];
+        let noise = vec![1.0f32; d];
+        let mut short_out = vec![0.0f32; d - 1];
+        assert!(unpack_binary(&bits, d, &mut short_out).is_err());
+        assert!(apply_binary(&bits, &noise, &mut short_out).is_err());
+        assert!(accumulate_signed(&bits, &noise, 1.0, &mut short_out).is_err());
+        // apply/accumulate demand exact length (they define d = noise.len())
+        let mut long_out = vec![0.0f32; d + 1];
+        assert!(apply_signed(&bits, &noise, &mut long_out).is_err());
+        assert!(accumulate_binary(&bits, &noise, 1.0, &mut long_out).is_err());
+    }
+
+    #[test]
+    fn unaligned_bytes_is_codec_error_not_panic() {
+        assert!(bytes_to_words(&[0u8; 7]).is_err());
+        assert!(bytes_to_words(&[0u8; 9]).is_err());
+        assert_eq!(bytes_to_words(&[]).unwrap(), Vec::<u64>::new());
     }
 
     #[test]
@@ -295,12 +735,11 @@ mod tests {
     fn bytes_roundtrip() {
         let d = 300;
         let mask = random_mask(d, 15, false);
-        let mut bits = Vec::new();
-        pack_binary(&mask, &mut bits);
+        let bits = bits_of(&mask, false);
         let mut bytes = Vec::new();
         words_to_bytes(&bits, &mut bytes);
         assert_eq!(bytes.len(), wire_bytes(d));
-        assert_eq!(bytes_to_words(&bytes), bits);
+        assert_eq!(bytes_to_words(&bytes).unwrap(), bits);
     }
 
     #[test]

@@ -22,18 +22,13 @@ pub fn decode(
     dist: NoiseDist,
     mask_type: MaskType,
 ) -> Result<Vec<f32>> {
-    let Payload::MaskedSeed { seed, d: pd, bits } = p else {
-        return Err(Error::Codec("fedmrn: wrong payload".into()));
-    };
-    if *pd as usize != d {
-        return Err(Error::Codec(format!("fedmrn: d {pd} != {d}")));
-    }
+    let (seed, bits) = parts(p, d)?;
     let mut noise = vec![0.0f32; d];
-    NoiseGen::new(*seed).fill(dist, &mut noise);
+    NoiseGen::new(seed).fill(dist, &mut noise);
     let mut out = vec![0.0f32; d];
     match mask_type {
-        MaskType::Binary => bitpack::apply_binary(bits, &noise, &mut out),
-        MaskType::Signed => bitpack::apply_signed(bits, &noise, &mut out),
+        MaskType::Binary => bitpack::apply_binary(bits, &noise, &mut out)?,
+        MaskType::Signed => bitpack::apply_signed(bits, &noise, &mut out)?,
     }
     Ok(out)
 }
@@ -49,21 +44,29 @@ pub fn accumulate(
     acc: &mut [f32],
     scratch: &mut Vec<f32>,
 ) -> Result<()> {
+    let d = acc.len();
+    let (seed, bits) = parts(p, d)?;
+    scratch.clear();
+    scratch.resize(d, 0.0);
+    NoiseGen::new(seed).fill(dist, scratch);
+    match mask_type {
+        MaskType::Binary => bitpack::accumulate_binary(bits, scratch, scale, acc)?,
+        MaskType::Signed => bitpack::accumulate_signed(bits, scratch, scale, acc)?,
+    }
+    Ok(())
+}
+
+/// Destructure a [`Payload::MaskedSeed`] for dimension `d`, validating
+/// payload kind and dimension once. Entry point for the parallel
+/// aggregator, which regenerates noise and fuses masks on worker threads.
+pub fn parts(p: &Payload, d: usize) -> Result<(u64, &[u64])> {
     let Payload::MaskedSeed { seed, d: pd, bits } = p else {
         return Err(Error::Codec("fedmrn: wrong payload".into()));
     };
-    let d = acc.len();
     if *pd as usize != d {
         return Err(Error::Codec(format!("fedmrn: d {pd} != {d}")));
     }
-    scratch.clear();
-    scratch.resize(d, 0.0);
-    NoiseGen::new(*seed).fill(dist, scratch);
-    match mask_type {
-        MaskType::Binary => bitpack::accumulate_binary(bits, scratch, scale, acc),
-        MaskType::Signed => bitpack::accumulate_signed(bits, scratch, scale, acc),
-    }
-    Ok(())
+    Ok((*seed, bits))
 }
 
 /// Client-side helper: pack an f32 mask (from the HLO finalize step) into

@@ -128,6 +128,11 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Cap batches per local epoch (0 = all available).
     pub max_batches_per_epoch: usize,
+    /// Worker threads for client execution + FedMRN aggregation.
+    /// `1` = sequential reference path; `0` = all available cores.
+    /// Any value produces byte-identical global weights (see
+    /// [`crate::coordinator::parallel`]).
+    pub threads: usize,
 }
 
 impl RunConfig {
@@ -146,6 +151,7 @@ impl RunConfig {
             seed: 1,
             eval_every: 1,
             max_batches_per_epoch: 0,
+            threads: 1,
         }
     }
 

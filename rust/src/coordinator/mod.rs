@@ -10,6 +10,7 @@
 pub mod client;
 pub mod config;
 pub mod metrics;
+pub mod parallel;
 pub mod server;
 
 pub use config::{Method, MrnMode, RunConfig};

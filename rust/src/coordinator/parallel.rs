@@ -1,0 +1,413 @@
+//! Multi-threaded client execution and server aggregation.
+//!
+//! Two hot paths scale across cores here, both on `std::thread::scope`
+//! worker pools (no external deps):
+//!
+//! * [`run_indexed`] — run per-client work (local training) concurrently
+//!   via an atomic work queue, returning results in client-index order.
+//! * [`aggregate_masked`] — Eq. 5 for FedMRN payloads: regenerate each
+//!   client's `G(s_k)` and fuse its 1-bit mask into the global
+//!   accumulator, parallelised **without changing a single float op**.
+//!
+//! # Determinism contract
+//!
+//! The parallel aggregator must produce a `w` byte-identical to the
+//! sequential path for any thread count. Floating-point addition is not
+//! associative, so instead of per-thread partial accumulators (whose
+//! reduction would re-associate sums), the work is split so that the
+//! *order of operations per element never changes*:
+//!
+//! 1. **Noise regeneration** (the expensive part — one xoshiro stream
+//!    per client) is embarrassingly parallel: waves of up to `threads`
+//!    clients regenerate concurrently into reused buffers.
+//! 2. **Accumulation** shards the parameter dimension into word-aligned
+//!    column ranges, one worker per range. Each worker walks the wave's
+//!    clients *in client order* and calls the same word-level
+//!    [`bitpack`] kernel on its sub-range. Every `w[i]` therefore
+//!    receives exactly the additions of the sequential loop, in the
+//!    same order — shards are disjoint, so no reduction step exists.
+//!
+//! `tests::parallel_matches_sequential_bytes` pins the contract for
+//! 1/2/4/8 threads on odd dimensions and both mask types.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::bitpack;
+use crate::compress::MaskType;
+use crate::error::{Error, Result};
+use crate::noise::{NoiseDist, NoiseGen};
+
+/// Resolve a configured thread count: `0` means "all available cores".
+pub fn resolve_threads(cfg_threads: usize) -> usize {
+    if cfg_threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg_threads
+    }
+}
+
+/// One FedMRN uplink ready for fused aggregation: the noise seed, the
+/// packed mask bits, and the data-proportional weight `p'_k`.
+pub struct MaskedUpdate<'a> {
+    pub seed: u64,
+    pub bits: &'a [u64],
+    pub scale: f32,
+}
+
+/// Run `f(0..n_items)` across `n_threads` scoped workers pulling from an
+/// atomic queue; results come back in index order. Used for concurrent
+/// client execution — each index is one selected client's local round.
+///
+/// The first error wins (by index order) and is returned after all
+/// workers drain; remaining items still run, which keeps the queue logic
+/// trivial and the cost bounded by one round.
+pub fn run_indexed<T, F>(n_items: usize, n_threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let n_threads = resolve_threads(n_threads).min(n_items.max(1));
+    if n_threads <= 1 {
+        return (0..n_items).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<Result<T>>>> =
+        Mutex::new((0..n_items).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                let r = f(i);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    let slots = slots.into_inner().unwrap();
+    let mut out = Vec::with_capacity(n_items);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => {
+                return Err(Error::Config(format!(
+                    "worker pool dropped item {i} (bug)"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Split `d` elements into at most `n` contiguous shards whose starts lie
+/// on 64-element (one-word) boundaries, so each shard maps to whole mask
+/// words. Returns element ranges; may return fewer than `n` shards.
+fn word_aligned_shards(d: usize, n: usize) -> Vec<(usize, usize)> {
+    let words = bitpack::words_for(d);
+    let n = n.max(1).min(words.max(1));
+    let per = words.div_ceil(n.max(1)).max(1);
+    let mut shards = Vec::with_capacity(n);
+    let mut w0 = 0usize;
+    while w0 < words {
+        let w1 = (w0 + per).min(words);
+        let lo = w0 * 64;
+        let hi = (w1 * 64).min(d);
+        shards.push((lo, hi));
+        w0 = w1;
+    }
+    if shards.is_empty() {
+        shards.push((0, d));
+    }
+    shards
+}
+
+/// Fused FedMRN aggregation (Eq. 5): `w += Σ_k scale_k · (G(s_k) ⊙ m_k)`,
+/// parallel over `threads` workers, byte-identical to the sequential
+/// path for every thread count (see module docs for why).
+///
+/// `threads <= 1` runs the sequential reference path directly.
+pub fn aggregate_masked(
+    updates: &[MaskedUpdate<'_>],
+    dist: NoiseDist,
+    mask_type: MaskType,
+    w: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    let d = w.len();
+    let words = bitpack::words_for(d);
+    for (k, u) in updates.iter().enumerate() {
+        if u.bits.len() < words {
+            return Err(Error::Codec(format!(
+                "client {k}: mask bits truncated ({} words, need {words})",
+                u.bits.len()
+            )));
+        }
+    }
+    let threads = resolve_threads(threads);
+    if threads <= 1 || updates.len() <= 1 || d < 64 {
+        // sequential reference: regen + fuse per client, in order
+        let mut scratch = vec![0.0f32; d];
+        for u in updates {
+            NoiseGen::new(u.seed).fill(dist, &mut scratch);
+            accumulate(mask_type, u.bits, &scratch, u.scale, w)?;
+        }
+        return Ok(());
+    }
+
+    // wave-parallel: regen `threads` clients at once, then column-shard
+    // the fused accumulation over the same workers
+    let wave = threads.min(updates.len());
+    let mut noise_bufs: Vec<Vec<f32>> = (0..wave).map(|_| vec![0.0f32; d]).collect();
+    let shards = word_aligned_shards(d, threads);
+    for group in updates.chunks(wave) {
+        // phase A: per-client noise regeneration (independent streams)
+        std::thread::scope(|s| {
+            for (buf, u) in noise_bufs.iter_mut().zip(group.iter()) {
+                let seed = u.seed;
+                s.spawn(move || {
+                    NoiseGen::new(seed).fill(dist, buf);
+                });
+            }
+        });
+        // phase B: disjoint word-aligned column shards of `w`; each
+        // worker fuses the whole wave, in client order, on its shard
+        let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            // shards are contiguous from 0 (word_aligned_shards contract),
+            // so peeling `w` front-to-back lands each worker on w[lo..hi]
+            let mut rest: &mut [f32] = &mut *w;
+            for &(lo, hi) in &shards {
+                let (shard, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                let noise_bufs = &noise_bufs;
+                let errs = &errs;
+                s.spawn(move || {
+                    let w0 = lo / 64;
+                    let w1 = bitpack::words_for(d).min(w0 + (hi - lo).div_ceil(64));
+                    for (u, noise) in group.iter().zip(noise_bufs.iter()) {
+                        if let Err(e) = accumulate(
+                            mask_type,
+                            &u.bits[w0..w1],
+                            &noise[lo..hi],
+                            u.scale,
+                            shard,
+                        ) {
+                            errs.lock().unwrap().push(e);
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
+#[inline]
+fn accumulate(
+    mask_type: MaskType,
+    bits: &[u64],
+    noise: &[f32],
+    scale: f32,
+    acc: &mut [f32],
+) -> Result<()> {
+    match mask_type {
+        MaskType::Binary => bitpack::accumulate_binary(bits, noise, scale, acc),
+        MaskType::Signed => bitpack::accumulate_signed(bits, noise, scale, acc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_updates(
+        d: usize,
+        n_clients: usize,
+        mask_type: MaskType,
+    ) -> (Vec<Vec<u64>>, Vec<u64>, Vec<f32>) {
+        let mut all_bits = Vec::new();
+        let mut seeds = Vec::new();
+        let mut scales = Vec::new();
+        for k in 0..n_clients {
+            let mut g = NoiseGen::new(900 + k as u64);
+            let mask: Vec<f32> = (0..d)
+                .map(|_| {
+                    let b = g.next_u64() & 1 == 1;
+                    match mask_type {
+                        MaskType::Binary => {
+                            if b {
+                                1.0
+                            } else {
+                                0.0
+                            }
+                        }
+                        MaskType::Signed => {
+                            if b {
+                                1.0
+                            } else {
+                                -1.0
+                            }
+                        }
+                    }
+                })
+                .collect();
+            let mut bits = Vec::new();
+            match mask_type {
+                MaskType::Binary => bitpack::pack_binary(&mask, &mut bits),
+                MaskType::Signed => bitpack::pack_signed(&mask, &mut bits),
+            }
+            all_bits.push(bits);
+            seeds.push(0xABC0 + 7 * k as u64);
+            scales.push(1.0 / (k + 2) as f32);
+        }
+        (all_bits, seeds, scales)
+    }
+
+    fn run(
+        d: usize,
+        n_clients: usize,
+        mask_type: MaskType,
+        dist: NoiseDist,
+        threads: usize,
+    ) -> Vec<f32> {
+        let (all_bits, seeds, scales) = make_updates(d, n_clients, mask_type);
+        let updates: Vec<MaskedUpdate> = (0..n_clients)
+            .map(|k| MaskedUpdate {
+                seed: seeds[k],
+                bits: &all_bits[k],
+                scale: scales[k],
+            })
+            .collect();
+        // non-trivial starting point
+        let mut w = vec![0.0f32; d];
+        NoiseGen::new(31337).fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+        aggregate_masked(&updates, dist, mask_type, &mut w, threads).unwrap();
+        w
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bytes() {
+        // The headline determinism contract: any thread count, odd d,
+        // both mask types, byte-for-byte equal global weights.
+        for mask_type in [MaskType::Binary, MaskType::Signed] {
+            for d in [64usize, 1000, 10_007] {
+                let dist = NoiseDist::Uniform { alpha: 0.01 };
+                let seq = run(d, 7, mask_type, dist, 1);
+                for threads in [2usize, 4, 8] {
+                    let par = run(d, 7, mask_type, dist, threads);
+                    for i in 0..d {
+                        assert_eq!(
+                            seq[i].to_bits(),
+                            par[i].to_bits(),
+                            "{mask_type:?} d={d} threads={threads} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_gaussian() {
+        let seq = run(4097, 5, MaskType::Binary, NoiseDist::Gaussian { alpha: 0.5 }, 1);
+        let par = run(4097, 5, MaskType::Binary, NoiseDist::Gaussian { alpha: 0.5 }, 4);
+        assert!(seq.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn aggregation_semantics_are_eq5() {
+        // parallel result == materialised sum of scale * noise * mask
+        let d = 2053usize;
+        let mask_type = MaskType::Binary;
+        let dist = NoiseDist::Uniform { alpha: 0.5 };
+        let (all_bits, seeds, scales) = make_updates(d, 3, mask_type);
+        let mut want = vec![0.0f32; d];
+        for k in 0..3 {
+            let mut noise = vec![0.0f32; d];
+            NoiseGen::new(seeds[k]).fill(dist, &mut noise);
+            let mut mask = vec![0.0f32; d];
+            bitpack::unpack_binary(&all_bits[k], d, &mut mask).unwrap();
+            for i in 0..d {
+                want[i] += scales[k] * noise[i] * mask[i];
+            }
+        }
+        let updates: Vec<MaskedUpdate> = (0..3)
+            .map(|k| MaskedUpdate { seed: seeds[k], bits: &all_bits[k], scale: scales[k] })
+            .collect();
+        let mut w = vec![0.0f32; d];
+        aggregate_masked(&updates, dist, mask_type, &mut w, 4).unwrap();
+        for i in 0..d {
+            assert!((w[i] - want[i]).abs() < 1e-6, "i={i}: {} vs {}", w[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn truncated_update_is_error_not_panic() {
+        let d = 1000usize;
+        let short = vec![0u64; 3]; // needs 16 words
+        let updates =
+            [MaskedUpdate { seed: 1, bits: &short, scale: 1.0 }];
+        let mut w = vec![0.0f32; d];
+        for threads in [1usize, 4] {
+            let r = aggregate_masked(
+                &updates,
+                NoiseDist::Uniform { alpha: 1.0 },
+                MaskType::Binary,
+                &mut w,
+                threads,
+            );
+            assert!(r.is_err(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_indexed_orders_and_scales() {
+        for threads in [1usize, 2, 4, 8] {
+            let out = run_indexed(37, threads, |i| Ok(i * i)).unwrap();
+            assert_eq!(out.len(), 37);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_indexed_propagates_errors() {
+        let r: Result<Vec<usize>> = run_indexed(10, 4, |i| {
+            if i == 6 {
+                Err(Error::Config("boom".into()))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+        // zero items is fine
+        let empty: Vec<usize> = run_indexed(0, 4, |i| Ok(i)).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn shards_are_word_aligned_and_cover() {
+        for d in [64usize, 65, 1000, 10_007, 4_000_000] {
+            for n in [1usize, 2, 4, 8, 13] {
+                let shards = word_aligned_shards(d, n);
+                assert!(!shards.is_empty());
+                let mut expect = 0usize;
+                for &(lo, hi) in &shards {
+                    assert_eq!(lo, expect, "d={d} n={n}");
+                    assert_eq!(lo % 64, 0, "d={d} n={n}");
+                    assert!(hi > lo);
+                    expect = hi;
+                }
+                assert_eq!(expect, d, "d={d} n={n}");
+            }
+        }
+    }
+}

@@ -17,6 +17,7 @@ use crate::transport::Meter;
 use super::client::{self, Batches, TrainOutcome};
 use super::config::{Method, RunConfig};
 use super::metrics::{RoundRecord, RunResult};
+use super::parallel;
 
 /// One federated training run in flight.
 pub struct Federation<'rt> {
@@ -109,36 +110,61 @@ impl<'rt> Federation<'rt> {
     }
 
     /// Run one round; returns its record.
+    ///
+    /// Selected clients run through one shared per-client closure on
+    /// both the sequential (`threads == 1`) and worker-pool paths. All
+    /// client randomness — batch shuffling and training PRNG keys — is
+    /// drawn from a per-(client, round) stream derived with
+    /// [`derive_seed`], so the uplink payloads do not depend on client
+    /// execution order and the two paths produce identical rounds.
     pub fn round(&mut self, r: usize) -> Result<RoundRecord> {
         let t_round = Timer::new();
         self.meter.begin_round();
         let selected = self.select_clients();
         self.meter.downlink_dense(self.meta.param_dim, selected.len());
 
+        let rt = self.rt;
+        let meta = &self.meta;
+        let cfg = &self.cfg;
+        let split = &self.split;
+        let shards = &self.shards;
+        let w = &self.w;
+        let w_init = self.w_init.as_deref();
+        let run_one = |c: usize| -> Result<TrainOutcome> {
+            let mut crng =
+                NoiseGen::new(derive_seed(cfg.seed, c as u64, r as u64, 2));
+            let batches: Batches = client::make_batches(
+                &split.train,
+                &shards[c],
+                meta,
+                cfg.max_batches_per_epoch,
+                &mut crng,
+            )?;
+            let noise_seed = derive_seed(cfg.seed, c as u64, r as u64, 1);
+            client::run_client(
+                rt,
+                meta,
+                &cfg.method,
+                cfg,
+                r,
+                w,
+                w_init.map(|wi| (wi, w.as_slice())),
+                &batches,
+                noise_seed,
+                &mut crng,
+            )
+        };
+        let results: Vec<TrainOutcome> = if self.cfg.threads == 1 {
+            selected.iter().map(|&c| run_one(c)).collect::<Result<_>>()?
+        } else {
+            parallel::run_indexed(selected.len(), self.cfg.threads, |i| {
+                run_one(selected[i])
+            })?
+        };
         let mut outcomes: Vec<(usize, TrainOutcome)> = Vec::new();
         let mut train_ms = 0.0;
         let mut compress_ms = 0.0;
-        for &c in &selected {
-            let batches: Batches = client::make_batches(
-                &self.split.train,
-                &self.shards[c],
-                &self.meta,
-                self.cfg.max_batches_per_epoch,
-                &mut self.rng,
-            )?;
-            let noise_seed = derive_seed(self.cfg.seed, c as u64, r as u64, 1);
-            let outcome = client::run_client(
-                self.rt,
-                &self.meta,
-                &self.cfg.method,
-                &self.cfg,
-                r,
-                &self.w,
-                self.w_init.as_deref().map(|wi| (wi, self.w.as_slice())),
-                &batches,
-                noise_seed,
-                &mut self.rng,
-            )?;
+        for (&c, outcome) in selected.iter().zip(results) {
             train_ms += outcome.train_ms;
             compress_ms += outcome.compress_ms;
             outcomes.push((c, outcome));
@@ -210,16 +236,33 @@ impl<'rt> Federation<'rt> {
                 self.w = acc;
             }
             Method::FedMrn { mask_type, .. } => {
-                // Eq. 5 with the fused accumulate (no per-client vectors)
-                let mut scratch = Vec::new();
+                // Eq. 5 with the fused accumulate (no per-client update
+                // vectors): meter + decode on the wire in client order,
+                // then hand the mask/seed pairs to the sharded
+                // aggregator — byte-identical for any thread count.
+                let mut decoded = Vec::with_capacity(outcomes.len());
                 for (_, o) in outcomes {
-                    let p = self.meter.uplink(&o.payload)?;
-                    let scale = (o.n_samples as f64 / total) as f32;
-                    fedmrn::accumulate(
-                        &p, self.cfg.noise, mask_type, scale, &mut self.w,
-                        &mut scratch,
-                    )?;
+                    decoded.push(self.meter.uplink(&o.payload)?);
                 }
+                let updates: Vec<parallel::MaskedUpdate> = decoded
+                    .iter()
+                    .zip(outcomes.iter())
+                    .map(|(p, (_, o))| {
+                        let (seed, bits) = fedmrn::parts(p, d)?;
+                        Ok(parallel::MaskedUpdate {
+                            seed,
+                            bits,
+                            scale: (o.n_samples as f64 / total) as f32,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                parallel::aggregate_masked(
+                    &updates,
+                    self.cfg.noise,
+                    mask_type,
+                    &mut self.w,
+                    self.cfg.threads,
+                )?;
             }
             Method::FedAvg | Method::Grad(_) => {
                 let codec = match self.cfg.method {
@@ -376,6 +419,35 @@ mod tests {
                 "{m} acc {} (chance 0.25)",
                 res.final_acc()
             );
+        }
+    }
+
+    #[test]
+    fn parallel_round_matches_sequential_bytes() {
+        // threads>1 must not change a single bit of the global weights
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts()).unwrap();
+        let run_with = |threads: usize| {
+            let mut cfg = quick_cfg("fedmrn");
+            cfg.threads = threads;
+            cfg.rounds = 3;
+            let mut fed = Federation::new(&rt, cfg, mlp_split(512, 64, 9)).unwrap();
+            fed.run().unwrap();
+            fed.w.clone()
+        };
+        let seq = run_with(1);
+        for threads in [2usize, 4] {
+            let par = run_with(threads);
+            assert_eq!(seq.len(), par.len());
+            for i in 0..seq.len() {
+                assert_eq!(
+                    seq[i].to_bits(),
+                    par[i].to_bits(),
+                    "threads={threads} i={i}"
+                );
+            }
         }
     }
 

@@ -1,35 +1,60 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline build vendors no
+//! proc-macro crates, so `thiserror` is not available; DESIGN.md §3).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Error bubbled up from the `xla` crate / PJRT runtime.
-    #[error("xla: {0}")]
     Xla(String),
 
     /// Artifact registry problems (missing files, bad manifest).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// JSON parsing / shape mismatches in manifests or results.
-    #[error("json: {0}")]
     Json(String),
 
     /// Command-line / configuration errors.
-    #[error("config: {0}")]
     Config(String),
 
     /// Wire-format decode failures.
-    #[error("codec: {0}")]
     Codec(String),
 
     /// Dataset / partitioning invariant violations.
-    #[error("data: {0}")]
     Data(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Codec(m) => write!(f, "codec: {m}"),
+            Error::Data(m) => write!(f, "data: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -39,3 +64,16 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Codec("bad tag".into()).to_string(), "codec: bad tag");
+        assert_eq!(Error::Config("x".into()).to_string(), "config: x");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        assert!(io.to_string().starts_with("io: "));
+    }
+}

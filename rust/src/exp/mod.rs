@@ -56,6 +56,10 @@ pub struct ExpOpts {
     pub lr: f32,
     pub seed: u64,
     pub verbose: bool,
+    /// Worker threads for client execution + aggregation (1 =
+    /// sequential reference path, 0 = all cores). Byte-identical
+    /// results either way.
+    pub threads: usize,
 }
 
 impl ExpOpts {
@@ -76,6 +80,7 @@ impl ExpOpts {
                 lr: 0.3,
                 seed: 1,
                 verbose: false,
+                threads: 1,
             },
             // quick: the recorded-run default — tens of minutes for the
             // full Table-1 sweep on this CPU testbed
@@ -91,6 +96,7 @@ impl ExpOpts {
                 lr: 0.1,
                 seed: 1,
                 verbose: false,
+                threads: 1,
             },
             // full: paper-shaped topology (still scaled in rounds)
             "full" => ExpOpts {
@@ -105,6 +111,7 @@ impl ExpOpts {
                 lr: 0.1,
                 seed: 1,
                 verbose: true,
+                threads: 1,
             },
             p => return Err(Error::Config(format!("unknown preset {p:?}"))),
         };
@@ -119,6 +126,7 @@ impl ExpOpts {
         o.lr = args.take_f32("lr", o.lr)?;
         o.seed = args.take_u64("seed", o.seed)?;
         o.verbose = args.take_bool("verbose", o.verbose)?;
+        o.threads = args.take_usize("threads", o.threads)?;
         Ok(o)
     }
 }
@@ -259,6 +267,7 @@ pub fn run_arm(
     cfg.noise = noise;
     cfg.partition = partition;
     cfg.seed = o.seed;
+    cfg.threads = o.threads;
     let mut fed = Federation::new(rt, cfg, split)?;
     fed.verbose = o.verbose;
     fed.run()

@@ -4,6 +4,7 @@
 //! fedmrn info                         list artifacts and configs
 //! fedmrn run    [--flags]             one federated run, any method
 //! fedmrn exp <table1|fig4|fig5|fig6|table3|theory|all> [--flags]
+//! fedmrn bench  [--flags]             hot-path kernel + aggregation bench
 //! ```
 //!
 //! Run `fedmrn help` for the flag reference. Requires `make artifacts`
@@ -27,6 +28,10 @@ USAGE:
               [--lr F] [--noise-dist uniform|gaussian|bernoulli] [--alpha F]
               [--seed N] [--verbose] [--csv PATH]
   fedmrn exp table1|fig4|fig5|fig6|table3|theory|all [--preset ...] [...]
+  fedmrn bench [--d N] [--clients N] [--threads 1,2,4,8] [--warmup N]
+               [--iters N] [--out DIR]
+               writes BENCH_bitpack.json / BENCH_aggregate.json (no
+               artifacts needed; --out defaults to the repo root)
 
 METHODS:
   fedavg fedpm fedsparsify signsgd topk terngrad drive eden fedmrn fedmrns
@@ -61,6 +66,7 @@ fn real_main() -> Result<()> {
         Some("info") => cmd_info(&mut args),
         Some("run") => cmd_run(&mut args),
         Some("exp") => cmd_exp(&mut args),
+        Some("bench") => cmd_bench(&mut args),
         Some(other) => Err(Error::Config(format!(
             "unknown subcommand {other:?} (try `fedmrn help`)"
         ))),
@@ -134,6 +140,51 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         res.write_csv(&path)?;
         eprintln!("wrote {path}");
     }
+    Ok(())
+}
+
+fn cmd_bench(args: &mut Args) -> Result<()> {
+    use fedmrn::bench::suites;
+    let d = args.take_usize("d", 4_000_000)?;
+    let clients = args.take_usize("clients", 32)?;
+    let warmup = args.take_usize("warmup", 2)?;
+    let iters = args.take_usize("iters", 9)?;
+    let threads: Vec<usize> = args
+        .take_list("threads", &["1", "2", "4", "8"])
+        .iter()
+        .map(|s| {
+            s.parse::<usize>().map_err(|_| {
+                Error::Config(format!("--threads: expected integer, got {s:?}"))
+            })
+        })
+        .collect::<Result<_>>()?;
+    let out = args.take_opt_str("out");
+    args.finish()?;
+    let path_for = |name: &str| match &out {
+        Some(dir) => format!("{dir}/{name}"),
+        None => suites::repo_root_file(name),
+    };
+
+    let b = suites::bitpack_suite(d, warmup, iters);
+    b.report(&format!("bitpack @ d = {d}"));
+    let path = path_for("BENCH_bitpack.json");
+    b.write_json(&path)?;
+    eprintln!("wrote {path}");
+
+    let a = suites::aggregate_suite(d, clients, &threads, warmup, iters);
+    a.report(&format!("fedmrn aggregate @ d = {d}, {clients} clients"));
+    for &t in threads.iter().skip(1) {
+        if let Some(s) = suites::speedup(
+            &a,
+            &format!("aggregate fedmrn threads={}", threads[0]),
+            &format!("aggregate fedmrn threads={t}"),
+        ) {
+            println!("speedup threads={t}: {s:.2}x vs threads={}", threads[0]);
+        }
+    }
+    let path = path_for("BENCH_aggregate.json");
+    a.write_json(&path)?;
+    eprintln!("wrote {path}");
     Ok(())
 }
 

@@ -13,23 +13,29 @@
 
 mod registry;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 pub use registry::{ArtifactRegistry, ConfigMeta, StepMeta, TensorSpec};
 
 use crate::error::{Error, Result};
 
 /// Lazily-compiling executor over an artifact directory.
+///
+/// `Runtime` is `Sync`: the executable cache sits behind a `Mutex` and
+/// the exec counter is atomic, so the multi-threaded coordinator can run
+/// client steps from `std::thread::scope` workers against one shared
+/// `&Runtime`. The lock guards only cache lookups/inserts — compilation
+/// and execution happen outside it.
 pub struct Runtime {
     client: xla::PjRtClient,
     registry: ArtifactRegistry,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// Cumulative host↔device + execute statistics (perf accounting).
-    pub exec_count: RefCell<u64>,
+    pub exec_count: AtomicU64,
 }
 
 impl Runtime {
@@ -42,8 +48,8 @@ impl Runtime {
             client,
             registry,
             dir,
-            cache: RefCell::new(HashMap::new()),
-            exec_count: RefCell::new(0),
+            cache: Mutex::new(HashMap::new()),
+            exec_count: AtomicU64::new(0),
         })
     }
 
@@ -74,13 +80,17 @@ impl Runtime {
     }
 
     /// Compile (or fetch from cache) the executable for `config__step`.
+    ///
+    /// Concurrent first calls for the same step may compile twice; the
+    /// last insert wins and both handles are valid — compilation is
+    /// deterministic and the cache only exists to amortise it.
     pub fn executable(
         &self,
         config: &str,
         step: &str,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let key = format!("{config}__{step}");
-        if let Some(exe) = self.cache.borrow().get(&key) {
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
         let meta = self.registry.step(config, step)?;
@@ -90,8 +100,8 @@ impl Runtime {
                 .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        self.cache.borrow_mut().insert(key, exe.clone());
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -123,7 +133,7 @@ impl Runtime {
             )));
         }
         let exe = self.executable(config, step)?;
-        *self.exec_count.borrow_mut() += 1;
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
         let result = exe.execute::<&xla::Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;
         Ok(tuple.to_tuple()?)
@@ -131,7 +141,7 @@ impl Runtime {
 
     /// Number of compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }
 

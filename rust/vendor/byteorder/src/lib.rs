@@ -1,0 +1,139 @@
+//! Vendored, API-compatible subset of the `byteorder` crate.
+//!
+//! The build environment is fully offline, so instead of the crates.io
+//! package this tree carries the handful of little-endian primitives the
+//! transport and runtime layers actually use. Semantics match upstream:
+//! slice-length mismatches panic (callers are expected to size buffers
+//! exactly; the wire-decode path length-checks before calling in).
+
+/// Byte-order codec over `&[u8]`. Only the methods used in-tree are
+/// present; all are associated functions, as upstream.
+pub trait ByteOrder {
+    fn read_u32(buf: &[u8]) -> u32;
+    fn read_u64(buf: &[u8]) -> u64;
+    fn read_f32(buf: &[u8]) -> f32;
+    fn write_u32(buf: &mut [u8], n: u32);
+    fn write_u64(buf: &mut [u8], n: u64);
+    fn write_f32(buf: &mut [u8], n: f32);
+
+    /// Decode `dst.len()` f32s from exactly `4 * dst.len()` bytes.
+    fn read_f32_into(src: &[u8], dst: &mut [f32]);
+    /// Decode `dst.len()` u64s from exactly `8 * dst.len()` bytes.
+    fn read_u64_into(src: &[u8], dst: &mut [u64]);
+    /// Encode `src.len()` f32s into exactly `4 * src.len()` bytes.
+    fn write_f32_into(src: &[f32], dst: &mut [u8]);
+    /// Encode `src.len()` u64s into exactly `8 * src.len()` bytes.
+    fn write_u64_into(src: &[u64], dst: &mut [u8]);
+}
+
+/// Little-endian byte order (the only order the wire format uses).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LittleEndian {
+    #[default]
+    #[doc(hidden)]
+    __Nonexhaustive,
+}
+
+/// Upstream alias.
+pub type LE = LittleEndian;
+
+impl ByteOrder for LittleEndian {
+    #[inline]
+    fn read_u32(buf: &[u8]) -> u32 {
+        u32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+
+    #[inline]
+    fn read_u64(buf: &[u8]) -> u64 {
+        u64::from_le_bytes(buf[..8].try_into().unwrap())
+    }
+
+    #[inline]
+    fn read_f32(buf: &[u8]) -> f32 {
+        f32::from_bits(Self::read_u32(buf))
+    }
+
+    #[inline]
+    fn write_u32(buf: &mut [u8], n: u32) {
+        buf[..4].copy_from_slice(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_u64(buf: &mut [u8], n: u64) {
+        buf[..8].copy_from_slice(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_f32(buf: &mut [u8], n: f32) {
+        Self::write_u32(buf, n.to_bits());
+    }
+
+    fn read_f32_into(src: &[u8], dst: &mut [f32]) {
+        assert_eq!(src.len(), 4 * dst.len(), "read_f32_into: length mismatch");
+        for (chunk, out) in src.chunks_exact(4).zip(dst.iter_mut()) {
+            *out = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+
+    fn read_u64_into(src: &[u8], dst: &mut [u64]) {
+        assert_eq!(src.len(), 8 * dst.len(), "read_u64_into: length mismatch");
+        for (chunk, out) in src.chunks_exact(8).zip(dst.iter_mut()) {
+            *out = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+
+    fn write_f32_into(src: &[f32], dst: &mut [u8]) {
+        assert_eq!(dst.len(), 4 * src.len(), "write_f32_into: length mismatch");
+        for (chunk, v) in dst.chunks_exact_mut(4).zip(src.iter()) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn write_u64_into(src: &[u64], dst: &mut [u8]) {
+        assert_eq!(dst.len(), 8 * src.len(), "write_u64_into: length mismatch");
+        for (chunk, v) in dst.chunks_exact_mut(8).zip(src.iter()) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut buf = [0u8; 8];
+        LittleEndian::write_u64(&mut buf, 0x0102_0304_0506_0708);
+        assert_eq!(buf, [8, 7, 6, 5, 4, 3, 2, 1]);
+        assert_eq!(LittleEndian::read_u64(&buf), 0x0102_0304_0506_0708);
+        LittleEndian::write_u32(&mut buf, 0xDEAD_BEEF);
+        assert_eq!(LittleEndian::read_u32(&buf), 0xDEAD_BEEF);
+        LittleEndian::write_f32(&mut buf, -1.5);
+        assert_eq!(LittleEndian::read_f32(&buf), -1.5);
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs = [1.0f32, -2.5, 0.0, f32::MIN_POSITIVE];
+        let mut bytes = vec![0u8; 16];
+        LittleEndian::write_f32_into(&xs, &mut bytes);
+        let mut back = [0.0f32; 4];
+        LittleEndian::read_f32_into(&bytes, &mut back);
+        assert_eq!(xs, back);
+
+        let ws = [0u64, u64::MAX, 42];
+        let mut bytes = vec![0u8; 24];
+        LittleEndian::write_u64_into(&ws, &mut bytes);
+        let mut back = [0u64; 3];
+        LittleEndian::read_u64_into(&bytes, &mut back);
+        assert_eq!(ws, back);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let mut out = [0.0f32; 2];
+        LittleEndian::read_f32_into(&[0u8; 7], &mut out);
+    }
+}

@@ -1,0 +1,293 @@
+//! Inert stand-in for the `xla` (PJRT) crate used by the fedmrn runtime.
+//!
+//! The offline build environment has no XLA/PJRT shared library, so this
+//! vendored crate keeps the same API shape with two properties:
+//!
+//! 1. **Literals are real.** [`Literal`] is a fully functional host-side
+//!    tensor (f32/i32/u32 + tuples with dims), so every code path that
+//!    builds or reads literals — payload packing, batch assembly, tests —
+//!    works exactly as with the native crate.
+//! 2. **The backend is honestly absent.** [`PjRtClient::cpu`] returns an
+//!    `Err`, which `fedmrn::runtime::Runtime::load` surfaces as an XLA
+//!    error. All artifact-gated tests check for `artifacts/manifest.json`
+//!    first and skip, so the test suite passes without a native backend.
+//!
+//! Every type here is plain host data and therefore `Send + Sync`, which
+//! the multi-threaded coordinator relies on.
+
+use std::fmt;
+
+/// Error type mirroring the upstream crate's (stringly, for our needs).
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT backend not available in this offline build \
+         (vendored stub; install the native xla crate to execute HLO)"
+    )))
+}
+
+// ---------------------------------------------------------------------------
+// Element types
+// ---------------------------------------------------------------------------
+
+/// Host element storage for [`Literal`]. Public only because the sealed
+/// [`NativeType`] trait names it in its (hidden) methods.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Sealed marker for element types a [`Literal`] can hold.
+pub trait NativeType: Copy + sealed::Sealed {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+    impl Sealed for u32 {}
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(v: Vec<u32>) -> Data {
+        Data::U32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[u32]> {
+        match d {
+            Data::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal
+// ---------------------------------------------------------------------------
+
+/// Host-side tensor literal (data + row-major dims).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { data: Data::F32(vec![x]), dims: Vec::new() }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("reshape: tuple literal".into()));
+        }
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the contents out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("get_first_element: empty or type mismatch".into()))
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple: not a tuple literal".into())),
+        }
+    }
+
+    /// Build a tuple literal (used by tests of the stub itself).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let n = elems.len() as i64;
+        Literal { data: Data::Tuple(elems), dims: vec![n] }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO + PJRT surface
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (never constructible offline).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        unavailable(&format!("HloModuleProto::from_text_file({path})"))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle. The stub has no backend: [`PjRtClient::cpu`]
+/// errors, so construction fails fast and loud.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Device buffer returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7.5).get_first_element::<f32>().unwrap(), 7.5);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_destructure() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2u32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn backend_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+
+    #[test]
+    fn stub_types_are_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Literal>();
+        check::<PjRtClient>();
+        check::<PjRtLoadedExecutable>();
+        check::<PjRtBuffer>();
+        check::<Error>();
+    }
+}

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Build release and regenerate the perf-trajectory files at the repo
+# root (BENCH_bitpack.json, BENCH_aggregate.json). Schema: docs/BENCH.md.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+
+# Both bench targets write their JSON to the repo root themselves
+# (fedmrn::bench::suites::repo_root_file).
+cargo bench --bench bench_bitpack
+cargo bench --bench bench_aggregate
+
+echo "== committed perf trajectory =="
+ls -l BENCH_bitpack.json BENCH_aggregate.json
