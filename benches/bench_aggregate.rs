@@ -1,9 +1,16 @@
 //! End-to-end FedMRN server aggregation (Eq. 5) at production shape:
-//! d = 4M parameters, 32 clients, sweeping the worker-thread count.
-//! Every thread count produces byte-identical global weights (pinned by
-//! `coordinator::parallel` tests); this target measures the wall-clock
-//! side of that contract and writes `BENCH_aggregate.json` at the repo
-//! root (schema: docs/BENCH.md).
+//! d = 4M parameters, 32 clients, sweeping the worker-thread count and
+//! the fused regen+accumulate tile length. Every (threads, tile)
+//! produces byte-identical global weights (pinned by
+//! `coordinator::parallel` tests and `tests/differential.rs`); this
+//! target measures the wall-clock side of that contract and writes
+//! `BENCH_aggregate.json` at the repo root (schema: docs/BENCH.md).
+//!
+//! The `regen_sharded` rows exist to verify the memory claim as much as
+//! the speed one: at d = 4M the `regen_materialized` reference allocates
+//! a 16 MB scratch noise vector per pass, while the sharded tile loop
+//! peaks at `threads × (4·tile + 8 KB)` of scratch — the f32 tile plus
+//! the generator's fixed raw-block per worker (~96 KB at 8 × 1024).
 
 use fedmrn::bench::suites;
 
@@ -11,7 +18,9 @@ fn main() {
     let d = 4_000_000usize;
     let clients = 32usize;
     let threads = [1usize, 2, 4, 8];
-    let b = suites::aggregate_suite(d, clients, &threads, 2, 9);
+    let tiles = [64usize, 1024, 4096];
+
+    let mut b = suites::aggregate_suite(d, clients, &threads, 2, 9);
     b.report(&format!("fedmrn aggregate @ d = {d}, {clients} clients"));
     for &t in &threads[1..] {
         if let Some(s) = suites::speedup(
@@ -22,6 +31,26 @@ fn main() {
             println!("speedup threads={t}: {s:.2}x vs sequential");
         }
     }
+
+    let r = suites::regen_sharded_suite(d, clients, &threads, &tiles, 1, 5);
+    r.report(&format!(
+        "fedmrn fused regen+accumulate tiles @ d = {d}, {clients} clients"
+    ));
+    if let Some(s) = suites::speedup(
+        &r,
+        "regen_materialized threads=1 (full-d scratch)",
+        "regen_sharded threads=1 tile=1024",
+    ) {
+        println!("fused-tile speedup (threads=1, tile=1024): {s:.2}x vs materialized");
+    }
+    println!(
+        "scratch: materialized {} MB/client vs sharded ≤ {} KB total",
+        d * 4 / (1 << 20),
+        threads.iter().max().unwrap() * (tiles.iter().max().unwrap() * 4 + 8192) / 1024
+    );
+
+    // one trajectory file for both suites
+    b.results.extend(r.results);
     let path = suites::repo_root_file("BENCH_aggregate.json");
     b.write_json(&path).unwrap();
     eprintln!("wrote {path}");

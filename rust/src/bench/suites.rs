@@ -138,8 +138,65 @@ pub fn aggregate_suite(
     let mut b = Bench::with_iters(warmup, iters);
     for &t in threads {
         b.run(&format!("aggregate fedmrn threads={t}"), elems, || {
-            aggregate_masked(&updates, dist, MaskType::Binary, &mut w, t).unwrap();
+            aggregate_masked(&updates, dist, MaskType::Binary, &mut w, t, 0).unwrap();
         });
+    }
+    b
+}
+
+/// Fused regen+accumulate tiles vs the materialised two-pass reference.
+///
+/// The `regen_materialized` row reproduces the pre-tile aggregation
+/// exactly: fill a full-`d` scratch noise vector per client, then fuse —
+/// `d × 4` bytes of scratch per client (16 MB at d = 4M) and two passes
+/// over `d`. The `regen_sharded threads=T tile=X` rows run the
+/// jump-ahead sharded tile loop at each `(threads, tile)`: scratch is
+/// `4·tile + 8 KB` per worker (the f32 tile plus the generator's fixed
+/// raw-block) — KBs total, not MBs — and the noise never leaves L1
+/// before it is consumed. All rows
+/// compute byte-identical global weights (pinned by the differential
+/// harness); this suite measures the wall-clock and bandwidth side.
+pub fn regen_sharded_suite(
+    d: usize,
+    clients: usize,
+    threads: &[usize],
+    tiles: &[usize],
+    warmup: usize,
+    iters: usize,
+) -> Bench {
+    let all_bits: Vec<Vec<u64>> = (0..clients)
+        .map(|k| random_mask_bits(d, 0xB17_5EED + k as u64, false))
+        .collect();
+    let updates: Vec<MaskedUpdate> = all_bits
+        .iter()
+        .enumerate()
+        .map(|(k, bits)| MaskedUpdate {
+            seed: 0x5EED_0000 + k as u64,
+            bits,
+            scale: 1.0 / clients as f32,
+        })
+        .collect();
+    let dist = NoiseDist::Uniform { alpha: 0.01 };
+    let mut w = vec![0.0f32; d];
+    let elems = Some((d as u64) * (clients as u64));
+
+    let mut b = Bench::with_iters(warmup, iters);
+    // pre-tile reference: per-client full-d scratch, two passes
+    let mut scratch = vec![0.0f32; d];
+    b.run("regen_materialized threads=1 (full-d scratch)", elems, || {
+        for u in &updates {
+            NoiseGen::new(u.seed).fill(dist, &mut scratch);
+            bitpack::accumulate_binary(u.bits, &scratch, u.scale, &mut w).unwrap();
+        }
+    });
+    drop(scratch);
+    for &t in threads {
+        for &tile in tiles {
+            b.run(&format!("regen_sharded threads={t} tile={tile}"), elems, || {
+                aggregate_masked(&updates, dist, MaskType::Binary, &mut w, t, tile)
+                    .unwrap();
+            });
+        }
     }
     b
 }
@@ -173,6 +230,19 @@ mod tests {
         let a = aggregate_suite(10_007, 4, &[1, 2], 0, 1);
         assert_eq!(a.results.len(), 2);
         assert!(a.results.iter().all(|m| m.median_ms >= 0.0));
+    }
+
+    #[test]
+    fn regen_sharded_suite_rows() {
+        let r = regen_sharded_suite(10_007, 3, &[1, 2], &[64, 1024], 0, 1);
+        // 1 reference row + threads × tiles
+        assert_eq!(r.results.len(), 1 + 2 * 2);
+        assert!(r.results[0].name.starts_with("regen_materialized"));
+        assert!(r
+            .results
+            .iter()
+            .any(|m| m.name == "regen_sharded threads=2 tile=1024"));
+        assert!(r.results.iter().all(|m| m.median_ms >= 0.0));
     }
 
     #[test]

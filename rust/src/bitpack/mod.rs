@@ -313,6 +313,66 @@ pub fn accumulate_signed(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Tile-granular entry points (fused regen+accumulate aggregation)
+// ---------------------------------------------------------------------------
+
+/// Validate a word-aligned tile `[lo, lo + len)` of a `d`-bit mask and
+/// return the word sub-range of `bits` covering it. Shared by the tile
+/// entry points below; every failure is a codec error, never a panic —
+/// `bits` comes off the wire and `lo`/`d` may come from a corrupted
+/// header.
+fn tile_words(bits: &[u64], d: usize, lo: usize, len: usize) -> Result<(usize, usize)> {
+    let words = words_for(d);
+    if bits.len() < words {
+        return Err(short_bits(bits.len(), words));
+    }
+    if lo % 64 != 0 {
+        return Err(Error::Codec(format!("tile offset {lo} not word-aligned")));
+    }
+    let hi = lo
+        .checked_add(len)
+        .ok_or_else(|| Error::Codec(format!("tile [{lo}, {lo}+{len}) overflows")))?;
+    if hi > d {
+        return Err(Error::Codec(format!("tile [{lo}, {hi}) out of bounds for d={d}")));
+    }
+    Ok((lo / 64, hi.div_ceil(64)))
+}
+
+/// Tile-granular [`accumulate_binary`]: fuse the sub-range
+/// `[lo, lo + noise.len())` of a full `d`-bit wire mask into `acc`
+/// (`acc[i] += scale * noise[i] * m[lo + i]`). `bits` is the *whole*
+/// payload — truncation is checked against `d`, not just the tile, so a
+/// short uplink fails on its first tile instead of silently aggregating
+/// a prefix. `lo` must be word-aligned (the fused regen loop shards on
+/// 64-element boundaries).
+pub fn accumulate_binary_tile(
+    bits: &[u64],
+    d: usize,
+    lo: usize,
+    noise: &[f32],
+    scale: f32,
+    acc: &mut [f32],
+) -> Result<()> {
+    let (w0, w1) = tile_words(bits, d, lo, noise.len())?;
+    accumulate_binary(&bits[w0..w1], noise, scale, acc)
+}
+
+/// Tile-granular [`accumulate_signed`]: `acc[i] += scale * (±noise[i])`
+/// with the sign from mask bit `lo + i` of a full `d`-bit payload. Same
+/// contract as [`accumulate_binary_tile`].
+pub fn accumulate_signed_tile(
+    bits: &[u64],
+    d: usize,
+    lo: usize,
+    noise: &[f32],
+    scale: f32,
+    acc: &mut [f32],
+) -> Result<()> {
+    let (w0, w1) = tile_words(bits, d, lo, noise.len())?;
+    accumulate_signed(&bits[w0..w1], noise, scale, acc)
+}
+
 /// Count of set bits (mask density diagnostics).
 pub fn popcount(bits: &[u64]) -> u64 {
     bits.iter().map(|w| w.count_ones() as u64).sum()
@@ -623,6 +683,65 @@ mod tests {
             run(&bits[cut_words..], &noise[cut..], hi);
             assert_bits_eq(&full, &sharded, &format!("subrange signed={signed}"));
         }
+    }
+
+    // -- tile-granular entry points ---------------------------------------
+
+    #[test]
+    fn tile_accumulate_walk_equals_full() {
+        // Walking a full mask tile-by-tile (word-aligned tiles, ragged
+        // final tile) reproduces the full-vector call bit-for-bit.
+        let d = 10_007usize;
+        for signed in [false, true] {
+            let mask = random_mask(d, 80, signed);
+            let noise = random_noise(d, 81);
+            let bits = bits_of(&mask, signed);
+            let mut full = vec![0.125f32; d];
+            if signed {
+                accumulate_signed(&bits, &noise, 0.7, &mut full).unwrap();
+            } else {
+                accumulate_binary(&bits, &noise, 0.7, &mut full).unwrap();
+            }
+            for tile in [64usize, 512, 4096] {
+                let mut tiled = vec![0.125f32; d];
+                let mut lo = 0usize;
+                while lo < d {
+                    let hi = (lo + tile).min(d);
+                    let (n, a) = (&noise[lo..hi], &mut tiled[lo..hi]);
+                    if signed {
+                        accumulate_signed_tile(&bits, d, lo, n, 0.7, a).unwrap();
+                    } else {
+                        accumulate_binary_tile(&bits, d, lo, n, 0.7, a).unwrap();
+                    }
+                    lo = hi;
+                }
+                assert_bits_eq(&full, &tiled, &format!("tile={tile} signed={signed}"));
+            }
+        }
+    }
+
+    #[test]
+    fn tile_rejects_unaligned_offset_and_overrun() {
+        let d = 1000usize;
+        let bits = vec![u64::MAX; words_for(d)];
+        let noise = vec![1.0f32; 64];
+        let mut acc = vec![0.0f32; 64];
+        // unaligned offset
+        assert!(accumulate_binary_tile(&bits, d, 63, &noise, 1.0, &mut acc).is_err());
+        assert!(accumulate_signed_tile(&bits, d, 1, &noise, 1.0, &mut acc).is_err());
+        // tile runs past d
+        assert!(accumulate_binary_tile(&bits, d, 960, &noise, 1.0, &mut acc).is_err());
+        // truncated payload fails even when the tile itself is covered
+        let short = vec![u64::MAX; words_for(d) - 1];
+        assert!(accumulate_binary_tile(&short, d, 0, &noise, 1.0, &mut acc).is_err());
+        assert!(accumulate_signed_tile(&short, d, 0, &noise, 1.0, &mut acc).is_err());
+        // offset overflow must be a codec error, not a wrapping panic
+        assert!(
+            accumulate_binary_tile(&bits, d, usize::MAX - 63, &noise, 1.0, &mut acc)
+                .is_err()
+        );
+        // in-bounds aligned tile is fine
+        accumulate_binary_tile(&bits, d, 896, &noise, 1.0, &mut acc).unwrap();
     }
 
     // -- fused semantics ---------------------------------------------------

@@ -133,6 +133,11 @@ pub struct RunConfig {
     /// Any value produces byte-identical global weights (see
     /// [`crate::coordinator::parallel`]).
     pub threads: usize,
+    /// Fused regen+accumulate tile length for FedMRN aggregation, in
+    /// elements. `0` = default (1024); other values are rounded up to a
+    /// multiple of 64. Any value produces byte-identical global weights
+    /// (see [`crate::coordinator::parallel::resolve_tile`]).
+    pub tile: usize,
 }
 
 impl RunConfig {
@@ -152,6 +157,7 @@ impl RunConfig {
             eval_every: 1,
             max_batches_per_epoch: 0,
             threads: 1,
+            tile: 0,
         }
     }
 

@@ -9,26 +9,39 @@
 //!   client's `G(s_k)` and fuse its 1-bit mask into the global
 //!   accumulator, parallelised **without changing a single float op**.
 //!
+//! # Fused regen+accumulate tiles
+//!
+//! Aggregation never materialises a client's full noise vector. Both
+//! paths walk `w` in word-aligned tiles of [`resolve_tile`] elements:
+//! fill one tile of `G(s_k)` (raw u64 block → f32 conversion, L1-hot),
+//! fuse it into `w` through the tile-granular [`bitpack`] kernels, move
+//! on. Scratch memory is one tile buffer per worker (~4 KB at the
+//! default tile) instead of the former per-client `d`-element vectors
+//! (16 MB each at d = 4M).
+//!
+//! The parallel path shards the *parameter dimension*, not the client
+//! list: xoshiro jump-ahead ([`crate::noise::NoiseGen::fork_at`]) lets a
+//! worker that owns columns `[lo, hi)` start every client's serial noise
+//! stream mid-way at element `lo` in O(1), so even a single client's
+//! regeneration spreads across all cores.
+//!
 //! # Determinism contract
 //!
-//! The parallel aggregator must produce a `w` byte-identical to the
-//! sequential path for any thread count. Floating-point addition is not
+//! The aggregator must produce a `w` byte-identical to the sequential
+//! reference for any `(threads, tile)`. Floating-point addition is not
 //! associative, so instead of per-thread partial accumulators (whose
 //! reduction would re-associate sums), the work is split so that the
-//! *order of operations per element never changes*:
+//! *order of operations per element never changes*: shards are disjoint
+//! word-aligned column ranges, each worker walks the clients *in client
+//! order* on its shard, and fork-at-`lo` regeneration emits bit patterns
+//! identical to the elements `[lo, hi)` of a full fill (pinned by the
+//! noise-module golden tests). Every `w[i]` therefore receives exactly
+//! the additions of the sequential loop, in the same order — no
+//! reduction step exists.
 //!
-//! 1. **Noise regeneration** (the expensive part — one xoshiro stream
-//!    per client) is embarrassingly parallel: waves of up to `threads`
-//!    clients regenerate concurrently into reused buffers.
-//! 2. **Accumulation** shards the parameter dimension into word-aligned
-//!    column ranges, one worker per range. Each worker walks the wave's
-//!    clients *in client order* and calls the same word-level
-//!    [`bitpack`] kernel on its sub-range. Every `w[i]` therefore
-//!    receives exactly the additions of the sequential loop, in the
-//!    same order — shards are disjoint, so no reduction step exists.
-//!
-//! `tests::parallel_matches_sequential_bytes` pins the contract for
-//! 1/2/4/8 threads on odd dimensions and both mask types.
+//! `tests::parallel_matches_sequential_bytes` and the differential
+//! harness (`tests/differential.rs`) pin the contract across
+//! threads × tile × d grids for both mask types.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -44,6 +57,26 @@ pub fn resolve_threads(cfg_threads: usize) -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         cfg_threads
+    }
+}
+
+/// Default fused-tile length: 1024 × (8 B raw + 4 B f32) = 12 KB of
+/// working set — resident in L1/L2 next to the accumulator tile, and
+/// matching the noise generator's internal raw-block size so each tile
+/// is one buffered fill.
+pub const DEFAULT_TILE: usize = 1024;
+
+/// Resolve a configured tile length (`--tile`): `0` means
+/// [`DEFAULT_TILE`]; anything else is rounded up to a multiple of 64 so
+/// tiles stay word-aligned (mask words never straddle tiles, and
+/// Box-Muller pair boundaries are preserved mid-stream).
+pub fn resolve_tile(cfg_tile: usize) -> usize {
+    if cfg_tile == 0 {
+        DEFAULT_TILE
+    } else {
+        // saturate so an absurd knob value can't wrap to a zero-length
+        // tile (which would stall the fuse loop)
+        cfg_tile.div_ceil(64).saturating_mul(64)
     }
 }
 
@@ -124,17 +157,57 @@ fn word_aligned_shards(d: usize, n: usize) -> Vec<(usize, usize)> {
     shards
 }
 
+/// Fuse one client's shard `[lo, hi)` of `w` in word-aligned tiles:
+/// regenerate a tile of `G(s)` into `buf`, accumulate it while L1-hot,
+/// advance. `shard` is `w[lo..hi]`; `bits` is the client's full `d`-bit
+/// payload. The generator stream is forked at element `lo` so the tile
+/// values are bit-identical to the same elements of a full fill.
+fn fuse_shard(
+    u: &MaskedUpdate<'_>,
+    dist: NoiseDist,
+    mask_type: MaskType,
+    d: usize,
+    (lo, hi): (usize, usize),
+    buf: &mut [f32],
+    shard: &mut [f32],
+) -> Result<()> {
+    let tile = buf.len();
+    let mut g = NoiseGen::new(u.seed).fork_at(dist, lo)?;
+    let mut off = lo;
+    while off < hi {
+        let len = tile.min(hi - off);
+        let noise = &mut buf[..len];
+        g.fill(dist, noise);
+        let acc = &mut shard[off - lo..off - lo + len];
+        match mask_type {
+            MaskType::Binary => {
+                bitpack::accumulate_binary_tile(u.bits, d, off, noise, u.scale, acc)?
+            }
+            MaskType::Signed => {
+                bitpack::accumulate_signed_tile(u.bits, d, off, noise, u.scale, acc)?
+            }
+        }
+        off += len;
+    }
+    Ok(())
+}
+
 /// Fused FedMRN aggregation (Eq. 5): `w += Σ_k scale_k · (G(s_k) ⊙ m_k)`,
-/// parallel over `threads` workers, byte-identical to the sequential
-/// path for every thread count (see module docs for why).
+/// tiled so no full-`d` noise buffer ever exists, parallel over
+/// `threads` workers, byte-identical to the sequential path for every
+/// `(threads, tile)` (see module docs for why).
 ///
-/// `threads <= 1` runs the sequential reference path directly.
+/// `threads <= 1` runs the sequential reference path (same tile loop,
+/// one worker, no fork overhead beyond `fork_at(_, 0)` which is free).
+/// `tile` is a tile-length knob resolved by [`resolve_tile`] (0 =
+/// default).
 pub fn aggregate_masked(
     updates: &[MaskedUpdate<'_>],
     dist: NoiseDist,
     mask_type: MaskType,
     w: &mut [f32],
     threads: usize,
+    tile: usize,
 ) -> Result<()> {
     let d = w.len();
     let words = bitpack::words_for(d);
@@ -147,80 +220,47 @@ pub fn aggregate_masked(
         }
     }
     let threads = resolve_threads(threads);
-    if threads <= 1 || updates.len() <= 1 || d < 64 {
-        // sequential reference: regen + fuse per client, in order
-        let mut scratch = vec![0.0f32; d];
+    let tile = resolve_tile(tile);
+    if threads <= 1 || d < 64 {
+        // sequential reference: tile loop per client, in client order
+        let mut buf = vec![0.0f32; tile.min(d.max(1))];
         for u in updates {
-            NoiseGen::new(u.seed).fill(dist, &mut scratch);
-            accumulate(mask_type, u.bits, &scratch, u.scale, w)?;
+            fuse_shard(u, dist, mask_type, d, (0, d), &mut buf, w)?;
         }
         return Ok(());
     }
 
-    // wave-parallel: regen `threads` clients at once, then column-shard
-    // the fused accumulation over the same workers
-    let wave = threads.min(updates.len());
-    let mut noise_bufs: Vec<Vec<f32>> = (0..wave).map(|_| vec![0.0f32; d]).collect();
+    // d-dimension parallel: disjoint word-aligned column shards of `w`,
+    // one worker per shard; each worker jump-forks every client's noise
+    // stream at its shard start and fuses in client order. No waves, no
+    // cross-client dependencies, no full-d scratch.
     let shards = word_aligned_shards(d, threads);
-    for group in updates.chunks(wave) {
-        // phase A: per-client noise regeneration (independent streams)
-        std::thread::scope(|s| {
-            for (buf, u) in noise_bufs.iter_mut().zip(group.iter()) {
-                let seed = u.seed;
-                s.spawn(move || {
-                    NoiseGen::new(seed).fill(dist, buf);
-                });
-            }
-        });
-        // phase B: disjoint word-aligned column shards of `w`; each
-        // worker fuses the whole wave, in client order, on its shard
-        let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
-        std::thread::scope(|s| {
-            // shards are contiguous from 0 (word_aligned_shards contract),
-            // so peeling `w` front-to-back lands each worker on w[lo..hi]
-            let mut rest: &mut [f32] = &mut *w;
-            for &(lo, hi) in &shards {
-                let (shard, tail) = rest.split_at_mut(hi - lo);
-                rest = tail;
-                let noise_bufs = &noise_bufs;
-                let errs = &errs;
-                s.spawn(move || {
-                    let w0 = lo / 64;
-                    let w1 = bitpack::words_for(d).min(w0 + (hi - lo).div_ceil(64));
-                    for (u, noise) in group.iter().zip(noise_bufs.iter()) {
-                        if let Err(e) = accumulate(
-                            mask_type,
-                            &u.bits[w0..w1],
-                            &noise[lo..hi],
-                            u.scale,
-                            shard,
-                        ) {
-                            errs.lock().unwrap().push(e);
-                            return;
-                        }
+    let errs: Mutex<Vec<Error>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        // shards are contiguous from 0 (word_aligned_shards contract),
+        // so peeling `w` front-to-back lands each worker on w[lo..hi]
+        let mut rest: &mut [f32] = &mut *w;
+        for &(lo, hi) in &shards {
+            let (shard, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            let errs = &errs;
+            s.spawn(move || {
+                let mut buf = vec![0.0f32; tile.min(hi - lo)];
+                for u in updates {
+                    if let Err(e) =
+                        fuse_shard(u, dist, mask_type, d, (lo, hi), &mut buf, shard)
+                    {
+                        errs.lock().unwrap().push(e);
+                        return;
                     }
-                });
-            }
-        });
-        if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
-            return Err(e);
+                }
+            });
         }
+    });
+    if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+        return Err(e);
     }
     Ok(())
-}
-
-#[inline]
-fn accumulate(
-    mask_type: MaskType,
-    bits: &[u64],
-    noise: &[f32],
-    scale: f32,
-    acc: &mut [f32],
-) -> Result<()> {
-    match mask_type {
-        MaskType::Binary => bitpack::accumulate_binary(bits, noise, scale, acc),
-        MaskType::Signed => bitpack::accumulate_signed(bits, noise, scale, acc),
-    }
 }
 
 #[cfg(test)]
@@ -276,6 +316,7 @@ mod tests {
         mask_type: MaskType,
         dist: NoiseDist,
         threads: usize,
+        tile: usize,
     ) -> Vec<f32> {
         let (all_bits, seeds, scales) = make_updates(d, n_clients, mask_type);
         let updates: Vec<MaskedUpdate> = (0..n_clients)
@@ -288,7 +329,35 @@ mod tests {
         // non-trivial starting point
         let mut w = vec![0.0f32; d];
         NoiseGen::new(31337).fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
-        aggregate_masked(&updates, dist, mask_type, &mut w, threads).unwrap();
+        aggregate_masked(&updates, dist, mask_type, &mut w, threads, tile).unwrap();
+        w
+    }
+
+    /// The pre-tile reference: materialise each client's full noise
+    /// vector, then fuse — exactly the seed/PR-1 sequential path. The
+    /// fused tiled implementation must reproduce it byte-for-byte.
+    fn run_materialized(
+        d: usize,
+        n_clients: usize,
+        mask_type: MaskType,
+        dist: NoiseDist,
+    ) -> Vec<f32> {
+        let (all_bits, seeds, scales) = make_updates(d, n_clients, mask_type);
+        let mut w = vec![0.0f32; d];
+        NoiseGen::new(31337).fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+        let mut scratch = vec![0.0f32; d];
+        for k in 0..n_clients {
+            NoiseGen::new(seeds[k]).fill(dist, &mut scratch);
+            match mask_type {
+                MaskType::Binary => {
+                    bitpack::accumulate_binary(&all_bits[k], &scratch, scales[k], &mut w)
+                }
+                MaskType::Signed => {
+                    bitpack::accumulate_signed(&all_bits[k], &scratch, scales[k], &mut w)
+                }
+            }
+            .unwrap();
+        }
         w
     }
 
@@ -299,9 +368,9 @@ mod tests {
         for mask_type in [MaskType::Binary, MaskType::Signed] {
             for d in [64usize, 1000, 10_007] {
                 let dist = NoiseDist::Uniform { alpha: 0.01 };
-                let seq = run(d, 7, mask_type, dist, 1);
+                let seq = run(d, 7, mask_type, dist, 1, 0);
                 for threads in [2usize, 4, 8] {
-                    let par = run(d, 7, mask_type, dist, threads);
+                    let par = run(d, 7, mask_type, dist, threads, 0);
                     for i in 0..d {
                         assert_eq!(
                             seq[i].to_bits(),
@@ -315,10 +384,50 @@ mod tests {
     }
 
     #[test]
+    fn tiled_fusion_matches_materialized_reference() {
+        // The fused tile loop (any tile, any threads) reproduces the
+        // pre-tile two-pass path byte-for-byte — including a single
+        // client, which now shards across workers via jump-ahead.
+        let dist = NoiseDist::Uniform { alpha: 0.01 };
+        for mask_type in [MaskType::Binary, MaskType::Signed] {
+            for n_clients in [1usize, 5] {
+                let want = run_materialized(4097, n_clients, mask_type, dist);
+                for threads in [1usize, 4] {
+                    for tile in [64usize, 1024] {
+                        let got = run(4097, n_clients, mask_type, dist, threads, tile);
+                        assert!(
+                            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "{mask_type:?} clients={n_clients} threads={threads} tile={tile}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn parallel_matches_sequential_gaussian() {
-        let seq = run(4097, 5, MaskType::Binary, NoiseDist::Gaussian { alpha: 0.5 }, 1);
-        let par = run(4097, 5, MaskType::Binary, NoiseDist::Gaussian { alpha: 0.5 }, 4);
-        assert!(seq.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let dist = NoiseDist::Gaussian { alpha: 0.5 };
+        let want = run_materialized(4097, 5, MaskType::Binary, dist);
+        for (threads, tile) in [(1usize, 0usize), (4, 0), (4, 64), (2, 4096)] {
+            let got = run(4097, 5, MaskType::Binary, dist, threads, tile);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads} tile={tile}"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_tile_rounds_to_words() {
+        assert_eq!(resolve_tile(0), DEFAULT_TILE);
+        assert_eq!(resolve_tile(1), 64);
+        assert_eq!(resolve_tile(64), 64);
+        assert_eq!(resolve_tile(65), 128);
+        assert_eq!(resolve_tile(4096), 4096);
+        // absurd knob values saturate instead of wrapping to 0
+        assert_eq!(resolve_tile(usize::MAX), usize::MAX);
+        assert!(resolve_tile(usize::MAX - 1) > 0);
     }
 
     #[test]
@@ -342,7 +451,7 @@ mod tests {
             .map(|k| MaskedUpdate { seed: seeds[k], bits: &all_bits[k], scale: scales[k] })
             .collect();
         let mut w = vec![0.0f32; d];
-        aggregate_masked(&updates, dist, mask_type, &mut w, 4).unwrap();
+        aggregate_masked(&updates, dist, mask_type, &mut w, 4, 0).unwrap();
         for i in 0..d {
             assert!((w[i] - want[i]).abs() < 1e-6, "i={i}: {} vs {}", w[i], want[i]);
         }
@@ -362,6 +471,7 @@ mod tests {
                 MaskType::Binary,
                 &mut w,
                 threads,
+                0,
             );
             assert!(r.is_err(), "threads={threads}");
         }

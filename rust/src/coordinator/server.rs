@@ -262,6 +262,7 @@ impl<'rt> Federation<'rt> {
                     mask_type,
                     &mut self.w,
                     self.cfg.threads,
+                    self.cfg.tile,
                 )?;
             }
             Method::FedAvg | Method::Grad(_) => {
@@ -429,23 +430,24 @@ mod tests {
             return;
         }
         let rt = Runtime::load(artifacts()).unwrap();
-        let run_with = |threads: usize| {
+        let run_with = |threads: usize, tile: usize| {
             let mut cfg = quick_cfg("fedmrn");
             cfg.threads = threads;
+            cfg.tile = tile;
             cfg.rounds = 3;
             let mut fed = Federation::new(&rt, cfg, mlp_split(512, 64, 9)).unwrap();
             fed.run().unwrap();
             fed.w.clone()
         };
-        let seq = run_with(1);
-        for threads in [2usize, 4] {
-            let par = run_with(threads);
+        let seq = run_with(1, 0);
+        for (threads, tile) in [(2usize, 0usize), (4, 0), (4, 64), (2, 4096)] {
+            let par = run_with(threads, tile);
             assert_eq!(seq.len(), par.len());
             for i in 0..seq.len() {
                 assert_eq!(
                     seq[i].to_bits(),
                     par[i].to_bits(),
-                    "threads={threads} i={i}"
+                    "threads={threads} tile={tile} i={i}"
                 );
             }
         }

@@ -60,6 +60,10 @@ pub struct ExpOpts {
     /// sequential reference path, 0 = all cores). Byte-identical
     /// results either way.
     pub threads: usize,
+    /// Fused regen+accumulate tile length for aggregation (0 = default
+    /// 1024; rounded up to a word multiple). Byte-identical results for
+    /// any value.
+    pub tile: usize,
 }
 
 impl ExpOpts {
@@ -81,6 +85,7 @@ impl ExpOpts {
                 seed: 1,
                 verbose: false,
                 threads: 1,
+                tile: 0,
             },
             // quick: the recorded-run default — tens of minutes for the
             // full Table-1 sweep on this CPU testbed
@@ -97,6 +102,7 @@ impl ExpOpts {
                 seed: 1,
                 verbose: false,
                 threads: 1,
+                tile: 0,
             },
             // full: paper-shaped topology (still scaled in rounds)
             "full" => ExpOpts {
@@ -112,6 +118,7 @@ impl ExpOpts {
                 seed: 1,
                 verbose: true,
                 threads: 1,
+                tile: 0,
             },
             p => return Err(Error::Config(format!("unknown preset {p:?}"))),
         };
@@ -127,6 +134,7 @@ impl ExpOpts {
         o.seed = args.take_u64("seed", o.seed)?;
         o.verbose = args.take_bool("verbose", o.verbose)?;
         o.threads = args.take_usize("threads", o.threads)?;
+        o.tile = args.take_usize("tile", o.tile)?;
         Ok(o)
     }
 }
@@ -268,6 +276,7 @@ pub fn run_arm(
     cfg.partition = partition;
     cfg.seed = o.seed;
     cfg.threads = o.threads;
+    cfg.tile = o.tile;
     let mut fed = Federation::new(rt, cfg, split)?;
     fed.verbose = o.verbose;
     fed.run()

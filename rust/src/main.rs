@@ -26,12 +26,14 @@ USAGE:
               [--partition iid|noniid1|noniid2] [--preset smoke|quick|full]
               [--rounds N] [--clients N] [--per-round N] [--epochs N]
               [--lr F] [--noise-dist uniform|gaussian|bernoulli] [--alpha F]
-              [--seed N] [--verbose] [--csv PATH]
+              [--seed N] [--threads N] [--tile N] [--verbose] [--csv PATH]
   fedmrn exp table1|fig4|fig5|fig6|table3|theory|all [--preset ...] [...]
-  fedmrn bench [--d N] [--clients N] [--threads 1,2,4,8] [--warmup N]
-               [--iters N] [--out DIR]
+  fedmrn bench [--d N] [--clients N] [--threads 1,2,4,8]
+               [--tiles 64,1024,4096] [--warmup N] [--iters N] [--out DIR]
                writes BENCH_bitpack.json / BENCH_aggregate.json (no
-               artifacts needed; --out defaults to the repo root)
+               artifacts needed; --out defaults to the repo root).
+               BENCH_aggregate.json carries both the thread-sweep rows
+               and the fused regen_sharded (threads × tile) rows
 
 METHODS:
   fedavg fedpm fedsparsify signsgd topk terngrad drive eden fedmrn fedmrns
@@ -149,15 +151,17 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
     let clients = args.take_usize("clients", 32)?;
     let warmup = args.take_usize("warmup", 2)?;
     let iters = args.take_usize("iters", 9)?;
-    let threads: Vec<usize> = args
-        .take_list("threads", &["1", "2", "4", "8"])
-        .iter()
-        .map(|s| {
-            s.parse::<usize>().map_err(|_| {
-                Error::Config(format!("--threads: expected integer, got {s:?}"))
+    let parse_list = |key: &str, vals: Vec<String>| -> Result<Vec<usize>> {
+        vals.iter()
+            .map(|s| {
+                s.parse::<usize>().map_err(|_| {
+                    Error::Config(format!("--{key}: expected integer, got {s:?}"))
+                })
             })
-        })
-        .collect::<Result<_>>()?;
+            .collect()
+    };
+    let threads = parse_list("threads", args.take_list("threads", &["1", "2", "4", "8"]))?;
+    let tiles = parse_list("tiles", args.take_list("tiles", &["64", "1024", "4096"]))?;
     let out = args.take_opt_str("out");
     args.finish()?;
     let path_for = |name: &str| match &out {
@@ -171,7 +175,7 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
     b.write_json(&path)?;
     eprintln!("wrote {path}");
 
-    let a = suites::aggregate_suite(d, clients, &threads, warmup, iters);
+    let mut a = suites::aggregate_suite(d, clients, &threads, warmup, iters);
     a.report(&format!("fedmrn aggregate @ d = {d}, {clients} clients"));
     for &t in threads.iter().skip(1) {
         if let Some(s) = suites::speedup(
@@ -182,6 +186,23 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
             println!("speedup threads={t}: {s:.2}x vs threads={}", threads[0]);
         }
     }
+
+    let r = suites::regen_sharded_suite(d, clients, &threads, &tiles, warmup, iters);
+    r.report(&format!(
+        "fedmrn fused regen+accumulate tiles @ d = {d}, {clients} clients"
+    ));
+    if let Some(s) = suites::speedup(
+        &r,
+        "regen_materialized threads=1 (full-d scratch)",
+        &format!("regen_sharded threads={} tile={}", threads[0], tiles[0]),
+    ) {
+        println!(
+            "fused-tile speedup (threads={}, tile={}): {s:.2}x vs materialized",
+            threads[0], tiles[0]
+        );
+    }
+
+    a.results.extend(r.results);
     let path = path_for("BENCH_aggregate.json");
     a.write_json(&path)?;
     eprintln!("wrote {path}");

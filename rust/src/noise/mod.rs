@@ -10,9 +10,12 @@
 //! Nothing here depends on platform state: the same seed produces the
 //! same bytes on every build, which the round-trip tests pin down.
 
+mod jump;
 mod rng;
 
 pub use rng::{f32_from_raw, f64_open01_from_raw, SplitMix64, Xoshiro256pp};
+
+use crate::error::{Error, Result};
 
 /// Raw-draw block size for buffered generation. The xoshiro recurrence is
 /// serial, so blocks are filled first and the (vectorizable) float
@@ -57,6 +60,29 @@ impl NoiseDist {
             | NoiseDist::Bernoulli { alpha } => alpha,
         }
     }
+
+    /// Raw u64 draws a fill of `n` elements consumes: `n` for the
+    /// one-draw-per-element distributions, `2·⌈n/2⌉` for Gaussian
+    /// (Box-Muller pairs; an odd fill still burns the discarded `z1`'s
+    /// draw). This *is* the stream layout contract — see docs/NOISE.md.
+    pub fn draws_for(&self, n: usize) -> u64 {
+        match self {
+            NoiseDist::Gaussian { .. } => 2 * n.div_ceil(2) as u64,
+            _ => n as u64,
+        }
+    }
+
+    /// Raw-draw position where element `offset` of a fill stream starts,
+    /// or `None` when `offset` is not a resume point: Gaussian elements
+    /// come from two-draw Box-Muller pairs, so only even offsets land on
+    /// a pair boundary. Word-aligned tiling (offsets that are multiples
+    /// of 64) always satisfies this.
+    pub fn draw_offset(&self, offset: usize) -> Option<u64> {
+        match self {
+            NoiseDist::Gaussian { .. } if offset % 2 != 0 => None,
+            _ => Some(offset as u64),
+        }
+    }
 }
 
 /// Deterministic noise generator: `G(seed)` reproducible on both ends.
@@ -78,6 +104,37 @@ pub struct NoiseGen {
 impl NoiseGen {
     pub fn new(seed: u64) -> Self {
         NoiseGen { rng: Xoshiro256pp::seed_from(seed) }
+    }
+
+    /// Fork a generator `draws` raw u64 positions ahead of this one's
+    /// current state, leaving `self` untouched. O(1) in `draws` via
+    /// GF(2) jump-ahead ([`Xoshiro256pp::jump`]): the fork's first draw
+    /// equals what `self`'s `draws+1`-th draw would be.
+    pub fn fork_at_raw(&self, draws: u64) -> NoiseGen {
+        let mut rng = self.rng.clone();
+        rng.jump(draws);
+        NoiseGen { rng }
+    }
+
+    /// Fork a generator positioned at **element** `offset` of the fill
+    /// stream `self.fill(dist, ..)` would produce, leaving `self`
+    /// untouched. Filling `n` elements from the fork yields bit patterns
+    /// identical to elements `offset..offset+n` of a single full fill,
+    /// provided each fill length is even or runs to the true stream end
+    /// (Gaussian pair layout; automatic for word-aligned tiles).
+    ///
+    /// Errors when `offset` is not a resume point for `dist` (odd
+    /// offset into a Box-Muller pair stream) — callers shard on
+    /// 64-element boundaries, which are always resumable.
+    pub fn fork_at(&self, dist: NoiseDist, offset: usize) -> Result<NoiseGen> {
+        let draws = dist.draw_offset(offset).ok_or_else(|| {
+            Error::Config(format!(
+                "fork_at: element offset {offset} splits a Box-Muller pair \
+                 ({} stream resumes only at even offsets)",
+                dist.kind()
+            ))
+        })?;
+        Ok(self.fork_at_raw(draws))
     }
 
     /// Fill `out` with `G(seed)` samples of the given distribution.
@@ -340,6 +397,67 @@ mod tests {
             }
             assert_eq!(a.next_u64(), b.next_u64(), "{} n={n}", dist.kind());
         }
+    }
+
+    #[test]
+    fn fork_at_matches_full_fill_tail() {
+        // Elements [off..] generated from a fork are bit-identical to the
+        // tail of one contiguous fill, for every distribution.
+        let dists = [
+            NoiseDist::Uniform { alpha: 0.01 },
+            NoiseDist::Gaussian { alpha: 0.5 },
+            NoiseDist::Bernoulli { alpha: 0.25 },
+        ];
+        let d = 3000usize;
+        for dist in dists {
+            let mut full = vec![0.0f32; d];
+            NoiseGen::new(4242).fill(dist, &mut full);
+            for off in [0usize, 64, 128, 1024, 2048, 2944] {
+                let mut tail = vec![0.0f32; d - off];
+                NoiseGen::new(4242)
+                    .fork_at(dist, off)
+                    .unwrap()
+                    .fill(dist, &mut tail);
+                for (i, &x) in tail.iter().enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        full[off + i].to_bits(),
+                        "{} off={off} i={i}",
+                        dist.kind()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fork_at_odd_gaussian_offset_is_error() {
+        let g = NoiseGen::new(1);
+        assert!(g.fork_at(NoiseDist::Gaussian { alpha: 1.0 }, 65).is_err());
+        assert!(g.fork_at(NoiseDist::Gaussian { alpha: 1.0 }, 64).is_ok());
+        // one-draw-per-element streams resume anywhere
+        assert!(g.fork_at(NoiseDist::Uniform { alpha: 1.0 }, 65).is_ok());
+        assert!(g.fork_at(NoiseDist::Bernoulli { alpha: 1.0 }, 65).is_ok());
+    }
+
+    #[test]
+    fn draws_for_layout() {
+        let u = NoiseDist::Uniform { alpha: 1.0 };
+        let g = NoiseDist::Gaussian { alpha: 1.0 };
+        assert_eq!(u.draws_for(65), 65);
+        assert_eq!(g.draws_for(64), 64);
+        assert_eq!(g.draws_for(65), 66);
+        assert_eq!(g.draw_offset(64), Some(64));
+        assert_eq!(g.draw_offset(65), None);
+        assert_eq!(u.draw_offset(65), Some(65));
+    }
+
+    #[test]
+    fn fork_at_raw_leaves_parent_untouched() {
+        let parent = NoiseGen::new(9);
+        let before = parent.clone().next_u64();
+        let _fork = parent.fork_at_raw(1 << 20);
+        assert_eq!(parent.clone().next_u64(), before);
     }
 
     #[test]

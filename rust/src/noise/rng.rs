@@ -50,19 +50,27 @@ impl Xoshiro256pp {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        let s = &mut self.s;
-        let result = s[0]
-            .wrapping_add(s[3])
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
             .rotate_left(23)
-            .wrapping_add(s[0]);
-        let t = s[1] << 17;
-        s[2] ^= s[0];
-        s[3] ^= s[1];
-        s[1] ^= s[2];
-        s[0] ^= s[3];
-        s[2] ^= t;
-        s[3] = s[3].rotate_left(45);
+            .wrapping_add(self.s[0]);
+        step_state(&mut self.s);
         result
+    }
+
+    /// Current 256-bit state (test-only introspection for the jump
+    /// identity checks).
+    #[cfg(test)]
+    pub(crate) fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Advance the stream by `k` positions without generating output:
+    /// after `g.jump(k)`, the next draw equals the `k+1`-th draw of the
+    /// unjumped generator. O(1) in `k` via GF(2) polynomial exponentiation
+    /// of the state-transition matrix (small `k` just steps directly).
+    pub fn jump(&mut self, k: u64) {
+        crate::noise::jump::jump_state(&mut self.s, k);
     }
 
     /// Fill `out` with consecutive raw draws — the block-buffered
@@ -88,6 +96,27 @@ impl Xoshiro256pp {
     pub fn next_f64_open01(&mut self) -> f64 {
         f64_open01_from_raw(self.next_u64())
     }
+}
+
+/// The xoshiro256++ state transition, **without** the output function.
+///
+/// This map is linear over GF(2) — each output state bit is the XOR of a
+/// fixed subset of input state bits (shift, XOR and rotate are all
+/// GF(2)-linear; the only non-linear piece of the generator is the
+/// `+`/rotate *output* scrambler, which never feeds back into state).
+/// `noise::jump` exploits exactly this: it derives the 256×256
+/// transition matrix by pushing basis vectors through this function, so
+/// the jump tables can never drift from the stream [`Xoshiro256pp::next_u64`]
+/// actually produces.
+#[inline]
+pub(crate) fn step_state(s: &mut [u64; 4]) {
+    let t = s[1] << 17;
+    s[2] ^= s[0];
+    s[3] ^= s[1];
+    s[1] ^= s[2];
+    s[0] ^= s[3];
+    s[2] ^= t;
+    s[3] = s[3].rotate_left(45);
 }
 
 /// The raw-u64 → f32 U[0,1) transform behind [`Xoshiro256pp::next_f32`].
@@ -176,6 +205,40 @@ mod tests {
         for (i, &w) in want.iter().enumerate() {
             assert_eq!(g.next_u64(), w, "draw {i}");
         }
+    }
+
+    #[test]
+    fn jump_zero_is_identity() {
+        let mut a = Xoshiro256pp::seed_from(5);
+        let b = a.clone();
+        a.jump(0);
+        assert_eq!(a.state(), b.state());
+    }
+
+    #[test]
+    fn jump_matches_sequential_stepping() {
+        for k in [1u64, 2, 63, 64, 65, 1000, 4096] {
+            let mut jumped = Xoshiro256pp::seed_from(77);
+            jumped.jump(k);
+            let mut stepped = Xoshiro256pp::seed_from(77);
+            for _ in 0..k {
+                stepped.next_u64();
+            }
+            for i in 0..16 {
+                assert_eq!(jumped.next_u64(), stepped.next_u64(), "k={k} draw {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn jumps_compose() {
+        // jump(a) then jump(b) == jump(a+b)
+        let mut two = Xoshiro256pp::seed_from(123);
+        two.jump(1_000_000);
+        two.jump(234_567);
+        let mut one = Xoshiro256pp::seed_from(123);
+        one.jump(1_234_567);
+        assert_eq!(two.state(), one.state());
     }
 
     #[test]

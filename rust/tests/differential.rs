@@ -1,0 +1,426 @@
+//! Differential & property-test harness for the jump-ahead / fused-tile
+//! aggregation stack (no artifacts needed — pure CPU paths).
+//!
+//! Three layers of pinning, each against an independently-derived
+//! oracle:
+//!
+//! 1. **Jump-ahead ≡ sequential stepping** — `Xoshiro256pp::jump(k)`
+//!    must land exactly where `k` `next_u64` calls land, for a ladder of
+//!    `k` covering every boundary the tile loops cross, plus random `k`
+//!    and composition identities for offsets too large to step.
+//! 2. **Sharded-fused aggregation ≡ the materialised two-pass path** —
+//!    `aggregate_masked` at every `(threads, tile, d)` must produce
+//!    global weights byte-identical to the pre-tile reference (fill a
+//!    full-`d` scratch noise vector per client, then fuse), which is
+//!    itself the seed implementation's arithmetic.
+//! 3. **Distributional sanity through the forked path** — noise
+//!    assembled from jump-forked shard fills must still *be* the right
+//!    distribution (moments + CDF bounds), so a hypothetical bug that
+//!    produced self-consistent but skewed streams fails here instead of
+//!    slipping past the bit-equality tests.
+//!
+//! The thread grid honours `FEDMRN_DIFF_THREADS` (comma-separated) so CI
+//! can matrix over thread counts without rebuilding the test.
+
+use fedmrn::bitpack;
+use fedmrn::compress::MaskType;
+use fedmrn::coordinator::parallel::{aggregate_masked, MaskedUpdate};
+use fedmrn::noise::{NoiseDist, NoiseGen, Xoshiro256pp};
+
+/// Thread counts under test: `FEDMRN_DIFF_THREADS=1,4` restricts the
+/// grid (CI matrix legs); default is the full ladder.
+fn thread_grid() -> Vec<usize> {
+    match std::env::var("FEDMRN_DIFF_THREADS") {
+        Ok(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("bad FEDMRN_DIFF_THREADS entry {x:?}"))
+            })
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+const TILE_GRID: [usize; 3] = [64, 1024, 4096];
+const D_GRID: [usize; 7] = [1, 63, 64, 65, 127, 10_007, 1 << 20];
+
+// ---------------------------------------------------------------------------
+// 1. jump(k) ≡ k sequential next_u64 calls
+// ---------------------------------------------------------------------------
+
+#[test]
+fn jump_equals_sequential_stepping_k_ladder() {
+    let ks: [u64; 10] = [
+        0,
+        1,
+        63,
+        64,
+        65,
+        1 << 10,
+        1 << 17,
+        (1 << 20) - 1,
+        1 << 20,
+        (1 << 20) + 1,
+    ];
+    let mut stepped = Xoshiro256pp::seed_from(0xD1FF);
+    let mut steps_done = 0u64;
+    // walk the ladder incrementally so the total stepping work is one
+    // pass of max(ks) draws, not the sum
+    for &k in &ks {
+        while steps_done < k {
+            stepped.next_u64();
+            steps_done += 1;
+        }
+        let mut jumped = Xoshiro256pp::seed_from(0xD1FF);
+        jumped.jump(k);
+        let mut a = jumped.clone();
+        let mut b = stepped.clone();
+        for i in 0..8 {
+            assert_eq!(a.next_u64(), b.next_u64(), "k={k} draw {i}");
+        }
+    }
+}
+
+#[test]
+fn jump_equals_sequential_stepping_random_k() {
+    let mut rk = NoiseGen::new(0xABCD);
+    for trial in 0..6 {
+        let k = rk.next_below(200_000);
+        let mut jumped = Xoshiro256pp::seed_from(900 + trial);
+        jumped.jump(k);
+        let mut stepped = Xoshiro256pp::seed_from(900 + trial);
+        for _ in 0..k {
+            stepped.next_u64();
+        }
+        assert_eq!(jumped.next_u64(), stepped.next_u64(), "k={k}");
+    }
+}
+
+#[test]
+fn jump_composition_covers_huge_offsets() {
+    // Offsets too large to step sequentially are pinned by linearity:
+    // jump(a); jump(b) must equal jump(a + b), with a + b up to 2^52.
+    let mut rk = NoiseGen::new(0x9999);
+    for _ in 0..4 {
+        let a = rk.next_below(1 << 51);
+        let b = rk.next_below(1 << 51);
+        let mut two = Xoshiro256pp::seed_from(31);
+        two.jump(a);
+        two.jump(b);
+        let mut one = Xoshiro256pp::seed_from(31);
+        one.jump(a + b);
+        assert_eq!(two.next_u64(), one.next_u64(), "a={a} b={b}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. sharded-fused aggregation ≡ materialised sequential reference
+// ---------------------------------------------------------------------------
+
+/// One round's worth of uplinks (bits, seed, scale per client).
+struct Round {
+    all_bits: Vec<Vec<u64>>,
+    seeds: Vec<u64>,
+    scales: Vec<f32>,
+}
+
+fn make_round(d: usize, n_clients: usize, mask_type: MaskType) -> Round {
+    let mut all_bits = Vec::new();
+    let mut seeds = Vec::new();
+    let mut scales = Vec::new();
+    for k in 0..n_clients {
+        let mut g = NoiseGen::new(5000 + k as u64);
+        let mask: Vec<f32> = (0..d)
+            .map(|_| {
+                let b = g.next_u64() & 1 == 1;
+                match (mask_type, b) {
+                    (MaskType::Binary, true) => 1.0,
+                    (MaskType::Binary, false) => 0.0,
+                    (MaskType::Signed, true) => 1.0,
+                    (MaskType::Signed, false) => -1.0,
+                }
+            })
+            .collect();
+        let mut bits = Vec::new();
+        match mask_type {
+            MaskType::Binary => bitpack::pack_binary(&mask, &mut bits),
+            MaskType::Signed => bitpack::pack_signed(&mask, &mut bits),
+        }
+        all_bits.push(bits);
+        seeds.push(0xFACE + 13 * k as u64);
+        scales.push(1.0 / (k + 2) as f32);
+    }
+    Round { all_bits, seeds, scales }
+}
+
+fn start_w(d: usize) -> Vec<f32> {
+    let mut w = vec![0.0f32; d];
+    NoiseGen::new(777).fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+    w
+}
+
+/// The pre-tile sequential oracle: full-`d` scratch fill per client,
+/// then one full-vector fused accumulate — the seed/PR-1 arithmetic.
+fn materialized_oracle(d: usize, mask_type: MaskType, dist: NoiseDist, r: &Round) -> Vec<f32> {
+    let mut w = start_w(d);
+    let mut scratch = vec![0.0f32; d];
+    for k in 0..r.seeds.len() {
+        NoiseGen::new(r.seeds[k]).fill(dist, &mut scratch);
+        match mask_type {
+            MaskType::Binary => {
+                bitpack::accumulate_binary(&r.all_bits[k], &scratch, r.scales[k], &mut w)
+            }
+            MaskType::Signed => {
+                bitpack::accumulate_signed(&r.all_bits[k], &scratch, r.scales[k], &mut w)
+            }
+        }
+        .unwrap();
+    }
+    w
+}
+
+fn fused(
+    d: usize,
+    mask_type: MaskType,
+    dist: NoiseDist,
+    r: &Round,
+    threads: usize,
+    tile: usize,
+) -> Vec<f32> {
+    let updates: Vec<MaskedUpdate> = (0..r.seeds.len())
+        .map(|k| MaskedUpdate {
+            seed: r.seeds[k],
+            bits: &r.all_bits[k],
+            scale: r.scales[k],
+        })
+        .collect();
+    let mut w = start_w(d);
+    aggregate_masked(&updates, dist, mask_type, &mut w, threads, tile).unwrap();
+    w
+}
+
+fn assert_bytes_eq(want: &[f32], got: &[f32], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length");
+    for i in 0..want.len() {
+        assert_eq!(
+            want[i].to_bits(),
+            got[i].to_bits(),
+            "{ctx} i={i}: {} vs {}",
+            want[i],
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn fused_tiled_aggregation_differential_grid() {
+    // The acceptance grid: threads × tile × d, byte-identical to the
+    // materialised two-pass reference. Binary masks + uniform noise on
+    // the full grid (the hot configuration).
+    let dist = NoiseDist::Uniform { alpha: 0.01 };
+    let threads = thread_grid();
+    for &d in &D_GRID {
+        let round = make_round(d, 3, MaskType::Binary);
+        let want = materialized_oracle(d, MaskType::Binary, dist, &round);
+        for &t in &threads {
+            for &tile in &TILE_GRID {
+                let got = fused(d, MaskType::Binary, dist, &round, t, tile);
+                assert_bytes_eq(&want, &got, &format!("d={d} threads={t} tile={tile}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_tiled_aggregation_signed_and_gaussian() {
+    // Reduced grids for the other mask type and the pair-layout
+    // distribution (Gaussian is the one a tiling bug would misalign).
+    let threads = thread_grid();
+    for (mask_type, dist) in [
+        (MaskType::Signed, NoiseDist::Uniform { alpha: 0.01 }),
+        (MaskType::Binary, NoiseDist::Gaussian { alpha: 0.5 }),
+        (MaskType::Signed, NoiseDist::Gaussian { alpha: 0.5 }),
+        (MaskType::Binary, NoiseDist::Bernoulli { alpha: 0.25 }),
+    ] {
+        for d in [65usize, 127, 10_007] {
+            let round = make_round(d, 3, mask_type);
+            let want = materialized_oracle(d, mask_type, dist, &round);
+            for &t in &threads {
+                for tile in [64usize, 1024] {
+                    let got = fused(d, mask_type, dist, &round, t, tile);
+                    assert_bytes_eq(
+                        &want,
+                        &got,
+                        &format!("{mask_type:?} {} d={d} threads={t} tile={tile}", dist.kind()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_client_shards_across_workers() {
+    // The point of jump-ahead: one client's regeneration spreads over
+    // the d dimension. Byte-identity must hold with exactly one update.
+    let dist = NoiseDist::Uniform { alpha: 0.01 };
+    let d = 100_003usize;
+    let round = make_round(d, 1, MaskType::Binary);
+    let want = materialized_oracle(d, MaskType::Binary, dist, &round);
+    for &t in &thread_grid() {
+        let got = fused(d, MaskType::Binary, dist, &round, t, 0);
+        assert_bytes_eq(&want, &got, &format!("single client threads={t}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. distributional sanity through the forked / tiled path
+// ---------------------------------------------------------------------------
+
+/// Assemble `d` elements the way a sharded worker pool would: fork the
+/// base generator at each word-aligned shard start and fill the shard
+/// tile-by-tile. Any jump or pair-alignment bug lands in this output.
+fn sharded_fill(seed: u64, dist: NoiseDist, d: usize, shard: usize, tile: usize) -> Vec<f32> {
+    assert!(shard % 64 == 0 && tile % 64 == 0);
+    let base = NoiseGen::new(seed);
+    let mut out = vec![0.0f32; d];
+    let mut lo = 0usize;
+    while lo < d {
+        let hi = (lo + shard).min(d);
+        let mut g = base.fork_at(dist, lo).unwrap();
+        let mut off = lo;
+        while off < hi {
+            let len = tile.min(hi - off);
+            g.fill(dist, &mut out[off..off + len]);
+            off += len;
+        }
+        lo = hi;
+    }
+    out
+}
+
+fn mean_var(v: &[f32]) -> (f64, f64) {
+    let n = v.len() as f64;
+    let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    (mean, var)
+}
+
+#[test]
+fn sharded_uniform_is_still_uniform() {
+    let alpha = 0.01f64;
+    let v = sharded_fill(0x57A7, NoiseDist::Uniform { alpha: 0.01 }, 200_000, 4096, 1024);
+    assert!(v.iter().all(|x| (x.abs() as f64) <= alpha));
+    let (mean, var) = mean_var(&v);
+    assert!(mean.abs() < 1e-4, "mean {mean}");
+    let want = alpha * alpha / 3.0;
+    assert!((var - want).abs() / want < 0.05, "var {var} want {want}");
+    // KS-style CDF bound: |F_emp(q) - F(q)| at a grid of quantiles. For
+    // n = 200k the binomial noise per point is σ ≈ 1.1e-3, so the
+    // 4.5e-3 tolerance is ~4σ — while any systematic skew (dropped or
+    // duplicated tiles, wrong fork offsets) shifts whole CDF segments
+    // by orders more.
+    let n = v.len() as f64;
+    for i in 1..20 {
+        let q = -alpha + 2.0 * alpha * (i as f64) / 20.0;
+        let emp = v.iter().filter(|&&x| (x as f64) <= q).count() as f64 / n;
+        let theory = (q + alpha) / (2.0 * alpha);
+        assert!(
+            (emp - theory).abs() < 4.5e-3,
+            "CDF at {q}: emp {emp} theory {theory}"
+        );
+    }
+}
+
+#[test]
+fn sharded_gaussian_is_still_gaussian() {
+    let v = sharded_fill(0x6A55, NoiseDist::Gaussian { alpha: 0.5 }, 200_000, 8192, 64);
+    let (mean, var) = mean_var(&v);
+    assert!(mean.abs() < 5e-3, "mean {mean}");
+    assert!((var - 0.25).abs() / 0.25 < 0.05, "var {var}");
+    // central mass (|x| < σ) ≈ 68.27%
+    let inside = v.iter().filter(|&&x| x.abs() < 0.5).count() as f64 / v.len() as f64;
+    assert!((inside - 0.6827).abs() < 0.01, "central mass {inside}");
+}
+
+#[test]
+fn sharded_bernoulli_is_still_two_point() {
+    let v = sharded_fill(
+        0xBE2,
+        NoiseDist::Bernoulli { alpha: 0.25 },
+        100_000,
+        1024,
+        64,
+    );
+    assert!(v.iter().all(|&x| x == 0.25 || x == -0.25));
+    let pos = v.iter().filter(|&&x| x > 0.0).count() as f64 / v.len() as f64;
+    assert!((pos - 0.5).abs() < 0.01, "pos frac {pos}");
+}
+
+// ---------------------------------------------------------------------------
+// 4. transport-boundary negatives through the tile entry points
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_and_misaligned_tiles_error_never_panic() {
+    // Fuzz-ish sweep over malformed (d, lo, len, payload) combinations:
+    // every call must return cleanly — Err for malformed, Ok only for
+    // well-formed — and must never panic or accept a short payload.
+    let mut rk = NoiseGen::new(0xF0_22);
+    for _ in 0..500 {
+        let d = 1 + rk.next_below(5000) as usize;
+        let words = bitpack::words_for(d);
+        let bits_len = rk.next_below(words as u64 + 3) as usize;
+        let bits = vec![u64::MAX; bits_len];
+        let lo = rk.next_below(d as u64 + 64) as usize;
+        let len = rk.next_below(260) as usize;
+        let noise = vec![1.0f32; len];
+        let mut acc = vec![0.0f32; len];
+        for signed in [false, true] {
+            let r = if signed {
+                bitpack::accumulate_signed_tile(&bits, d, lo, &noise, 1.0, &mut acc)
+            } else {
+                bitpack::accumulate_binary_tile(&bits, d, lo, &noise, 1.0, &mut acc)
+            };
+            let well_formed = bits_len >= words && lo % 64 == 0 && lo + len <= d;
+            assert_eq!(
+                r.is_ok(),
+                well_formed,
+                "signed={signed} d={d} lo={lo} len={len} bits_len={bits_len} words={words}: {r:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_payload_fails_aggregation_for_every_thread_tile() {
+    let d = 10_007usize;
+    let short = vec![u64::MAX; bitpack::words_for(d) - 1];
+    let updates = [MaskedUpdate { seed: 1, bits: &short, scale: 1.0 }];
+    for &t in &thread_grid() {
+        for &tile in &TILE_GRID {
+            let mut w = vec![0.0f32; d];
+            let r = aggregate_masked(
+                &updates,
+                NoiseDist::Uniform { alpha: 1.0 },
+                MaskType::Binary,
+                &mut w,
+                t,
+                tile,
+            );
+            assert!(r.is_err(), "threads={t} tile={tile}");
+            // and the accumulator was not partially written
+            assert!(w.iter().all(|&x| x == 0.0), "threads={t} tile={tile}");
+        }
+    }
+}
+
+#[test]
+fn misaligned_wire_bytes_still_error() {
+    // transport-level framing guard stays intact under the new paths
+    assert!(bitpack::bytes_to_words(&[0u8; 7]).is_err());
+    assert!(bitpack::bytes_to_words(&[0u8; 1023]).is_err());
+    assert!(bitpack::bytes_to_words(&[0u8; 1024]).is_ok());
+}
