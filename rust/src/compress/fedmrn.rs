@@ -57,14 +57,23 @@ pub fn accumulate(
 }
 
 /// Destructure a [`Payload::MaskedSeed`] for dimension `d`, validating
-/// payload kind and dimension once. Entry point for the parallel
-/// aggregator, which regenerates noise and fuses masks on worker threads.
+/// payload kind, dimension and mask-bit length once. Entry point for
+/// the parallel aggregator, which regenerates noise and fuses masks on
+/// worker threads, and for streaming ingest — which relies on the
+/// bit-length check happening *here*, at ingest time, not at finish.
 pub fn parts(p: &Payload, d: usize) -> Result<(u64, &[u64])> {
     let Payload::MaskedSeed { seed, d: pd, bits } = p else {
         return Err(Error::Codec("fedmrn: wrong payload".into()));
     };
     if *pd as usize != d {
         return Err(Error::Codec(format!("fedmrn: d {pd} != {d}")));
+    }
+    if bits.len() < d.div_ceil(64) {
+        return Err(Error::Codec(format!(
+            "fedmrn: mask bits truncated ({} words, need {})",
+            bits.len(),
+            d.div_ceil(64)
+        )));
     }
     Ok((*seed, bits))
 }

@@ -18,32 +18,57 @@ pub fn make_payload(mask: &[f32]) -> Payload {
     Payload::MaskBits { d: mask.len() as u32, bits }
 }
 
-/// Server aggregation: mean of the sampled masks → logit → new scores.
+/// Streaming server half: fold one client's sampled mask into the
+/// per-coordinate vote counts. Integer adds are commutative *exactly*,
+/// so the fold is order-independent bit-for-bit — this is what lets the
+/// FedPM [`crate::coordinator::strategy::Aggregator`] ingest uplinks in
+/// arrival order.
+pub fn accumulate_counts(p: &Payload, d: usize, counts: &mut [u32]) -> Result<()> {
+    let Payload::MaskBits { d: pd, bits } = p else {
+        return Err(Error::Codec("fedpm: wrong payload".into()));
+    };
+    if *pd as usize != d {
+        return Err(Error::Codec(format!("fedpm: d {pd} != {d}")));
+    }
+    if bits.len() < d.div_ceil(64) {
+        return Err(Error::Codec(format!(
+            "fedpm: mask bits truncated ({} words, need {})",
+            bits.len(),
+            d.div_ceil(64)
+        )));
+    }
+    for (i, c) in counts.iter_mut().enumerate().take(d) {
+        *c += ((bits[i / 64] >> (i % 64)) & 1) as u32;
+    }
+    Ok(())
+}
+
+/// Finish the round: mean mask probability per coordinate → clamped
+/// logit → new scores (the lossy re-estimation §2.2 of the paper
+/// criticises).
+pub fn scores_from_counts(counts: &[u32], k: usize) -> Vec<f32> {
+    let k = k as f32;
+    const EPS: f32 = 1e-4;
+    counts
+        .iter()
+        .map(|&c| {
+            let p = (c as f32 / k).clamp(EPS, 1.0 - EPS);
+            (p / (1.0 - p)).ln() // logit
+        })
+        .collect()
+}
+
+/// Batch server aggregation: mean of the sampled masks → logit → new
+/// scores. Thin wrapper over the streaming halves.
 pub fn aggregate(payloads: &[Payload], d: usize) -> Result<Vec<f32>> {
     if payloads.is_empty() {
         return Err(Error::Codec("fedpm: no payloads".into()));
     }
     let mut counts = vec![0u32; d];
     for p in payloads {
-        let Payload::MaskBits { d: pd, bits } = p else {
-            return Err(Error::Codec("fedpm: wrong payload".into()));
-        };
-        if *pd as usize != d {
-            return Err(Error::Codec(format!("fedpm: d {pd} != {d}")));
-        }
-        for (i, c) in counts.iter_mut().enumerate() {
-            *c += ((bits[i / 64] >> (i % 64)) & 1) as u32;
-        }
+        accumulate_counts(p, d, &mut counts)?;
     }
-    let k = payloads.len() as f32;
-    const EPS: f32 = 1e-4;
-    Ok(counts
-        .iter()
-        .map(|&c| {
-            let p = (c as f32 / k).clamp(EPS, 1.0 - EPS);
-            (p / (1.0 - p)).ln() // logit
-        })
-        .collect())
+    Ok(scores_from_counts(&counts, payloads.len()))
 }
 
 /// Deterministic effective parameters for evaluation:

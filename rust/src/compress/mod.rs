@@ -112,6 +112,41 @@ impl GradCodec {
         }
     }
 
+    /// Cheap wire-level gate: is `payload` this codec's variant, framed
+    /// for dimension `d`? Used by streaming ingest to reject foreign or
+    /// mis-dimensioned uplinks the moment they arrive without paying
+    /// for (or buffering) the full decode — which runs at aggregation
+    /// time and performs the deep structural validation.
+    pub fn validate(&self, payload: &Payload, d: usize) -> Result<()> {
+        let err = |what: &str| {
+            Err(Error::Codec(format!("{}: {what}", self.name())))
+        };
+        match (self, payload) {
+            (GradCodec::Identity, Payload::Dense(v)) => {
+                if v.len() != d {
+                    return err(&format!("dense len {} != d {d}", v.len()));
+                }
+            }
+            (GradCodec::SignSgd, Payload::SignBits { d: pd, .. })
+            | (GradCodec::TernGrad, Payload::Ternary { d: pd, .. })
+            | (GradCodec::TopK { .. }, Payload::Sparse { d: pd, .. })
+            | (GradCodec::PostSm { .. }, Payload::MaskedSeed { d: pd, .. }) => {
+                if *pd as usize != d {
+                    return err(&format!("d {pd} != {d}"));
+                }
+            }
+            (GradCodec::Drive | GradCodec::Eden, Payload::SignBits { d: pd, .. }) => {
+                // rotation codecs frame the pow2-padded dimension
+                let pd = *pd as usize;
+                if pd < d || !pd.is_power_of_two() {
+                    return err(&format!("bad padded dim {pd} for {d}"));
+                }
+            }
+            _ => return err("unexpected payload variant"),
+        }
+        Ok(())
+    }
+
     /// Reconstruct a dense update of length `d` from the wire payload.
     pub fn decode(&self, payload: &Payload, d: usize) -> Result<Vec<f32>> {
         match (self, payload) {
@@ -179,6 +214,21 @@ mod tests {
                 assert_eq!(y.len(), d, "{}", codec.name());
                 assert!(y.iter().all(|v| v.is_finite()), "{}", codec.name());
             }
+        }
+    }
+
+    #[test]
+    fn validate_gates_variant_and_dimension() {
+        let d = 1000;
+        let x = random_update(d, 11, 0.01);
+        let foreign = Payload::MaskBits { d: d as u32, bits: vec![0; d.div_ceil(64)] };
+        for codec in all_codecs() {
+            let p = codec.encode(&x, 5);
+            codec.validate(&p, d).unwrap();
+            // grossly wrong dimension (also exceeds any pow2 padding)
+            assert!(codec.validate(&p, 8 * d).is_err(), "{}", codec.name());
+            // a foreign wire variant is rejected
+            assert!(codec.validate(&foreign, d).is_err(), "{}", codec.name());
         }
     }
 

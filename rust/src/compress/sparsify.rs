@@ -57,19 +57,34 @@ pub fn encode_sparse(w: &[f32]) -> Payload {
     Payload::Sparse { d: w.len() as u32, idx, val }
 }
 
-/// Decode a sparse weight vector (dense, zeros elsewhere).
-pub fn decode_sparse(p: &Payload, d: usize) -> Result<Vec<f32>> {
+/// Validate a sparse payload's framing for dimension `d` without
+/// materialising the dense vector: variant, dimension, idx/val pairing
+/// and index bounds. The streaming-ingest gate — O(nnz), no `d`-length
+/// allocation.
+pub fn validate_sparse(p: &Payload, d: usize) -> Result<()> {
     let Payload::Sparse { d: pd, idx, val } = p else {
         return Err(Error::Codec("fedsparsify: wrong payload".into()));
     };
     if *pd as usize != d {
         return Err(Error::Codec(format!("fedsparsify: d {pd} != {d}")));
     }
+    if idx.len() != val.len() {
+        return Err(Error::Codec("fedsparsify: idx/val length mismatch".into()));
+    }
+    if idx.iter().any(|&i| i as usize >= d) {
+        return Err(Error::Codec("fedsparsify: index out of range".into()));
+    }
+    Ok(())
+}
+
+/// Decode a sparse weight vector (dense, zeros elsewhere).
+pub fn decode_sparse(p: &Payload, d: usize) -> Result<Vec<f32>> {
+    validate_sparse(p, d)?;
+    let Payload::Sparse { idx, val, .. } = p else {
+        unreachable!("validate_sparse accepted a non-Sparse payload");
+    };
     let mut out = vec![0.0f32; d];
     for (&i, &v) in idx.iter().zip(val) {
-        if i as usize >= d {
-            return Err(Error::Codec("fedsparsify: index out of range".into()));
-        }
         out[i as usize] = v;
     }
     Ok(out)

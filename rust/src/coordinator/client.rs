@@ -1,7 +1,11 @@
 //! Client-side local training drivers (Algorithm 1, ClientLocalUpdate).
 //!
 //! Each driver runs the client's local epochs through the AOT'd HLO step
-//! functions and produces the uplink [`Payload`]:
+//! functions; the per-method composition of these drivers into a full
+//! client round lives in the [`super::strategy`] implementations (one
+//! [`super::strategy::Strategy`] per method, resolved through
+//! [`super::registry`] — there is no method `match` here or in the
+//! server engine):
 //!
 //! * [`train_plain`] — FedAvg-style dense local SGD; the base for every
 //!   post-training codec and FedSparsify.
@@ -17,7 +21,7 @@
 
 use xla::Literal;
 
-use crate::compress::{fedmrn, fedpm as fedpm_codec, sparsify, MaskType};
+use crate::compress::{fedmrn, fedpm as fedpm_codec, MaskType};
 use crate::data::{Dataset, Features};
 use crate::error::Result;
 use crate::noise::{NoiseDist, NoiseGen};
@@ -255,77 +259,6 @@ pub fn train_fedpm(
     let mask = to_vec_f32(&outs[0])?;
     let payload = fedpm_codec::make_payload(&mask);
     Ok((payload, loss_sum / steps.max(1) as f64, t_fin.ms()))
-}
-
-/// Dispatch one client's full local round for any method.
-#[allow(clippy::too_many_arguments)]
-pub fn run_client(
-    rt: &Runtime,
-    meta: &ConfigMeta,
-    method: &super::Method,
-    cfg: &super::RunConfig,
-    round: usize,
-    w_global: &[f32],
-    fedpm_state: Option<(&[f32], &[f32])>, // (w_init, scores)
-    batches: &Batches,
-    noise_seed: u64,
-    rng: &mut NoiseGen,
-) -> Result<TrainOutcome> {
-    use super::Method;
-    let t_all = Timer::new();
-    let (payload, train_loss, compress_ms) = match method {
-        Method::FedAvg => {
-            let (w_local, loss) =
-                train_plain(rt, meta, w_global, batches, cfg.local_epochs, cfg.lr)?;
-            let t = Timer::new();
-            let delta: Vec<f32> =
-                w_local.iter().zip(w_global).map(|(a, b)| a - b).collect();
-            (Payload::Dense(delta), loss, t.ms())
-        }
-        Method::Grad(codec) => {
-            let (w_local, loss) =
-                train_plain(rt, meta, w_global, batches, cfg.local_epochs, cfg.lr)?;
-            let t = Timer::new();
-            let delta: Vec<f32> =
-                w_local.iter().zip(w_global).map(|(a, b)| a - b).collect();
-            let p = codec.encode(&delta, noise_seed);
-            (p, loss, t.ms())
-        }
-        Method::FedMrn { mask_type, mode } => train_mrn(
-            rt, meta, w_global, batches, cfg.local_epochs, cfg.lr, *mask_type,
-            *mode, cfg.noise, noise_seed, rng,
-        )?,
-        Method::FedPm => {
-            let (w_init, scores) = fedpm_state.expect("fedpm state missing");
-            train_fedpm(rt, meta, w_init, scores, batches, cfg.local_epochs,
-                        cfg.lr, rng)?
-        }
-        Method::FedSparsify { target } => {
-            // prune during local training: train one epoch, prune to the
-            // round-scheduled sparsity, repeat; upload surviving weights
-            let sched =
-                sparsify::schedule(*target, round + 1, cfg.rounds.max(1));
-            let mut w_local = w_global.to_vec();
-            let mut loss = 0.0;
-            for _ in 0..cfg.local_epochs {
-                let (w2, l) = train_plain(rt, meta, &w_local, batches, 1, cfg.lr)?;
-                w_local = w2;
-                sparsify::prune_to_sparsity(&mut w_local, sched);
-                loss = l;
-            }
-            let t = Timer::new();
-            let p = sparsify::encode_sparse(&w_local);
-            (p, loss, t.ms())
-        }
-    };
-    let total_ms = t_all.ms();
-    Ok(TrainOutcome {
-        payload,
-        train_loss,
-        train_ms: total_ms - compress_ms,
-        compress_ms,
-        n_samples: batches.n_samples,
-    })
 }
 
 /// Evaluate global parameters on a test set (full batches only).

@@ -45,66 +45,24 @@ pub enum Method {
 }
 
 impl Method {
-    /// Parse a method name. `noise` parameterises the methods that need a
-    /// noise distribution (fedmrn*, postsm).
+    /// Parse a method name through the [`super::registry`] (the single
+    /// name surface). `noise` parameterises the methods that embed a
+    /// noise distribution (postsm).
     pub fn parse(name: &str, noise: NoiseDist) -> Result<Method> {
-        Ok(match name {
-            "fedavg" => Method::FedAvg,
-            "signsgd" => Method::Grad(GradCodec::SignSgd),
-            "terngrad" => Method::Grad(GradCodec::TernGrad),
-            "topk" => Method::Grad(GradCodec::TopK { frac: 0.03 }),
-            "drive" => Method::Grad(GradCodec::Drive),
-            "eden" => Method::Grad(GradCodec::Eden),
-            "postsm" | "fedavg_sm" => Method::Grad(GradCodec::PostSm {
-                dist: noise,
-                mask_type: MaskType::Binary,
-            }),
-            "fedmrn" => Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Psm },
-            "fedmrns" => Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Psm },
-            "fedmrn_sm" | "fedmrn_wo_pm" => {
-                Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Sm }
-            }
-            "fedmrn_pm" | "fedmrn_wo_sm" => {
-                Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Pm }
-            }
-            "fedmrn_dm" | "fedmrn_wo_psm" => {
-                Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Dm }
-            }
-            "fedpm" => Method::FedPm,
-            "fedsparsify" => Method::FedSparsify { target: 0.97 },
-            other => {
-                return Err(Error::Config(format!("unknown method {other:?}")))
-            }
-        })
+        super::registry::parse(name, noise)
     }
 
+    /// Canonical registry name; round-trips through [`Method::parse`]
+    /// for every registry-constructible variant (pinned in
+    /// `registry::tests`; `Grad(Identity)` and signed PostSM normalize
+    /// to their registry forms — see the registry module docs).
     pub fn name(&self) -> String {
-        match self {
-            Method::FedAvg => "fedavg".into(),
-            Method::Grad(c) => c.name().into(),
-            Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Psm } => {
-                "fedmrn".into()
-            }
-            Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Psm } => {
-                "fedmrns".into()
-            }
-            Method::FedMrn { mask_type, mode } => {
-                format!("fedmrn_{}_{}", mask_type.name(), mode.name())
-            }
-            Method::FedPm => "fedpm".into(),
-            Method::FedSparsify { .. } => "fedsparsify".into(),
-        }
+        super::registry::canonical_name(self)
     }
 
-    /// The Table-1 roster in paper order.
+    /// The Table-1 roster in paper order (registry-driven).
     pub fn table1_roster(noise: NoiseDist) -> Vec<Method> {
-        [
-            "fedavg", "fedpm", "fedsparsify", "signsgd", "topk", "terngrad",
-            "drive", "eden", "fedmrn", "fedmrns",
-        ]
-        .iter()
-        .map(|m| Method::parse(m, noise).unwrap())
-        .collect()
+        super::registry::table1_roster(noise)
     }
 }
 
@@ -222,6 +180,19 @@ mod tests {
             Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Dm }
         );
         assert!(Method::parse("nope", NOISE).is_err());
+    }
+
+    #[test]
+    fn ablation_names_round_trip() {
+        for name in ["fedmrn_sm", "fedmrn_pm", "fedmrn_dm", "fedmrns_sm"] {
+            let m = Method::parse(name, NOISE).unwrap();
+            assert_eq!(m.name(), name);
+            assert_eq!(Method::parse(&m.name(), NOISE).unwrap(), m);
+        }
+        // the former asymmetry: this variant printed "fedmrn_binary_sm",
+        // which parse() rejected
+        let m = Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Sm };
+        assert_eq!(m.name(), "fedmrn_sm");
     }
 
     #[test]

@@ -13,6 +13,9 @@ pub struct RoundRecord {
     /// Global-model test accuracy in [0,1] (NaN when not evaluated).
     pub test_acc: f64,
     pub uplink_bytes: u64,
+    /// Broadcast bytes this round (mirrors `uplink_bytes`; sourced from
+    /// [`crate::transport::Meter::round_downlink`]).
+    pub downlink_bytes: u64,
     pub train_ms: f64,
     pub compress_ms: f64,
 }
@@ -25,6 +28,7 @@ impl RoundRecord {
             .set("test_loss", self.test_loss)
             .set("test_acc", self.test_acc)
             .set("uplink_bytes", self.uplink_bytes)
+            .set("downlink_bytes", self.downlink_bytes)
             .set("train_ms", self.train_ms)
             .set("compress_ms", self.compress_ms)
     }
@@ -105,13 +109,14 @@ impl RunResult {
             std::fs::create_dir_all(parent)?;
         }
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bytes,train_ms,compress_ms\n",
+            "round,train_loss,test_loss,test_acc,uplink_bytes,downlink_bytes,\
+             train_ms,compress_ms\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{},{:.3},{:.3}\n",
+                "{},{:.6},{:.6},{:.6},{},{},{:.3},{:.3}\n",
                 r.round, r.train_loss, r.test_loss, r.test_acc, r.uplink_bytes,
-                r.train_ms, r.compress_ms
+                r.downlink_bytes, r.train_ms, r.compress_ms
             ));
         }
         std::fs::write(path, out)?;
@@ -159,6 +164,7 @@ mod tests {
             test_loss: 1.0,
             test_acc: acc,
             uplink_bytes: 100,
+            downlink_bytes: 400,
             train_ms: 1.0,
             compress_ms: 0.1,
         }

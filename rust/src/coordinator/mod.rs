@@ -1,18 +1,36 @@
 //! L3 coordinator — the federated runtime (Algorithm 1).
 //!
-//! [`server::Federation`] owns the round loop: client selection,
-//! downlink broadcast, per-client local training through the AOT'd HLO
-//! steps ([`client`]), wire-metered uplink, aggregation (Eq. 3 / Eq. 5),
-//! and periodic evaluation. One [`config::RunConfig`] fully describes a
-//! run; [`metrics::RunResult`] is the structured output every experiment
-//! harness consumes.
+//! [`server::Federation`] is a method-agnostic round engine: client
+//! selection, downlink broadcast, per-client local training through the
+//! AOT'd HLO steps, wire-metered uplink, streaming aggregation and
+//! periodic evaluation. *Which* method runs is decided entirely by two
+//! object-safe traits plus one lookup table:
+//!
+//! * [`strategy::Strategy`] — the client side of a method (and its
+//!   server-side state shape). One impl per method family; no method
+//!   `match` in the engine.
+//! * [`strategy::Aggregator`] — the server side, with a streaming
+//!   `begin / ingest / finish` contract: uplinks are consumed as they
+//!   arrive, in any order, with byte-identical results (the prerequisite
+//!   for overlapping rounds — see `docs/API.md`).
+//! * [`registry`] — the single name surface: every method name (CLI,
+//!   `exp/*` rosters, results files) resolves here to a [`Method`]
+//!   description and a boxed strategy.
+//!
+//! One [`config::RunConfig`] fully describes a run;
+//! [`metrics::RunResult`] is the structured output every experiment
+//! harness consumes. [`parallel`] holds the worker pools (client
+//! execution, streamed ingestion, sharded FedMRN aggregation).
 
 pub mod client;
 pub mod config;
 pub mod metrics;
 pub mod parallel;
+pub mod registry;
 pub mod server;
+pub mod strategy;
 
 pub use config::{Method, MrnMode, RunConfig};
 pub use metrics::{RoundRecord, RunResult};
 pub use server::Federation;
+pub use strategy::{Aggregator, Strategy, TrainCtx};

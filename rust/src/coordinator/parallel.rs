@@ -5,6 +5,11 @@
 //!
 //! * [`run_indexed`] — run per-client work (local training) concurrently
 //!   via an atomic work queue, returning results in client-index order.
+//! * [`run_streamed`] — same worker pool, but results are handed to a
+//!   consumer callback **as they complete** (arrival order). This feeds
+//!   the server's streaming [`crate::coordinator::strategy::Aggregator`]
+//!   ingestion: uplink decode/validation overlaps still-running client
+//!   training instead of waiting for the whole round.
 //! * [`aggregate_masked`] — Eq. 5 for FedMRN payloads: regenerate each
 //!   client's `G(s_k)` and fuse its 1-bit mask into the global
 //!   accumulator, parallelised **without changing a single float op**.
@@ -44,7 +49,7 @@
 //! threads × tile × d grids for both mask types.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 
 use crate::bitpack;
 use crate::compress::MaskType;
@@ -133,6 +138,94 @@ where
         }
     }
     Ok(out)
+}
+
+/// Run `f(0..n_items)` across `n_threads` scoped workers and hand each
+/// result to `consume` **as it completes** — arrival order, not index
+/// order. The index is passed alongside the result so the consumer can
+/// park it in its canonical slot. With `n_threads <= 1` this degenerates
+/// to the sequential loop (`consume(0, f(0)?)`, `consume(1, f(1)?)`, …),
+/// exactly the pre-streaming reference behaviour.
+///
+/// Error semantics per path (only *which* `Err` comes back differs —
+/// an `Ok` round is identical either way, which is all the engine's
+/// byte-identity contract covers):
+///
+/// * multi-threaded — mirrors [`run_indexed`]: remaining items still
+///   run after a failure (bounded by one round); the first *worker*
+///   error by index wins, then any `consume` error. After either,
+///   `consume` is not called again.
+/// * sequential — aborts at the first error in call order, exactly like
+///   the pre-streaming `.collect::<Result<_>>()` loop; later items do
+///   not run.
+pub fn run_streamed<T, F, C>(
+    n_items: usize,
+    n_threads: usize,
+    f: F,
+    mut consume: C,
+) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+    C: FnMut(usize, T) -> Result<()>,
+{
+    let n_threads = resolve_threads(n_threads).min(n_items.max(1));
+    if n_threads <= 1 {
+        for i in 0..n_items {
+            consume(i, f(i)?)?;
+        }
+        return Ok(());
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Result<T>)>();
+    std::thread::scope(|s| -> Result<()> {
+        for _ in 0..n_threads {
+            let tx = tx.clone();
+            let f = &f;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                if tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        // the workers own the remaining senders; dropping ours lets the
+        // receive loop end when they all finish
+        drop(tx);
+        let mut worker_err: Option<(usize, Error)> = None;
+        let mut consume_err: Option<Error> = None;
+        for (i, r) in rx {
+            match r {
+                Ok(v) => {
+                    if worker_err.is_none() && consume_err.is_none() {
+                        if let Err(e) = consume(i, v) {
+                            consume_err = Some(e);
+                        }
+                    }
+                }
+                Err(e) => {
+                    let first = match &worker_err {
+                        None => true,
+                        Some((j, _)) => i < *j,
+                    };
+                    if first {
+                        worker_err = Some((i, e));
+                    }
+                }
+            }
+        }
+        if let Some((_, e)) = worker_err {
+            return Err(e);
+        }
+        if let Some(e) = consume_err {
+            return Err(e);
+        }
+        Ok(())
+    })
 }
 
 /// Split `d` elements into at most `n` contiguous shards whose starts lie
@@ -501,6 +594,65 @@ mod tests {
         // zero items is fine
         let empty: Vec<usize> = run_indexed(0, 4, |i| Ok(i)).unwrap();
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn run_streamed_delivers_every_item_exactly_once() {
+        for threads in [1usize, 2, 4, 8] {
+            let mut seen = vec![false; 37];
+            let mut arrivals = Vec::new();
+            run_streamed(37, threads, |i| Ok(i * i), |i, v: usize| {
+                assert_eq!(v, i * i);
+                assert!(!seen[i], "duplicate delivery of {i}");
+                seen[i] = true;
+                arrivals.push(i);
+                Ok(())
+            })
+            .unwrap();
+            assert!(seen.iter().all(|&s| s), "threads={threads}");
+            if threads == 1 {
+                // sequential path is the in-order reference
+                assert_eq!(arrivals, (0..37).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn run_streamed_propagates_worker_and_consumer_errors() {
+        for threads in [1usize, 4] {
+            let r = run_streamed(
+                10,
+                threads,
+                |i| {
+                    if i == 6 {
+                        Err(Error::Config("worker boom".into()))
+                    } else {
+                        Ok(i)
+                    }
+                },
+                |_, _: usize| Ok(()),
+            );
+            assert!(r.is_err(), "threads={threads}");
+            let mut delivered = 0usize;
+            let r = run_streamed(
+                10,
+                threads,
+                |i| Ok(i),
+                |_, _: usize| {
+                    delivered += 1;
+                    if delivered == 3 {
+                        Err(Error::Codec("consumer boom".into()))
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+            assert!(r.is_err(), "threads={threads}");
+            // consumer is never called again after its error
+            assert_eq!(delivered, 3, "threads={threads}");
+        }
+        // zero items is fine
+        run_streamed(0, 4, |i| Ok(i), |_, _: usize| Ok(())).unwrap();
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Method registry — the single surface mapping method *names* to
+//! [`Method`] descriptions and boxed [`Strategy`] implementations.
+//!
+//! Every way of naming a method — the CLI `--method` flag, the `exp/*`
+//! harness rosters, `RunConfig` construction in tests — resolves through
+//! this table. One entry per canonical name, plus the historical aliases
+//! the paper's figures use (`fedmrn_wo_pm` etc.). The invariant pinned by
+//! `tests::every_method_name_round_trips`: for every
+//! *registry-constructible* [`Method`] value — every `SPECS` entry and
+//! the full `FedMrn { mask_type, mode }` grid —
+//! `parse(canonical_name(m)) == m`, so names printed in results files
+//! are always valid CLI input.
+//!
+//! Parameterised methods (Top-k fraction, FedSparsify target, PostSM
+//! noise) round-trip at their registry-default parameters; the noise
+//! distribution is supplied by the caller at parse time because it is a
+//! run-level knob ([`RunConfig::noise`]), not part of the name. Two
+//! `Method` values no registry entry produces — `Grad(Identity)` and a
+//! signed-mask PostSM — *normalize* on round-trip to their registry
+//! forms (`fedavg`, binary `postsm`), which resolve to behaviorally
+//! identical strategies — pinned by
+//! `tests::non_registry_constructions_normalize`.
+
+use crate::compress::{GradCodec, MaskType};
+use crate::error::{Error, Result};
+use crate::noise::NoiseDist;
+
+use super::config::{Method, MrnMode, RunConfig};
+use super::strategy::Strategy;
+
+/// One registry row: canonical name, accepted aliases, whether the
+/// method appears in the paper's Table-1 roster, and the [`Method`]
+/// constructor.
+pub struct MethodSpec {
+    /// Canonical name: what [`canonical_name`] prints and results files
+    /// record.
+    pub name: &'static str,
+    /// Accepted alternate spellings (the paper's `w/o` ablation names,
+    /// `fedavg_sm` for PostSM).
+    pub aliases: &'static [&'static str],
+    /// Member of the Table-1 roster (in paper order within [`SPECS`]).
+    pub table1: bool,
+    make: fn(NoiseDist) -> Method,
+}
+
+fn m_fedavg(_: NoiseDist) -> Method {
+    Method::FedAvg
+}
+fn m_fedpm(_: NoiseDist) -> Method {
+    Method::FedPm
+}
+fn m_fedsparsify(_: NoiseDist) -> Method {
+    Method::FedSparsify { target: 0.97 }
+}
+fn m_signsgd(_: NoiseDist) -> Method {
+    Method::Grad(GradCodec::SignSgd)
+}
+fn m_topk(_: NoiseDist) -> Method {
+    Method::Grad(GradCodec::TopK { frac: 0.03 })
+}
+fn m_terngrad(_: NoiseDist) -> Method {
+    Method::Grad(GradCodec::TernGrad)
+}
+fn m_drive(_: NoiseDist) -> Method {
+    Method::Grad(GradCodec::Drive)
+}
+fn m_eden(_: NoiseDist) -> Method {
+    Method::Grad(GradCodec::Eden)
+}
+fn m_postsm(noise: NoiseDist) -> Method {
+    Method::Grad(GradCodec::PostSm { dist: noise, mask_type: MaskType::Binary })
+}
+fn m_fedmrn(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Psm }
+}
+fn m_fedmrns(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Psm }
+}
+fn m_fedmrn_sm(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Sm }
+}
+fn m_fedmrn_pm(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Pm }
+}
+fn m_fedmrn_dm(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Binary, mode: MrnMode::Dm }
+}
+fn m_fedmrns_sm(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Sm }
+}
+fn m_fedmrns_pm(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Pm }
+}
+fn m_fedmrns_dm(_: NoiseDist) -> Method {
+    Method::FedMrn { mask_type: MaskType::Signed, mode: MrnMode::Dm }
+}
+
+/// The registry. Table-1 members first, in paper order (Table 1 /
+/// [`table1_roster`] preserve this ordering); ablation and post-training
+/// arms after.
+pub static SPECS: [MethodSpec; 17] = [
+    MethodSpec { name: "fedavg", aliases: &[], table1: true, make: m_fedavg },
+    MethodSpec { name: "fedpm", aliases: &[], table1: true, make: m_fedpm },
+    MethodSpec { name: "fedsparsify", aliases: &[], table1: true, make: m_fedsparsify },
+    MethodSpec { name: "signsgd", aliases: &[], table1: true, make: m_signsgd },
+    MethodSpec { name: "topk", aliases: &[], table1: true, make: m_topk },
+    MethodSpec { name: "terngrad", aliases: &[], table1: true, make: m_terngrad },
+    MethodSpec { name: "drive", aliases: &[], table1: true, make: m_drive },
+    MethodSpec { name: "eden", aliases: &[], table1: true, make: m_eden },
+    MethodSpec { name: "fedmrn", aliases: &[], table1: true, make: m_fedmrn },
+    MethodSpec { name: "fedmrns", aliases: &[], table1: true, make: m_fedmrns },
+    MethodSpec {
+        name: "postsm",
+        aliases: &["fedavg_sm"],
+        table1: false,
+        make: m_postsm,
+    },
+    MethodSpec {
+        name: "fedmrn_sm",
+        aliases: &["fedmrn_wo_pm"],
+        table1: false,
+        make: m_fedmrn_sm,
+    },
+    MethodSpec {
+        name: "fedmrn_pm",
+        aliases: &["fedmrn_wo_sm"],
+        table1: false,
+        make: m_fedmrn_pm,
+    },
+    MethodSpec {
+        name: "fedmrn_dm",
+        aliases: &["fedmrn_wo_psm"],
+        table1: false,
+        make: m_fedmrn_dm,
+    },
+    MethodSpec { name: "fedmrns_sm", aliases: &[], table1: false, make: m_fedmrns_sm },
+    MethodSpec { name: "fedmrns_pm", aliases: &[], table1: false, make: m_fedmrns_pm },
+    MethodSpec { name: "fedmrns_dm", aliases: &[], table1: false, make: m_fedmrns_dm },
+];
+
+/// Parse a method name (canonical or alias) into its [`Method`]
+/// description. `noise` parameterises the methods that embed a noise
+/// distribution (postsm).
+pub fn parse(name: &str, noise: NoiseDist) -> Result<Method> {
+    for spec in &SPECS {
+        if spec.name == name || spec.aliases.contains(&name) {
+            return Ok((spec.make)(noise));
+        }
+    }
+    Err(Error::Config(format!(
+        "unknown method {name:?} (known: {})",
+        names().join(" ")
+    )))
+}
+
+/// The canonical registry name of a [`Method`] value. Round-trips
+/// through [`parse`] for every registry-constructible variant; the
+/// non-registry constructions (`Grad(Identity)`, signed PostSM)
+/// normalize to their registry-equivalent forms (see module docs).
+pub fn canonical_name(m: &Method) -> String {
+    match m {
+        Method::FedAvg => "fedavg".into(),
+        Method::Grad(c) => c.name().into(),
+        Method::FedPm => "fedpm".into(),
+        Method::FedSparsify { .. } => "fedsparsify".into(),
+        Method::FedMrn { mask_type, mode } => {
+            let base = match mask_type {
+                MaskType::Binary => "fedmrn",
+                MaskType::Signed => "fedmrns",
+            };
+            match mode {
+                MrnMode::Psm => base.into(),
+                _ => format!("{base}_{}", mode.name()),
+            }
+        }
+    }
+}
+
+/// All canonical method names, registry order.
+pub fn names() -> Vec<&'static str> {
+    SPECS.iter().map(|s| s.name).collect()
+}
+
+/// Canonical names of the Table-1 roster, paper order.
+pub fn table1_names() -> Vec<&'static str> {
+    SPECS.iter().filter(|s| s.table1).map(|s| s.name).collect()
+}
+
+/// The Table-1 roster as [`Method`] values, paper order.
+pub fn table1_roster(noise: NoiseDist) -> Vec<Method> {
+    SPECS.iter().filter(|s| s.table1).map(|s| (s.make)(noise)).collect()
+}
+
+/// The [`Strategy`] implementation for a [`Method`] description.
+pub fn strategy_for(m: &Method) -> Box<dyn Strategy> {
+    use super::strategy::{GradStrategy, MrnStrategy, PmStrategy, SparsifyStrategy};
+    match *m {
+        Method::FedAvg => Box::new(GradStrategy { codec: GradCodec::Identity }),
+        Method::Grad(codec) => Box::new(GradStrategy { codec }),
+        Method::FedMrn { mask_type, mode } => Box::new(MrnStrategy { mask_type, mode }),
+        Method::FedPm => Box::new(PmStrategy),
+        Method::FedSparsify { target } => Box::new(SparsifyStrategy { target }),
+    }
+}
+
+/// Resolve a method name straight to its boxed [`Strategy`].
+pub fn resolve(name: &str, noise: NoiseDist) -> Result<Box<dyn Strategy>> {
+    Ok(strategy_for(&parse(name, noise)?))
+}
+
+/// Resolve a [`RunConfig`]'s method to its strategy (convenience for the
+/// engine and harnesses holding a full config).
+pub fn strategy_for_config(cfg: &RunConfig) -> Box<dyn Strategy> {
+    strategy_for(&cfg.method)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NOISE: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+    /// Satellite: every registry name round-trips, and every
+    /// constructible Method variant prints a name parse() accepts back
+    /// to the same value — including the former offenders
+    /// `FedMrn { Binary/Signed, Sm/Pm/Dm }`.
+    #[test]
+    fn every_method_name_round_trips() {
+        // (a) table-driven: canonical names and aliases
+        for spec in &SPECS {
+            let m = parse(spec.name, NOISE).unwrap();
+            assert_eq!(canonical_name(&m), spec.name, "canonical {}", spec.name);
+            assert_eq!(parse(&canonical_name(&m), NOISE).unwrap(), m);
+            for alias in spec.aliases {
+                assert_eq!(parse(alias, NOISE).unwrap(), m, "alias {alias}");
+            }
+        }
+        // (b) exhaustive over the FedMrn mask × mode grid — the class
+        // the old name()/parse() asymmetry lived in
+        for mask_type in [MaskType::Binary, MaskType::Signed] {
+            for mode in [MrnMode::Psm, MrnMode::Sm, MrnMode::Pm, MrnMode::Dm] {
+                let m = Method::FedMrn { mask_type, mode };
+                let name = canonical_name(&m);
+                assert_eq!(
+                    parse(&name, NOISE).unwrap(),
+                    m,
+                    "fedmrn variant {mask_type:?}/{mode:?} via {name:?}"
+                );
+            }
+        }
+        // (c) the remaining enum arms at registry-default parameters
+        for m in [
+            Method::FedAvg,
+            Method::FedPm,
+            Method::FedSparsify { target: 0.97 },
+            Method::Grad(GradCodec::SignSgd),
+            Method::Grad(GradCodec::TernGrad),
+            Method::Grad(GradCodec::TopK { frac: 0.03 }),
+            Method::Grad(GradCodec::Drive),
+            Method::Grad(GradCodec::Eden),
+            Method::Grad(GradCodec::PostSm { dist: NOISE, mask_type: MaskType::Binary }),
+        ] {
+            assert_eq!(parse(&canonical_name(&m), NOISE).unwrap(), m);
+        }
+    }
+
+    /// The two Method values no registry entry produces don't round-trip
+    /// to PartialEq-equal values — they *normalize* to the registry form
+    /// with identical behavior (same strategy, same name).
+    #[test]
+    fn non_registry_constructions_normalize() {
+        let m = Method::Grad(GradCodec::Identity);
+        assert_eq!(canonical_name(&m), "fedavg");
+        assert_eq!(parse(&canonical_name(&m), NOISE).unwrap(), Method::FedAvg);
+        assert_eq!(strategy_for(&m).name(), "fedavg");
+        let m = Method::Grad(GradCodec::PostSm {
+            dist: NOISE,
+            mask_type: MaskType::Signed,
+        });
+        assert_eq!(canonical_name(&m), "postsm");
+        assert_eq!(
+            parse(&canonical_name(&m), NOISE).unwrap(),
+            Method::Grad(GradCodec::PostSm { dist: NOISE, mask_type: MaskType::Binary })
+        );
+    }
+
+    #[test]
+    fn table1_roster_is_paper_order() {
+        assert_eq!(
+            table1_names(),
+            vec![
+                "fedavg", "fedpm", "fedsparsify", "signsgd", "topk", "terngrad",
+                "drive", "eden", "fedmrn", "fedmrns"
+            ]
+        );
+        let roster = table1_roster(NOISE);
+        assert_eq!(roster.len(), 10);
+        for (m, name) in roster.iter().zip(table1_names()) {
+            assert_eq!(canonical_name(m), name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_known_methods() {
+        let err = parse("nope", NOISE).unwrap_err().to_string();
+        assert!(err.contains("unknown method"), "{err}");
+        assert!(err.contains("fedmrn"), "{err}");
+    }
+
+    #[test]
+    fn strategies_report_canonical_names() {
+        for spec in &SPECS {
+            let m = parse(spec.name, NOISE).unwrap();
+            assert_eq!(strategy_for(&m).name(), spec.name, "{}", spec.name);
+        }
+        // FedAvg and Grad(Identity) share one strategy (and one name)
+        assert_eq!(strategy_for(&Method::Grad(GradCodec::Identity)).name(), "fedavg");
+    }
+}

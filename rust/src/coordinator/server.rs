@@ -1,12 +1,24 @@
-//! The federated server: round loop, aggregation, evaluation.
+//! The federated server: a method-agnostic round engine.
 //!
-//! Implements Algorithm 1's server side. Aggregation follows Eq. 3 / Eq. 5
-//! with data-proportional weights `p'_k = n_k / Σ_{j∈C_t} n_j`. For
-//! FedMRN payloads the reconstruction `G(s_k) ⊙ m_k` is fused into the
-//! accumulator without materialising per-client updates
-//! ([`crate::compress::fedmrn::accumulate`]).
+//! Implements Algorithm 1's server side with **no per-method dispatch**:
+//! the method resolves once (through [`super::registry`]) to a
+//! [`Strategy`], and each round the engine
+//!
+//! 1. selects clients and broadcasts the global state (metered),
+//! 2. runs every selected client's [`Strategy::local_train`] on the
+//!    worker pool,
+//! 3. **streams** each uplink into the round's
+//!    [`super::strategy::Aggregator`] *as it arrives* — wire metering,
+//!    decode and validation happen per uplink, decoupled from client
+//!    completion order ([`parallel::run_streamed`]),
+//! 4. folds the round into `w` with `finish` (byte-identical to the
+//!    sequential client-order fold for any arrival order, thread count
+//!    and tile setting — see the `strategy` module docs).
+//!
+//! Aggregation weights follow Eq. 3 / Eq. 5: `p'_k = n_k / Σ_{j∈C_t}
+//! n_j`, computable before any client finishes because shard sizes are
+//! fixed — which is what lets ingestion start immediately.
 
-use crate::compress::{fedmrn, fedpm as fedpm_codec, sparsify};
 use crate::data::{partition, Split};
 use crate::error::{Error, Result};
 use crate::noise::{derive_seed, NoiseGen};
@@ -15,9 +27,11 @@ use crate::stats::Timer;
 use crate::transport::Meter;
 
 use super::client::{self, Batches, TrainOutcome};
-use super::config::{Method, RunConfig};
+use super::config::RunConfig;
 use super::metrics::{RoundRecord, RunResult};
 use super::parallel;
+use super::registry;
+use super::strategy::{Strategy, TrainCtx};
 
 /// One federated training run in flight.
 pub struct Federation<'rt> {
@@ -26,10 +40,12 @@ pub struct Federation<'rt> {
     meta: ConfigMeta,
     split: Split,
     shards: Vec<Vec<usize>>,
-    /// Global parameters (FedAvg family) — for FedPM these are the mask
-    /// *scores* and `w_init` holds the frozen random weights.
+    /// Global state (FedAvg family: the parameters; FedPM: the mask
+    /// *scores*, with `w_init` holding the frozen random weights — the
+    /// shape is the resolved strategy's choice).
     pub w: Vec<f32>,
     w_init: Option<Vec<f32>>,
+    strategy: Box<dyn Strategy>,
     meter: Meter,
     rng: NoiseGen,
     /// Per-round client-visible logging (quiet by default).
@@ -55,19 +71,9 @@ impl<'rt> Federation<'rt> {
             meta.batch.min(split.train.n / cfg.n_clients.max(1)).max(1),
             cfg.seed,
         );
+        let strategy = registry::strategy_for(&cfg.method);
         let init = rt.init_params(&cfg.config)?;
-        let (w, w_init) = match cfg.method {
-            Method::FedPm => {
-                // global state = scores (zeros ⇒ p = 0.5); frozen random
-                // init weights scaled up (supermask convention: weights
-                // must be large enough that masked subnetworks are
-                // expressive)
-                let scores = vec![0.0f32; meta.param_dim];
-                let w_init: Vec<f32> = init.iter().map(|x| x * 3.0).collect();
-                (scores, Some(w_init))
-            }
-            _ => (init, None),
-        };
+        let (w, w_init) = strategy.init_global(init);
         let rng = NoiseGen::new(cfg.seed ^ 0xFEDE_7A7E);
         Ok(Federation {
             rt,
@@ -77,6 +83,7 @@ impl<'rt> Federation<'rt> {
             shards,
             w,
             w_init,
+            strategy,
             meter: Meter::new(),
             rng,
             verbose: false,
@@ -96,17 +103,10 @@ impl<'rt> Federation<'rt> {
         ids
     }
 
-    /// Model parameters used for evaluation (FedPM: thresholded masked
-    /// init weights; everyone else: `w` itself).
+    /// Model parameters used for evaluation (the strategy's choice —
+    /// FedPM thresholds the masked init weights; everyone else uses `w`).
     pub fn eval_params(&self) -> Vec<f32> {
-        match (&self.cfg.method, &self.w_init) {
-            (Method::FedPm, Some(w_init)) => {
-                let mut out = vec![0.0f32; self.w.len()];
-                fedpm_codec::effective_params(w_init, &self.w, &mut out);
-                out
-            }
-            _ => self.w.clone(),
-        }
+        self.strategy.eval_params(&self.w, self.w_init.as_deref())
     }
 
     /// Run one round; returns its record.
@@ -116,12 +116,20 @@ impl<'rt> Federation<'rt> {
     /// client randomness — batch shuffling and training PRNG keys — is
     /// drawn from a per-(client, round) stream derived with
     /// [`derive_seed`], so the uplink payloads do not depend on client
-    /// execution order and the two paths produce identical rounds.
+    /// execution order; the streaming aggregators guarantee the fold
+    /// doesn't either. The two paths therefore produce identical rounds.
     pub fn round(&mut self, r: usize) -> Result<RoundRecord> {
         let t_round = Timer::new();
         self.meter.begin_round();
         let selected = self.select_clients();
-        self.meter.downlink_dense(self.meta.param_dim, selected.len());
+        let d = self.meta.param_dim;
+        self.meter.downlink_dense(d, selected.len());
+        // Data-proportional weights are known up front (shard sizes are
+        // fixed), so ingestion can start with the first arrival.
+        let total: f64 = selected.iter().map(|&c| self.shards[c].len() as f64).sum();
+
+        let mut agg = self.strategy.aggregator(&self.cfg);
+        agg.begin(r, d, selected.len())?;
 
         let rt = self.rt;
         let meta = &self.meta;
@@ -130,7 +138,10 @@ impl<'rt> Federation<'rt> {
         let shards = &self.shards;
         let w = &self.w;
         let w_init = self.w_init.as_deref();
-        let run_one = |c: usize| -> Result<TrainOutcome> {
+        let strategy: &dyn Strategy = self.strategy.as_ref();
+        let selected = &selected;
+        let run_one = |i: usize| -> Result<TrainOutcome> {
+            let c = selected[i];
             let mut crng =
                 NoiseGen::new(derive_seed(cfg.seed, c as u64, r as u64, 2));
             let batches: Batches = client::make_batches(
@@ -141,39 +152,43 @@ impl<'rt> Federation<'rt> {
                 &mut crng,
             )?;
             let noise_seed = derive_seed(cfg.seed, c as u64, r as u64, 1);
-            client::run_client(
-                rt,
+            let mut ctx = TrainCtx {
                 meta,
-                &cfg.method,
                 cfg,
-                r,
+                round: r,
                 w,
-                w_init.map(|wi| (wi, w.as_slice())),
-                &batches,
+                w_init,
+                batches: &batches,
                 noise_seed,
-                &mut crng,
-            )
+                rng: &mut crng,
+            };
+            strategy.local_train(rt, &mut ctx)
         };
-        let results: Vec<TrainOutcome> = if self.cfg.threads == 1 {
-            selected.iter().map(|&c| run_one(c)).collect::<Result<_>>()?
-        } else {
-            parallel::run_indexed(selected.len(), self.cfg.threads, |i| {
-                run_one(selected[i])
-            })?
-        };
-        let mut outcomes: Vec<(usize, TrainOutcome)> = Vec::new();
-        let mut train_ms = 0.0;
-        let mut compress_ms = 0.0;
-        for (&c, outcome) in selected.iter().zip(results) {
-            train_ms += outcome.train_ms;
-            compress_ms += outcome.compress_ms;
-            outcomes.push((c, outcome));
-        }
-        let train_loss = crate::stats::mean(
-            &outcomes.iter().map(|(_, o)| o.train_loss).collect::<Vec<_>>(),
-        );
 
-        self.aggregate(&outcomes, r)?;
+        let mut losses = vec![f64::NAN; selected.len()];
+        let mut train_ms = 0.0f64;
+        let mut compress_ms = 0.0f64;
+        {
+            let meter = &mut self.meter;
+            let agg = &mut agg;
+            let losses = &mut losses;
+            parallel::run_streamed(
+                selected.len(),
+                cfg.threads,
+                run_one,
+                |slot, outcome: TrainOutcome| {
+                    train_ms += outcome.train_ms;
+                    compress_ms += outcome.compress_ms;
+                    losses[slot] = outcome.train_loss;
+                    let decoded = meter.uplink(&outcome.payload)?;
+                    let scale = (shards[selected[slot]].len() as f64 / total) as f32;
+                    agg.ingest(slot, decoded, scale)
+                },
+            )?;
+        }
+        let train_loss = crate::stats::mean(&losses);
+
+        agg.finish(&mut self.w)?;
 
         let do_eval = self.cfg.eval_every > 0
             && ((r + 1) % self.cfg.eval_every == 0 || r + 1 == self.cfg.rounds);
@@ -190,6 +205,7 @@ impl<'rt> Federation<'rt> {
             test_loss,
             test_acc,
             uplink_bytes: *self.meter.round_uplink.last().unwrap_or(&0),
+            downlink_bytes: *self.meter.round_downlink.last().unwrap_or(&0),
             train_ms,
             compress_ms,
         };
@@ -206,81 +222,6 @@ impl<'rt> Federation<'rt> {
             );
         }
         Ok(rec)
-    }
-
-    /// Aggregate the selected clients' uplinks into the global state.
-    fn aggregate(&mut self, outcomes: &[(usize, TrainOutcome)], _round: usize) -> Result<()> {
-        let d = self.meta.param_dim;
-        let total: f64 = outcomes.iter().map(|(_, o)| o.n_samples as f64).sum();
-        match self.cfg.method {
-            Method::FedPm => {
-                // collect mask payloads through the metered wire, then
-                // re-estimate scores
-                let mut decoded = Vec::with_capacity(outcomes.len());
-                for (_, o) in outcomes {
-                    decoded.push(self.meter.uplink(&o.payload)?);
-                }
-                self.w = fedpm_codec::aggregate(&decoded, d)?;
-            }
-            Method::FedSparsify { .. } => {
-                // weighted average of the (sparse) client weight vectors
-                let mut acc = vec![0.0f32; d];
-                for (_, o) in outcomes {
-                    let p = self.meter.uplink(&o.payload)?;
-                    let w_k = sparsify::decode_sparse(&p, d)?;
-                    let scale = (o.n_samples as f64 / total) as f32;
-                    for (a, v) in acc.iter_mut().zip(&w_k) {
-                        *a += scale * v;
-                    }
-                }
-                self.w = acc;
-            }
-            Method::FedMrn { mask_type, .. } => {
-                // Eq. 5 with the fused accumulate (no per-client update
-                // vectors): meter + decode on the wire in client order,
-                // then hand the mask/seed pairs to the sharded
-                // aggregator — byte-identical for any thread count.
-                let mut decoded = Vec::with_capacity(outcomes.len());
-                for (_, o) in outcomes {
-                    decoded.push(self.meter.uplink(&o.payload)?);
-                }
-                let updates: Vec<parallel::MaskedUpdate> = decoded
-                    .iter()
-                    .zip(outcomes.iter())
-                    .map(|(p, (_, o))| {
-                        let (seed, bits) = fedmrn::parts(p, d)?;
-                        Ok(parallel::MaskedUpdate {
-                            seed,
-                            bits,
-                            scale: (o.n_samples as f64 / total) as f32,
-                        })
-                    })
-                    .collect::<Result<_>>()?;
-                parallel::aggregate_masked(
-                    &updates,
-                    self.cfg.noise,
-                    mask_type,
-                    &mut self.w,
-                    self.cfg.threads,
-                    self.cfg.tile,
-                )?;
-            }
-            Method::FedAvg | Method::Grad(_) => {
-                let codec = match self.cfg.method {
-                    Method::Grad(c) => c,
-                    _ => crate::compress::GradCodec::Identity,
-                };
-                for (_, o) in outcomes {
-                    let p = self.meter.uplink(&o.payload)?;
-                    let update = codec.decode(&p, d)?;
-                    let scale = (o.n_samples as f64 / total) as f32;
-                    for (a, v) in self.w.iter_mut().zip(&update) {
-                        *a += scale * v;
-                    }
-                }
-            }
-        }
-        Ok(())
     }
 
     /// Run the full configured number of rounds.
@@ -307,6 +248,7 @@ impl<'rt> Federation<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Method;
     use crate::data::synthetic::{make_images, ImageSpec};
     use crate::noise::NoiseDist;
 

@@ -1,0 +1,816 @@
+//! The method-dispatch API: client-side [`Strategy`] and server-side
+//! streaming [`Aggregator`] traits, plus one implementation pair per
+//! method family.
+//!
+//! A federated method plugs into the [`super::server::Federation`] engine
+//! through two object-safe traits instead of growing `match` arms in the
+//! round loop:
+//!
+//! * [`Strategy`] owns the *client* side — given a [`TrainCtx`] (global
+//!   state, batches, per-(client, round) RNG stream) it runs local
+//!   training and produces the uplink [`TrainOutcome`]. It also owns the
+//!   method's server-side state shape ([`Strategy::init_global`],
+//!   [`Strategy::eval_params`]) and manufactures a fresh per-round
+//!   [`Aggregator`].
+//! * [`Aggregator`] owns the *server* side with a **streaming** contract:
+//!   [`Aggregator::begin`] arms a round, [`Aggregator::ingest`] consumes
+//!   one client uplink *as it arrives* (any order), and
+//!   [`Aggregator::finish`] folds the round into the global weights.
+//!
+//! # Ordering guarantee
+//!
+//! `ingest` may be called in **any order** — client completion order is
+//! decoupled from aggregation, which is the prerequisite for overlapping
+//! round `r+1`'s training with round `r`'s aggregation tail (ROADMAP:
+//! multi-round pipelining). Each call carries the uplink's `slot` (the
+//! client's index in the round's selection order); the contract is that
+//! the final weights are **byte-identical** to the sequential
+//! slot-ordered fold for every arrival order. Implementations meet it in
+//! one of three ways:
+//!
+//! * **commutative streaming** ([`PmAggregator`]): integer mask counts
+//!   are order-independent exactly, so ingest folds immediately;
+//! * **slot-buffered fold** ([`GradAggregator`], [`SparsifyAggregator`]):
+//!   ingest validates the wire framing (variant, dimension, bounds) and
+//!   parks the *compact* payload in its slot; `finish` decodes one
+//!   client at a time and replays the non-associative f32 fold in slot
+//!   order — peak memory stays O(d) plus the round's wire bytes;
+//! * **deferred batch** ([`MrnAggregator`]): ingest validates and strips
+//!   the payload to `(seed, bits, scale)`; `finish` hands the whole round
+//!   to the sharded fused regen+accumulate kernel
+//!   ([`super::parallel::aggregate_masked`]) in slot order, preserving
+//!   its single parallel pass (and its byte-identity across any
+//!   `(threads, tile)`).
+//!
+//! Every `ingest` validates its payload eagerly: a payload variant
+//! belonging to another method is an [`Error::Codec`] at ingest time —
+//! never a panic, never a silent skip.
+
+use crate::compress::{fedmrn, fedpm as fedpm_codec, sparsify, GradCodec, MaskType};
+use crate::error::{Error, Result};
+use crate::noise::{NoiseDist, NoiseGen};
+use crate::runtime::{ConfigMeta, Runtime};
+use crate::stats::Timer;
+use crate::transport::Payload;
+
+use super::client::{self, Batches, TrainOutcome};
+use super::config::{MrnMode, RunConfig};
+use super::parallel;
+
+/// Everything one client's local round sees: the broadcast global state,
+/// its data shard (already batched), and its derived randomness. Built
+/// by the engine per (client, round); identical on the sequential and
+/// worker-pool paths.
+pub struct TrainCtx<'a> {
+    pub meta: &'a ConfigMeta,
+    pub cfg: &'a RunConfig,
+    pub round: usize,
+    /// Global state broadcast this round (FedPM: the mask scores).
+    pub w: &'a [f32],
+    /// Frozen companion state, when the method has one (FedPM: the
+    /// scaled random init weights).
+    pub w_init: Option<&'a [f32]>,
+    pub batches: &'a Batches,
+    /// Seed for shared client/server randomness (`G(s)` regeneration,
+    /// codec rotations) — the only randomness the server can replay.
+    pub noise_seed: u64,
+    /// The per-(client, round) PRNG stream for everything else
+    /// (Bernoulli keys, shuffles).
+    pub rng: &'a mut NoiseGen,
+}
+
+/// Client-side half of a federated method. Implementations are stateless
+/// per client (all per-client state rides in [`TrainCtx`]), so one
+/// instance serves every worker thread concurrently.
+pub trait Strategy: Send + Sync {
+    /// Canonical registry name ([`super::registry`]).
+    fn name(&self) -> String;
+
+    /// Run one client's local round and produce its uplink.
+    fn local_train(&self, rt: &Runtime, ctx: &mut TrainCtx<'_>) -> Result<TrainOutcome>;
+
+    /// A fresh aggregator for one round of this method.
+    fn aggregator(&self, cfg: &RunConfig) -> Box<dyn Aggregator>;
+
+    /// Server-side global state from the model's init parameters:
+    /// `(w, w_init)`. Default: the init parameters themselves, no
+    /// companion state.
+    fn init_global(&self, init: Vec<f32>) -> (Vec<f32>, Option<Vec<f32>>) {
+        (init, None)
+    }
+
+    /// Model parameters used for evaluation. Default: `w` itself.
+    fn eval_params(&self, w: &[f32], _w_init: Option<&[f32]>) -> Vec<f32> {
+        w.to_vec()
+    }
+}
+
+/// Server-side streaming consumer of one round's uplinks. See the module
+/// docs for the ordering guarantee.
+pub trait Aggregator: Send {
+    /// Arm the aggregator for round `round` over parameter dimension `d`,
+    /// expecting exactly `n_uplinks` ingests (one per selected client —
+    /// known before any client finishes).
+    fn begin(&mut self, round: usize, d: usize, n_uplinks: usize) -> Result<()>;
+
+    /// Consume one client uplink as it arrives. `slot` is the client's
+    /// index in the round's selection order (the canonical fold order,
+    /// `< n_uplinks`); `scale` is its data-proportional weight `p'_k`.
+    /// Payload-variant or dimension mismatches are [`Error::Codec`]s;
+    /// duplicate or out-of-range slots are [`Error::Config`]s.
+    fn ingest(&mut self, slot: usize, payload: Payload, scale: f32) -> Result<()>;
+
+    /// Fold the round into the global weights. Errors if any of the
+    /// promised `n_uplinks` slots never arrived.
+    fn finish(&mut self, w: &mut [f32]) -> Result<()>;
+}
+
+/// Slot-indexed parking buffer shared by the order-sensitive
+/// aggregators: `put` rejects duplicates and out-of-range slots,
+/// `take_ordered` rejects any shortfall against the promised count —
+/// including trailing gaps.
+struct Slots<T> {
+    v: Vec<Option<T>>,
+}
+
+impl<T> Slots<T> {
+    fn new() -> Slots<T> {
+        Slots { v: Vec::new() }
+    }
+
+    /// Arm for `expected` slots (all initially vacant).
+    fn reset(&mut self, expected: usize) {
+        self.v.clear();
+        self.v.resize_with(expected, || None);
+    }
+
+    /// Validate `slot` without claiming it (range + not yet filled).
+    fn check_vacant(&self, slot: usize) -> Result<()> {
+        if slot >= self.v.len() {
+            return Err(Error::Config(format!(
+                "aggregator: slot {slot} out of range ({} expected)",
+                self.v.len()
+            )));
+        }
+        if self.v[slot].is_some() {
+            return Err(Error::Config(format!(
+                "aggregator: duplicate uplink for slot {slot}"
+            )));
+        }
+        Ok(())
+    }
+
+    fn put(&mut self, slot: usize, t: T) -> Result<()> {
+        self.check_vacant(slot)?;
+        self.v[slot] = Some(t);
+        Ok(())
+    }
+
+    fn take_ordered(&mut self) -> Result<Vec<T>> {
+        let v = std::mem::take(&mut self.v);
+        let n = v.len();
+        let out: Vec<T> = v.into_iter().flatten().collect();
+        if out.len() != n {
+            return Err(Error::Config(format!(
+                "aggregator: only {} of {n} promised uplinks arrived",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+fn check_begun(d: usize) -> Result<usize> {
+    if d == 0 {
+        return Err(Error::Config("aggregator: ingest before begin".into()));
+    }
+    Ok(d)
+}
+
+// ---------------------------------------------------------------------------
+// FedAvg + post-training gradient codecs
+// ---------------------------------------------------------------------------
+
+/// Plain local SGD + a post-training [`GradCodec`] on the dense delta.
+/// `Identity` is FedAvg itself.
+pub struct GradStrategy {
+    pub codec: GradCodec,
+}
+
+impl Strategy for GradStrategy {
+    fn name(&self) -> String {
+        self.codec.name().into()
+    }
+
+    fn local_train(&self, rt: &Runtime, ctx: &mut TrainCtx<'_>) -> Result<TrainOutcome> {
+        let t_all = Timer::new();
+        let (w_local, loss) = client::train_plain(
+            rt,
+            ctx.meta,
+            ctx.w,
+            ctx.batches,
+            ctx.cfg.local_epochs,
+            ctx.cfg.lr,
+        )?;
+        let t = Timer::new();
+        let delta: Vec<f32> = w_local.iter().zip(ctx.w).map(|(a, b)| a - b).collect();
+        let payload = self.codec.encode(&delta, ctx.noise_seed);
+        let compress_ms = t.ms();
+        Ok(TrainOutcome {
+            payload,
+            train_loss: loss,
+            train_ms: t_all.ms() - compress_ms,
+            compress_ms,
+            n_samples: ctx.batches.n_samples,
+        })
+    }
+
+    fn aggregator(&self, _cfg: &RunConfig) -> Box<dyn Aggregator> {
+        Box::new(GradAggregator { codec: self.codec, d: 0, slots: Slots::new() })
+    }
+}
+
+/// Slot-buffered dense fold: wire-level validation at ingest
+/// ([`GradCodec::validate`] — variant + framing, no decode), the
+/// *compact* payload parks in its slot (for the 1-bit codecs that is
+/// ~d/32 bytes, not a decoded 4d-byte vector), and finish decodes +
+/// folds `w += scale * update` in slot order — the pre-refactor
+/// arithmetic exactly.
+pub struct GradAggregator {
+    codec: GradCodec,
+    d: usize,
+    slots: Slots<(Payload, f32)>,
+}
+
+impl Aggregator for GradAggregator {
+    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.d = d;
+        self.slots.reset(n_uplinks);
+        Ok(())
+    }
+
+    fn ingest(&mut self, slot: usize, payload: Payload, scale: f32) -> Result<()> {
+        let d = check_begun(self.d)?;
+        self.codec.validate(&payload, d)?;
+        self.slots.put(slot, (payload, scale))
+    }
+
+    fn finish(&mut self, w: &mut [f32]) -> Result<()> {
+        let d = self.d;
+        for (payload, scale) in self.slots.take_ordered()? {
+            let update = self.codec.decode(&payload, d)?;
+            for (a, v) in w.iter_mut().zip(&update) {
+                *a += scale * v;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FedMRN
+// ---------------------------------------------------------------------------
+
+/// FedMRN: learn a 1-bit mask over seeded noise during local training
+/// (Algorithm 1); uplink is `{seed, packed bits}`.
+pub struct MrnStrategy {
+    pub mask_type: MaskType,
+    pub mode: MrnMode,
+}
+
+impl Strategy for MrnStrategy {
+    fn name(&self) -> String {
+        super::registry::canonical_name(&super::config::Method::FedMrn {
+            mask_type: self.mask_type,
+            mode: self.mode,
+        })
+    }
+
+    fn local_train(&self, rt: &Runtime, ctx: &mut TrainCtx<'_>) -> Result<TrainOutcome> {
+        let t_all = Timer::new();
+        let (payload, loss, compress_ms) = client::train_mrn(
+            rt,
+            ctx.meta,
+            ctx.w,
+            ctx.batches,
+            ctx.cfg.local_epochs,
+            ctx.cfg.lr,
+            self.mask_type,
+            self.mode,
+            ctx.cfg.noise,
+            ctx.noise_seed,
+            ctx.rng,
+        )?;
+        Ok(TrainOutcome {
+            payload,
+            train_loss: loss,
+            train_ms: t_all.ms() - compress_ms,
+            compress_ms,
+            n_samples: ctx.batches.n_samples,
+        })
+    }
+
+    fn aggregator(&self, cfg: &RunConfig) -> Box<dyn Aggregator> {
+        Box::new(MrnAggregator {
+            dist: cfg.noise,
+            mask_type: self.mask_type,
+            threads: cfg.threads,
+            tile: cfg.tile,
+            d: 0,
+            slots: Slots::new(),
+        })
+    }
+}
+
+/// Deferred-batch FedMRN aggregation (Eq. 5): ingest validates and strips
+/// each payload to `(seed, bits, scale)`; finish runs one sharded fused
+/// regen+accumulate pass in slot order — byte-identical for any
+/// `(threads, tile)` ([`parallel::aggregate_masked`]).
+pub struct MrnAggregator {
+    dist: NoiseDist,
+    mask_type: MaskType,
+    threads: usize,
+    tile: usize,
+    d: usize,
+    slots: Slots<(u64, Vec<u64>, f32)>,
+}
+
+impl Aggregator for MrnAggregator {
+    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.d = d;
+        self.slots.reset(n_uplinks);
+        Ok(())
+    }
+
+    fn ingest(&mut self, slot: usize, payload: Payload, scale: f32) -> Result<()> {
+        let d = check_begun(self.d)?;
+        // validate variant + dimension + bit length now, own the bits
+        fedmrn::parts(&payload, d)?;
+        let Payload::MaskedSeed { seed, bits, .. } = payload else {
+            unreachable!("parts() accepted a non-MaskedSeed payload");
+        };
+        self.slots.put(slot, (seed, bits, scale))
+    }
+
+    fn finish(&mut self, w: &mut [f32]) -> Result<()> {
+        let parked = self.slots.take_ordered()?;
+        let updates: Vec<parallel::MaskedUpdate> = parked
+            .iter()
+            .map(|(seed, bits, scale)| parallel::MaskedUpdate {
+                seed: *seed,
+                bits,
+                scale: *scale,
+            })
+            .collect();
+        parallel::aggregate_masked(
+            &updates,
+            self.dist,
+            self.mask_type,
+            w,
+            self.threads,
+            self.tile,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FedPM
+// ---------------------------------------------------------------------------
+
+/// FedPM: supermask scores over frozen init weights; uplink is a sampled
+/// Bernoulli mask.
+pub struct PmStrategy;
+
+impl Strategy for PmStrategy {
+    fn name(&self) -> String {
+        "fedpm".into()
+    }
+
+    fn local_train(&self, rt: &Runtime, ctx: &mut TrainCtx<'_>) -> Result<TrainOutcome> {
+        let w_init = ctx
+            .w_init
+            .ok_or_else(|| Error::Config("fedpm: frozen init state missing".into()))?;
+        let t_all = Timer::new();
+        let (payload, loss, compress_ms) = client::train_fedpm(
+            rt,
+            ctx.meta,
+            w_init,
+            ctx.w,
+            ctx.batches,
+            ctx.cfg.local_epochs,
+            ctx.cfg.lr,
+            ctx.rng,
+        )?;
+        Ok(TrainOutcome {
+            payload,
+            train_loss: loss,
+            train_ms: t_all.ms() - compress_ms,
+            compress_ms,
+            n_samples: ctx.batches.n_samples,
+        })
+    }
+
+    fn aggregator(&self, _cfg: &RunConfig) -> Box<dyn Aggregator> {
+        Box::new(PmAggregator { d: 0, counts: Vec::new(), seen: Slots::new(), k: 0 })
+    }
+
+    /// Global state = mask scores (zeros ⇒ p = 0.5); frozen random init
+    /// weights scaled up (supermask convention: weights must be large
+    /// enough that masked subnetworks are expressive).
+    fn init_global(&self, init: Vec<f32>) -> (Vec<f32>, Option<Vec<f32>>) {
+        let scores = vec![0.0f32; init.len()];
+        let w_init: Vec<f32> = init.iter().map(|x| x * 3.0).collect();
+        (scores, Some(w_init))
+    }
+
+    /// Thresholded masked init weights.
+    fn eval_params(&self, w: &[f32], w_init: Option<&[f32]>) -> Vec<f32> {
+        match w_init {
+            Some(w_init) => {
+                let mut out = vec![0.0f32; w.len()];
+                fedpm_codec::effective_params(w_init, w, &mut out);
+                out
+            }
+            None => w.to_vec(),
+        }
+    }
+}
+
+/// Commutative streaming FedPM aggregation: integer mask counts fold at
+/// ingest (exactly order-independent); finish re-estimates the scores.
+/// The data-proportional `scale` is ignored — FedPM aggregates an
+/// unweighted mean of the sampled masks (Isik et al., §3). Slots are
+/// still tracked (as a seen-set) so duplicate or missing uplinks are
+/// errors here like everywhere else.
+pub struct PmAggregator {
+    d: usize,
+    counts: Vec<u32>,
+    seen: Slots<()>,
+    k: usize,
+}
+
+impl Aggregator for PmAggregator {
+    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.d = d;
+        self.counts.clear();
+        self.counts.resize(d, 0);
+        self.seen.reset(n_uplinks);
+        self.k = 0;
+        Ok(())
+    }
+
+    fn ingest(&mut self, slot: usize, payload: Payload, _scale: f32) -> Result<()> {
+        let d = check_begun(self.d)?;
+        // reject duplicate/out-of-range slots *before* folding so the
+        // counts never double-ingest, and validate the payload before
+        // claiming the slot (accumulate_counts checks variant, d and
+        // bit length before touching counts)
+        self.seen.check_vacant(slot)?;
+        fedpm_codec::accumulate_counts(&payload, d, &mut self.counts)?;
+        self.seen.put(slot, ())?;
+        self.k += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self, w: &mut [f32]) -> Result<()> {
+        self.seen.take_ordered()?;
+        if self.k == 0 {
+            return Err(Error::Codec("fedpm: no payloads".into()));
+        }
+        let scores = fedpm_codec::scores_from_counts(&self.counts, self.k);
+        w.copy_from_slice(&scores);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FedSparsify
+// ---------------------------------------------------------------------------
+
+/// FedSparsify: progressive magnitude pruning during local training;
+/// uplink is the surviving (index, value) pairs.
+pub struct SparsifyStrategy {
+    pub target: f32,
+}
+
+impl Strategy for SparsifyStrategy {
+    fn name(&self) -> String {
+        "fedsparsify".into()
+    }
+
+    fn local_train(&self, rt: &Runtime, ctx: &mut TrainCtx<'_>) -> Result<TrainOutcome> {
+        let t_all = Timer::new();
+        // prune during local training: train one epoch, prune to the
+        // round-scheduled sparsity, repeat; upload surviving weights
+        let sched =
+            sparsify::schedule(self.target, ctx.round + 1, ctx.cfg.rounds.max(1));
+        let mut w_local = ctx.w.to_vec();
+        let mut loss = 0.0;
+        for _ in 0..ctx.cfg.local_epochs {
+            let (w2, l) =
+                client::train_plain(rt, ctx.meta, &w_local, ctx.batches, 1, ctx.cfg.lr)?;
+            w_local = w2;
+            sparsify::prune_to_sparsity(&mut w_local, sched);
+            loss = l;
+        }
+        let t = Timer::new();
+        let payload = sparsify::encode_sparse(&w_local);
+        let compress_ms = t.ms();
+        Ok(TrainOutcome {
+            payload,
+            train_loss: loss,
+            train_ms: t_all.ms() - compress_ms,
+            compress_ms,
+            n_samples: ctx.batches.n_samples,
+        })
+    }
+
+    fn aggregator(&self, _cfg: &RunConfig) -> Box<dyn Aggregator> {
+        Box::new(SparsifyAggregator { d: 0, slots: Slots::new() })
+    }
+}
+
+/// Slot-buffered sparse-model averaging: framing + index-bounds
+/// validation at ingest ([`sparsify::validate_sparse`], O(nnz)), the
+/// compact sparse payload parks in its slot, and finish replaces `w`
+/// with the slot-ordered weighted average (decoding one client at a
+/// time — the pre-refactor arithmetic exactly).
+pub struct SparsifyAggregator {
+    d: usize,
+    slots: Slots<(Payload, f32)>,
+}
+
+impl Aggregator for SparsifyAggregator {
+    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.d = d;
+        self.slots.reset(n_uplinks);
+        Ok(())
+    }
+
+    fn ingest(&mut self, slot: usize, payload: Payload, scale: f32) -> Result<()> {
+        let d = check_begun(self.d)?;
+        sparsify::validate_sparse(&payload, d)?;
+        self.slots.put(slot, (payload, scale))
+    }
+
+    fn finish(&mut self, w: &mut [f32]) -> Result<()> {
+        let d = self.d;
+        let mut acc = vec![0.0f32; d];
+        for (payload, scale) in self.slots.take_ordered()? {
+            let w_k = sparsify::decode_sparse(&payload, d)?;
+            for (a, v) in acc.iter_mut().zip(&w_k) {
+                *a += scale * v;
+            }
+        }
+        w.copy_from_slice(&acc);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry;
+    use super::*;
+    use crate::coordinator::config::Method;
+
+    const NOISE: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+    fn cfg_for(name: &str) -> RunConfig {
+        let m = Method::parse(name, NOISE).unwrap();
+        let mut cfg = RunConfig::new("smoke_mlp", m);
+        cfg.noise = NOISE;
+        cfg
+    }
+
+    fn mask(d: usize, seed: u64, mt: MaskType) -> Vec<f32> {
+        let mut g = NoiseGen::new(seed);
+        (0..d)
+            .map(|_| {
+                let b = g.next_u64() & 1 == 1;
+                match mt {
+                    MaskType::Binary => {
+                        if b {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    }
+                    MaskType::Signed => {
+                        if b {
+                            1.0
+                        } else {
+                            -1.0
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
+    fn variant_tag(p: &Payload) -> &'static str {
+        match p {
+            Payload::Dense(_) => "dense",
+            Payload::MaskedSeed { .. } => "masked_seed",
+            Payload::SignBits { .. } => "sign",
+            Payload::Ternary { .. } => "ternary",
+            Payload::Sparse { .. } => "sparse",
+            Payload::MaskBits { .. } => "mask_bits",
+        }
+    }
+
+    /// A well-formed uplink payload for `name` at dimension `d`, built
+    /// the way that method's client would.
+    fn own_payload(name: &str, d: usize) -> Payload {
+        let mut dense = vec![0.0f32; d];
+        NoiseGen::new(0x0DD).fill(NOISE, &mut dense);
+        match name {
+            "fedavg" => Payload::Dense(dense),
+            "signsgd" => GradCodec::SignSgd.encode(&dense, 3),
+            "terngrad" => GradCodec::TernGrad.encode(&dense, 3),
+            "topk" => GradCodec::TopK { frac: 0.03 }.encode(&dense, 3),
+            "drive" => GradCodec::Drive.encode(&dense, 3),
+            "eden" => GradCodec::Eden.encode(&dense, 3),
+            "postsm" => GradCodec::PostSm { dist: NOISE, mask_type: MaskType::Binary }
+                .encode(&dense, 3),
+            "fedmrn" => {
+                fedmrn::make_payload(&mask(d, 1, MaskType::Binary), 7, MaskType::Binary)
+            }
+            "fedmrns" => {
+                fedmrn::make_payload(&mask(d, 1, MaskType::Signed), 7, MaskType::Signed)
+            }
+            "fedpm" => fedpm_codec::make_payload(&mask(d, 2, MaskType::Binary)),
+            "fedsparsify" => {
+                sparsify::prune_to_sparsity(&mut dense, 0.9);
+                sparsify::encode_sparse(&dense)
+            }
+            other => panic!("no payload builder for {other}"),
+        }
+    }
+
+    /// Satellite: every Aggregator::ingest returns Error::Codec — never
+    /// panics, never silently skips — when handed another method's
+    /// payload variant, and accepts its own method's payload.
+    #[test]
+    fn ingest_rejects_foreign_payload_variants_with_codec_error() {
+        let d = 130usize;
+        let methods = [
+            "fedavg", "signsgd", "terngrad", "topk", "drive", "eden", "postsm",
+            "fedmrn", "fedmrns", "fedpm", "fedsparsify",
+        ];
+        for name in methods {
+            let cfg = cfg_for(name);
+            let strategy = registry::strategy_for_config(&cfg);
+            let own = own_payload(name, d);
+            let own_tag = variant_tag(&own);
+            let mut agg = strategy.aggregator(&cfg);
+            agg.begin(0, d, 1).unwrap();
+            agg.ingest(0, own, 1.0)
+                .unwrap_or_else(|e| panic!("{name} rejected its own payload: {e}"));
+            // every *other* wire variant must be a Codec error
+            for foreign in methods {
+                let p = own_payload(foreign, d);
+                if variant_tag(&p) == own_tag {
+                    continue;
+                }
+                let tag = variant_tag(&p);
+                let mut agg = strategy.aggregator(&cfg);
+                agg.begin(0, d, 1).unwrap();
+                match agg.ingest(0, p, 1.0) {
+                    Err(Error::Codec(_)) => {}
+                    other => panic!("{name} ingesting {tag}: want Err(Codec), got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_masked_seed_is_codec_error_at_ingest() {
+        // the bit-length check must fire at ingest time, not at finish
+        let d = 10_007usize;
+        let cfg = cfg_for("fedmrn");
+        let mut agg = registry::strategy_for_config(&cfg).aggregator(&cfg);
+        agg.begin(0, d, 1).unwrap();
+        let short = Payload::MaskedSeed { seed: 1, d: d as u32, bits: vec![u64::MAX; 10] };
+        match agg.ingest(0, short, 1.0) {
+            Err(Error::Codec(_)) => {}
+            other => panic!("want Err(Codec) at ingest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ingest_before_begin_is_an_error() {
+        let cfg = cfg_for("fedmrn");
+        let mut agg = registry::strategy_for_config(&cfg).aggregator(&cfg);
+        let p = fedmrn::make_payload(&mask(64, 1, MaskType::Binary), 7, MaskType::Binary);
+        assert!(agg.ingest(0, p, 1.0).is_err());
+    }
+
+    /// Duplicate slots, out-of-range slots, and *any* missing slot —
+    /// leading or trailing — are errors, for every aggregator family
+    /// (the slot-buffered, deferred-batch and commutative disciplines
+    /// all track the promised count from `begin`).
+    #[test]
+    fn duplicate_and_missing_slots_are_errors() {
+        let d = 64usize;
+        for name in ["fedavg", "fedmrn", "fedpm", "fedsparsify"] {
+            let cfg = cfg_for(name);
+            let strategy = registry::strategy_for_config(&cfg);
+            // duplicate slot
+            let mut agg = strategy.aggregator(&cfg);
+            agg.begin(0, d, 3).unwrap();
+            agg.ingest(1, own_payload(name, d), 0.5).unwrap();
+            assert!(agg.ingest(1, own_payload(name, d), 0.5).is_err(), "{name} dup");
+            // out-of-range slot
+            let mut agg = strategy.aggregator(&cfg);
+            agg.begin(0, d, 2).unwrap();
+            assert!(agg.ingest(2, own_payload(name, d), 0.5).is_err(), "{name} range");
+            // leading gap: slot 0 never arrives
+            let mut agg = strategy.aggregator(&cfg);
+            agg.begin(0, d, 2).unwrap();
+            agg.ingest(1, own_payload(name, d), 0.5).unwrap();
+            let mut w = vec![0.0f32; d];
+            assert!(agg.finish(&mut w).is_err(), "{name} leading gap");
+            // trailing gap: the last promised slot never arrives
+            let mut agg = strategy.aggregator(&cfg);
+            agg.begin(0, d, 2).unwrap();
+            agg.ingest(0, own_payload(name, d), 0.5).unwrap();
+            let mut w = vec![0.0f32; d];
+            assert!(agg.finish(&mut w).is_err(), "{name} trailing gap");
+        }
+    }
+
+    /// The ordering guarantee at unit scale: for every method family,
+    /// ingesting a round's uplinks forward, reversed, and rotated yields
+    /// byte-identical global weights. (The cross-(threads × tile) grid
+    /// lives in `tests/differential.rs`.)
+    #[test]
+    fn ingest_order_does_not_change_weights() {
+        let d = 1003usize;
+        let n = 5usize;
+        let scales: Vec<f32> = (0..n).map(|k| 1.0 / (k + 2) as f32).collect();
+        let arms: &[(&str, fn(usize, usize) -> Payload)] = &[
+            ("fedavg", |d, k| {
+                let mut v = vec![0.0f32; d];
+                NoiseGen::new(100 + k as u64).fill(NOISE, &mut v);
+                Payload::Dense(v)
+            }),
+            ("fedmrn", |d, k| {
+                fedmrn::make_payload(
+                    &mask(d, 200 + k as u64, MaskType::Binary),
+                    0xABC0 + k as u64,
+                    MaskType::Binary,
+                )
+            }),
+            ("fedpm", |d, k| {
+                fedpm_codec::make_payload(&mask(d, 300 + k as u64, MaskType::Binary))
+            }),
+            ("fedsparsify", |d, k| {
+                let mut v = vec![0.0f32; d];
+                NoiseGen::new(400 + k as u64).fill(NOISE, &mut v);
+                sparsify::prune_to_sparsity(&mut v, 0.9);
+                sparsify::encode_sparse(&v)
+            }),
+        ];
+        for (name, make) in arms {
+            let cfg = cfg_for(name);
+            let strategy = registry::strategy_for_config(&cfg);
+            let run = |order: &[usize]| -> Vec<f32> {
+                let mut agg = strategy.aggregator(&cfg);
+                agg.begin(0, d, n).unwrap();
+                for &slot in order {
+                    agg.ingest(slot, make(d, slot), scales[slot]).unwrap();
+                }
+                let mut w = vec![0.0f32; d];
+                NoiseGen::new(31337).fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+                agg.finish(&mut w).unwrap();
+                w
+            };
+            let forward: Vec<usize> = (0..n).collect();
+            let reversed: Vec<usize> = (0..n).rev().collect();
+            let rotated: Vec<usize> = (0..n).map(|i| (i + 2) % n).collect();
+            let want = run(&forward);
+            for order in [&reversed, &rotated] {
+                let got = run(order);
+                for i in 0..d {
+                    assert_eq!(
+                        want[i].to_bits(),
+                        got[i].to_bits(),
+                        "{name} order {order:?} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fedpm_init_and_eval_follow_supermask_convention() {
+        let s = PmStrategy;
+        let init = vec![1.0f32, -2.0, 0.5];
+        let (w, w_init) = s.init_global(init.clone());
+        assert_eq!(w, vec![0.0; 3]);
+        let w_init = w_init.unwrap();
+        assert_eq!(w_init, vec![3.0, -6.0, 1.5]);
+        let eval = s.eval_params(&[0.5, -0.5, 0.0], Some(&w_init));
+        assert_eq!(eval, vec![3.0, 0.0, 0.0]);
+    }
+}

@@ -1,15 +1,17 @@
 //! Figure 6 — local-training time vs update-compression time (§5.6).
 //!
-//! For each method: run one client's local round on a fixed workload,
-//! separating (a) local training time and (b) the time to produce the
-//! compressed uplink. Expected shape: EDEN/DRIVE pay visible
-//! compression latency (rotation of a d-vector); FedMRN's cost rides
-//! inside training and its finalize is negligible; FedPM/FedSparsify/
-//! FedMRN training is slightly slower than plain SGD.
+//! For each method: run one client's local round — the method's
+//! [`crate::coordinator::Strategy`], resolved through the registry, on a
+//! fixed workload — separating (a) local training time and (b) the time
+//! to produce the compressed uplink. Expected shape: EDEN/DRIVE pay
+//! visible compression latency (rotation of a d-vector); FedMRN's cost
+//! rides inside training and its finalize is negligible;
+//! FedPM/FedSparsify/FedMRN training is slightly slower than plain SGD.
 
 use crate::cli::Args;
 use crate::coordinator::client::{self, Batches};
-use crate::coordinator::{Method, RunConfig};
+use crate::coordinator::registry;
+use crate::coordinator::{Method, RunConfig, TrainCtx};
 use crate::error::Result;
 use crate::jsonx::Value;
 use crate::noise::{NoiseDist, NoiseGen};
@@ -22,7 +24,7 @@ pub fn fig6(rt: &Runtime, args: &mut Args) -> Result<()> {
     let mut o = ExpOpts::from_args(args)?;
     let dataset = args.take_str("dataset", "fmnist");
     let reps = args.take_usize("reps", 10)?;
-    let methods = args.take_list("methods", &super::table1::METHODS);
+    let methods = args.take_list("methods", &registry::table1_names());
     args.finish()?;
     o.rounds = 1;
 
@@ -44,33 +46,30 @@ pub fn fig6(rt: &Runtime, args: &mut Args) -> Result<()> {
     );
     for name in &methods {
         let method = Method::parse(name, noise)?;
+        let strategy = registry::strategy_for(&method);
         let mut cfg = RunConfig::new(&config, method);
         cfg.local_epochs = 1;
         cfg.lr = o.lr;
         cfg.noise = noise;
         cfg.rounds = 10;
+        // the strategy owns the method's server-side state shape (FedPM:
+        // zero scores + frozen scaled init weights) — no per-method
+        // special-casing here
+        let (w_global, w_init) = strategy.init_global(w.clone());
         let mut train_samples = Vec::new();
         let mut comp_samples = Vec::new();
         for r in 0..reps {
-            let fedpm_state: Option<(Vec<f32>, Vec<f32>)> = match method {
-                Method::FedPm => {
-                    Some((w.iter().map(|x| x * 3.0).collect(),
-                          vec![0.0f32; meta.param_dim]))
-                }
-                _ => None,
+            let mut ctx = TrainCtx {
+                meta: &meta,
+                cfg: &cfg,
+                round: r,
+                w: &w_global,
+                w_init: w_init.as_deref(),
+                batches: &batches,
+                noise_seed: 1000 + r as u64,
+                rng: &mut rng,
             };
-            let out = client::run_client(
-                rt,
-                &meta,
-                &method,
-                &cfg,
-                r,
-                &w,
-                fedpm_state.as_ref().map(|(a, b)| (a.as_slice(), b.as_slice())),
-                &batches,
-                1000 + r as u64,
-                &mut rng,
-            )?;
+            let out = strategy.local_train(rt, &mut ctx)?;
             train_samples.push(out.train_ms);
             comp_samples.push(out.compress_ms);
         }

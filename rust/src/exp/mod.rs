@@ -250,7 +250,10 @@ pub fn lr_for(method: &Method, base: f32) -> f32 {
     }
 }
 
-/// Run one (dataset, partition, method) arm.
+/// Run one (dataset, partition, method) arm. The method name resolves
+/// through the coordinator's registry ([`Method::parse`] is a thin
+/// delegate), so every name a harness accepts is a name the engine's
+/// Strategy/Aggregator dispatch can serve.
 pub fn run_arm(
     rt: &Runtime,
     config: &str,

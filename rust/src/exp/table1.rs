@@ -8,6 +8,7 @@
 //!   results/fig3_<ds>_<method>.csv — Non-IID-2 convergence curves
 
 use crate::cli::Args;
+use crate::coordinator::registry;
 use crate::error::Result;
 use crate::jsonx::Value;
 use crate::runtime::Runtime;
@@ -17,16 +18,12 @@ use super::{
     dataset_split, markdown_table, partition_for, run_arm, save_json, ExpOpts,
 };
 
-pub const METHODS: [&str; 10] = [
-    "fedavg", "fedpm", "fedsparsify", "signsgd", "topk", "terngrad", "drive",
-    "eden", "fedmrn", "fedmrns",
-];
-
 pub fn table1(rt: &Runtime, args: &mut Args) -> Result<()> {
     let o = ExpOpts::from_args(args)?;
     let datasets = args.take_list("datasets",
         &["fmnist", "svhn", "cifar10", "cifar100"]);
-    let methods = args.take_list("methods", &METHODS);
+    // default roster comes from the method registry (paper order)
+    let methods = args.take_list("methods", &registry::table1_names());
     let partitions = args.take_list("partitions", &["iid", "noniid1", "noniid2"]);
     args.finish()?;
 

@@ -35,13 +35,24 @@ USAGE:
                BENCH_aggregate.json carries both the thread-sweep rows
                and the fused regen_sharded (threads × tile) rows
 
-METHODS:
-  fedavg fedpm fedsparsify signsgd topk terngrad drive eden fedmrn fedmrns
-  fedmrn_wo_pm fedmrn_wo_sm fedmrn_wo_psm postsm
-
 DATASETS (synthetic stand-ins, see DESIGN.md §3):
   fmnist svhn cifar10 cifar100 charlm charlm_tf seg smoke
 ";
+
+/// The METHODS help section is registry-driven so the CLI can never
+/// advertise a name the registry rejects (docs/API.md).
+fn print_methods() {
+    use fedmrn::coordinator::registry;
+    println!("METHODS (canonical, from the method registry):");
+    println!("  {}", registry::names().join(" "));
+    let aliases: Vec<String> = registry::SPECS
+        .iter()
+        .flat_map(|s| s.aliases.iter().map(|a| format!("{a} (= {})", s.name)))
+        .collect();
+    if !aliases.is_empty() {
+        println!("  aliases: {}", aliases.join(", "));
+    }
+}
 
 fn main() {
     if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
@@ -63,6 +74,7 @@ fn real_main() -> Result<()> {
     match args.subcommand() {
         None | Some("help") => {
             print!("{HELP}");
+            print_methods();
             Ok(())
         }
         Some("info") => cmd_info(&mut args),

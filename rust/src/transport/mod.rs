@@ -86,10 +86,19 @@ impl Payload {
         out
     }
 
+    /// Wire length of a dense f32 vector of `n` params (tag + u32 count
+    /// + payload) — the framing every downlink broadcast uses. Single
+    /// source of truth: [`Payload::encoded_len`] for [`Payload::Dense`]
+    /// and [`Meter::downlink_dense`] are both defined by this, so the
+    /// meter cannot drift from the wire format.
+    pub fn dense_wire_len(n: usize) -> usize {
+        1 + 4 + 4 * n
+    }
+
     /// Exact wire size without materialising the bytes.
     pub fn encoded_len(&self) -> usize {
         match self {
-            Payload::Dense(v) => 1 + 4 + 4 * v.len(),
+            Payload::Dense(v) => Self::dense_wire_len(v.len()),
             Payload::MaskedSeed { bits, .. } => 1 + 8 + 4 + 8 * bits.len(),
             Payload::SignBits { bits, scales, .. } => {
                 1 + 8 + 4 + 4 + 8 * bits.len() + 4 * scales.len()
@@ -216,13 +225,15 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Byte accounting across a run: uplink / downlink, per round.
+/// Byte accounting across a run: uplink / downlink, totals and per
+/// round.
 #[derive(Clone, Debug, Default)]
 pub struct Meter {
     pub uplink_bytes: u64,
     pub downlink_bytes: u64,
     pub uplink_msgs: u64,
     pub round_uplink: Vec<u64>,
+    pub round_downlink: Vec<u64>,
 }
 
 impl Meter {
@@ -232,6 +243,7 @@ impl Meter {
 
     pub fn begin_round(&mut self) {
         self.round_uplink.push(0);
+        self.round_downlink.push(0);
     }
 
     /// Meter a client → server message; returns the decoded payload so
@@ -246,9 +258,15 @@ impl Meter {
         Payload::decode(&bytes)
     }
 
-    /// Meter a server → client broadcast of `d` dense f32 params.
+    /// Meter a server → client broadcast of `d` dense f32 params. The
+    /// byte count is [`Payload::dense_wire_len`] — the same framing
+    /// [`Payload::encoded_len`] reports for a dense payload.
     pub fn downlink_dense(&mut self, d: usize, n_clients: usize) {
-        self.downlink_bytes += ((1 + 4 + 4 * d) * n_clients) as u64;
+        let bytes = (Payload::dense_wire_len(d) * n_clients) as u64;
+        self.downlink_bytes += bytes;
+        if let Some(last) = self.round_downlink.last_mut() {
+            *last += bytes;
+        }
     }
 
     /// Measured uplink bits per parameter per client-message.
@@ -350,6 +368,23 @@ mod tests {
         assert_eq!(m.round_uplink, vec![p.encoded_len() as u64]);
         m.downlink_dense(100, 3);
         assert_eq!(m.downlink_bytes, 3 * (1 + 4 + 400));
+        assert_eq!(m.round_downlink, vec![3 * (1 + 4 + 400)]);
+        // second round: per-round series extend, totals accumulate
+        m.begin_round();
+        m.downlink_dense(100, 2);
+        assert_eq!(m.round_downlink, vec![3 * 405, 2 * 405]);
+        assert_eq!(m.downlink_bytes, 5 * 405);
         assert!((m.uplink_bpp(100) - 32.4).abs() < 0.5);
+    }
+
+    #[test]
+    fn downlink_framing_matches_dense_payload_bytes() {
+        // the meter's dense framing is derived from the wire format: a
+        // real encoded Dense payload must measure exactly dense_wire_len
+        for d in [0usize, 1, 100, 4097] {
+            let p = Payload::Dense(vec![0.0; d]);
+            assert_eq!(p.encode().len(), Payload::dense_wire_len(d), "d={d}");
+            assert_eq!(p.encoded_len(), Payload::dense_wire_len(d), "d={d}");
+        }
     }
 }

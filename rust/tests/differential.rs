@@ -23,9 +23,14 @@
 //! can matrix over thread counts without rebuilding the test.
 
 use fedmrn::bitpack;
-use fedmrn::compress::MaskType;
+use fedmrn::compress::{
+    fedmrn as fedmrn_codec, fedpm as fedpm_codec, sparsify as sparsify_codec,
+    GradCodec, MaskType,
+};
 use fedmrn::coordinator::parallel::{aggregate_masked, MaskedUpdate};
+use fedmrn::coordinator::{registry, Method, RunConfig};
 use fedmrn::noise::{NoiseDist, NoiseGen, Xoshiro256pp};
+use fedmrn::transport::Payload;
 
 /// Thread counts under test: `FEDMRN_DIFF_THREADS=1,4` restricts the
 /// grid (CI matrix legs); default is the full ladder.
@@ -423,4 +428,200 @@ fn misaligned_wire_bytes_still_error() {
     assert!(bitpack::bytes_to_words(&[0u8; 7]).is_err());
     assert!(bitpack::bytes_to_words(&[0u8; 1023]).is_err());
     assert!(bitpack::bytes_to_words(&[0u8; 1024]).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// 5. streaming Aggregator ingest ≡ the pre-refactor sequential fold,
+//    for every Table-1 method, at every ingest ordering
+// ---------------------------------------------------------------------------
+//
+// The Strategy/Aggregator redesign streams uplinks into the server in
+// *arrival* order. The acceptance contract: for every Table-1 method the
+// finished global weights are byte-identical to the pre-refactor
+// `Federation::aggregate` arithmetic (a client-order sequential fold),
+// no matter which order `ingest` sees the payloads — and, for FedMRN,
+// at every (threads, tile) setting of the fused sharded kernel.
+
+const ING_DIST: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+fn ing_mask(d: usize, seed: u64, mt: MaskType) -> Vec<f32> {
+    let mut g = NoiseGen::new(seed);
+    (0..d)
+        .map(|_| {
+            let b = g.next_u64() & 1 == 1;
+            match (mt, b) {
+                (MaskType::Binary, true) => 1.0,
+                (MaskType::Binary, false) => 0.0,
+                (MaskType::Signed, true) => 1.0,
+                (MaskType::Signed, false) => -1.0,
+            }
+        })
+        .collect()
+}
+
+/// One well-formed uplink for `name`, as that method's client would
+/// build it (client `k` of the simulated round).
+fn ing_payload(name: &str, d: usize, k: usize) -> Payload {
+    let mut dense = vec![0.0f32; d];
+    NoiseGen::new(7000 + k as u64).fill(ING_DIST, &mut dense);
+    match name {
+        "fedavg" => Payload::Dense(dense),
+        "signsgd" => GradCodec::SignSgd.encode(&dense, 60 + k as u64),
+        "terngrad" => GradCodec::TernGrad.encode(&dense, 60 + k as u64),
+        "topk" => GradCodec::TopK { frac: 0.03 }.encode(&dense, 60 + k as u64),
+        "drive" => GradCodec::Drive.encode(&dense, 60 + k as u64),
+        "eden" => GradCodec::Eden.encode(&dense, 60 + k as u64),
+        "fedmrn" => fedmrn_codec::make_payload(
+            &ing_mask(d, 8000 + k as u64, MaskType::Binary),
+            0xFACE + k as u64,
+            MaskType::Binary,
+        ),
+        "fedmrns" => fedmrn_codec::make_payload(
+            &ing_mask(d, 8000 + k as u64, MaskType::Signed),
+            0xFACE + k as u64,
+            MaskType::Signed,
+        ),
+        "fedpm" => fedpm_codec::make_payload(&ing_mask(d, 9000 + k as u64, MaskType::Binary)),
+        "fedsparsify" => {
+            sparsify_codec::prune_to_sparsity(&mut dense, 0.9);
+            sparsify_codec::encode_sparse(&dense)
+        }
+        other => panic!("no payload builder for {other}"),
+    }
+}
+
+fn ing_start_w(d: usize) -> Vec<f32> {
+    let mut w = vec![0.0f32; d];
+    NoiseGen::new(424242).fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+    w
+}
+
+/// The pre-refactor `Federation::aggregate` arithmetic, verbatim:
+/// a sequential client-order fold per method family.
+fn ing_oracle(name: &str, d: usize, payloads: &[Payload], scales: &[f32]) -> Vec<f32> {
+    let mut w = ing_start_w(d);
+    match name {
+        "fedpm" => {
+            w = fedpm_codec::aggregate(payloads, d).unwrap();
+        }
+        "fedsparsify" => {
+            let mut acc = vec![0.0f32; d];
+            for (p, &s) in payloads.iter().zip(scales) {
+                let w_k = sparsify_codec::decode_sparse(p, d).unwrap();
+                for (a, v) in acc.iter_mut().zip(&w_k) {
+                    *a += s * v;
+                }
+            }
+            w = acc;
+        }
+        "fedmrn" | "fedmrns" => {
+            let mask_type =
+                if name == "fedmrn" { MaskType::Binary } else { MaskType::Signed };
+            let parts: Vec<(u64, &[u64])> = payloads
+                .iter()
+                .map(|p| fedmrn_codec::parts(p, d).unwrap())
+                .collect();
+            let updates: Vec<MaskedUpdate> = parts
+                .iter()
+                .zip(scales)
+                .map(|(&(seed, bits), &scale)| MaskedUpdate { seed, bits, scale })
+                .collect();
+            // threads=1, default tile: the sequential reference kernel
+            aggregate_masked(&updates, ING_DIST, mask_type, &mut w, 1, 0).unwrap();
+        }
+        _ => {
+            let codec = match Method::parse(name, ING_DIST).unwrap() {
+                Method::Grad(c) => c,
+                Method::FedAvg => GradCodec::Identity,
+                m => panic!("not a grad-codec method: {m:?}"),
+            };
+            for (p, &s) in payloads.iter().zip(scales) {
+                let u = codec.decode(p, d).unwrap();
+                for (a, v) in w.iter_mut().zip(&u) {
+                    *a += s * v;
+                }
+            }
+        }
+    }
+    w
+}
+
+/// The new path: resolve the method through the registry, stream the
+/// payloads into its Aggregator in `order`, finish into the weights.
+fn ing_via_aggregator(
+    name: &str,
+    d: usize,
+    payloads: &[Payload],
+    scales: &[f32],
+    order: &[usize],
+    threads: usize,
+    tile: usize,
+) -> Vec<f32> {
+    let m = Method::parse(name, ING_DIST).unwrap();
+    let mut cfg = RunConfig::new("smoke_mlp", m);
+    cfg.noise = ING_DIST;
+    cfg.threads = threads;
+    cfg.tile = tile;
+    let strategy = registry::strategy_for_config(&cfg);
+    let mut agg = strategy.aggregator(&cfg);
+    agg.begin(0, d, payloads.len()).unwrap();
+    for &slot in order {
+        agg.ingest(slot, payloads[slot].clone(), scales[slot]).unwrap();
+    }
+    let mut w = ing_start_w(d);
+    agg.finish(&mut w).unwrap();
+    w
+}
+
+fn ing_orders(n: usize) -> Vec<Vec<usize>> {
+    let forward: Vec<usize> = (0..n).collect();
+    let reversed: Vec<usize> = (0..n).rev().collect();
+    let rotated: Vec<usize> = (0..n).map(|i| (i + n / 2) % n).collect();
+    // a fixed shuffle, derived deterministically
+    let mut shuffled = forward.clone();
+    let mut g = NoiseGen::new(0x0E0E);
+    g.shuffle(&mut shuffled);
+    vec![forward, reversed, rotated, shuffled]
+}
+
+#[test]
+fn streaming_ingest_matches_sequential_fold_for_all_table1_methods() {
+    let d = 2053usize;
+    let n = 5usize;
+    let scales: Vec<f32> = (0..n).map(|k| 1.0 / (k + 2) as f32).collect();
+    for name in registry::table1_names() {
+        let payloads: Vec<Payload> = (0..n).map(|k| ing_payload(name, d, k)).collect();
+        let want = ing_oracle(name, d, &payloads, &scales);
+        for order in ing_orders(n) {
+            let got = ing_via_aggregator(name, d, &payloads, &scales, &order, 1, 0);
+            assert_bytes_eq(&want, &got, &format!("{name} order {order:?}"));
+        }
+    }
+}
+
+#[test]
+fn streaming_ingest_matches_sequential_fold_fedmrn_thread_tile_grid() {
+    // FedMRN's finish runs the sharded fused kernel: the ordering
+    // contract must hold at every (threads, tile) the engine can use.
+    let d = 10_007usize;
+    let n = 4usize;
+    let scales: Vec<f32> = (0..n).map(|k| 1.0 / (k + 2) as f32).collect();
+    for name in ["fedmrn", "fedmrns"] {
+        let payloads: Vec<Payload> = (0..n).map(|k| ing_payload(name, d, k)).collect();
+        let want = ing_oracle(name, d, &payloads, &scales);
+        for &threads in &thread_grid() {
+            for tile in [64usize, 1024] {
+                for order in ing_orders(n) {
+                    let got = ing_via_aggregator(
+                        name, d, &payloads, &scales, &order, threads, tile,
+                    );
+                    assert_bytes_eq(
+                        &want,
+                        &got,
+                        &format!("{name} threads={threads} tile={tile} order {order:?}"),
+                    );
+                }
+            }
+        }
+    }
 }

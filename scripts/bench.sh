@@ -4,6 +4,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: no Rust toolchain on PATH — BENCH_*.json keep their" >&2
+    echo "       committed rows; re-run where cargo exists (docs/BENCH.md)" >&2
+    exit 1
+fi
+
 cargo build --release
 
 # Both bench targets write their JSON to the repo root themselves
