@@ -1,7 +1,12 @@
 //! End-to-end federated round latency per method (the Figure-6 frame at
-//! system granularity): one full round — client selection, local
-//! training through XLA, wire encode/decode, aggregation, evaluation —
-//! on the smoke_mlp artifact.
+//! system granularity): a short multi-round run — client selection,
+//! local training through XLA, wire encode/decode, aggregation,
+//! evaluation — on the smoke_mlp artifact, once per engine: the
+//! sequential reference (`pipeline=off`) and the double-buffered round
+//! pipeline (`pipeline=on`, evaluation of round r overlapped with round
+//! r+1's training). Both rows run identical arithmetic (byte-identical
+//! weights, pinned by tests/differential.rs); the gap between them is
+//! exactly the evaluation tail the pipeline hides.
 
 use fedmrn::bench::Bench;
 use fedmrn::cli::Args;
@@ -24,20 +29,24 @@ fn main() {
     ] {
         let noise = NoiseDist::Uniform { alpha: 0.05 };
         let method = Method::parse(method_name, noise).unwrap();
-        b.run(&format!("round/{method_name}"), None, || {
-            let (config, split) = exp::dataset_split("smoke", &opts).unwrap();
-            let mut cfg = RunConfig::new(&config, method);
-            cfg.rounds = 1;
-            cfg.n_clients = 8;
-            cfg.clients_per_round = 4;
-            cfg.local_epochs = 2;
-            cfg.lr = 0.3;
-            cfg.noise = noise;
-            cfg.seed = 9;
-            let mut fed = Federation::new(&rt, cfg, split).unwrap();
-            std::hint::black_box(fed.run().unwrap());
-        });
+        for pipeline in [false, true] {
+            let tag = if pipeline { "on" } else { "off" };
+            b.run(&format!("round/{method_name} pipeline={tag}"), None, || {
+                let (config, split) = exp::dataset_split("smoke", &opts).unwrap();
+                let mut cfg = RunConfig::new(&config, method);
+                cfg.rounds = 4;
+                cfg.n_clients = 8;
+                cfg.clients_per_round = 4;
+                cfg.local_epochs = 2;
+                cfg.lr = 0.3;
+                cfg.noise = noise;
+                cfg.seed = 9;
+                cfg.pipeline = pipeline;
+                let mut fed = Federation::new(&rt, cfg, split).unwrap();
+                std::hint::black_box(fed.run().unwrap());
+            });
+        }
     }
-    b.report("one federated round, smoke_mlp (4 clients x 2 epochs)");
+    b.report("4 federated rounds, smoke_mlp (4 clients x 2 epochs), per engine");
     b.write_json("results/bench_round.json").unwrap();
 }

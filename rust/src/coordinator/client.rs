@@ -23,7 +23,7 @@ use xla::Literal;
 
 use crate::compress::{fedmrn, fedpm as fedpm_codec, MaskType};
 use crate::data::{Dataset, Features};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::noise::{NoiseDist, NoiseGen};
 use crate::runtime::{
     lit_f32, lit_f32_shaped, lit_i32_shaped, lit_key, lit_scalar, scalar_f32,
@@ -63,6 +63,14 @@ pub fn make_batches(
     max_batches: usize,
     rng: &mut NoiseGen,
 ) -> Result<Batches> {
+    if shard.is_empty() {
+        // an extreme non-IID partition can leave a client with zero
+        // samples despite the partitioner's rebalancing floor (nothing
+        // left to steal); the tail-wrap below would then index `% 0`
+        return Err(Error::Data(
+            "client shard has no samples (partition produced an empty shard)".into(),
+        ));
+    }
     let b = meta.batch;
     let mut order: Vec<usize> = shard.to_vec();
     rng.shuffle(&mut order);
@@ -161,7 +169,7 @@ pub fn train_mrn(
     let w_lit = lit_f32(w_global);
     let lr_lit = lit_scalar(lr);
     let mut u_lit = lit_f32(&vec![0.0f32; d]);
-    let total_steps = (epochs * batches.x.len()).max(1);
+    let total_steps = psm_total_steps(epochs, batches.x.len())?;
     let mut tau = 0usize;
     let mut loss_sum = 0.0f64;
     for _ in 0..epochs {
@@ -199,6 +207,23 @@ pub fn train_mrn(
     let payload = fedmrn::make_payload(&mask, noise_seed, mask_type);
     let fin_ms = t_fin.ms();
     Ok((payload, loss_sum / (total_steps) as f64, fin_ms))
+}
+
+/// The PSM gate denominator `S = epochs × batches` (Algorithm 1: the
+/// gate probability advances `p = τ/S`). `S = 0` — an empty batch list
+/// or zero epochs — would make the gate `τ/0`: NaN probabilities that
+/// poison every sampled mask bit. That is a hard error, never a NaN
+/// (and [`make_batches`] already rejects the empty shard that could
+/// produce it).
+pub(crate) fn psm_total_steps(epochs: usize, n_batches: usize) -> Result<usize> {
+    match epochs * n_batches {
+        0 => Err(Error::Data(
+            "fedmrn: zero local steps (empty shard or zero epochs) — \
+             the PSM gate τ/S is undefined"
+                .into(),
+        )),
+        s => Ok(s),
+    }
 }
 
 pub fn mrn_step_name(mask_type: MaskType, mode: MrnMode) -> &'static str {
@@ -309,4 +334,97 @@ pub fn evaluate(
     }
     let n_preds = (n_batches * b * lab_len) as f64;
     Ok((loss_sum / n_preds, correct / n_preds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{partition, Partition};
+    use std::collections::HashMap;
+
+    fn tiny_meta(batch: usize) -> ConfigMeta {
+        ConfigMeta {
+            name: "tiny".into(),
+            param_dim: 8,
+            batch,
+            epoch_batches: None,
+            init_bin: String::new(),
+            init_seed: 0,
+            loss_kind: "xent".into(),
+            n_classes: 2,
+            input_shape: vec![4],
+            input_dtype: "f32".into(),
+            label_shape: vec![1],
+            steps: HashMap::new(),
+        }
+    }
+
+    /// `n` samples, all label 0 (4-dim features) — the degenerate class
+    /// balance that starves LabelK clients.
+    fn one_label_dataset(n: usize) -> Dataset {
+        Dataset {
+            feats: Features::F32(vec![0.5; n * 4]),
+            labels: vec![0; n],
+            sample_len: 4,
+            label_len: 1,
+            n,
+            n_classes: 2,
+        }
+    }
+
+    #[test]
+    fn empty_shard_is_a_clean_error_not_a_panic() {
+        let ds = one_label_dataset(4);
+        let meta = tiny_meta(2);
+        let mut rng = NoiseGen::new(1);
+        // the old tail-wrap indexed `order[.. % 0]` here
+        match make_batches(&ds, &[], &meta, 0, &mut rng) {
+            Err(Error::Data(_)) => {}
+            Err(e) => panic!("want Err(Data), got Err({e})"),
+            Ok(_) => panic!("want Err(Data), got Ok"),
+        }
+    }
+
+    /// Satellite regression (LabelK): one sample, two clients, k = 1 —
+    /// one client owns the empty label and `rebalance_min` cannot steal
+    /// for it (the only donor is already at the floor). The resulting
+    /// empty shard used to panic in `make_batches` and would have fed
+    /// the PSM gate `τ/0`; now it is a clean `Error::Data` before any
+    /// training step runs.
+    #[test]
+    fn labelk_empty_shard_errors_cleanly() {
+        let ds = one_label_dataset(1);
+        let shards = partition(&ds, Partition::LabelK { k: 1 }, 2, 1, 3);
+        let empty = shards
+            .iter()
+            .find(|s| s.is_empty())
+            .unwrap_or_else(|| panic!("setup: want an empty shard, got {shards:?}"));
+        let meta = tiny_meta(1);
+        let mut rng = NoiseGen::new(2);
+        assert!(matches!(
+            make_batches(&ds, empty, &meta, 0, &mut rng),
+            Err(Error::Data(_))
+        ));
+    }
+
+    #[test]
+    fn psm_gate_denominator_rejects_zero_steps() {
+        assert!(psm_total_steps(0, 5).is_err());
+        assert!(psm_total_steps(2, 0).is_err());
+        assert_eq!(psm_total_steps(2, 3).unwrap(), 6);
+    }
+
+    #[test]
+    fn make_batches_wraps_tail_and_caps() {
+        let ds = one_label_dataset(5);
+        let meta = tiny_meta(2);
+        let mut rng = NoiseGen::new(3);
+        let shard: Vec<usize> = (0..5).collect();
+        let b = make_batches(&ds, &shard, &meta, 0, &mut rng).unwrap();
+        assert_eq!(b.x.len(), 3); // ceil(5/2), tail wrapped
+        assert_eq!(b.n_samples, 5);
+        let mut rng = NoiseGen::new(3);
+        let capped = make_batches(&ds, &shard, &meta, 2, &mut rng).unwrap();
+        assert_eq!(capped.x.len(), 2);
+    }
 }

@@ -96,6 +96,13 @@ pub struct RunConfig {
     /// multiple of 64. Any value produces byte-identical global weights
     /// (see [`crate::coordinator::parallel::resolve_tile`]).
     pub tile: usize,
+    /// Double-buffered round pipelining: overlap round `r`'s evaluation
+    /// (on a detached `eval_params` snapshot) with round `r+1`'s client
+    /// training ([`crate::coordinator::pipeline`]). `false` = the
+    /// strictly sequential engine. Either setting produces byte-identical
+    /// per-round weights and non-timing record fields — only wall-clock
+    /// changes.
+    pub pipeline: bool,
 }
 
 impl RunConfig {
@@ -116,6 +123,7 @@ impl RunConfig {
             max_batches_per_epoch: 0,
             threads: 1,
             tile: 0,
+            pipeline: false,
         }
     }
 
@@ -204,6 +212,13 @@ mod tests {
         cfg.clients_per_round = 5;
         cfg.rounds = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_defaults_to_the_sequential_engine() {
+        let cfg = RunConfig::new("smoke_mlp", Method::FedAvg);
+        assert!(!cfg.pipeline);
+        cfg.validate().unwrap();
     }
 
     #[test]

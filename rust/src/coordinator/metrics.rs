@@ -21,6 +21,14 @@ pub struct RoundRecord {
 }
 
 impl RoundRecord {
+    /// Fill in the evaluation results — deferred past the fold by the
+    /// pipelined engine ([`crate::coordinator::pipeline`]), inline on
+    /// the sequential one. Every other field is final at fold time.
+    pub fn set_eval(&mut self, test_loss: f64, test_acc: f64) {
+        self.test_loss = test_loss;
+        self.test_acc = test_acc;
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj()
             .set("round", self.round)

@@ -20,12 +20,16 @@
 //! One [`config::RunConfig`] fully describes a run;
 //! [`metrics::RunResult`] is the structured output every experiment
 //! harness consumes. [`parallel`] holds the worker pools (client
-//! execution, streamed ingestion, sharded FedMRN aggregation).
+//! execution, streamed ingestion, sharded FedMRN aggregation);
+//! [`pipeline`] holds the double-buffered round engine that overlaps a
+//! round's evaluation tail with the next round's training
+//! (`RunConfig::pipeline`, byte-identical to the sequential engine).
 
 pub mod client;
 pub mod config;
 pub mod metrics;
 pub mod parallel;
+pub mod pipeline;
 pub mod registry;
 pub mod server;
 pub mod strategy;

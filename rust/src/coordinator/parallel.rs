@@ -79,9 +79,11 @@ pub fn resolve_tile(cfg_tile: usize) -> usize {
     if cfg_tile == 0 {
         DEFAULT_TILE
     } else {
-        // saturate so an absurd knob value can't wrap to a zero-length
-        // tile (which would stall the fuse loop)
-        cfg_tile.div_ceil(64).saturating_mul(64)
+        // clamp absurd knob values to the largest representable
+        // 64-multiple — `saturating_mul` returned `usize::MAX` here,
+        // which is *not* word-aligned and broke this function's own
+        // contract (and can't wrap to a zero-length tile either)
+        cfg_tile.div_ceil(64).checked_mul(64).unwrap_or(usize::MAX - 63)
     }
 }
 
@@ -518,9 +520,16 @@ mod tests {
         assert_eq!(resolve_tile(64), 64);
         assert_eq!(resolve_tile(65), 128);
         assert_eq!(resolve_tile(4096), 4096);
-        // absurd knob values saturate instead of wrapping to 0
-        assert_eq!(resolve_tile(usize::MAX), usize::MAX);
-        assert!(resolve_tile(usize::MAX - 1) > 0);
+        // absurd knob values clamp to the largest 64-multiple — the old
+        // `saturating_mul(64)` pinned `usize::MAX` here, which violates
+        // the word-multiple contract this very test is named after
+        assert_eq!(resolve_tile(usize::MAX), usize::MAX - 63);
+        assert_eq!(resolve_tile(usize::MAX - 1), usize::MAX - 63);
+        assert_eq!(resolve_tile(usize::MAX - 64), usize::MAX - 63);
+        for t in [1usize, 63, 64, 65, 4096, usize::MAX - 1, usize::MAX] {
+            assert_eq!(resolve_tile(t) % 64, 0, "tile {t}");
+            assert!(resolve_tile(t) > 0, "tile {t}");
+        }
     }
 
     #[test]

@@ -1,0 +1,540 @@
+//! Double-buffered round pipelining: hide round `r`'s evaluation tail
+//! behind round `r+1`'s client training.
+//!
+//! # What overlaps with what
+//!
+//! A federated round has three phases with different data dependencies:
+//!
+//! 1. **select + train + ingest** — reads the *current* global weights
+//!    `w` (and the run RNG for selection); every per-(client, round)
+//!    seed is derived from `cfg.seed`, so the uplinks depend only on
+//!    `w` and the round index.
+//! 2. **fold** — `Aggregator::finish` installs the new weights. This is
+//!    the only writer of `w`.
+//! 3. **eval + metrics** — reads a *snapshot* of the strategy's
+//!    `eval_params` (FedPM thresholds the masked init weights; everyone
+//!    else evaluates `w` itself), never `w` in place.
+//!
+//! Phase 3 therefore has **no consumer in round `r+1`**: training reads
+//! the freshly-installed `w`, selection reads the run RNG, and neither
+//! touches the evaluation output. The pipelined engine exploits exactly
+//! that edge — the moment round `r`'s fold installs, the engine clones
+//! the eval parameters into a detached per-round `Arc` snapshot, hands
+//! it to a background worker, and immediately starts round `r+1`'s
+//! selection and training. At most one evaluation is ever in flight
+//! (double buffering), and its result is merged back into round `r`'s
+//! record — in round order — right after round `r+1`'s fold completes.
+//!
+//! # Why byte-identity holds
+//!
+//! The pipelined engine runs the *same* `train_and_fold` code on the
+//! main thread in round order: every `w` mutation, RNG draw and meter
+//! update happens in exactly the sequence the sequential engine uses.
+//! The only work moved off-thread is `client::evaluate` over an owned
+//! snapshot — a pure function of `(w_eval, test set)` — so per-round
+//! weights, losses and byte counts are bit-equal between the two
+//! engines; only wall-clock (and the *timing* fields of
+//! `RoundRecord`) can differ. Pinned by the pipeline section of
+//! `tests/differential.rs` across the Table-1 roster × thread grid.
+//!
+//! # Meter attribution across overlapping work
+//!
+//! All `Meter` mutations (`begin_round`, downlink, per-uplink metering)
+//! stay on the main thread inside `train_and_fold`, so the per-round
+//! series index only ever advances in round order — an in-flight
+//! evaluation can never misattribute bytes to the wrong round because
+//! evaluation does not touch the meter at all. Each `RoundRecord`'s
+//! byte fields are captured at fold time, before the next round begins.
+//!
+//! The generic scheduler, [`double_buffered`], is engine-agnostic and
+//! unit-tested here without any artifacts; the federation-specific
+//! plumbing (`EngineCtx`, `train_and_fold`, `run_rounds`) is
+//! crate-internal and exercised end-to-end by the server tests and the
+//! differential harness.
+
+use std::sync::Arc;
+use std::thread;
+
+use crate::data::Split;
+use crate::error::{Error, Result};
+use crate::noise::{derive_seed, NoiseGen};
+use crate::runtime::{ConfigMeta, Runtime};
+use crate::stats::Timer;
+use crate::transport::Meter;
+
+use super::client::{self, Batches, TrainOutcome};
+use super::config::RunConfig;
+use super::metrics::RoundRecord;
+use super::parallel;
+use super::strategy::{Strategy, TrainCtx};
+
+/// Run `steps` pipeline steps with at most one detached job in flight.
+///
+/// Per step `r`, `produce(r)` runs on the caller's thread and returns a
+/// main-thread partial `P` plus an optional detached job input `J`.
+/// When a job is returned, it runs as `job(j)` on a background scoped
+/// worker **overlapping `produce(r+1)`**; `merge(r, partial, output)`
+/// then completes step `r` — always in step order, and always before
+/// step `r+1` is merged. Steps without a job merge immediately.
+///
+/// Error semantics: a `produce` error wins (the in-flight job is still
+/// joined first, its result discarded); otherwise the pending job's
+/// error surfaces before this step is merged. A panicking job is
+/// reported as an [`Error::Config`], not a propagated panic — on every
+/// path, including a failing `produce`.
+pub fn double_buffered<P, J, O, FP, FJ, FM>(
+    steps: usize,
+    mut produce: FP,
+    job: FJ,
+    mut merge: FM,
+) -> Result<()>
+where
+    J: Send,
+    O: Send,
+    FP: FnMut(usize) -> Result<(P, Option<J>)>,
+    FJ: Fn(J) -> Result<O> + Sync,
+    FM: FnMut(usize, P, Option<O>) -> Result<()>,
+{
+    // (step index, main-thread partial, in-flight worker) — at most one
+    type InFlight<'scope, P, O> =
+        (usize, P, thread::ScopedJoinHandle<'scope, Result<O>>);
+    thread::scope(|s| {
+        let job = &job;
+        let mut pending: Option<InFlight<'_, P, O>> = None;
+        for r in 0..steps {
+            let produced = produce(r);
+            // join the previous step's job only *after* this step's
+            // produce — that window is the overlap. The join happens
+            // even when produce failed, so a panicked job is consumed
+            // here as an Error instead of being re-raised by the scope
+            // at exit as a process panic.
+            let prev = pending.take().map(|(pr, pp, h)| {
+                let out = h.join().map_err(|_| {
+                    Error::Config("pipeline: detached job panicked".into())
+                });
+                (pr, pp, out)
+            });
+            let (p, j) = produced?;
+            if let Some((pr, pp, out)) = prev {
+                merge(pr, pp, Some(out??))?;
+            }
+            match j {
+                Some(jv) => {
+                    let h = s.spawn(move || job(jv));
+                    pending = Some((r, p, h));
+                }
+                None => merge(r, p, None)?,
+            }
+        }
+        if let Some((pr, pp, h)) = pending.take() {
+            let out = h
+                .join()
+                .map_err(|_| Error::Config("pipeline: detached job panicked".into()))??;
+            merge(pr, pp, Some(out))?;
+        }
+        Ok(())
+    })
+}
+
+/// The engine's shared, read-only run state, split out of the
+/// `Federation` struct so the round drivers can borrow it alongside the
+/// mutable run state (`w`, meter, RNG) — the field split that lets a
+/// detached evaluation read the runtime while the next round trains.
+pub(crate) struct EngineCtx<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: &'a RunConfig,
+    pub meta: &'a ConfigMeta,
+    pub split: &'a Split,
+    pub shards: &'a [Vec<usize>],
+    pub strategy: &'a dyn Strategy,
+    pub w_init: Option<&'a [f32]>,
+    pub verbose: bool,
+}
+
+/// Outcome of one round's train + fold: every non-evaluation
+/// `RoundRecord` field is final; `eval` is the detached per-round
+/// snapshot (the strategy's `eval_params` over the freshly-installed
+/// weights) when this round evaluates.
+pub(crate) struct FoldedRound {
+    pub record: RoundRecord,
+    pub eval: Option<Arc<Vec<f32>>>,
+    /// Wall-clock of select + train + ingest + fold (excludes eval).
+    pub fold_ms: f64,
+}
+
+/// Select `clients_per_round` distinct clients for a round. Draws from
+/// the run RNG (seeded from `cfg.seed`), never from `w` — which is what
+/// makes round `r+1`'s selection independent of round `r`'s evaluation.
+fn select_clients(cfg: &RunConfig, rng: &mut NoiseGen) -> Vec<usize> {
+    let mut ids: Vec<usize> = (0..cfg.n_clients).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(cfg.clients_per_round);
+    ids
+}
+
+/// Phases 1 + 2 of round `r`: selection, metered downlink, streamed
+/// client training + per-uplink metering/ingest, and the Eq. 5 fold
+/// that installs the new weights. Identical on both engines — this is
+/// the byte-identity anchor (see the module docs).
+pub(crate) fn train_and_fold(
+    ctx: &EngineCtx<'_>,
+    r: usize,
+    w: &mut Vec<f32>,
+    meter: &mut Meter,
+    rng: &mut NoiseGen,
+) -> Result<FoldedRound> {
+    let t_round = Timer::new();
+    meter.begin_round();
+    let selected = select_clients(ctx.cfg, rng);
+    let d = ctx.meta.param_dim;
+    meter.downlink_dense(d, selected.len());
+    // Data-proportional weights are known up front (shard sizes are
+    // fixed), so ingestion can start with the first arrival.
+    let total: f64 = selected.iter().map(|&c| ctx.shards[c].len() as f64).sum();
+
+    let mut agg = ctx.strategy.aggregator(ctx.cfg);
+    agg.begin(r, d, selected.len())?;
+
+    // copy the field refs out (all `&'a T`, Copy) so the training
+    // closure borrows them rather than `ctx` as a whole
+    let (rt, cfg, meta) = (ctx.rt, ctx.cfg, ctx.meta);
+    let (split, shards, strategy) = (ctx.split, ctx.shards, ctx.strategy);
+    let w_init = ctx.w_init;
+    let w_ref: &[f32] = w;
+    let selected_ref = &selected;
+    let run_one = |i: usize| -> Result<TrainOutcome> {
+        let c = selected_ref[i];
+        let mut crng = NoiseGen::new(derive_seed(cfg.seed, c as u64, r as u64, 2));
+        let batches: Batches = client::make_batches(
+            &split.train,
+            &shards[c],
+            meta,
+            cfg.max_batches_per_epoch,
+            &mut crng,
+        )?;
+        let noise_seed = derive_seed(cfg.seed, c as u64, r as u64, 1);
+        let mut tctx = TrainCtx {
+            meta,
+            cfg,
+            round: r,
+            w: w_ref,
+            w_init,
+            batches: &batches,
+            noise_seed,
+            rng: &mut crng,
+        };
+        strategy.local_train(rt, &mut tctx)
+    };
+
+    let mut losses = vec![f64::NAN; selected.len()];
+    let mut train_ms = 0.0f64;
+    let mut compress_ms = 0.0f64;
+    {
+        let meter = &mut *meter;
+        let agg = &mut agg;
+        let losses = &mut losses;
+        parallel::run_streamed(
+            selected.len(),
+            cfg.threads,
+            run_one,
+            |slot, outcome: TrainOutcome| {
+                train_ms += outcome.train_ms;
+                compress_ms += outcome.compress_ms;
+                losses[slot] = outcome.train_loss;
+                let decoded = meter.uplink(&outcome.payload)?;
+                let scale = (shards[selected_ref[slot]].len() as f64 / total) as f32;
+                agg.ingest(slot, decoded, scale)
+            },
+        )?;
+    }
+    let train_loss = crate::stats::mean(&losses);
+
+    // The install: from this point round r+1 may train against `w`.
+    agg.finish(w)?;
+
+    let do_eval = cfg.eval_every > 0
+        && ((r + 1) % cfg.eval_every == 0 || r + 1 == cfg.rounds);
+    let eval = if do_eval {
+        // detached per-round snapshot — the evaluation (and anything
+        // downstream of it) never reads `w` again. The Arc is cheap
+        // ownership plumbing (single consumer today), not sharing.
+        Some(Arc::new(strategy.eval_params(w, w_init)))
+    } else {
+        None
+    };
+
+    let record = RoundRecord {
+        round: r,
+        train_loss,
+        test_loss: f64::NAN,
+        test_acc: f64::NAN,
+        uplink_bytes: *meter.round_uplink.last().unwrap_or(&0),
+        downlink_bytes: *meter.round_downlink.last().unwrap_or(&0),
+        train_ms,
+        compress_ms,
+    };
+    Ok(FoldedRound { record, eval, fold_ms: t_round.ms() })
+}
+
+/// Phase 3: evaluate a detached snapshot. Pure in `(w_eval, test set)`
+/// — safe to run off-thread while the next round mutates `w`.
+fn eval_snapshot(ctx: &EngineCtx<'_>, w_eval: &[f32]) -> Result<(f64, f64)> {
+    client::evaluate(ctx.rt, ctx.meta, w_eval, &ctx.split.test)
+}
+
+fn log_round(ctx: &EngineCtx<'_>, rec: &RoundRecord, fold_ms: f64) {
+    if ctx.verbose {
+        eprintln!(
+            "[{}/{} {}] round {}: train_loss {:.4} acc {:.4} uplink {} B ({:.1} ms train+fold)",
+            ctx.cfg.config,
+            ctx.cfg.method.name(),
+            ctx.cfg.partition.name(),
+            rec.round,
+            rec.train_loss,
+            rec.test_acc,
+            rec.uplink_bytes,
+            fold_ms,
+        );
+    }
+}
+
+/// One strictly-sequential round (train + fold + inline eval) — the
+/// reference engine, also backing `Federation::round`.
+pub(crate) fn sequential_round(
+    ctx: &EngineCtx<'_>,
+    r: usize,
+    w: &mut Vec<f32>,
+    meter: &mut Meter,
+    rng: &mut NoiseGen,
+) -> Result<RoundRecord> {
+    let folded = train_and_fold(ctx, r, w, meter, rng)?;
+    let mut rec = folded.record;
+    if let Some(w_eval) = folded.eval {
+        let (test_loss, test_acc) = eval_snapshot(ctx, &w_eval)?;
+        rec.set_eval(test_loss, test_acc);
+    }
+    log_round(ctx, &rec, folded.fold_ms);
+    Ok(rec)
+}
+
+/// Drive a full run on the engine selected by `cfg.pipeline`.
+///
+/// `trace`, when provided, receives a bit-exact clone of `w` the moment
+/// each round's fold installs — the differential harness compares these
+/// across engines. Records come back in round order on both engines; an
+/// `Ok` run is byte-identical either way (an `Err` run may surface a
+/// deferred evaluation error one round later on the pipelined engine).
+pub(crate) fn run_rounds(
+    ctx: &EngineCtx<'_>,
+    w: &mut Vec<f32>,
+    meter: &mut Meter,
+    rng: &mut NoiseGen,
+    mut trace: Option<&mut Vec<Vec<f32>>>,
+) -> Result<Vec<RoundRecord>> {
+    let rounds = ctx.cfg.rounds;
+    let mut records: Vec<RoundRecord> = Vec::with_capacity(rounds);
+    if !ctx.cfg.pipeline {
+        for r in 0..rounds {
+            let rec = sequential_round(ctx, r, w, meter, rng)?;
+            if let Some(t) = trace.as_deref_mut() {
+                t.push(w.clone());
+            }
+            records.push(rec);
+        }
+        return Ok(records);
+    }
+    let records_ref = &mut records;
+    double_buffered(
+        rounds,
+        |r| {
+            let folded = train_and_fold(ctx, r, w, meter, rng)?;
+            if let Some(t) = trace.as_deref_mut() {
+                t.push(w.clone());
+            }
+            Ok(((folded.record, folded.fold_ms), folded.eval))
+        },
+        |w_eval: Arc<Vec<f32>>| eval_snapshot(ctx, &w_eval),
+        |_r, (mut rec, fold_ms), out| {
+            if let Some((test_loss, test_acc)) = out {
+                rec.set_eval(test_loss, test_acc);
+            }
+            log_round(ctx, &rec, fold_ms);
+            records_ref.push(rec);
+            Ok(())
+        },
+    )?;
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    #[test]
+    fn double_buffered_merges_in_step_order_with_job_results() {
+        let mut merged = Vec::new();
+        double_buffered(
+            7,
+            |r| Ok((r, if r % 2 == 0 { Some(r) } else { None })),
+            |j: usize| Ok(j * 10),
+            |r, p, o: Option<usize>| {
+                assert_eq!(r, p);
+                match o {
+                    Some(v) => assert_eq!(v, r * 10, "step {r}"),
+                    None => assert_eq!(r % 2, 1, "step {r} should have had a job"),
+                }
+                merged.push(r);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(merged, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn double_buffered_zero_steps_is_a_noop() {
+        double_buffered(
+            0,
+            |_| -> Result<((), Option<()>)> { panic!("produce must not run") },
+            |_| -> Result<()> { panic!("job must not run") },
+            |_, _, _| panic!("merge must not run"),
+        )
+        .unwrap();
+    }
+
+    /// The overlap proof, with a rendezvous instead of timing: step 0's
+    /// detached job blocks until `produce(1)` signals that it started.
+    /// A scheduler that joined the job before producing the next step
+    /// would park the job forever — here that surfaces as a timeout
+    /// error instead of a hang.
+    #[test]
+    fn double_buffered_overlaps_detached_job_with_next_produce() {
+        let (tx, rx) = mpsc::channel::<()>();
+        let rx = Mutex::new(rx);
+        let mut merged = Vec::new();
+        double_buffered(
+            2,
+            |r| {
+                if r == 1 {
+                    // runs while step 0's job is still blocked below
+                    tx.send(()).unwrap();
+                }
+                Ok((r, if r == 0 { Some(()) } else { None }))
+            },
+            |()| {
+                rx.lock()
+                    .unwrap()
+                    .recv_timeout(Duration::from_secs(30))
+                    .map_err(|_| {
+                        Error::Config(
+                            "no overlap: produce(1) never ran while job 0 was in flight"
+                                .into(),
+                        )
+                    })?;
+                Ok(())
+            },
+            |r, _, _: Option<()>| {
+                merged.push(r);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(merged, vec![0, 1]);
+    }
+
+    #[test]
+    fn double_buffered_propagates_produce_errors() {
+        // error at step 1 while step 0's job is in flight: no deadlock,
+        // no merge of the discarded step
+        let mut merged = 0usize;
+        let r = double_buffered(
+            3,
+            |r| {
+                if r == 1 {
+                    Err(Error::Config("produce boom".into()))
+                } else {
+                    Ok((r, Some(r)))
+                }
+            },
+            |j: usize| Ok(j),
+            |_, _, _| {
+                merged += 1;
+                Ok(())
+            },
+        );
+        assert!(r.is_err());
+        assert_eq!(merged, 0, "step 0 must not merge after the run failed");
+    }
+
+    #[test]
+    fn double_buffered_propagates_job_and_merge_errors() {
+        let r = double_buffered(
+            3,
+            |r| Ok((r, Some(r))),
+            |j: usize| {
+                if j == 1 {
+                    Err(Error::Config("job boom".into()))
+                } else {
+                    Ok(j)
+                }
+            },
+            |_, _, _: Option<usize>| Ok(()),
+        );
+        assert!(r.is_err());
+
+        let r = double_buffered(
+            3,
+            |r| Ok((r, None::<()>)),
+            |()| Ok(()),
+            |r, _, _: Option<()>| {
+                if r == 1 {
+                    Err(Error::Codec("merge boom".into()))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert!(r.is_err());
+    }
+
+    /// The combined failure: the detached job panics *and* the next
+    /// produce errors. The handle must still be joined (consuming the
+    /// panic) so the scope exits with the produce error instead of
+    /// re-raising the worker panic as a process abort.
+    #[test]
+    fn produce_error_with_panicking_job_in_flight_still_errors_cleanly() {
+        let r = double_buffered(
+            2,
+            |r| {
+                if r == 1 {
+                    Err(Error::Config("produce boom".into()))
+                } else {
+                    Ok((r, Some(())))
+                }
+            },
+            |()| -> Result<()> { panic!("job dies") },
+            |_, _, _: Option<()>| Ok(()),
+        );
+        match r {
+            Err(Error::Config(m)) => assert_eq!(m, "produce boom"),
+            other => panic!("want the produce error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_buffered_job_panic_is_an_error_not_a_panic() {
+        let r = double_buffered(
+            2,
+            |r| Ok((r, if r == 0 { Some(()) } else { None })),
+            |()| -> Result<()> { panic!("job dies") },
+            |_, _, _: Option<()>| Ok(()),
+        );
+        match r {
+            Err(Error::Config(m)) => assert!(m.contains("panicked"), "{m}"),
+            other => panic!("want Err(Config(..panicked..)), got {other:?}"),
+        }
+    }
+}

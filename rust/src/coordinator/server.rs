@@ -10,10 +10,19 @@
 //! 3. **streams** each uplink into the round's
 //!    [`super::strategy::Aggregator`] *as it arrives* — wire metering,
 //!    decode and validation happen per uplink, decoupled from client
-//!    completion order ([`parallel::run_streamed`]),
+//!    completion order (`parallel::run_streamed`),
 //! 4. folds the round into `w` with `finish` (byte-identical to the
 //!    sequential client-order fold for any arrival order, thread count
-//!    and tile setting — see the `strategy` module docs).
+//!    and tile setting — see the `strategy` module docs),
+//! 5. evaluates on a detached `eval_params` snapshot — inline on the
+//!    sequential engine, overlapping the next round's training on the
+//!    pipelined engine (`RunConfig::pipeline`; see
+//!    [`super::pipeline`]).
+//!
+//! The per-round body lives in `pipeline::train_and_fold`, shared by
+//! both engines so the pipelined run is byte-identical to the
+//! sequential one (per-round weights and every non-timing record
+//! field — pinned by the differential harness).
 //!
 //! Aggregation weights follow Eq. 3 / Eq. 5: `p'_k = n_k / Σ_{j∈C_t}
 //! n_j`, computable before any client finishes because shard sizes are
@@ -21,17 +30,16 @@
 
 use crate::data::{partition, Split};
 use crate::error::{Error, Result};
-use crate::noise::{derive_seed, NoiseGen};
+use crate::noise::NoiseGen;
 use crate::runtime::{ConfigMeta, Runtime};
 use crate::stats::Timer;
 use crate::transport::Meter;
 
-use super::client::{self, Batches, TrainOutcome};
 use super::config::RunConfig;
 use super::metrics::{RoundRecord, RunResult};
-use super::parallel;
+use super::pipeline;
 use super::registry;
-use super::strategy::{Strategy, TrainCtx};
+use super::strategy::Strategy;
 
 /// One federated training run in flight.
 pub struct Federation<'rt> {
@@ -50,6 +58,13 @@ pub struct Federation<'rt> {
     rng: NoiseGen,
     /// Per-round client-visible logging (quiet by default).
     pub verbose: bool,
+    /// Differential-harness hook: when set before [`Federation::run`],
+    /// a bit-exact clone of `w` is pushed into [`Federation::w_trace`]
+    /// the moment each round's fold installs — on both engines, so
+    /// pipelined and sequential runs can be compared round by round.
+    pub capture_w_trace: bool,
+    /// Per-round weight snapshots (see [`Federation::capture_w_trace`]).
+    pub w_trace: Vec<Vec<f32>>,
 }
 
 impl<'rt> Federation<'rt> {
@@ -87,6 +102,8 @@ impl<'rt> Federation<'rt> {
             meter: Meter::new(),
             rng,
             verbose: false,
+            capture_w_trace: false,
+            w_trace: Vec::new(),
         })
     }
 
@@ -95,141 +112,63 @@ impl<'rt> Federation<'rt> {
         self.shards.iter().map(|s| s.len()).collect()
     }
 
-    /// Select `clients_per_round` distinct clients for a round.
-    fn select_clients(&mut self) -> Vec<usize> {
-        let mut ids: Vec<usize> = (0..self.cfg.n_clients).collect();
-        self.rng.shuffle(&mut ids);
-        ids.truncate(self.cfg.clients_per_round);
-        ids
-    }
-
     /// Model parameters used for evaluation (the strategy's choice —
     /// FedPM thresholds the masked init weights; everyone else uses `w`).
     pub fn eval_params(&self) -> Vec<f32> {
         self.strategy.eval_params(&self.w, self.w_init.as_deref())
     }
 
-    /// Run one round; returns its record.
+    /// Run one strictly-sequential round; returns its record.
     ///
     /// Selected clients run through one shared per-client closure on
     /// both the sequential (`threads == 1`) and worker-pool paths. All
     /// client randomness — batch shuffling and training PRNG keys — is
     /// drawn from a per-(client, round) stream derived with
-    /// [`derive_seed`], so the uplink payloads do not depend on client
-    /// execution order; the streaming aggregators guarantee the fold
-    /// doesn't either. The two paths therefore produce identical rounds.
+    /// [`crate::noise::derive_seed`], so the uplink payloads do not
+    /// depend on client execution order; the streaming aggregators
+    /// guarantee the fold doesn't either. The two paths therefore
+    /// produce identical rounds (`pipeline::train_and_fold` holds the
+    /// shared body).
     pub fn round(&mut self, r: usize) -> Result<RoundRecord> {
-        let t_round = Timer::new();
-        self.meter.begin_round();
-        let selected = self.select_clients();
-        let d = self.meta.param_dim;
-        self.meter.downlink_dense(d, selected.len());
-        // Data-proportional weights are known up front (shard sizes are
-        // fixed), so ingestion can start with the first arrival.
-        let total: f64 = selected.iter().map(|&c| self.shards[c].len() as f64).sum();
-
-        let mut agg = self.strategy.aggregator(&self.cfg);
-        agg.begin(r, d, selected.len())?;
-
-        let rt = self.rt;
-        let meta = &self.meta;
-        let cfg = &self.cfg;
-        let split = &self.split;
-        let shards = &self.shards;
-        let w = &self.w;
-        let w_init = self.w_init.as_deref();
-        let strategy: &dyn Strategy = self.strategy.as_ref();
-        let selected = &selected;
-        let run_one = |i: usize| -> Result<TrainOutcome> {
-            let c = selected[i];
-            let mut crng =
-                NoiseGen::new(derive_seed(cfg.seed, c as u64, r as u64, 2));
-            let batches: Batches = client::make_batches(
-                &split.train,
-                &shards[c],
-                meta,
-                cfg.max_batches_per_epoch,
-                &mut crng,
-            )?;
-            let noise_seed = derive_seed(cfg.seed, c as u64, r as u64, 1);
-            let mut ctx = TrainCtx {
-                meta,
-                cfg,
-                round: r,
-                w,
-                w_init,
-                batches: &batches,
-                noise_seed,
-                rng: &mut crng,
-            };
-            strategy.local_train(rt, &mut ctx)
+        // direct field projections: the ctx borrows are disjoint from
+        // the mutable run state passed alongside
+        let ctx = pipeline::EngineCtx {
+            rt: self.rt,
+            cfg: &self.cfg,
+            meta: &self.meta,
+            split: &self.split,
+            shards: &self.shards,
+            strategy: self.strategy.as_ref(),
+            w_init: self.w_init.as_deref(),
+            verbose: self.verbose,
         };
-
-        let mut losses = vec![f64::NAN; selected.len()];
-        let mut train_ms = 0.0f64;
-        let mut compress_ms = 0.0f64;
-        {
-            let meter = &mut self.meter;
-            let agg = &mut agg;
-            let losses = &mut losses;
-            parallel::run_streamed(
-                selected.len(),
-                cfg.threads,
-                run_one,
-                |slot, outcome: TrainOutcome| {
-                    train_ms += outcome.train_ms;
-                    compress_ms += outcome.compress_ms;
-                    losses[slot] = outcome.train_loss;
-                    let decoded = meter.uplink(&outcome.payload)?;
-                    let scale = (shards[selected[slot]].len() as f64 / total) as f32;
-                    agg.ingest(slot, decoded, scale)
-                },
-            )?;
-        }
-        let train_loss = crate::stats::mean(&losses);
-
-        agg.finish(&mut self.w)?;
-
-        let do_eval = self.cfg.eval_every > 0
-            && ((r + 1) % self.cfg.eval_every == 0 || r + 1 == self.cfg.rounds);
-        let (test_loss, test_acc) = if do_eval {
-            let w_eval = self.eval_params();
-            client::evaluate(self.rt, &self.meta, &w_eval, &self.split.test)?
-        } else {
-            (f64::NAN, f64::NAN)
-        };
-
-        let rec = RoundRecord {
-            round: r,
-            train_loss,
-            test_loss,
-            test_acc,
-            uplink_bytes: *self.meter.round_uplink.last().unwrap_or(&0),
-            downlink_bytes: *self.meter.round_downlink.last().unwrap_or(&0),
-            train_ms,
-            compress_ms,
-        };
-        if self.verbose {
-            eprintln!(
-                "[{}/{} {}] round {r}: train_loss {:.4} acc {:.4} uplink {} B ({:.1} ms)",
-                self.cfg.config,
-                self.cfg.method.name(),
-                self.cfg.partition.name(),
-                rec.train_loss,
-                rec.test_acc,
-                rec.uplink_bytes,
-                t_round.ms(),
-            );
-        }
-        Ok(rec)
+        pipeline::sequential_round(&ctx, r, &mut self.w, &mut self.meter, &mut self.rng)
     }
 
-    /// Run the full configured number of rounds.
+    /// Run the full configured number of rounds on the engine selected
+    /// by [`RunConfig::pipeline`]: strictly sequential (the default) or
+    /// double-buffered round pipelining ([`super::pipeline`]). Both
+    /// produce byte-identical weights and records (timing fields
+    /// aside).
     pub fn run(&mut self) -> Result<RunResult> {
         let t = Timer::new();
-        let mut records = Vec::with_capacity(self.cfg.rounds);
-        for r in 0..self.cfg.rounds {
-            records.push(self.round(r)?);
+        let mut trace: Option<Vec<Vec<f32>>> =
+            if self.capture_w_trace { Some(Vec::new()) } else { None };
+        let records = {
+            let ctx = pipeline::EngineCtx {
+                rt: self.rt,
+                cfg: &self.cfg,
+                meta: &self.meta,
+                split: &self.split,
+                shards: &self.shards,
+                strategy: self.strategy.as_ref(),
+                w_init: self.w_init.as_deref(),
+                verbose: self.verbose,
+            };
+            pipeline::run_rounds(&ctx, &mut self.w, &mut self.meter, &mut self.rng, trace.as_mut())?
+        };
+        if let Some(trace) = trace {
+            self.w_trace = trace;
         }
         Ok(RunResult::new(
             self.cfg.config.clone(),
@@ -392,6 +331,54 @@ mod tests {
                     "threads={threads} tile={tile} i={i}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pipelined_engine_matches_sequential_at_unit_scale() {
+        // the full registry × thread grid lives in tests/differential.rs;
+        // this pins the engine dispatch itself, incl. rounds that skip
+        // eval (eval_every = 2 exercises the no-job pipeline path)
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::load(artifacts()).unwrap();
+        let run_with = |pipeline: bool, threads: usize| {
+            let mut cfg = quick_cfg("fedmrn");
+            cfg.pipeline = pipeline;
+            cfg.threads = threads;
+            cfg.eval_every = 2;
+            let mut fed = Federation::new(&rt, cfg, mlp_split(512, 64, 11)).unwrap();
+            fed.capture_w_trace = true;
+            let res = fed.run().unwrap();
+            (res, fed.w_trace.clone(), fed.w.clone())
+        };
+        for threads in [1usize, 4] {
+            let (res_s, trace_s, w_s) = run_with(false, threads);
+            let (res_p, trace_p, w_p) = run_with(true, threads);
+            assert_eq!(w_s.len(), w_p.len());
+            for i in 0..w_s.len() {
+                assert_eq!(w_s[i].to_bits(), w_p[i].to_bits(), "threads={threads} w[{i}]");
+            }
+            assert_eq!(trace_s.len(), trace_p.len());
+            for (r, (a, b)) in trace_s.iter().zip(&trace_p).enumerate() {
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "threads={threads} round {r} trace"
+                );
+            }
+            assert_eq!(res_s.records.len(), res_p.records.len());
+            for (a, b) in res_s.records.iter().zip(&res_p.records) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+                assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+                assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+                assert_eq!(a.uplink_bytes, b.uplink_bytes);
+                assert_eq!(a.downlink_bytes, b.downlink_bytes);
+            }
+            assert_eq!(res_s.uplink_bytes, res_p.uplink_bytes);
+            assert_eq!(res_s.downlink_bytes, res_p.downlink_bytes);
+            assert_eq!(res_s.uplink_msgs, res_p.uplink_msgs);
         }
     }
 

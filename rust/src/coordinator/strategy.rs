@@ -20,9 +20,10 @@
 //! # Ordering guarantee
 //!
 //! `ingest` may be called in **any order** — client completion order is
-//! decoupled from aggregation, which is the prerequisite for overlapping
-//! round `r+1`'s training with round `r`'s aggregation tail (ROADMAP:
-//! multi-round pipelining). Each call carries the uplink's `slot` (the
+//! decoupled from aggregation, which is what lets the double-buffered
+//! engine ([`super::pipeline`], `RunConfig::pipeline`) overlap round
+//! `r`'s evaluation tail with round `r+1`'s training while staying
+//! byte-identical. Each call carries the uplink's `slot` (the
 //! client's index in the round's selection order); the contract is that
 //! the final weights are **byte-identical** to the sequential
 //! slot-ordered fold for every arrival order. Implementations meet it in

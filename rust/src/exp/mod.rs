@@ -64,6 +64,11 @@ pub struct ExpOpts {
     /// 1024; rounded up to a word multiple). Byte-identical results for
     /// any value.
     pub tile: usize,
+    /// Double-buffered round pipelining: overlap each round's
+    /// evaluation with the next round's training
+    /// ([`crate::coordinator::pipeline`]). Byte-identical results
+    /// either way; off by default.
+    pub pipeline: bool,
 }
 
 impl ExpOpts {
@@ -86,6 +91,7 @@ impl ExpOpts {
                 verbose: false,
                 threads: 1,
                 tile: 0,
+                pipeline: false,
             },
             // quick: the recorded-run default — tens of minutes for the
             // full Table-1 sweep on this CPU testbed
@@ -103,6 +109,7 @@ impl ExpOpts {
                 verbose: false,
                 threads: 1,
                 tile: 0,
+                pipeline: false,
             },
             // full: paper-shaped topology (still scaled in rounds)
             "full" => ExpOpts {
@@ -119,6 +126,7 @@ impl ExpOpts {
                 verbose: true,
                 threads: 1,
                 tile: 0,
+                pipeline: false,
             },
             p => return Err(Error::Config(format!("unknown preset {p:?}"))),
         };
@@ -135,6 +143,7 @@ impl ExpOpts {
         o.verbose = args.take_bool("verbose", o.verbose)?;
         o.threads = args.take_usize("threads", o.threads)?;
         o.tile = args.take_usize("tile", o.tile)?;
+        o.pipeline = args.take_bool("pipeline", o.pipeline)?;
         Ok(o)
     }
 }
@@ -280,6 +289,7 @@ pub fn run_arm(
     cfg.seed = o.seed;
     cfg.threads = o.threads;
     cfg.tile = o.tile;
+    cfg.pipeline = o.pipeline;
     let mut fed = Federation::new(rt, cfg, split)?;
     fed.verbose = o.verbose;
     fed.run()
@@ -339,6 +349,18 @@ mod tests {
         let o = ExpOpts::from_args(&mut a).unwrap();
         assert_eq!(o.rounds, 2);
         assert_eq!(o.n_clients, 8);
+        assert!(!o.pipeline, "pipelining is opt-in");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn pipeline_flag_parses() {
+        let mut a = Args::parse(
+            ["x", "--preset", "smoke", "--pipeline"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let o = ExpOpts::from_args(&mut a).unwrap();
+        assert!(o.pipeline);
         a.finish().unwrap();
     }
 

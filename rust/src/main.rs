@@ -26,7 +26,10 @@ USAGE:
               [--partition iid|noniid1|noniid2] [--preset smoke|quick|full]
               [--rounds N] [--clients N] [--per-round N] [--epochs N]
               [--lr F] [--noise-dist uniform|gaussian|bernoulli] [--alpha F]
-              [--seed N] [--threads N] [--tile N] [--verbose] [--csv PATH]
+              [--seed N] [--threads N] [--tile N] [--pipeline] [--verbose]
+              [--csv PATH]
+              --pipeline overlaps each round's evaluation with the next
+              round's training (byte-identical results; wall-clock only)
   fedmrn exp table1|fig4|fig5|fig6|table3|theory|all [--preset ...] [...]
   fedmrn bench [--d N] [--clients N] [--threads 1,2,4,8]
                [--tiles 64,1024,4096] [--warmup N] [--iters N] [--out DIR]

@@ -130,17 +130,31 @@ impl Payload {
                 let d = r.u32()?;
                 let ns = r.u32()? as usize;
                 let words = (d as usize).div_ceil(64);
+                // wire-supplied counts: bound both declared bodies by
+                // the remaining bytes before any allocation
+                r.need_elems(words, 8)?;
+                r.need_elems(ns, 4)?;
                 Payload::SignBits { d, bits: r.u64s(words)?, scales: r.f32s(ns)?, seed }
             }
             TAG_TERN => {
                 let d = r.u32()?;
                 let ns = r.u32()? as usize;
-                let words = (2 * d as usize).div_ceil(64);
+                // 2 bits per element: double in u64 so a hostile d near
+                // u32::MAX cannot wrap the usize doubling on 32-bit
+                // (the quotient always fits)
+                let words = (2 * d as u64).div_ceil(64) as usize;
+                r.need_elems(words, 8)?;
+                r.need_elems(ns, 4)?;
                 Payload::Ternary { d, codes: r.u64s(words)?, scales: r.f32s(ns)? }
             }
             TAG_SPARSE => {
                 let d = r.u32()?;
                 let k = r.u32()? as usize;
+                // `k` comes off the wire: a corrupt header can declare
+                // up to u32::MAX entries (~16 GB of Vec). Bound it by
+                // the bytes actually present (4 idx + 4 val per entry)
+                // before reserving anything.
+                r.need_elems(k, 8)?;
                 let mut idx = Vec::with_capacity(k);
                 for _ in 0..k {
                     idx.push(r.u32()?);
@@ -191,6 +205,22 @@ impl<'a> Reader<'a> {
             Ok(())
         }
     }
+    /// Bounds-check a *wire-declared* element count before anything is
+    /// allocated: `count` elements of `elem_bytes` each must fit in the
+    /// remaining buffer. The product is computed in u64 so a hostile
+    /// count cannot wrap a usize multiplication on 32-bit targets
+    /// (count ≤ u32::MAX and elem_bytes ≤ 8, so the u64 product is
+    /// exact); once it passes, the equal usize product cannot wrap
+    /// either, because it is bounded by the buffer length.
+    fn need_elems(&self, count: usize, elem_bytes: usize) -> Result<()> {
+        let need = count as u64 * elem_bytes as u64;
+        let remaining = (self.b.len() - self.pos) as u64;
+        if need > remaining {
+            Err(Error::Codec("short payload".into()))
+        } else {
+            Ok(())
+        }
+    }
     fn u8(&mut self) -> Result<u8> {
         self.need(1)?;
         let v = self.b[self.pos];
@@ -210,14 +240,14 @@ impl<'a> Reader<'a> {
         Ok(v)
     }
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        self.need(4 * n)?;
+        self.need_elems(n, 4)?;
         let mut out = vec![0.0f32; n];
         LittleEndian::read_f32_into(&self.b[self.pos..self.pos + 4 * n], &mut out);
         self.pos += 4 * n;
         Ok(out)
     }
     fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
-        self.need(8 * n)?;
+        self.need_elems(n, 8)?;
         let mut out = vec![0u64; n];
         LittleEndian::read_u64_into(&self.b[self.pos..self.pos + 8 * n], &mut out);
         self.pos += 8 * n;
@@ -248,14 +278,20 @@ impl Meter {
 
     /// Meter a client → server message; returns the decoded payload so
     /// callers cannot accidentally bypass the wire format.
+    ///
+    /// Accounting happens only **after** a successful decode: a message
+    /// the server cannot decode was never a delivered uplink, so an
+    /// errored round must leave `uplink_bytes` / `uplink_msgs` / the
+    /// per-round series exactly as they were.
     pub fn uplink(&mut self, p: &Payload) -> Result<Payload> {
         let bytes = p.encode();
+        let decoded = Payload::decode(&bytes)?;
         self.uplink_bytes += bytes.len() as u64;
         self.uplink_msgs += 1;
         if let Some(last) = self.round_uplink.last_mut() {
             *last += bytes.len() as u64;
         }
-        Payload::decode(&bytes)
+        Ok(decoded)
     }
 
     /// Meter a server → client broadcast of `d` dense f32 params. The
@@ -269,9 +305,11 @@ impl Meter {
         }
     }
 
-    /// Measured uplink bits per parameter per client-message.
+    /// Measured uplink bits per parameter per client-message. Returns
+    /// `0.0` for a zero-dimensional model or no messages (its
+    /// `RunResult::uplink_bpp` twin has the same guard).
     pub fn uplink_bpp(&self, d: usize) -> f64 {
-        if self.uplink_msgs == 0 {
+        if self.uplink_msgs == 0 || d == 0 {
             return 0.0;
         }
         (self.uplink_bytes as f64 * 8.0)
@@ -339,6 +377,85 @@ mod tests {
         assert!(Payload::decode(&extra).is_err());
     }
 
+    /// Every wire variant at every possible truncation point: decode
+    /// must return `Err` for each proper prefix and `Ok` for the full
+    /// message — never panic, and (per the hostile-header test below)
+    /// never allocate from a length the buffer can't back.
+    #[test]
+    fn decode_truncation_fuzz_every_variant_every_cut() {
+        let payloads = vec![
+            Payload::Dense(vec![1.5; 9]),
+            Payload::MaskedSeed { seed: 7, d: 130, bits: vec![1, 2, 3] },
+            Payload::SignBits {
+                d: 100,
+                bits: vec![u64::MAX, 3],
+                scales: vec![0.5, 0.25, 0.125],
+                seed: 9,
+            },
+            Payload::Ternary { d: 70, codes: vec![0xAAAA, 0x5555, 1], scales: vec![1.0] },
+            Payload::Sparse { d: 500, idx: vec![3, 50, 499], val: vec![1.0, 2.0, 3.0] },
+            Payload::MaskBits { d: 65, bits: vec![42, 1] },
+        ];
+        for p in payloads {
+            let bytes = p.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Payload::decode(&bytes[..cut]).is_err(),
+                    "cut={cut} of {} accepted a truncated {p:?}",
+                    bytes.len()
+                );
+            }
+            assert_eq!(Payload::decode(&bytes).unwrap(), p);
+        }
+    }
+
+    /// Hostile headers: a tiny message whose wire-supplied count fields
+    /// (sparse `k`, sign/ternary `ns`) declare up to `u32::MAX` entries.
+    /// The old sparse arm passed `k` straight to `Vec::with_capacity` —
+    /// a ~16 GB allocation request — before reading a single element;
+    /// now every declared count is checked against the remaining bytes
+    /// first, so these fail fast without reserving anything.
+    #[test]
+    fn hostile_declared_counts_error_before_allocation() {
+        // sparse: tag, d = 100, k = u32::MAX, then nothing
+        let mut sparse = vec![TAG_SPARSE];
+        push_u32(&mut sparse, 100);
+        push_u32(&mut sparse, u32::MAX);
+        assert!(Payload::decode(&sparse).is_err());
+        // sparse with a few bytes of "body" — still nowhere near 8·k
+        sparse.extend_from_slice(&[0u8; 64]);
+        assert!(Payload::decode(&sparse).is_err());
+
+        // sign: tag, seed, d = 64, ns = u32::MAX
+        let mut sign = vec![TAG_SIGN];
+        push_u64(&mut sign, 1);
+        push_u32(&mut sign, 64);
+        push_u32(&mut sign, u32::MAX);
+        push_u64(&mut sign, 0); // the one mask word d=64 promises
+        assert!(Payload::decode(&sign).is_err());
+
+        // ternary: tag, d = 32, ns = u32::MAX
+        let mut tern = vec![TAG_TERN];
+        push_u32(&mut tern, 32);
+        push_u32(&mut tern, u32::MAX);
+        push_u64(&mut tern, 0);
+        assert!(Payload::decode(&tern).is_err());
+
+        // dense: tag, n = u32::MAX, empty body (guarded by f32s itself)
+        let mut dense = vec![TAG_DENSE];
+        push_u32(&mut dense, u32::MAX);
+        assert!(Payload::decode(&dense).is_err());
+
+        // masked-seed / mask: d = u32::MAX promises ~512 MB of words
+        let mut ms = vec![TAG_MASKED_SEED];
+        push_u64(&mut ms, 1);
+        push_u32(&mut ms, u32::MAX);
+        assert!(Payload::decode(&ms).is_err());
+        let mut mb = vec![TAG_MASK];
+        push_u32(&mut mb, u32::MAX);
+        assert!(Payload::decode(&mb).is_err());
+    }
+
     #[test]
     fn fedmrn_wire_is_about_one_bpp() {
         // d = 1M params: FedAvg dense = 32 bpp; FedMRN ≈ 1 bpp + 13 B hdr.
@@ -375,6 +492,39 @@ mod tests {
         assert_eq!(m.round_downlink, vec![3 * 405, 2 * 405]);
         assert_eq!(m.downlink_bytes, 5 * 405);
         assert!((m.uplink_bpp(100) - 32.4).abs() < 0.5);
+    }
+
+    /// Satellite regression: an uplink whose decode fails must leave
+    /// every meter counter and the per-round series untouched — the old
+    /// code incremented them before `Payload::decode` could error.
+    #[test]
+    fn failed_uplink_leaves_meter_untouched() {
+        let mut m = Meter::new();
+        m.begin_round();
+        // idx/val length mismatch encodes fine but cannot decode (the
+        // declared k = 3 promises more f32s than the body carries)
+        let bad = Payload::Sparse { d: 10, idx: vec![1, 2, 3], val: vec![1.0] };
+        assert!(m.uplink(&bad).is_err());
+        assert_eq!(m.uplink_bytes, 0);
+        assert_eq!(m.uplink_msgs, 0);
+        assert_eq!(m.round_uplink, vec![0]);
+        // a subsequent good uplink meters normally into the same round
+        let good = Payload::Dense(vec![0.0; 4]);
+        m.uplink(&good).unwrap();
+        assert_eq!(m.uplink_bytes, good.encoded_len() as u64);
+        assert_eq!(m.uplink_msgs, 1);
+        assert_eq!(m.round_uplink, vec![good.encoded_len() as u64]);
+    }
+
+    #[test]
+    fn uplink_bpp_guards_zero_dimension() {
+        let mut m = Meter::new();
+        m.begin_round();
+        m.uplink(&Payload::Dense(vec![0.0; 4])).unwrap();
+        // d = 0 used to divide by zero (inf); now 0.0 like the
+        // RunResult twin
+        assert_eq!(m.uplink_bpp(0), 0.0);
+        assert!(m.uplink_bpp(4) > 0.0);
     }
 
     #[test]

@@ -28,8 +28,10 @@ use fedmrn::compress::{
     GradCodec, MaskType,
 };
 use fedmrn::coordinator::parallel::{aggregate_masked, MaskedUpdate};
-use fedmrn::coordinator::{registry, Method, RunConfig};
+use fedmrn::coordinator::{registry, Federation, Method, RoundRecord, RunConfig, RunResult};
+use fedmrn::data::{Dataset, Features, Split};
 use fedmrn::noise::{NoiseDist, NoiseGen, Xoshiro256pp};
+use fedmrn::runtime::Runtime;
 use fedmrn::transport::Payload;
 
 /// Thread counts under test: `FEDMRN_DIFF_THREADS=1,4` restricts the
@@ -622,6 +624,144 @@ fn streaming_ingest_matches_sequential_fold_fedmrn_thread_tile_grid() {
                     );
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6. pipelined round engine ≡ sequential round engine
+// ---------------------------------------------------------------------------
+//
+// The double-buffered engine (`--pipeline`) overlaps round r's
+// evaluation with round r+1's training. Acceptance contract: for every
+// Table-1 registry method × thread count × pipeline {on, off}, the
+// per-round global weights (captured the moment each fold installs) and
+// every non-timing RoundRecord field are bit-equal, and the run-level
+// byte totals match. Artifact-gated like every full-engine test: these
+// self-skip when `artifacts/` is absent (run `make artifacts`).
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Tiny linearly-separable dataset matching smoke_mlp's 16-dim input
+/// (the same construction the server unit tests use).
+fn pipe_split(n_train: usize, n_test: usize, seed: u64) -> Split {
+    let mut g = NoiseGen::new(seed);
+    let classes = 4;
+    let dim = 16;
+    let mut centers = vec![0.0f32; classes * dim];
+    g.fill(NoiseDist::Gaussian { alpha: 2.0 }, &mut centers);
+    let mut build = |n: usize| {
+        let mut feats = vec![0.0f32; n * dim];
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let c = i % classes;
+            labels[i] = c as i32;
+            for j in 0..dim {
+                feats[i * dim + j] = centers[c * dim + j] + 0.5 * (g.next_f32() - 0.5);
+            }
+        }
+        Dataset {
+            feats: Features::F32(feats),
+            labels,
+            sample_len: dim,
+            label_len: 1,
+            n,
+            n_classes: classes,
+        }
+    };
+    let train = build(n_train);
+    let test = build(n_test);
+    Split { train, test }
+}
+
+/// One pipelined-vs-sequential run: returns (result, per-round w trace,
+/// final w).
+fn pipe_run(
+    rt: &Runtime,
+    name: &str,
+    threads: usize,
+    pipeline: bool,
+) -> (RunResult, Vec<Vec<f32>>, Vec<f32>) {
+    let noise = NoiseDist::Uniform { alpha: 0.05 };
+    let m = Method::parse(name, noise).unwrap();
+    let mut cfg = RunConfig::new("smoke_mlp", m);
+    cfg.rounds = 4;
+    cfg.n_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_epochs = 1;
+    cfg.lr = 0.3;
+    cfg.noise = noise;
+    cfg.seed = 42;
+    // eval_every = 2: rounds without an eval exercise the pipeline's
+    // no-detached-job path alongside the overlapped one
+    cfg.eval_every = 2;
+    cfg.threads = threads;
+    cfg.pipeline = pipeline;
+    let mut fed = Federation::new(rt, cfg, pipe_split(512, 64, 7)).unwrap();
+    fed.capture_w_trace = true;
+    let res = fed.run().unwrap();
+    let trace = std::mem::take(&mut fed.w_trace);
+    let w = fed.w.clone();
+    (res, trace, w)
+}
+
+fn assert_records_eq_modulo_timing(a: &[RoundRecord], b: &[RoundRecord], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: record count");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{ctx}");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{ctx} round {r} train_loss {} vs {}",
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(
+            x.test_loss.to_bits(),
+            y.test_loss.to_bits(),
+            "{ctx} round {r} test_loss {} vs {}",
+            x.test_loss,
+            y.test_loss
+        );
+        assert_eq!(
+            x.test_acc.to_bits(),
+            y.test_acc.to_bits(),
+            "{ctx} round {r} test_acc {} vs {}",
+            x.test_acc,
+            y.test_acc
+        );
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{ctx} round {r} uplink");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "{ctx} round {r} downlink");
+    }
+}
+
+#[test]
+fn pipeline_on_equals_pipeline_off_for_all_table1_methods() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    for name in registry::table1_names() {
+        for &threads in &thread_grid() {
+            let ctx = format!("{name} threads={threads}");
+            let (res_off, trace_off, w_off) = pipe_run(&rt, name, threads, false);
+            let (res_on, trace_on, w_on) = pipe_run(&rt, name, threads, true);
+            assert_bytes_eq(&w_off, &w_on, &format!("{ctx}: final w"));
+            assert_eq!(trace_off.len(), trace_on.len(), "{ctx}: trace length");
+            for (r, (a, b)) in trace_off.iter().zip(&trace_on).enumerate() {
+                assert_bytes_eq(a, b, &format!("{ctx}: round {r} w"));
+            }
+            assert_records_eq_modulo_timing(&res_off.records, &res_on.records, &ctx);
+            assert_eq!(res_off.uplink_bytes, res_on.uplink_bytes, "{ctx}");
+            assert_eq!(res_off.downlink_bytes, res_on.downlink_bytes, "{ctx}");
+            assert_eq!(res_off.uplink_msgs, res_on.uplink_msgs, "{ctx}");
         }
     }
 }

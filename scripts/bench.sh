@@ -17,5 +17,16 @@ cargo build --release
 cargo bench --bench bench_bitpack
 cargo bench --bench bench_aggregate
 
+# Engine-level rows (pipeline=off vs pipeline=on per method) need the
+# compiled artifacts; skip cleanly on a kernel-only checkout.
+if [ -e artifacts/manifest.json ]; then
+    cargo bench --bench bench_round
+    echo "== engine rows (results/bench_round.json) =="
+    ls -l results/bench_round.json
+else
+    echo "note: no artifacts/ — skipping bench_round (the pipeline on/off" >&2
+    echo "      engine rows; run \`make artifacts\` first to include them)" >&2
+fi
+
 echo "== committed perf trajectory =="
 ls -l BENCH_bitpack.json BENCH_aggregate.json
