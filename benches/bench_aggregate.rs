@@ -1,18 +1,24 @@
 //! End-to-end FedMRN server aggregation (Eq. 5) at production shape:
 //! d = 4M parameters, 32 clients, sweeping the worker-thread count and
-//! the fused regen+accumulate tile length. Every (threads, tile)
-//! produces byte-identical global weights (pinned by
-//! `coordinator::parallel` tests and `tests/differential.rs`); this
-//! target measures the wall-clock side of that contract and writes
-//! `BENCH_aggregate.json` at the repo root (schema: docs/BENCH.md).
+//! the fused regen+accumulate tile length — in both noise stream
+//! layouts. Every (threads, tile) of one layout produces byte-identical
+//! global weights (pinned by `coordinator::parallel` tests and
+//! `tests/differential.rs`); this target measures the wall-clock side
+//! and merges its rows into `BENCH_aggregate.json` at the repo root by
+//! the `(suite, name, threads, tile, layout)` key (schema: docs/BENCH.md
+//! — re-runs replace, never duplicate).
 //!
 //! The `regen_sharded` rows exist to verify the memory claim as much as
 //! the speed one: at d = 4M the `regen_materialized` reference allocates
 //! a 16 MB scratch noise vector per pass, while the sharded tile loop
 //! peaks at `threads × (4·tile + 8 KB)` of scratch — the f32 tile plus
 //! the generator's fixed raw-block per worker (~96 KB at 8 × 1024).
+//! The `layout=interleaved` rows measure the lane-parallel xoshiro fill
+//! (AVX2 where detected): regen is the dominant cost of the fused tile
+//! loop, so this is the headline row pair of the noise-layout-v2 PR.
 
 use fedmrn::bench::suites;
+use fedmrn::noise::NoiseLayout;
 
 fn main() {
     let d = 4_000_000usize;
@@ -20,11 +26,11 @@ fn main() {
     let threads = [1usize, 2, 4, 8];
     let tiles = [64usize, 1024, 4096];
 
-    let mut b = suites::aggregate_suite(d, clients, &threads, 2, 9);
-    b.report(&format!("fedmrn aggregate @ d = {d}, {clients} clients"));
+    let mut all = suites::aggregate_suite(d, clients, &threads, NoiseLayout::Serial, 2, 9);
+    all.report(&format!("fedmrn aggregate @ d = {d}, {clients} clients, serial"));
     for &t in &threads[1..] {
         if let Some(s) = suites::speedup(
-            &b,
+            &all,
             "aggregate fedmrn threads=1",
             &format!("aggregate fedmrn threads={t}"),
         ) {
@@ -32,16 +38,23 @@ fn main() {
         }
     }
 
-    let r = suites::regen_sharded_suite(d, clients, &threads, &tiles, 1, 5);
-    r.report(&format!(
-        "fedmrn fused regen+accumulate tiles @ d = {d}, {clients} clients"
-    ));
-    if let Some(s) = suites::speedup(
-        &r,
-        "regen_materialized threads=1 (full-d scratch)",
-        "regen_sharded threads=1 tile=1024",
-    ) {
-        println!("fused-tile speedup (threads=1, tile=1024): {s:.2}x vs materialized");
+    for layout in [NoiseLayout::Serial, NoiseLayout::Interleaved] {
+        let r = suites::regen_sharded_suite(d, clients, &threads, &tiles, layout, 1, 5);
+        r.report(&format!(
+            "fedmrn fused regen+accumulate tiles @ d = {d}, {clients} clients, {}",
+            layout.name()
+        ));
+        if let Some(s) = suites::speedup(
+            &r,
+            "regen_materialized threads=1 (full-d scratch)",
+            "regen_sharded threads=1 tile=1024",
+        ) {
+            println!(
+                "fused-tile speedup (threads=1, tile=1024, {}): {s:.2}x vs materialized",
+                layout.name()
+            );
+        }
+        all.results.extend(r.results);
     }
     println!(
         "scratch: materialized {} MB/client vs sharded ≤ {} KB total",
@@ -49,9 +62,8 @@ fn main() {
         threads.iter().max().unwrap() * (tiles.iter().max().unwrap() * 4 + 8192) / 1024
     );
 
-    // one trajectory file for both suites
-    b.results.extend(r.results);
+    // one trajectory file for both suites × both layouts, merged by key
     let path = suites::repo_root_file("BENCH_aggregate.json");
-    b.write_json(&path).unwrap();
-    eprintln!("wrote {path}");
+    all.merge_json(&path).unwrap();
+    eprintln!("merged into {path}");
 }

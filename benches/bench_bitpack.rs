@@ -21,6 +21,6 @@ fn main() {
         }
     }
     let path = suites::repo_root_file("BENCH_bitpack.json");
-    b.write_json(&path).unwrap();
-    eprintln!("wrote {path}");
+    b.merge_json(&path).unwrap();
+    eprintln!("merged into {path}");
 }

@@ -7,7 +7,7 @@
 
 use fedmrn::bench::Bench;
 use fedmrn::compress::{fedmrn as mrn, GradCodec, MaskType};
-use fedmrn::noise::{NoiseDist, NoiseGen};
+use fedmrn::noise::{NoiseDist, NoiseGen, NoiseLayout};
 
 fn main() {
     let d = 1_000_000usize;
@@ -42,7 +42,7 @@ fn main() {
 
     // FedMRN server path: seed -> noise regen -> fused accumulate
     let mask: Vec<f32> = (0..d).map(|i| (i % 2) as f32).collect();
-    let payload = mrn::make_payload(&mask, 42, MaskType::Binary);
+    let payload = mrn::make_payload(&mask, 42, NoiseLayout::Serial, MaskType::Binary);
     let dist = NoiseDist::Uniform { alpha: 0.01 };
     let mut acc = vec![0.0f32; d];
     let mut scratch = Vec::new();

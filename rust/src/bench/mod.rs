@@ -12,9 +12,22 @@ use std::time::Instant;
 use crate::jsonx::Value;
 use crate::stats;
 
+/// Structured row tags carried next to a measurement — the identity half
+/// of the `(suite, name, threads, tile, layout)` merge key (docs/BENCH.md).
+#[derive(Clone, Debug, Default)]
+pub struct Tags {
+    pub threads: Option<u64>,
+    pub tile: Option<u64>,
+    /// Noise stream layout the row ran under (`"serial"`/`"interleaved"`).
+    pub layout: Option<String>,
+}
+
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Which suite emitted the row (part of the merge key; rows written
+    /// before the keyed schema carry no suite and are purged on merge).
+    pub suite: String,
     pub name: String,
     pub iters: usize,
     pub median_ms: f64,
@@ -23,16 +36,49 @@ pub struct Measurement {
     pub mean_ms: f64,
     /// Optional element count for throughput (elems/s at the median).
     pub elems: Option<u64>,
+    pub tags: Tags,
+    /// Failed-row marker: the benched closure returned `Err` (warmup or
+    /// timed pass). The row keeps its identity key so a later clean run
+    /// replaces it, but carries no timings.
+    pub error: Option<String>,
 }
 
 impl Measurement {
     pub fn throughput(&self) -> Option<f64> {
+        if self.error.is_some() {
+            return None;
+        }
         self.elems.map(|e| e as f64 / (self.median_ms / 1e3))
+    }
+
+    /// The merge-replace identity of this row.
+    pub fn key(&self) -> String {
+        row_key(
+            &self.suite,
+            &self.name,
+            self.tags.threads,
+            self.tags.tile,
+            self.tags.layout.as_deref(),
+        )
     }
 
     pub fn to_json(&self) -> Value {
         let mut v = Value::obj()
-            .set("name", self.name.as_str())
+            .set("suite", self.suite.as_str())
+            .set("name", self.name.as_str());
+        if let Some(t) = self.tags.threads {
+            v = v.set("threads", t);
+        }
+        if let Some(t) = self.tags.tile {
+            v = v.set("tile", t);
+        }
+        if let Some(l) = &self.tags.layout {
+            v = v.set("layout", l.as_str());
+        }
+        if let Some(e) = &self.error {
+            return v.set("failed", true).set("error", e.as_str());
+        }
+        v = v
             .set("iters", self.iters)
             .set("median_ms", self.median_ms)
             .set("p10_ms", self.p10_ms)
@@ -45,6 +91,9 @@ impl Measurement {
     }
 
     pub fn row(&self) -> String {
+        if let Some(e) = &self.error {
+            return format!("{:<44} FAILED: {e}", self.name);
+        }
         let tput = match self.throughput() {
             Some(t) if t >= 1e9 => format!("  {:8.2} Gelem/s", t / 1e9),
             Some(t) if t >= 1e6 => format!("  {:8.2} Melem/s", t / 1e6),
@@ -58,10 +107,84 @@ impl Measurement {
     }
 }
 
+/// Composite merge key over the identity fields. Missing optionals fold
+/// to distinct sentinels so `(threads=None)` and `(threads=0)` differ.
+fn row_key(
+    suite: &str,
+    name: &str,
+    threads: Option<u64>,
+    tile: Option<u64>,
+    layout: Option<&str>,
+) -> String {
+    format!(
+        "{suite}\u{1f}{name}\u{1f}{}\u{1f}{}\u{1f}{}",
+        threads.map(|t| t.to_string()).unwrap_or_default(),
+        tile.map(|t| t.to_string()).unwrap_or_default(),
+        layout.unwrap_or_default()
+    )
+}
+
+/// The `(suite, name, threads, tile, layout)` key of an on-disk JSON
+/// row, or `None` for rows predating the keyed schema (no `suite`
+/// field) — those are purged by [`merge_rows_json`] rather than left to
+/// accumulate forever.
+fn json_row_key(v: &Value) -> Option<String> {
+    let suite = v.get("suite")?.as_str()?;
+    let name = v.get("name")?.as_str()?;
+    let threads = v.get("threads").and_then(|x| x.as_f64()).map(|x| x as u64);
+    let tile = v.get("tile").and_then(|x| x.as_f64()).map(|x| x as u64);
+    let layout = v.get("layout").and_then(|x| x.as_str());
+    Some(row_key(suite, name, threads, tile, layout))
+}
+
+/// Merge `new_rows` into the JSON array at `path`, **replacing** any
+/// existing row with the same `(suite, name, threads, tile, layout)`
+/// key — re-running a bench can never duplicate rows. Existing rows
+/// with other keys are kept (so partial re-runs don't lose the rest of
+/// the trajectory); rows missing the key fields entirely (pre-schema
+/// files) are dropped. A missing or unparseable file starts fresh.
+pub fn merge_rows_json(path: &str, new_rows: &[Measurement]) -> crate::Result<()> {
+    // dedup within the incoming batch too (last wins): a repeated knob
+    // value — `--threads 2,2` — must not smuggle duplicate keys past the
+    // never-duplicate invariant
+    let mut by_key: std::collections::HashMap<String, usize> =
+        std::collections::HashMap::new();
+    let mut fresh: Vec<&Measurement> = Vec::new();
+    for m in new_rows {
+        match by_key.entry(m.key()) {
+            std::collections::hash_map::Entry::Occupied(e) => fresh[*e.get()] = m,
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(fresh.len());
+                fresh.push(m);
+            }
+        }
+    }
+    let mut out: Vec<Value> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(Value::Arr(rows)) = crate::jsonx::parse(&text) {
+            for row in rows {
+                if let Some(key) = json_row_key(&row) {
+                    if !by_key.contains_key(&key) {
+                        out.push(row);
+                    }
+                }
+            }
+        }
+    }
+    out.extend(fresh.iter().map(|m| m.to_json()));
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, Value::Arr(out).to_json())?;
+    Ok(())
+}
+
 /// Benchmark runner with fixed warmup/measure counts.
 pub struct Bench {
     pub warmup: usize,
     pub iters: usize,
+    /// Suite label stamped on every row this runner records.
+    pub suite: String,
     pub results: Vec<Measurement>,
 }
 
@@ -73,37 +196,97 @@ impl Default for Bench {
 
 impl Bench {
     pub fn new() -> Bench {
-        Bench { warmup: 3, iters: 10, results: Vec::new() }
+        Bench::with_iters(3, 10)
     }
 
     pub fn with_iters(warmup: usize, iters: usize) -> Bench {
-        Bench { warmup, iters, results: Vec::new() }
+        Bench { warmup, iters, suite: String::new(), results: Vec::new() }
+    }
+
+    /// Runner whose rows all belong to `suite` (the first component of
+    /// the merge key — every canonical suite uses this constructor).
+    pub fn for_suite(suite: &str, warmup: usize, iters: usize) -> Bench {
+        Bench { warmup, iters, suite: suite.to_string(), results: Vec::new() }
     }
 
     /// Time `f` (called once per iteration). `elems` enables throughput.
     pub fn run<F: FnMut()>(&mut self, name: &str, elems: Option<u64>, mut f: F)
         -> &Measurement {
-        for _ in 0..self.warmup {
+        self.run_checked(name, elems, Tags::default(), || {
             f();
+            Ok(())
+        })
+    }
+
+    /// Time a fallible body. An `Err` from any call — warmup or timed —
+    /// records a **failed-row marker** (same identity key, no timings)
+    /// instead of aborting the suite: one poisoned row cannot lose the
+    /// rows already collected or still to come.
+    pub fn run_checked<F>(
+        &mut self,
+        name: &str,
+        elems: Option<u64>,
+        tags: Tags,
+        mut f: F,
+    ) -> &Measurement
+    where
+        F: FnMut() -> crate::Result<()>,
+    {
+        let mut failure: Option<String> = None;
+        for _ in 0..self.warmup {
+            if let Err(e) = f() {
+                failure = Some(e.to_string());
+                break;
+            }
         }
         let mut samples = Vec::with_capacity(self.iters);
-        for _ in 0..self.iters {
-            let t0 = Instant::now();
-            f();
-            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        if failure.is_none() {
+            for _ in 0..self.iters {
+                let t0 = Instant::now();
+                let r = f();
+                samples.push(t0.elapsed().as_secs_f64() * 1e3);
+                if let Err(e) = r {
+                    failure = Some(e.to_string());
+                    break;
+                }
+            }
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let m = Measurement {
-            name: name.to_string(),
-            iters: self.iters,
-            median_ms: stats::percentile(&samples, 0.5),
-            p10_ms: stats::percentile(&samples, 0.1),
-            p90_ms: stats::percentile(&samples, 0.9),
-            mean_ms: stats::mean(&samples),
-            elems,
+        let m = if let Some(error) = failure {
+            Measurement {
+                suite: self.suite.clone(),
+                name: name.to_string(),
+                iters: 0,
+                median_ms: 0.0,
+                p10_ms: 0.0,
+                p90_ms: 0.0,
+                mean_ms: 0.0,
+                elems: None,
+                tags,
+                error: Some(error),
+            }
+        } else {
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            Measurement {
+                suite: self.suite.clone(),
+                name: name.to_string(),
+                iters: self.iters,
+                median_ms: stats::percentile(&samples, 0.5),
+                p10_ms: stats::percentile(&samples, 0.1),
+                p90_ms: stats::percentile(&samples, 0.9),
+                mean_ms: stats::mean(&samples),
+                elems,
+                tags,
+                error: None,
+            }
         };
         self.results.push(m);
         self.results.last().unwrap()
+    }
+
+    /// Merge this runner's rows into `path` by row key
+    /// ([`merge_rows_json`]).
+    pub fn merge_json(&self, path: &str) -> crate::Result<()> {
+        merge_rows_json(path, &self.results)
     }
 
     /// Print all collected rows as a table.
@@ -149,12 +332,102 @@ mod tests {
 
     #[test]
     fn json_emission() {
-        let mut b = Bench::with_iters(0, 2);
+        let mut b = Bench::for_suite("unit", 0, 2);
         b.run("noop", None, || {});
         let v = b.to_json();
         let arr = v.as_arr().unwrap();
         assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("suite").unwrap().as_str().unwrap(), "unit");
         assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "noop");
         assert_eq!(arr[0].get("iters").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn failed_bench_row_is_recorded_not_fatal() {
+        // Satellite regression: an erroring body used to `.unwrap()` and
+        // abort the whole bench run, losing every collected row. Now it
+        // records a failed-row marker and the suite keeps going.
+        let mut b = Bench::for_suite("unit", 1, 3);
+        b.run("before", None, || {});
+        let mut calls = 0;
+        b.run_checked("poisoned", Some(10), Tags::default(), || {
+            calls += 1;
+            Err(crate::error::Error::Codec("boom".into()))
+        });
+        b.run("after", None, || {});
+        assert_eq!(calls, 1, "a failed body is not retried");
+        assert_eq!(b.results.len(), 3);
+        let bad = &b.results[1];
+        assert_eq!(bad.error.as_deref().map(|e| e.contains("boom")), Some(true));
+        assert!(bad.throughput().is_none());
+        let j = bad.to_json();
+        assert_eq!(j.get("failed").unwrap().as_bool(), Some(true));
+        assert!(j.get("median_ms").is_none(), "failed rows carry no timings");
+        // the good rows are intact on both sides
+        assert!(b.results[0].error.is_none());
+        assert!(b.results[2].error.is_none());
+        // a failure mid-timing (after warmup passed) is also a marker
+        let mut n = 0;
+        b.run_checked("late", None, Tags::default(), || {
+            n += 1;
+            if n > 1 {
+                Err(crate::error::Error::Codec("late boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(b.results[3].error.is_some());
+    }
+
+    #[test]
+    fn bench_merge_replaces_rows_on_key_and_never_duplicates() {
+        let path = std::env::temp_dir()
+            .join(format!("fedmrn_merge_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        // seed the file with a pre-schema row (no suite field: the
+        // PR-1/PR-2 era format) — it must be purged by the first merge
+        std::fs::write(
+            &path,
+            r#"[{"name": "aggregate fedmrn threads=2", "median_ms": 1.0}]"#,
+        )
+        .unwrap();
+
+        let tags = |t: u64, layout: &str| Tags {
+            threads: Some(t),
+            tile: None,
+            layout: Some(layout.to_string()),
+        };
+        let mut b = Bench::for_suite("aggregate", 0, 1);
+        b.run_checked("row", Some(1), tags(2, "serial"), || Ok(()));
+        b.merge_json(&path).unwrap();
+        let rows = crate::jsonx::parse_file(std::path::Path::new(&path)).unwrap();
+        assert_eq!(rows.as_arr().unwrap().len(), 1, "pre-schema row purged");
+
+        // re-running the identical bench twice must not duplicate rows
+        let mut b2 = Bench::for_suite("aggregate", 0, 1);
+        b2.run_checked("row", Some(1), tags(2, "serial"), || Ok(()));
+        b2.merge_json(&path).unwrap();
+        let rows = crate::jsonx::parse_file(std::path::Path::new(&path)).unwrap();
+        assert_eq!(rows.as_arr().unwrap().len(), 1, "same key replaces");
+
+        // a different layout (or thread count) is a different key: both
+        // rows coexist
+        let mut b3 = Bench::for_suite("aggregate", 0, 1);
+        b3.run_checked("row", Some(1), tags(2, "interleaved"), || Ok(()));
+        b3.run_checked("row", Some(1), tags(4, "serial"), || Ok(()));
+        // a duplicate key WITHIN one batch (e.g. `--threads 4,4`) must
+        // also collapse — last one wins
+        b3.run_checked("row", Some(1), tags(4, "serial"), || Ok(()));
+        b3.merge_json(&path).unwrap();
+        let rows = crate::jsonx::parse_file(std::path::Path::new(&path)).unwrap();
+        let arr = rows.as_arr().unwrap();
+        assert_eq!(arr.len(), 3, "distinct keys accumulate");
+        let layouts: Vec<&str> = arr
+            .iter()
+            .map(|r| r.get("layout").unwrap().as_str().unwrap())
+            .collect();
+        assert!(layouts.contains(&"interleaved"));
+        let _ = std::fs::remove_file(&path);
     }
 }

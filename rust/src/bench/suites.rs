@@ -2,11 +2,11 @@
 //! the `fedmrn bench` CLI subcommand so both emit the same rows into the
 //! same `BENCH_*.json` files (schema: docs/BENCH.md).
 
-use crate::bench::Bench;
+use crate::bench::{Bench, Tags};
 use crate::bitpack;
 use crate::coordinator::parallel::{aggregate_masked, MaskedUpdate};
 use crate::compress::MaskType;
-use crate::noise::{NoiseDist, NoiseGen};
+use crate::noise::{NoiseDist, NoiseGen, NoiseLayout};
 
 /// Path of `name` at the repository root (one level above the crate).
 /// The perf trajectory files `BENCH_bitpack.json` /
@@ -49,6 +49,11 @@ fn random_mask_bits(d: usize, seed: u64, signed: bool) -> Vec<u64> {
 /// Bit-packing hot path at wire scale: word-parallel kernels next to the
 /// seed's per-bit scalar oracles (`bitpack::scalar`), so the JSON rows
 /// carry the before/after speedup in one file.
+///
+/// Fallible kernels run through [`Bench::run_checked`]: a Codec error in
+/// one row records a failed-row marker and the rest of the suite (and
+/// the already-collected rows) survive — the old `.unwrap()` bodies
+/// aborted the whole bench process instead.
 pub fn bitpack_suite(d: usize, warmup: usize, iters: usize) -> Bench {
     let mut g = NoiseGen::new(1);
     let mask: Vec<f32> = (0..d).map(|_| (g.next_u64() & 1) as f32).collect();
@@ -61,61 +66,84 @@ pub fn bitpack_suite(d: usize, warmup: usize, iters: usize) -> Bench {
     let mut acc = vec![0.0f32; d];
     let mut words = Vec::new();
     let e = Some(d as u64);
+    let t = Tags::default;
 
-    let mut b = Bench::with_iters(warmup, iters);
+    let mut b = Bench::for_suite("bitpack", warmup, iters);
     b.run("pack_binary", e, || {
         bitpack::pack_binary(&mask, &mut words);
     });
-    b.run("unpack_binary (word)", e, || {
-        bitpack::unpack_binary(&bits, d, &mut out).unwrap();
+    b.run_checked("unpack_binary (word)", e, t(), || {
+        bitpack::unpack_binary(&bits, d, &mut out)
     });
     b.run("unpack_binary (seed scalar)", e, || {
         bitpack::scalar::unpack_binary(&bits, d, &mut out);
     });
-    b.run("apply_binary (word, fused n*m)", e, || {
-        bitpack::apply_binary(&bits, &noise, &mut out).unwrap();
+    b.run_checked("apply_binary (word, fused n*m)", e, t(), || {
+        bitpack::apply_binary(&bits, &noise, &mut out)
     });
     b.run("apply_binary (seed scalar)", e, || {
         bitpack::scalar::apply_binary(&bits, &noise, &mut out);
     });
-    b.run("apply_signed (word)", e, || {
-        bitpack::apply_signed(&bits, &noise, &mut out).unwrap();
+    b.run_checked("apply_signed (word)", e, t(), || {
+        bitpack::apply_signed(&bits, &noise, &mut out)
     });
     b.run("apply_signed (seed scalar)", e, || {
         bitpack::scalar::apply_signed(&bits, &noise, &mut out);
     });
-    b.run("accumulate_binary (word, Eq.5 inner)", e, || {
-        bitpack::accumulate_binary(&bits, &noise, 0.1, &mut acc).unwrap();
+    b.run_checked("accumulate_binary (word, Eq.5 inner)", e, t(), || {
+        bitpack::accumulate_binary(&bits, &noise, 0.1, &mut acc)
     });
     b.run("accumulate_binary (seed scalar)", e, || {
         bitpack::scalar::accumulate_binary(&bits, &noise, 0.1, &mut acc);
     });
-    b.run("accumulate_signed (word)", e, || {
-        bitpack::accumulate_signed(&bits, &noise, 0.1, &mut acc).unwrap();
+    b.run_checked("accumulate_signed (word)", e, t(), || {
+        bitpack::accumulate_signed(&bits, &noise, 0.1, &mut acc)
     });
     b.run("accumulate_signed (seed scalar)", e, || {
         bitpack::scalar::accumulate_signed(&bits, &noise, 0.1, &mut acc);
     });
-    b.run("noise_fill uniform (block)", e, || {
-        NoiseGen::new(7).fill(NoiseDist::Uniform { alpha: 0.01 }, &mut out);
-    });
-    b.run("naive unpack+multiply", e, || {
-        bitpack::unpack_binary(&bits, d, &mut out).unwrap();
+    for layout in [NoiseLayout::Serial, NoiseLayout::Interleaved] {
+        let tags = Tags { layout: Some(layout.name().to_string()), ..Tags::default() };
+        // construct OUTSIDE the timed closure: generator setup (serial
+        // splitmix seeding; interleaved additionally three GF(2) lane
+        // jumps and, on first use per process, the lazy basis prefix) is
+        // one-time cost, and this row is docs/BENCH.md's isolated
+        // fill-only serial-vs-interleaved ratio — each iteration times
+        // exactly one d-element fill, continuing the stream
+        let mut g = NoiseGen::with_layout(7, layout);
+        b.run_checked(
+            &format!("noise_fill uniform (block, {})", layout.name()),
+            e,
+            tags,
+            || {
+                g.fill(NoiseDist::Uniform { alpha: 0.01 }, &mut out);
+                Ok(())
+            },
+        );
+    }
+    b.run_checked("naive unpack+multiply", e, t(), || {
+        bitpack::unpack_binary(&bits, d, &mut out)?;
         for (o, n) in out.iter_mut().zip(&noise) {
             *o *= n;
         }
+        Ok(())
     });
     b
 }
 
 /// End-to-end Eq. 5 server aggregation: regenerate `G(s_k)` for each of
 /// `clients` payloads and fuse the masks into the global accumulator, at
-/// each thread count in `threads` (1 = the sequential reference path).
-/// Throughput elems = `d × clients` fused parameters per pass.
+/// each thread count in `threads` (1 = the sequential reference path),
+/// in the given noise stream `layout`. Rows are stamped with the layout
+/// tag and keyed `(suite, name, threads, tile, layout)` — see
+/// docs/BENCH.md. Throughput elems = `d × clients` fused parameters per
+/// pass. Kernel errors record per-row failure markers, never abort the
+/// suite.
 pub fn aggregate_suite(
     d: usize,
     clients: usize,
     threads: &[usize],
+    layout: NoiseLayout,
     warmup: usize,
     iters: usize,
 ) -> Bench {
@@ -135,10 +163,15 @@ pub fn aggregate_suite(
     let mut w = vec![0.0f32; d];
     let elems = Some((d as u64) * (clients as u64));
 
-    let mut b = Bench::with_iters(warmup, iters);
+    let mut b = Bench::for_suite("aggregate", warmup, iters);
     for &t in threads {
-        b.run(&format!("aggregate fedmrn threads={t}"), elems, || {
-            aggregate_masked(&updates, dist, MaskType::Binary, &mut w, t, 0).unwrap();
+        let tags = Tags {
+            threads: Some(t as u64),
+            tile: None,
+            layout: Some(layout.name().to_string()),
+        };
+        b.run_checked(&format!("aggregate fedmrn threads={t}"), elems, tags, || {
+            aggregate_masked(&updates, dist, layout, MaskType::Binary, &mut w, t, 0)
         });
     }
     b
@@ -153,14 +186,17 @@ pub fn aggregate_suite(
 /// jump-ahead sharded tile loop at each `(threads, tile)`: scratch is
 /// `4·tile + 8 KB` per worker (the f32 tile plus the generator's fixed
 /// raw-block) — KBs total, not MBs — and the noise never leaves L1
-/// before it is consumed. All rows
-/// compute byte-identical global weights (pinned by the differential
-/// harness); this suite measures the wall-clock and bandwidth side.
+/// before it is consumed. All rows of one layout compute byte-identical
+/// global weights (pinned by the differential harness); this suite
+/// measures the wall-clock and bandwidth side. Run it once per layout
+/// (`serial` vs `interleaved`) to see the lane-parallel regen win — the
+/// rows merge side by side under their layout tags.
 pub fn regen_sharded_suite(
     d: usize,
     clients: usize,
     threads: &[usize],
     tiles: &[usize],
+    layout: NoiseLayout,
     warmup: usize,
     iters: usize,
 ) -> Bench {
@@ -179,32 +215,59 @@ pub fn regen_sharded_suite(
     let dist = NoiseDist::Uniform { alpha: 0.01 };
     let mut w = vec![0.0f32; d];
     let elems = Some((d as u64) * (clients as u64));
+    let tags = |threads: Option<u64>, tile: Option<u64>| Tags {
+        threads,
+        tile,
+        layout: Some(layout.name().to_string()),
+    };
 
-    let mut b = Bench::with_iters(warmup, iters);
-    // pre-tile reference: per-client full-d scratch, two passes
+    let mut b = Bench::for_suite("regen_sharded", warmup, iters);
+    // pre-tile reference: per-client full-d scratch, two passes (fills
+    // in the same layout, so the fused rows' speedup is like-for-like)
     let mut scratch = vec![0.0f32; d];
-    b.run("regen_materialized threads=1 (full-d scratch)", elems, || {
-        for u in &updates {
-            NoiseGen::new(u.seed).fill(dist, &mut scratch);
-            bitpack::accumulate_binary(u.bits, &scratch, u.scale, &mut w).unwrap();
-        }
-    });
+    b.run_checked(
+        "regen_materialized threads=1 (full-d scratch)",
+        elems,
+        tags(Some(1), None),
+        || {
+            for u in &updates {
+                NoiseGen::with_layout(u.seed, layout).fill(dist, &mut scratch);
+                bitpack::accumulate_binary(u.bits, &scratch, u.scale, &mut w)?;
+            }
+            Ok(())
+        },
+    );
     drop(scratch);
     for &t in threads {
         for &tile in tiles {
-            b.run(&format!("regen_sharded threads={t} tile={tile}"), elems, || {
-                aggregate_masked(&updates, dist, MaskType::Binary, &mut w, t, tile)
-                    .unwrap();
-            });
+            b.run_checked(
+                &format!("regen_sharded threads={t} tile={tile}"),
+                elems,
+                tags(Some(t as u64), Some(tile as u64)),
+                || {
+                    aggregate_masked(
+                        &updates,
+                        dist,
+                        layout,
+                        MaskType::Binary,
+                        &mut w,
+                        t,
+                        tile,
+                    )
+                },
+            );
         }
     }
     b
 }
 
 /// Median-time ratio `base / other` between two named rows (speedup of
-/// `other` over `base`), if both rows exist.
+/// `other` over `base`), if both rows exist and neither is a failed-row
+/// marker.
 pub fn speedup(b: &Bench, base: &str, other: &str) -> Option<f64> {
-    let find = |name: &str| b.results.iter().find(|m| m.name == name);
+    let find = |name: &str| {
+        b.results.iter().find(|m| m.name == name && m.error.is_none())
+    };
     match (find(base), find(other)) {
         (Some(a), Some(o)) if o.median_ms > 0.0 => Some(a.median_ms / o.median_ms),
         _ => None,
@@ -220,6 +283,7 @@ mod tests {
         // tiny sizes so the suite itself stays test-fast
         let b = bitpack_suite(10_007, 0, 1);
         assert!(b.results.len() >= 12);
+        assert!(b.results.iter().all(|m| m.suite == "bitpack" && m.error.is_none()));
         assert!(speedup(
             &b,
             "apply_binary (seed scalar)",
@@ -227,22 +291,45 @@ mod tests {
         )
         .unwrap()
             > 0.0);
-        let a = aggregate_suite(10_007, 4, &[1, 2], 0, 1);
-        assert_eq!(a.results.len(), 2);
-        assert!(a.results.iter().all(|m| m.median_ms >= 0.0));
+        for layout in [NoiseLayout::Serial, NoiseLayout::Interleaved] {
+            let a = aggregate_suite(10_007, 4, &[1, 2], layout, 0, 1);
+            assert_eq!(a.results.len(), 2);
+            assert!(a.results.iter().all(|m| {
+                m.median_ms >= 0.0
+                    && m.suite == "aggregate"
+                    && m.tags.layout.as_deref() == Some(layout.name())
+                    && m.error.is_none()
+            }));
+        }
     }
 
     #[test]
     fn regen_sharded_suite_rows() {
-        let r = regen_sharded_suite(10_007, 3, &[1, 2], &[64, 1024], 0, 1);
-        // 1 reference row + threads × tiles
-        assert_eq!(r.results.len(), 1 + 2 * 2);
-        assert!(r.results[0].name.starts_with("regen_materialized"));
-        assert!(r
-            .results
-            .iter()
-            .any(|m| m.name == "regen_sharded threads=2 tile=1024"));
-        assert!(r.results.iter().all(|m| m.median_ms >= 0.0));
+        for layout in [NoiseLayout::Serial, NoiseLayout::Interleaved] {
+            let r = regen_sharded_suite(10_007, 3, &[1, 2], &[64, 1024], layout, 0, 1);
+            // 1 reference row + threads × tiles
+            assert_eq!(r.results.len(), 1 + 2 * 2);
+            assert!(r.results[0].name.starts_with("regen_materialized"));
+            assert!(r
+                .results
+                .iter()
+                .any(|m| m.name == "regen_sharded threads=2 tile=1024"));
+            assert!(r.results.iter().all(|m| {
+                m.median_ms >= 0.0
+                    && m.suite == "regen_sharded"
+                    && m.tags.layout.as_deref() == Some(layout.name())
+                    && m.error.is_none()
+            }));
+            // the tile rows carry the structured key fields the merge
+            // dedups on
+            let row = r
+                .results
+                .iter()
+                .find(|m| m.name == "regen_sharded threads=2 tile=64")
+                .unwrap();
+            assert_eq!(row.tags.threads, Some(2));
+            assert_eq!(row.tags.tile, Some(64));
+        }
     }
 
     #[test]

@@ -9,22 +9,24 @@
 
 use crate::bitpack;
 use crate::error::{Error, Result};
-use crate::noise::{NoiseDist, NoiseGen};
+use crate::noise::{NoiseDist, NoiseGen, NoiseLayout};
 use crate::transport::Payload;
 
 use super::MaskType;
 
 /// Materialise the update `G(seed) ⊙ m` (binary) or `G(seed) ⊙ m_s`
-/// (signed) from a [`Payload::MaskedSeed`].
+/// (signed) from a [`Payload::MaskedSeed`]. Noise regenerates in the
+/// stream layout the payload declares — the layout the client filled
+/// with (the tag is wire metadata precisely so this call can't guess).
 pub fn decode(
     p: &Payload,
     d: usize,
     dist: NoiseDist,
     mask_type: MaskType,
 ) -> Result<Vec<f32>> {
-    let (seed, bits) = parts(p, d)?;
+    let (seed, layout, bits) = parts(p, d)?;
     let mut noise = vec![0.0f32; d];
-    NoiseGen::new(seed).fill(dist, &mut noise);
+    NoiseGen::with_layout(seed, layout).fill(dist, &mut noise);
     let mut out = vec![0.0f32; d];
     match mask_type {
         MaskType::Binary => bitpack::apply_binary(bits, &noise, &mut out)?,
@@ -45,10 +47,10 @@ pub fn accumulate(
     scratch: &mut Vec<f32>,
 ) -> Result<()> {
     let d = acc.len();
-    let (seed, bits) = parts(p, d)?;
+    let (seed, layout, bits) = parts(p, d)?;
     scratch.clear();
     scratch.resize(d, 0.0);
-    NoiseGen::new(seed).fill(dist, scratch);
+    NoiseGen::with_layout(seed, layout).fill(dist, scratch);
     match mask_type {
         MaskType::Binary => bitpack::accumulate_binary(bits, scratch, scale, acc)?,
         MaskType::Signed => bitpack::accumulate_signed(bits, scratch, scale, acc)?,
@@ -57,12 +59,13 @@ pub fn accumulate(
 }
 
 /// Destructure a [`Payload::MaskedSeed`] for dimension `d`, validating
-/// payload kind, dimension and mask-bit length once. Entry point for
-/// the parallel aggregator, which regenerates noise and fuses masks on
-/// worker threads, and for streaming ingest — which relies on the
+/// payload kind, dimension and mask-bit length once; the returned
+/// [`NoiseLayout`] is the stream layout the client declared. Entry point
+/// for the parallel aggregator, which regenerates noise and fuses masks
+/// on worker threads, and for streaming ingest — which relies on the
 /// bit-length check happening *here*, at ingest time, not at finish.
-pub fn parts(p: &Payload, d: usize) -> Result<(u64, &[u64])> {
-    let Payload::MaskedSeed { seed, d: pd, bits } = p else {
+pub fn parts(p: &Payload, d: usize) -> Result<(u64, NoiseLayout, &[u64])> {
+    let Payload::MaskedSeed { seed, d: pd, layout, bits } = p else {
         return Err(Error::Codec("fedmrn: wrong payload".into()));
     };
     if *pd as usize != d {
@@ -75,18 +78,25 @@ pub fn parts(p: &Payload, d: usize) -> Result<(u64, &[u64])> {
             d.div_ceil(64)
         )));
     }
-    Ok((*seed, bits))
+    Ok((*seed, *layout, bits))
 }
 
 /// Client-side helper: pack an f32 mask (from the HLO finalize step) into
-/// the wire payload.
-pub fn make_payload(mask: &[f32], seed: u64, mask_type: MaskType) -> Payload {
+/// the wire payload. `layout` must be the stream layout the mask was
+/// learned against (the layout of the client's `G(seed)` fill) — it
+/// rides in the seed metadata so the server regenerates identically.
+pub fn make_payload(
+    mask: &[f32],
+    seed: u64,
+    layout: NoiseLayout,
+    mask_type: MaskType,
+) -> Payload {
     let mut bits = Vec::new();
     match mask_type {
         MaskType::Binary => bitpack::pack_binary(mask, &mut bits),
         MaskType::Signed => bitpack::pack_signed(mask, &mut bits),
     }
-    Payload::MaskedSeed { seed, d: mask.len() as u32, bits }
+    Payload::MaskedSeed { seed, d: mask.len() as u32, layout, bits }
 }
 
 #[cfg(test)]
@@ -110,15 +120,31 @@ mod tests {
     fn decode_matches_manual_reconstruction() {
         let d = 1000;
         let dist = NoiseDist::Uniform { alpha: 0.01 };
-        for mt in [MaskType::Binary, MaskType::Signed] {
-            let m = mask(d, 1, mt);
-            let p = make_payload(&m, 0xABCD, mt);
-            let got = decode(&p, d, dist, mt).unwrap();
-            let mut noise = vec![0.0f32; d];
-            NoiseGen::new(0xABCD).fill(dist, &mut noise);
-            for i in 0..d {
-                assert_eq!(got[i], noise[i] * m[i], "{mt:?} i={i}");
+        for layout in [NoiseLayout::Serial, NoiseLayout::Interleaved] {
+            for mt in [MaskType::Binary, MaskType::Signed] {
+                let m = mask(d, 1, mt);
+                let p = make_payload(&m, 0xABCD, layout, mt);
+                let got = decode(&p, d, dist, mt).unwrap();
+                let mut noise = vec![0.0f32; d];
+                NoiseGen::with_layout(0xABCD, layout).fill(dist, &mut noise);
+                for i in 0..d {
+                    assert_eq!(got[i], noise[i] * m[i], "{layout:?} {mt:?} i={i}");
+                }
             }
+        }
+    }
+
+    #[test]
+    fn parts_carries_the_declared_layout() {
+        let m = mask(128, 9, MaskType::Binary);
+        for layout in [NoiseLayout::Serial, NoiseLayout::Interleaved] {
+            let p = make_payload(&m, 5, layout, MaskType::Binary);
+            let (seed, got, _) = parts(&p, 128).unwrap();
+            assert_eq!(seed, 5);
+            assert_eq!(got, layout);
+            // and through actual wire bytes
+            let p2 = Payload::decode(&p.encode()).unwrap();
+            assert_eq!(parts(&p2, 128).unwrap().1, layout);
         }
     }
 
@@ -128,7 +154,7 @@ mod tests {
         let dist = NoiseDist::Gaussian { alpha: 0.005 };
         for mt in [MaskType::Binary, MaskType::Signed] {
             let m = mask(d, 2, mt);
-            let p = make_payload(&m, 42, mt);
+            let p = make_payload(&m, 42, NoiseLayout::Serial, mt);
             let dec = decode(&p, d, dist, mt).unwrap();
             let mut acc = vec![0.25f32; d];
             let mut scratch = Vec::new();
@@ -146,7 +172,7 @@ mod tests {
         let d = 300;
         let dist = NoiseDist::Bernoulli { alpha: 0.02 };
         let m = mask(d, 3, MaskType::Binary);
-        let p = make_payload(&m, 7, MaskType::Binary);
+        let p = make_payload(&m, 7, NoiseLayout::Serial, MaskType::Binary);
         let bytes = p.encode();
         let p2 = Payload::decode(&bytes).unwrap();
         assert_eq!(
@@ -158,7 +184,7 @@ mod tests {
     #[test]
     fn dimension_mismatch_rejected() {
         let m = mask(64, 4, MaskType::Binary);
-        let p = make_payload(&m, 1, MaskType::Binary);
+        let p = make_payload(&m, 1, NoiseLayout::Serial, MaskType::Binary);
         assert!(decode(&p, 65, NoiseDist::Uniform { alpha: 1.0 }, MaskType::Binary)
             .is_err());
     }

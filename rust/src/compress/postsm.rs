@@ -8,7 +8,7 @@
 
 use crate::bitpack;
 use crate::error::Result;
-use crate::noise::{NoiseDist, NoiseGen};
+use crate::noise::{NoiseDist, NoiseGen, NoiseLayout};
 use crate::transport::Payload;
 
 use super::{fedmrn, MaskType};
@@ -45,7 +45,9 @@ pub fn encode(update: &[f32], seed: u64, dist: NoiseDist, mask_type: MaskType) -
             }
         }
     }
-    Payload::MaskedSeed { seed, d: d as u32, bits }
+    // PostSM always fills (and therefore declares) the serial layout —
+    // the wire default; the shared decoder honours whatever is declared.
+    Payload::MaskedSeed { seed, d: d as u32, layout: NoiseLayout::Serial, bits }
 }
 
 pub fn decode(p: &Payload, d: usize, dist: NoiseDist, mask_type: MaskType) -> Result<Vec<f32>> {

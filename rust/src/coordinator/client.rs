@@ -24,7 +24,7 @@ use xla::Literal;
 use crate::compress::{fedmrn, fedpm as fedpm_codec, MaskType};
 use crate::data::{Dataset, Features};
 use crate::error::{Error, Result};
-use crate::noise::{NoiseDist, NoiseGen};
+use crate::noise::{NoiseDist, NoiseGen, NoiseLayout};
 use crate::runtime::{
     lit_f32, lit_f32_shaped, lit_i32_shaped, lit_key, lit_scalar, scalar_f32,
     to_vec_f32, ConfigMeta, Runtime,
@@ -158,13 +158,16 @@ pub fn train_mrn(
     mask_type: MaskType,
     mode: MrnMode,
     noise_dist: NoiseDist,
+    noise_layout: NoiseLayout,
     noise_seed: u64,
     rng: &mut NoiseGen,
 ) -> Result<(Payload, f64, f64)> {
     let d = meta.param_dim;
     let step_name = mrn_step_name(mask_type, mode);
+    // the layout is part of G(s)'s identity: the mask is learned against
+    // exactly the stream the server will regenerate from the wire tag
     let mut noise = vec![0.0f32; d];
-    NoiseGen::new(noise_seed).fill(noise_dist, &mut noise);
+    NoiseGen::with_layout(noise_seed, noise_layout).fill(noise_dist, &mut noise);
     let noise_lit = lit_f32(&noise);
     let w_lit = lit_f32(w_global);
     let lr_lit = lit_scalar(lr);
@@ -204,7 +207,7 @@ pub fn train_mrn(
         &[&u_lit, &noise_lit, &lit_key(rng.next_u64())],
     )?;
     let mask = to_vec_f32(&outs[0])?;
-    let payload = fedmrn::make_payload(&mask, noise_seed, mask_type);
+    let payload = fedmrn::make_payload(&mask, noise_seed, noise_layout, mask_type);
     let fin_ms = t_fin.ms();
     Ok((payload, loss_sum / (total_steps) as f64, fin_ms))
 }

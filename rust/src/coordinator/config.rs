@@ -3,7 +3,7 @@
 use crate::compress::{GradCodec, MaskType};
 use crate::data::partition::Partition;
 use crate::error::{Error, Result};
-use crate::noise::NoiseDist;
+use crate::noise::{NoiseDist, NoiseLayout};
 
 /// FedMRN masking mode (the Figure-4 ablation axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,6 +80,15 @@ pub struct RunConfig {
     /// Noise distribution for FedMRN / PostSM (paper default:
     /// Uniform[-1e-2,1e-2] binary, [-5e-3,5e-3] signed).
     pub noise: NoiseDist,
+    /// Stream layout of `G(s)` (`--noise-layout`): `Serial` (the wire
+    /// default — bit-exact with every stored seed and golden vector) or
+    /// `Interleaved` (the lane-parallel v2 stream; SIMD-width fills on
+    /// both ends). Clients fill with this layout, the tag rides in the
+    /// wire seed metadata, and the server regenerates with it — the
+    /// *result* differs between layouts (different draw order), which is
+    /// exactly why it is a versioned config knob and not a transparent
+    /// optimisation. See docs/NOISE.md "Stream layouts".
+    pub noise_layout: NoiseLayout,
     pub partition: Partition,
     pub seed: u64,
     /// Evaluate every `eval_every` rounds (and always on the last).
@@ -117,6 +126,7 @@ impl RunConfig {
             local_epochs: 1,
             lr: 0.1,
             noise: NoiseDist::Uniform { alpha: 0.01 },
+            noise_layout: NoiseLayout::Serial,
             partition: Partition::Iid,
             seed: 1,
             eval_every: 1,
@@ -150,6 +160,20 @@ impl RunConfig {
         }
         if self.lr <= 0.0 {
             return Err(Error::Config("lr must be > 0".into()));
+        }
+        // PostSM is a wire-compat arm of the Figure-4 study: it encodes
+        // (and declares) the serial layout only. Reject the knob up
+        // front rather than silently dropping it — the same philosophy
+        // as MrnAggregator's ingest-time layout-mismatch Codec error.
+        if self.noise_layout != NoiseLayout::Serial {
+            if let Method::Grad(GradCodec::PostSm { .. }) = self.method {
+                return Err(Error::Config(
+                    "postsm encodes the serial noise layout only — drop \
+                     --noise-layout interleaved (the during-training FedMRN \
+                     methods support both layouts)"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -218,6 +242,31 @@ mod tests {
     fn pipeline_defaults_to_the_sequential_engine() {
         let cfg = RunConfig::new("smoke_mlp", Method::FedAvg);
         assert!(!cfg.pipeline);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn noise_layout_defaults_to_serial() {
+        // the wire default: any config that doesn't opt in keeps the
+        // bit-exact seed stream
+        let cfg = RunConfig::new("smoke_mlp", Method::FedAvg);
+        assert_eq!(cfg.noise_layout, NoiseLayout::Serial);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn postsm_rejects_interleaved_layout_at_validation() {
+        // postsm encodes serial only: the knob must error up front, not
+        // be silently ignored (fedmrn itself supports both layouts)
+        let postsm = Method::parse("postsm", NOISE).unwrap();
+        let mut cfg = RunConfig::new("smoke_mlp", postsm);
+        cfg.validate().unwrap();
+        cfg.noise_layout = NoiseLayout::Interleaved;
+        assert!(cfg.validate().is_err());
+        // fedmrn with the same knob is fine
+        let mrn = Method::parse("fedmrn", NOISE).unwrap();
+        let mut cfg = RunConfig::new("smoke_mlp", mrn);
+        cfg.noise_layout = NoiseLayout::Interleaved;
         cfg.validate().unwrap();
     }
 

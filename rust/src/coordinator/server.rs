@@ -271,7 +271,7 @@ mod tests {
         }
         let res = run_method("fedmrn");
         assert!(res.final_acc() > 0.7, "fedmrn acc {}", res.final_acc());
-        // ~1 bpp + 13-byte header (noticeable only at tiny d = 1140)
+        // ~1 bpp + 14-byte header (noticeable only at tiny d = 1140)
         assert!(res.uplink_bpp() < 1.2, "bpp {}", res.uplink_bpp());
     }
 

@@ -49,7 +49,7 @@
 
 use crate::compress::{fedmrn, fedpm as fedpm_codec, sparsify, GradCodec, MaskType};
 use crate::error::{Error, Result};
-use crate::noise::{NoiseDist, NoiseGen};
+use crate::noise::{NoiseDist, NoiseGen, NoiseLayout};
 use crate::runtime::{ConfigMeta, Runtime};
 use crate::stats::Timer;
 use crate::transport::Payload;
@@ -299,6 +299,7 @@ impl Strategy for MrnStrategy {
             self.mask_type,
             self.mode,
             ctx.cfg.noise,
+            ctx.cfg.noise_layout,
             ctx.noise_seed,
             ctx.rng,
         )?;
@@ -314,6 +315,7 @@ impl Strategy for MrnStrategy {
     fn aggregator(&self, cfg: &RunConfig) -> Box<dyn Aggregator> {
         Box::new(MrnAggregator {
             dist: cfg.noise,
+            layout: cfg.noise_layout,
             mask_type: self.mask_type,
             threads: cfg.threads,
             tile: cfg.tile,
@@ -327,8 +329,15 @@ impl Strategy for MrnStrategy {
 /// each payload to `(seed, bits, scale)`; finish runs one sharded fused
 /// regen+accumulate pass in slot order — byte-identical for any
 /// `(threads, tile)` ([`parallel::aggregate_masked`]).
+///
+/// Ingest also checks the payload's declared noise-layout tag against
+/// the run's configured layout: a client that filled `G(s)` in a
+/// different stream layout would decode to *valid-looking but wrong*
+/// noise, so a mismatch is a Codec error at the wire boundary, not a
+/// silent accuracy bug at finish.
 pub struct MrnAggregator {
     dist: NoiseDist,
+    layout: NoiseLayout,
     mask_type: MaskType,
     threads: usize,
     tile: usize,
@@ -345,8 +354,16 @@ impl Aggregator for MrnAggregator {
 
     fn ingest(&mut self, slot: usize, payload: Payload, scale: f32) -> Result<()> {
         let d = check_begun(self.d)?;
-        // validate variant + dimension + bit length now, own the bits
-        fedmrn::parts(&payload, d)?;
+        // validate variant + dimension + bit length + layout now, own
+        // the bits
+        let (_, declared, _) = fedmrn::parts(&payload, d)?;
+        if declared != self.layout {
+            return Err(Error::Codec(format!(
+                "fedmrn: payload declares {} noise layout, run uses {}",
+                declared.name(),
+                self.layout.name()
+            )));
+        }
         let Payload::MaskedSeed { seed, bits, .. } = payload else {
             unreachable!("parts() accepted a non-MaskedSeed payload");
         };
@@ -366,6 +383,7 @@ impl Aggregator for MrnAggregator {
         parallel::aggregate_masked(
             &updates,
             self.dist,
+            self.layout,
             self.mask_type,
             w,
             self.threads,
@@ -633,12 +651,18 @@ mod tests {
             "eden" => GradCodec::Eden.encode(&dense, 3),
             "postsm" => GradCodec::PostSm { dist: NOISE, mask_type: MaskType::Binary }
                 .encode(&dense, 3),
-            "fedmrn" => {
-                fedmrn::make_payload(&mask(d, 1, MaskType::Binary), 7, MaskType::Binary)
-            }
-            "fedmrns" => {
-                fedmrn::make_payload(&mask(d, 1, MaskType::Signed), 7, MaskType::Signed)
-            }
+            "fedmrn" => fedmrn::make_payload(
+                &mask(d, 1, MaskType::Binary),
+                7,
+                NoiseLayout::Serial,
+                MaskType::Binary,
+            ),
+            "fedmrns" => fedmrn::make_payload(
+                &mask(d, 1, MaskType::Signed),
+                7,
+                NoiseLayout::Serial,
+                MaskType::Signed,
+            ),
             "fedpm" => fedpm_codec::make_payload(&mask(d, 2, MaskType::Binary)),
             "fedsparsify" => {
                 sparsify::prune_to_sparsity(&mut dense, 0.9);
@@ -691,7 +715,12 @@ mod tests {
         let cfg = cfg_for("fedmrn");
         let mut agg = registry::strategy_for_config(&cfg).aggregator(&cfg);
         agg.begin(0, d, 1).unwrap();
-        let short = Payload::MaskedSeed { seed: 1, d: d as u32, bits: vec![u64::MAX; 10] };
+        let short = Payload::MaskedSeed {
+            seed: 1,
+            d: d as u32,
+            layout: NoiseLayout::Serial,
+            bits: vec![u64::MAX; 10],
+        };
         match agg.ingest(0, short, 1.0) {
             Err(Error::Codec(_)) => {}
             other => panic!("want Err(Codec) at ingest, got {other:?}"),
@@ -699,10 +728,56 @@ mod tests {
     }
 
     #[test]
+    fn mismatched_noise_layout_is_codec_error_at_ingest() {
+        // A payload whose declared stream layout differs from the run's
+        // configured layout must bounce at the wire boundary: decoding
+        // it would regenerate valid-looking but *wrong* noise.
+        let d = 128usize;
+        for (run_layout, wire_layout) in [
+            (NoiseLayout::Serial, NoiseLayout::Interleaved),
+            (NoiseLayout::Interleaved, NoiseLayout::Serial),
+        ] {
+            let mut cfg = cfg_for("fedmrn");
+            cfg.noise_layout = run_layout;
+            let mut agg = registry::strategy_for_config(&cfg).aggregator(&cfg);
+            agg.begin(0, d, 1).unwrap();
+            let p = fedmrn::make_payload(
+                &mask(d, 1, MaskType::Binary),
+                7,
+                wire_layout,
+                MaskType::Binary,
+            );
+            match agg.ingest(0, p, 1.0) {
+                Err(Error::Codec(msg)) => {
+                    assert!(msg.contains("layout"), "unhelpful message: {msg}")
+                }
+                other => panic!(
+                    "run={run_layout:?} wire={wire_layout:?}: want Err(Codec), got {other:?}"
+                ),
+            }
+            // the matching layout is accepted
+            let mut agg = registry::strategy_for_config(&cfg).aggregator(&cfg);
+            agg.begin(0, d, 1).unwrap();
+            let p = fedmrn::make_payload(
+                &mask(d, 1, MaskType::Binary),
+                7,
+                run_layout,
+                MaskType::Binary,
+            );
+            agg.ingest(0, p, 1.0).unwrap();
+        }
+    }
+
+    #[test]
     fn ingest_before_begin_is_an_error() {
         let cfg = cfg_for("fedmrn");
         let mut agg = registry::strategy_for_config(&cfg).aggregator(&cfg);
-        let p = fedmrn::make_payload(&mask(64, 1, MaskType::Binary), 7, MaskType::Binary);
+        let p = fedmrn::make_payload(
+            &mask(64, 1, MaskType::Binary),
+            7,
+            NoiseLayout::Serial,
+            MaskType::Binary,
+        );
         assert!(agg.ingest(0, p, 1.0).is_err());
     }
 
@@ -759,6 +834,7 @@ mod tests {
                 fedmrn::make_payload(
                     &mask(d, 200 + k as u64, MaskType::Binary),
                     0xABC0 + k as u64,
+                    NoiseLayout::Serial,
                     MaskType::Binary,
                 )
             }),

@@ -30,7 +30,7 @@ use crate::data::synthetic::ImageSpec;
 use crate::data::{partition::Partition, Split};
 use crate::error::{Error, Result};
 use crate::jsonx::Value;
-use crate::noise::NoiseDist;
+use crate::noise::{NoiseDist, NoiseLayout};
 use crate::runtime::Runtime;
 
 pub use fig4::fig4;
@@ -69,6 +69,11 @@ pub struct ExpOpts {
     /// ([`crate::coordinator::pipeline`]). Byte-identical results
     /// either way; off by default.
     pub pipeline: bool,
+    /// Noise stream layout (`--noise-layout serial|interleaved`).
+    /// Serial is the wire default and bit-exact with every stored seed;
+    /// interleaved is the lane-parallel v2 stream (a *different* draw
+    /// order — results change, which is why it is a versioned knob).
+    pub noise_layout: NoiseLayout,
 }
 
 impl ExpOpts {
@@ -92,6 +97,7 @@ impl ExpOpts {
                 threads: 1,
                 tile: 0,
                 pipeline: false,
+                noise_layout: NoiseLayout::Serial,
             },
             // quick: the recorded-run default — tens of minutes for the
             // full Table-1 sweep on this CPU testbed
@@ -110,6 +116,7 @@ impl ExpOpts {
                 threads: 1,
                 tile: 0,
                 pipeline: false,
+                noise_layout: NoiseLayout::Serial,
             },
             // full: paper-shaped topology (still scaled in rounds)
             "full" => ExpOpts {
@@ -127,6 +134,7 @@ impl ExpOpts {
                 threads: 1,
                 tile: 0,
                 pipeline: false,
+                noise_layout: NoiseLayout::Serial,
             },
             p => return Err(Error::Config(format!("unknown preset {p:?}"))),
         };
@@ -144,6 +152,13 @@ impl ExpOpts {
         o.threads = args.take_usize("threads", o.threads)?;
         o.tile = args.take_usize("tile", o.tile)?;
         o.pipeline = args.take_bool("pipeline", o.pipeline)?;
+        let layout_name = args.take_str("noise-layout", o.noise_layout.name());
+        o.noise_layout = NoiseLayout::parse(&layout_name).ok_or_else(|| {
+            Error::Config(format!(
+                "--noise-layout: unknown layout {layout_name:?} \
+                 (serial|interleaved)"
+            ))
+        })?;
         Ok(o)
     }
 }
@@ -290,6 +305,7 @@ pub fn run_arm(
     cfg.threads = o.threads;
     cfg.tile = o.tile;
     cfg.pipeline = o.pipeline;
+    cfg.noise_layout = o.noise_layout;
     let mut fed = Federation::new(rt, cfg, split)?;
     fed.verbose = o.verbose;
     fed.run()
@@ -362,6 +378,33 @@ mod tests {
         let o = ExpOpts::from_args(&mut a).unwrap();
         assert!(o.pipeline);
         a.finish().unwrap();
+    }
+
+    #[test]
+    fn noise_layout_flag_parses_and_defaults_to_serial() {
+        let mut a = Args::parse(["x", "--preset", "smoke"].iter().map(|s| s.to_string()))
+            .unwrap();
+        let o = ExpOpts::from_args(&mut a).unwrap();
+        assert_eq!(o.noise_layout, NoiseLayout::Serial, "wire default");
+        a.finish().unwrap();
+
+        let mut a = Args::parse(
+            ["x", "--preset", "smoke", "--noise-layout", "interleaved"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let o = ExpOpts::from_args(&mut a).unwrap();
+        assert_eq!(o.noise_layout, NoiseLayout::Interleaved);
+        a.finish().unwrap();
+
+        let mut a = Args::parse(
+            ["x", "--preset", "smoke", "--noise-layout", "zigzag"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(ExpOpts::from_args(&mut a).is_err());
     }
 
     #[test]

@@ -26,17 +26,24 @@ USAGE:
               [--partition iid|noniid1|noniid2] [--preset smoke|quick|full]
               [--rounds N] [--clients N] [--per-round N] [--epochs N]
               [--lr F] [--noise-dist uniform|gaussian|bernoulli] [--alpha F]
-              [--seed N] [--threads N] [--tile N] [--pipeline] [--verbose]
-              [--csv PATH]
+              [--noise-layout serial|interleaved] [--seed N] [--threads N]
+              [--tile N] [--pipeline] [--verbose] [--csv PATH]
               --pipeline overlaps each round's evaluation with the next
               round's training (byte-identical results; wall-clock only)
+              --noise-layout selects the G(s) stream layout: serial (the
+              wire default, bit-exact with stored seeds) or interleaved
+              (lane-parallel v2 — SIMD-width noise fills on both ends;
+              a different stream, tagged in the wire seed metadata)
   fedmrn exp table1|fig4|fig5|fig6|table3|theory|all [--preset ...] [...]
   fedmrn bench [--d N] [--clients N] [--threads 1,2,4,8]
-               [--tiles 64,1024,4096] [--warmup N] [--iters N] [--out DIR]
+               [--tiles 64,1024,4096] [--noise-layout serial|interleaved]
+               [--warmup N] [--iters N] [--out DIR]
                writes BENCH_bitpack.json / BENCH_aggregate.json (no
                artifacts needed; --out defaults to the repo root).
-               BENCH_aggregate.json carries both the thread-sweep rows
-               and the fused regen_sharded (threads × tile) rows
+               BENCH_aggregate.json carries the thread-sweep rows and the
+               fused regen_sharded (threads × tile) rows, stamped with
+               the layout tag; re-runs merge-replace rows on the
+               (suite, name, threads, tile, layout) key
 
 DATASETS (synthetic stand-ins, see DESIGN.md §3):
   fmnist svhn cifar10 cifar100 charlm charlm_tf seg smoke
@@ -162,6 +169,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
 
 fn cmd_bench(args: &mut Args) -> Result<()> {
     use fedmrn::bench::suites;
+    use fedmrn::noise::NoiseLayout;
     let d = args.take_usize("d", 4_000_000)?;
     let clients = args.take_usize("clients", 32)?;
     let warmup = args.take_usize("warmup", 2)?;
@@ -177,6 +185,12 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
     };
     let threads = parse_list("threads", args.take_list("threads", &["1", "2", "4", "8"]))?;
     let tiles = parse_list("tiles", args.take_list("tiles", &["64", "1024", "4096"]))?;
+    let layout_name = args.take_str("noise-layout", "serial");
+    let layout = NoiseLayout::parse(&layout_name).ok_or_else(|| {
+        Error::Config(format!(
+            "--noise-layout: unknown layout {layout_name:?} (serial|interleaved)"
+        ))
+    })?;
     let out = args.take_opt_str("out");
     args.finish()?;
     let path_for = |name: &str| match &out {
@@ -187,11 +201,14 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
     let b = suites::bitpack_suite(d, warmup, iters);
     b.report(&format!("bitpack @ d = {d}"));
     let path = path_for("BENCH_bitpack.json");
-    b.write_json(&path)?;
-    eprintln!("wrote {path}");
+    b.merge_json(&path)?;
+    eprintln!("merged into {path}");
 
-    let mut a = suites::aggregate_suite(d, clients, &threads, warmup, iters);
-    a.report(&format!("fedmrn aggregate @ d = {d}, {clients} clients"));
+    let mut a = suites::aggregate_suite(d, clients, &threads, layout, warmup, iters);
+    a.report(&format!(
+        "fedmrn aggregate @ d = {d}, {clients} clients, layout={}",
+        layout.name()
+    ));
     for &t in threads.iter().skip(1) {
         if let Some(s) = suites::speedup(
             &a,
@@ -202,9 +219,10 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
         }
     }
 
-    let r = suites::regen_sharded_suite(d, clients, &threads, &tiles, warmup, iters);
+    let r = suites::regen_sharded_suite(d, clients, &threads, &tiles, layout, warmup, iters);
     r.report(&format!(
-        "fedmrn fused regen+accumulate tiles @ d = {d}, {clients} clients"
+        "fedmrn fused regen+accumulate tiles @ d = {d}, {clients} clients, layout={}",
+        layout.name()
     ));
     if let Some(s) = suites::speedup(
         &r,
@@ -219,8 +237,8 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
 
     a.results.extend(r.results);
     let path = path_for("BENCH_aggregate.json");
-    a.write_json(&path)?;
-    eprintln!("wrote {path}");
+    a.merge_json(&path)?;
+    eprintln!("merged into {path}");
     Ok(())
 }
 

@@ -21,11 +21,15 @@
 //! `next_u64` calls for a ladder of `k` including every power-of-two
 //! boundary the tile loops cross.
 //!
-//! Cost: the one-time basis build is 63 GF(2) matrix squarings (each
-//! 256 matrix·vector products); a `jump(k)` afterwards is ≤ 64
-//! matrix·vector products, i.e. microseconds. Small jumps below
-//! [`SMALL_JUMP`] just step the recurrence directly, which is faster
-//! than a matrix apply and keeps the cold path out of tight tile loops.
+//! Cost: each power `M^(2^i)` is one GF(2) matrix squaring (256
+//! matrix·vector products) over its predecessor, built **lazily per
+//! power actually referenced** — `jump(k)` forces only the prefix
+//! `M^(2^0) ..= M^(2^floor(log2 k))`, and small jumps below
+//! [`SMALL_JUMP`] step the recurrence directly without touching the
+//! basis at all. (The former eager build paid all 63 squarings once per
+//! process even when only `jump(0)`/`jump(1)` were ever used — every
+//! unit-test binary ate that cost on its first tiny fork.) A `jump(k)`
+//! after the prefix exists is ≤ 64 matrix·vector products, microseconds.
 
 use std::sync::OnceLock;
 
@@ -79,22 +83,35 @@ impl Mat256 {
     }
 }
 
-/// `basis()[i]` = `M^(2^i)`, built once per process.
-fn basis() -> &'static Vec<Mat256> {
-    static BASIS: OnceLock<Vec<Mat256>> = OnceLock::new();
-    BASIS.get_or_init(|| {
-        let mut b = Vec::with_capacity(64);
-        b.push(Mat256::transition());
-        for _ in 1..64 {
-            let next = b.last().unwrap().squared();
-            b.push(next);
+/// Per-power cells for the lazy basis: `CELLS[i]` holds `M^(2^i)` once
+/// some jump has referenced a power ≥ `2^i`.
+static CELLS: [OnceLock<Mat256>; 64] = [const { OnceLock::new() }; 64];
+
+/// `M^(2^i)`, built on first reference. Power `i` is the square of power
+/// `i-1`, so forcing power `i` builds exactly the prefix `0..=i` — and
+/// nothing above it. A process whose jumps never exceed `2^i` steps
+/// therefore never pays for the higher squarings (the former eager build
+/// did all 63 up front, charged to the first jump of any size).
+fn power(i: usize) -> &'static Mat256 {
+    CELLS[i].get_or_init(|| {
+        if i == 0 {
+            Mat256::transition()
+        } else {
+            power(i - 1).squared()
         }
-        b
     })
 }
 
+/// How many of the 64 basis powers this process has built so far
+/// (test hook for the laziness contract).
+#[cfg(test)]
+pub(crate) fn powers_built() -> usize {
+    CELLS.iter().filter(|c| c.get().is_some()).count()
+}
+
 /// Advance `s` by `k` applications of [`step_state`] in O(popcount(k))
-/// matrix·vector products (or `k` direct steps for small `k`).
+/// matrix·vector products (or `k` direct steps for small `k`, which
+/// never touches the basis).
 pub(crate) fn jump_state(s: &mut [u64; 4], k: u64) {
     if k < SMALL_JUMP {
         for _ in 0..k {
@@ -102,12 +119,11 @@ pub(crate) fn jump_state(s: &mut [u64; 4], k: u64) {
         }
         return;
     }
-    let basis = basis();
     let mut v = *s;
     let mut bits = k;
     while bits != 0 {
         let i = bits.trailing_zeros() as usize;
-        v = basis[i].apply(&v);
+        v = power(i).apply(&v);
         bits &= bits - 1;
     }
     *s = v;
@@ -141,11 +157,25 @@ mod tests {
         // Check the first few squarings against direct stepping; higher
         // powers are covered transitively (each is the previous squared)
         // and by the end-to-end jump tests.
-        let b = basis();
         let s = [0xDEAD_BEEF_u64, 0xCAFE_F00D, 0x1234, 0xFFFF_0000_FFFF_0000];
         for (i, steps) in [(0usize, 1u64), (1, 2), (4, 16), (10, 1024)] {
-            assert_eq!(b[i].apply(&s), stepped(s, steps), "basis {i}");
+            assert_eq!(power(i).apply(&s), stepped(s, steps), "basis {i}");
         }
+    }
+
+    #[test]
+    fn basis_is_built_lazily_per_power() {
+        // Forcing power i builds the prefix 0..=i (each power is the
+        // previous squared) — never all 64. No test in this binary jumps
+        // anywhere near 2^63 steps, so with the lazy build the top cells
+        // must stay empty for the whole process; the former eager build
+        // filled all 64 on the first non-small jump of any size.
+        let _ = power(12);
+        assert!(powers_built() >= 13, "prefix 0..=12 must exist");
+        assert!(
+            powers_built() < 64,
+            "all 64 powers built — lazy per-power basis regressed to eager"
+        );
     }
 
     #[test]

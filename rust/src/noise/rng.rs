@@ -119,6 +119,153 @@ pub(crate) fn step_state(s: &mut [u64; 4]) {
     s[3] = s[3].rotate_left(45);
 }
 
+// ---------------------------------------------------------------------------
+// Lane-interleaved block fill (stream layout v2)
+// ---------------------------------------------------------------------------
+
+/// Number of interleaved xoshiro streams in the
+/// [`NoiseLayout::Interleaved`](crate::noise::NoiseLayout) layout: one
+/// u64 per lane per step, so the four lane states pack into one AVX2
+/// vector per state word. Lane starts are spaced by
+/// [`LANE_STRIDE`](crate::noise::LANE_STRIDE) raw draws of the serial
+/// stream, far past anything a single fill can consume.
+pub const LANES: usize = 4;
+
+/// Fill `out` with the interleaved raw stream: `out[t·LANES + l]` is
+/// lane `l`'s `t`-th draw. `out.len()` must be a multiple of [`LANES`]
+/// and `lanes.len()` exactly [`LANES`]. Runtime-dispatches to the AVX2
+/// body where available (set `FEDMRN_NOISE_SCALAR=1` to force the
+/// fallback); both bodies are integer-exact, so the bytes are identical
+/// either way — pinned by the unit test below and the differential
+/// harness's forced-scalar CI leg.
+pub fn fill_u64_interleaved(lanes: &mut [Xoshiro256pp], out: &mut [u64]) {
+    assert_eq!(lanes.len(), LANES, "interleaved fill needs {LANES} lanes");
+    assert_eq!(out.len() % LANES, 0, "interleaved fill length must be lane-aligned");
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: use_avx2() returned true only after
+        // is_x86_feature_detected!("avx2") did.
+        unsafe { avx2::fill(lanes, out) };
+        return;
+    }
+    fill_u64_interleaved_scalar(lanes, out);
+}
+
+/// The branchless word-parallel reference body of
+/// [`fill_u64_interleaved`]: steps all four lane recurrences in a
+/// fixed-trip inner loop the autovectoriser can unroll. Public so the
+/// differential harness can pin the AVX2 body against it byte-for-byte.
+pub fn fill_u64_interleaved_scalar(lanes: &mut [Xoshiro256pp], out: &mut [u64]) {
+    assert_eq!(lanes.len(), LANES, "interleaved fill needs {LANES} lanes");
+    assert_eq!(out.len() % LANES, 0, "interleaved fill length must be lane-aligned");
+    // state-of-arrays view: s[w][l] = state word w of lane l
+    let mut s = [[0u64; LANES]; 4];
+    for (l, g) in lanes.iter().enumerate() {
+        for w in 0..4 {
+            s[w][l] = g.s[w];
+        }
+    }
+    for chunk in out.chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            chunk[l] = s[0][l]
+                .wrapping_add(s[3][l])
+                .rotate_left(23)
+                .wrapping_add(s[0][l]);
+        }
+        for l in 0..LANES {
+            let t = s[1][l] << 17;
+            s[2][l] ^= s[0][l];
+            s[3][l] ^= s[1][l];
+            s[1][l] ^= s[2][l];
+            s[0][l] ^= s[3][l];
+            s[2][l] ^= t;
+            s[3][l] = s[3][l].rotate_left(45);
+        }
+    }
+    for (l, g) in lanes.iter_mut().enumerate() {
+        for w in 0..4 {
+            g.s[w] = s[w][l];
+        }
+    }
+}
+
+/// Cached runtime dispatch: AVX2 detected and not overridden. The
+/// `FEDMRN_NOISE_SCALAR` env var (any non-empty value other than `0`)
+/// forces the scalar body — used by the CI differential leg so the
+/// fallback path is exercised on runners regardless of their CPU.
+#[cfg(target_arch = "x86_64")]
+fn use_avx2() -> bool {
+    use std::sync::OnceLock;
+    static USE: OnceLock<bool> = OnceLock::new();
+    *USE.get_or_init(|| {
+        let forced_scalar = std::env::var("FEDMRN_NOISE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        !forced_scalar && std::arch::is_x86_feature_detected!("avx2")
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 body of the interleaved fill: each xoshiro state word lives
+    //! in one `__m256i` (4 × u64, one per lane), so the whole transition
+    //! and the `rotl(s0 + s3, 23) + s0` output scrambler run once per
+    //! 4-draw step. Rotates are shift/shift/or (AVX2 has no 64-bit
+    //! rotate); adds are `_mm256_add_epi64` — all integer-exact, so the
+    //! emitted bytes match the scalar body bit-for-bit.
+
+    use std::arch::x86_64::*;
+
+    use super::{Xoshiro256pp, LANES};
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fill(lanes: &mut [Xoshiro256pp], out: &mut [u64]) {
+        debug_assert_eq!(lanes.len(), LANES);
+        debug_assert_eq!(out.len() % LANES, 0);
+        // gather state-of-arrays: word w of all 4 lanes in one vector
+        let mut soa = [[0u64; LANES]; 4];
+        for (l, g) in lanes.iter().enumerate() {
+            for w in 0..4 {
+                soa[w][l] = g.s[w];
+            }
+        }
+        let mut s0 = _mm256_loadu_si256(soa[0].as_ptr() as *const __m256i);
+        let mut s1 = _mm256_loadu_si256(soa[1].as_ptr() as *const __m256i);
+        let mut s2 = _mm256_loadu_si256(soa[2].as_ptr() as *const __m256i);
+        let mut s3 = _mm256_loadu_si256(soa[3].as_ptr() as *const __m256i);
+        for chunk in out.chunks_exact_mut(LANES) {
+            // result = rotl(s0 + s3, 23) + s0
+            let sum = _mm256_add_epi64(s0, s3);
+            let rot = _mm256_or_si256(
+                _mm256_slli_epi64(sum, 23),
+                _mm256_srli_epi64(sum, 41),
+            );
+            let res = _mm256_add_epi64(rot, s0);
+            _mm256_storeu_si256(chunk.as_mut_ptr() as *mut __m256i, res);
+            // step_state, verbatim over vectors
+            let t = _mm256_slli_epi64(s1, 17);
+            s2 = _mm256_xor_si256(s2, s0);
+            s3 = _mm256_xor_si256(s3, s1);
+            s1 = _mm256_xor_si256(s1, s2);
+            s0 = _mm256_xor_si256(s0, s3);
+            s2 = _mm256_xor_si256(s2, t);
+            s3 = _mm256_or_si256(
+                _mm256_slli_epi64(s3, 45),
+                _mm256_srli_epi64(s3, 19),
+            );
+        }
+        _mm256_storeu_si256(soa[0].as_mut_ptr() as *mut __m256i, s0);
+        _mm256_storeu_si256(soa[1].as_mut_ptr() as *mut __m256i, s1);
+        _mm256_storeu_si256(soa[2].as_mut_ptr() as *mut __m256i, s2);
+        _mm256_storeu_si256(soa[3].as_mut_ptr() as *mut __m256i, s3);
+        for (l, g) in lanes.iter_mut().enumerate() {
+            for w in 0..4 {
+                g.s[w] = soa[w][l];
+            }
+        }
+    }
+}
+
 /// The raw-u64 → f32 U[0,1) transform behind [`Xoshiro256pp::next_f32`].
 /// Block-buffered fills apply this to whole u64 blocks; routing both
 /// paths through one definition is what pins their bit-exactness.
@@ -205,6 +352,56 @@ mod tests {
         for (i, &w) in want.iter().enumerate() {
             assert_eq!(g.next_u64(), w, "draw {i}");
         }
+    }
+
+    #[test]
+    fn interleaved_fill_matches_per_lane_stepping() {
+        // out[t*LANES + l] == lane l's t-th next_u64, and the lane
+        // states end exactly where per-lane stepping ends.
+        let mut lanes: Vec<Xoshiro256pp> =
+            (0..LANES as u64).map(|l| Xoshiro256pp::seed_from(100 + l)).collect();
+        let mut reference = lanes.clone();
+        let mut out = vec![0u64; 64 * LANES];
+        fill_u64_interleaved(&mut lanes, &mut out);
+        for t in 0..64 {
+            for (l, r) in reference.iter_mut().enumerate() {
+                assert_eq!(out[t * LANES + l], r.next_u64(), "t={t} l={l}");
+            }
+        }
+        for (l, (a, b)) in lanes.iter_mut().zip(reference.iter_mut()).enumerate() {
+            assert_eq!(a.next_u64(), b.next_u64(), "lane {l} state after fill");
+        }
+    }
+
+    #[test]
+    fn interleaved_scalar_and_dispatch_bodies_agree() {
+        // The dispatched body (AVX2 where detected) and the scalar
+        // reference must emit identical bytes and identical final lane
+        // states; on non-AVX2 hosts both run the scalar body and this
+        // pins nothing new (the CI differential leg forces the scalar
+        // path on an AVX2 runner for the reverse coverage).
+        let mk = || -> Vec<Xoshiro256pp> {
+            (0..LANES as u64).map(|l| Xoshiro256pp::seed_from(9000 + 31 * l)).collect()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let mut fast = vec![0u64; 1024];
+        let mut slow = vec![0u64; 1024];
+        fill_u64_interleaved(&mut a, &mut fast);
+        fill_u64_interleaved_scalar(&mut b, &mut slow);
+        assert_eq!(fast, slow);
+        for (l, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+            assert_eq!(x.next_u64(), y.next_u64(), "lane {l} state");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "lane-aligned")]
+    fn interleaved_fill_rejects_misaligned_length() {
+        let mut lanes: Vec<Xoshiro256pp> =
+            (0..LANES as u64).map(Xoshiro256pp::seed_from).collect();
+        let mut out = vec![0u64; LANES + 1];
+        fill_u64_interleaved(&mut lanes, &mut out);
     }
 
     #[test]

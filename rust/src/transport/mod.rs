@@ -12,14 +12,18 @@
 use byteorder::{ByteOrder, LittleEndian};
 
 use crate::error::{Error, Result};
+use crate::noise::NoiseLayout;
 
 /// Message kinds that cross the simulated network.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// Dense f32 vector (FedAvg uplink / every method's downlink).
     Dense(Vec<f32>),
-    /// FedMRN uplink: noise seed + packed mask bits (+ mask dimension).
-    MaskedSeed { seed: u64, d: u32, bits: Vec<u64> },
+    /// FedMRN uplink: noise seed + packed mask bits (+ mask dimension
+    /// and the stream-layout tag the noise was filled with — the server
+    /// must regenerate `G(s)` in exactly this layout; serial is the wire
+    /// default and its tag is the zero byte).
+    MaskedSeed { seed: u64, d: u32, layout: NoiseLayout, bits: Vec<u64> },
     /// Packed sign bits + per-chunk f32 scales (SignSGD, DRIVE, EDEN).
     SignBits { d: u32, bits: Vec<u64>, scales: Vec<f32>, seed: u64 },
     /// 2-bit ternary codes + per-chunk scales (TernGrad).
@@ -47,10 +51,11 @@ impl Payload {
                 push_u32(&mut out, v.len() as u32);
                 push_f32s(&mut out, v);
             }
-            Payload::MaskedSeed { seed, d, bits } => {
+            Payload::MaskedSeed { seed, d, layout, bits } => {
                 out.push(TAG_MASKED_SEED);
                 push_u64(&mut out, *seed);
                 push_u32(&mut out, *d);
+                out.push(layout.wire_tag());
                 push_u64s(&mut out, bits);
             }
             Payload::SignBits { d, bits, scales, seed } => {
@@ -99,7 +104,7 @@ impl Payload {
     pub fn encoded_len(&self) -> usize {
         match self {
             Payload::Dense(v) => Self::dense_wire_len(v.len()),
-            Payload::MaskedSeed { bits, .. } => 1 + 8 + 4 + 8 * bits.len(),
+            Payload::MaskedSeed { bits, .. } => 1 + 8 + 4 + 1 + 8 * bits.len(),
             Payload::SignBits { bits, scales, .. } => {
                 1 + 8 + 4 + 4 + 8 * bits.len() + 4 * scales.len()
             }
@@ -122,8 +127,12 @@ impl Payload {
             TAG_MASKED_SEED => {
                 let seed = r.u64()?;
                 let d = r.u32()?;
+                let lt = r.u8()?;
+                let layout = NoiseLayout::from_wire_tag(lt).ok_or_else(|| {
+                    Error::Codec(format!("bad noise-layout tag {lt}"))
+                })?;
                 let words = (d as usize).div_ceil(64);
-                Payload::MaskedSeed { seed, d, bits: r.u64s(words)? }
+                Payload::MaskedSeed { seed, d, layout, bits: r.u64s(words)? }
             }
             TAG_SIGN => {
                 let seed = r.u64()?;
@@ -331,10 +340,33 @@ mod tests {
 
     #[test]
     fn masked_seed_roundtrip() {
-        let p = Payload::MaskedSeed { seed: 0xDEADBEEF, d: 130, bits: vec![1, 2, 3] };
-        let bytes = p.encode();
-        assert_eq!(bytes.len(), p.encoded_len());
-        assert_eq!(Payload::decode(&bytes).unwrap(), p);
+        for layout in [NoiseLayout::Serial, NoiseLayout::Interleaved] {
+            let p = Payload::MaskedSeed {
+                seed: 0xDEADBEEF,
+                d: 130,
+                layout,
+                bits: vec![1, 2, 3],
+            };
+            let bytes = p.encode();
+            assert_eq!(bytes.len(), p.encoded_len());
+            assert_eq!(Payload::decode(&bytes).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn masked_seed_rejects_unknown_layout_tag() {
+        let p = Payload::MaskedSeed {
+            seed: 7,
+            d: 64,
+            layout: NoiseLayout::Serial,
+            bits: vec![1],
+        };
+        let mut bytes = p.encode();
+        // the layout byte sits right after tag + seed + d
+        let off = 1 + 8 + 4;
+        assert_eq!(bytes[off], NoiseLayout::Serial.wire_tag());
+        bytes[off] = 0x7F;
+        assert!(Payload::decode(&bytes).is_err(), "unknown layout tag accepted");
     }
 
     #[test]
@@ -385,7 +417,12 @@ mod tests {
     fn decode_truncation_fuzz_every_variant_every_cut() {
         let payloads = vec![
             Payload::Dense(vec![1.5; 9]),
-            Payload::MaskedSeed { seed: 7, d: 130, bits: vec![1, 2, 3] },
+            Payload::MaskedSeed {
+                seed: 7,
+                d: 130,
+                layout: NoiseLayout::Interleaved,
+                bits: vec![1, 2, 3],
+            },
             Payload::SignBits {
                 d: 100,
                 bits: vec![u64::MAX, 3],
@@ -458,12 +495,14 @@ mod tests {
 
     #[test]
     fn fedmrn_wire_is_about_one_bpp() {
-        // d = 1M params: FedAvg dense = 32 bpp; FedMRN ≈ 1 bpp + 13 B hdr.
+        // d = 1M params: FedAvg dense = 32 bpp; FedMRN ≈ 1 bpp + 14 B hdr
+        // (tag + seed + d + layout byte).
         let d = 1_000_000usize;
         let dense = Payload::Dense(vec![0.0; d]);
         let mrn = Payload::MaskedSeed {
             seed: 1,
             d: d as u32,
+            layout: NoiseLayout::Serial,
             bits: vec![0; d.div_ceil(64)],
         };
         let dense_bpp = dense.encoded_len() as f64 * 8.0 / d as f64;

@@ -1,6 +1,13 @@
 #!/usr/bin/env bash
 # Build release and regenerate the perf-trajectory files at the repo
 # root (BENCH_bitpack.json, BENCH_aggregate.json). Schema: docs/BENCH.md.
+# Rows merge by (suite, name, threads, tile, layout) key, so re-runs
+# replace rather than duplicate.
+#
+# Extra flags are forwarded to a `fedmrn bench` pass, e.g.:
+#   scripts/bench.sh --noise-layout interleaved
+# runs the aggregate/regen suites under the lane-interleaved noise
+# layout and merges those rows next to the serial ones.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,10 +19,17 @@ fi
 
 cargo build --release
 
-# Both bench targets write their JSON to the repo root themselves
-# (fedmrn::bench::suites::repo_root_file).
+# Both bench targets merge their JSON into the repo root themselves
+# (fedmrn::bench::suites::repo_root_file); bench_aggregate covers the
+# serial AND interleaved layouts for the regen suite.
 cargo bench --bench bench_bitpack
 cargo bench --bench bench_aggregate
+
+# Forward any extra flags (e.g. --noise-layout interleaved, --threads
+# 1,4) through the CLI bench, which merges into the same files by key.
+if [ "$#" -gt 0 ]; then
+    cargo run --release -- bench "$@"
+fi
 
 # Engine-level rows (pipeline=off vs pipeline=on per method) need the
 # compiled artifacts; skip cleanly on a kernel-only checkout.
