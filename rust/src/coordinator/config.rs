@@ -1,5 +1,6 @@
 //! Run configuration: one struct fully describing a federated run.
 
+use super::faults::{FaultModel, ParticipationPolicy};
 use crate::compress::{GradCodec, MaskType};
 use crate::data::partition::Partition;
 use crate::error::{Error, Result};
@@ -112,6 +113,21 @@ pub struct RunConfig {
     /// per-round weights and non-timing record fields — only wall-clock
     /// changes.
     pub pipeline: bool,
+    /// Deterministic fault injection for chaos runs
+    /// ([`crate::coordinator::faults`]). The default,
+    /// [`FaultModel::none`], takes the same engine code path and is
+    /// byte-identical to an engine with no fault layer at all.
+    pub faults: FaultModel,
+    /// Quorum contract applied by every aggregator's `finish`
+    /// ([`crate::coordinator::faults::ParticipationPolicy`]). The
+    /// strict default requires every promised uplink — exactly the
+    /// pre-fault contract.
+    pub participation: ParticipationPolicy,
+    /// Detached-job timeout for the pipelined engine's rendezvous
+    /// paths, seconds (0 = the built-in default; the env var
+    /// `FEDMRN_PIPELINE_TIMEOUT_SECS` overrides both — see
+    /// [`crate::coordinator::pipeline::resolve_job_timeout`]).
+    pub job_timeout_secs: u64,
 }
 
 impl RunConfig {
@@ -134,6 +150,9 @@ impl RunConfig {
             threads: 1,
             tile: 0,
             pipeline: false,
+            faults: FaultModel::none(),
+            participation: ParticipationPolicy::strict(),
+            job_timeout_secs: 0,
         }
     }
 
@@ -161,6 +180,8 @@ impl RunConfig {
         if self.lr <= 0.0 {
             return Err(Error::Config("lr must be > 0".into()));
         }
+        self.faults.validate()?;
+        self.participation.validate()?;
         // PostSM is a wire-compat arm of the Figure-4 study: it encodes
         // (and declares) the serial layout only. Reject the knob up
         // front rather than silently dropping it — the same philosophy
@@ -236,6 +257,22 @@ mod tests {
         cfg.clients_per_round = 5;
         cfg.rounds = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn faults_default_off_and_validate_through_config() {
+        let mut cfg = RunConfig::new("smoke_mlp", Method::FedAvg);
+        assert!(!cfg.faults.is_active(), "default run is fault-free");
+        assert_eq!(cfg.participation, ParticipationPolicy::strict());
+        assert_eq!(cfg.job_timeout_secs, 0, "0 = built-in default");
+        cfg.validate().unwrap();
+        cfg.faults.dropout = 2.0;
+        assert!(cfg.validate().is_err(), "bad dropout rate must reject");
+        cfg.faults.dropout = 0.3;
+        cfg.participation.quorum = -0.5;
+        assert!(cfg.validate().is_err(), "bad quorum must reject");
+        cfg.participation.quorum = 0.5;
+        cfg.validate().unwrap();
     }
 
     #[test]

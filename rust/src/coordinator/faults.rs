@@ -1,0 +1,484 @@
+//! Deterministic fault injection for the round engine.
+//!
+//! The ROADMAP's heavy-traffic north star (a networked coordinator)
+//! needs rounds that tolerate client dropout, stragglers, and corrupt
+//! uplinks. This module models those faults *deterministically*: every
+//! per-(round, client) decision — whether an attempt drops, how long a
+//! straggler lags, which bits of the encoded [`Payload`] flip — is
+//! derived from the run seed via [`derive_seed`] on a dedicated stream,
+//! so a chaos run is exactly replayable from `(seed, FaultModel)` and
+//! independent of arrival order, thread count, and pipelining.
+//!
+//! Two pieces:
+//!
+//! * [`FaultModel`] / [`FaultPlan`] — the fault rates and their
+//!   materialization for one round's selected clients. The engine walks
+//!   each client's [`ClientFaults::attempts`] (a bounded retry budget)
+//!   and applies [`corrupt_bytes`] to the *encoded* wire bytes, so
+//!   corruption exercises the real transport decode path.
+//! * [`ParticipationPolicy`] — the quorum contract every
+//!   [`super::Aggregator`]'s `finish` honours: fold whichever slots
+//!   arrived when at least `required_of(promised)` made it (optionally
+//!   rescaling the Eq. 5 average over the actual participants), or
+//!   return a typed [`Error::Quorum`] without touching the weights.
+//!
+//! The all-zero model ([`FaultModel::none`], the config default) takes
+//! the exact same engine code path and is byte-identical to an engine
+//! with no fault layer at all — pinned by `tests/differential.rs` §8.
+//!
+//! [`Payload`]: crate::transport::Payload
+
+use crate::error::{Error, Result};
+use crate::noise::{derive_seed, NoiseGen};
+
+/// `derive_seed` stream id for fault decisions (1 = noise, 2 = client
+/// shuffling rng — see `coordinator::pipeline::train_and_fold`).
+pub const FAULT_STREAM: u64 = 3;
+
+// ---------------------------------------------------------------------------
+// FaultModel — the rates
+// ---------------------------------------------------------------------------
+
+/// Fault rates for chaos runs. All probabilities are per-(round,
+/// client) and drawn from a seed-derived stream, never from the
+/// engine's run rng, so arming a model cannot perturb client selection
+/// or noise generation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Per-attempt probability that an uplink is silently dropped.
+    pub dropout: f32,
+    /// Probability that a client straggles this round.
+    pub straggle_p: f32,
+    /// Maximum simulated straggler latency, milliseconds. The latency
+    /// is *recorded and compared* against `deadline_ms`, never slept,
+    /// so chaos runs stay deterministic and fast.
+    pub straggle_ms: u64,
+    /// Probability that the first attempt's encoded bytes are corrupted
+    /// (bit-flips or truncation) before the server decodes them.
+    pub corrupt_p: f32,
+    /// Per-client deadline, milliseconds (0 = none). A straggler whose
+    /// drawn latency exceeds the deadline misses the round outright.
+    pub deadline_ms: u64,
+    /// Clean resend attempts granted after a failed attempt (a dropped
+    /// send or a rejected corrupt uplink each consume one).
+    pub max_retries: u32,
+    /// Extra entropy folded into the run seed, so one trained run can
+    /// be replayed under many independent fault draws.
+    pub fault_seed: u64,
+}
+
+impl FaultModel {
+    /// The fault-free model: no dropout, no stragglers, no corruption.
+    /// This is the config default and is byte-identical to the
+    /// pre-fault engine.
+    pub fn none() -> FaultModel {
+        FaultModel {
+            dropout: 0.0,
+            straggle_p: 0.0,
+            straggle_ms: 0,
+            corrupt_p: 0.0,
+            deadline_ms: 0,
+            max_retries: 1,
+            fault_seed: 0,
+        }
+    }
+
+    /// Whether any fault can actually fire.
+    pub fn is_active(&self) -> bool {
+        self.dropout > 0.0 || self.straggle_p > 0.0 || self.corrupt_p > 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("dropout", self.dropout),
+            ("straggle-p", self.straggle_p),
+            ("corrupt-p", self.corrupt_p),
+        ] {
+            if !(0.0..=1.0).contains(&p) || p.is_nan() {
+                return Err(Error::Config(format!(
+                    "faults: {name} must be a probability in [0, 1], got {p}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The fault decisions for one (round, client) pair, derived
+    /// statelessly from the run seed: independent of every other
+    /// client's draws and of the order the engine asks in.
+    pub fn client_faults(&self, run_seed: u64, round: usize, client: usize) -> ClientFaults {
+        let seed = derive_seed(
+            run_seed ^ self.fault_seed,
+            client as u64,
+            round as u64,
+            FAULT_STREAM,
+        );
+        let mut g = NoiseGen::new(seed);
+        let straggle_ms = if self.straggle_p > 0.0 && g.next_f32() < self.straggle_p {
+            if self.straggle_ms == 0 {
+                0
+            } else {
+                g.next_below(self.straggle_ms) + 1
+            }
+        } else {
+            0
+        };
+        let n_attempts = self.max_retries as usize + 1;
+        let mut attempts = Vec::with_capacity(n_attempts);
+        for a in 0..n_attempts {
+            let dropped = self.dropout > 0.0 && g.next_f32() < self.dropout;
+            // only the first attempt can be corrupt: retries model a
+            // clean resend after the server rejected the bytes
+            let corrupt = if a == 0 && self.corrupt_p > 0.0 && g.next_f32() < self.corrupt_p {
+                let seed = g.next_u64();
+                if g.next_f32() < 0.5 {
+                    Some(Corruption::Truncate { seed })
+                } else {
+                    Some(Corruption::BitFlips {
+                        seed,
+                        n: (g.next_below(8) + 1) as u32,
+                    })
+                }
+            } else {
+                None
+            };
+            attempts.push(AttemptFault { dropped, corrupt });
+        }
+        ClientFaults {
+            client,
+            straggle_ms,
+            attempts,
+        }
+    }
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel::none()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultPlan — one round's materialized decisions
+// ---------------------------------------------------------------------------
+
+/// How one attempt's encoded wire bytes are mangled. The positions are
+/// re-derived from `seed` and the byte length at apply time, so the
+/// plan stays replayable without knowing payload sizes up front.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corruption {
+    /// Flip `n` (seed-drawn) bit positions in the encoded bytes.
+    BitFlips { seed: u64, n: u32 },
+    /// Truncate the encoded bytes to a seed-drawn prefix.
+    Truncate { seed: u64 },
+}
+
+/// Apply a [`Corruption`] to encoded wire bytes in place.
+pub fn corrupt_bytes(c: &Corruption, bytes: &mut Vec<u8>) {
+    if bytes.is_empty() {
+        return;
+    }
+    match c {
+        Corruption::BitFlips { seed, n } => {
+            let mut g = NoiseGen::new(*seed);
+            for _ in 0..*n {
+                let bit = g.next_below(bytes.len() as u64 * 8) as usize;
+                bytes[bit / 8] ^= 1 << (bit % 8);
+            }
+        }
+        Corruption::Truncate { seed } => {
+            let keep = NoiseGen::new(*seed).next_below(bytes.len() as u64) as usize;
+            bytes.truncate(keep);
+        }
+    }
+}
+
+/// One delivery attempt's fate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttemptFault {
+    /// The attempt never reaches the server.
+    pub dropped: bool,
+    /// The attempt arrives but its bytes are mangled first.
+    pub corrupt: Option<Corruption>,
+}
+
+impl AttemptFault {
+    /// A clean, delivered attempt.
+    pub fn clean(&self) -> bool {
+        !self.dropped && self.corrupt.is_none()
+    }
+}
+
+/// All fault decisions for one (round, client): a straggler latency and
+/// a bounded sequence of delivery attempts (`max_retries + 1` long).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClientFaults {
+    pub client: usize,
+    /// Simulated latency, ms (0 = not a straggler this round).
+    pub straggle_ms: u64,
+    pub attempts: Vec<AttemptFault>,
+}
+
+/// One round's materialized fault decisions, slot-indexed to match the
+/// engine's selected-client order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub round: usize,
+    /// `clients[slot]` holds the decisions for `selected[slot]`.
+    pub clients: Vec<ClientFaults>,
+}
+
+impl FaultPlan {
+    /// Materialize the plan for one round's selected clients. Pure in
+    /// `(model, run_seed, round, selected)` — building it twice yields
+    /// an identical plan, which is what makes chaos runs replayable.
+    pub fn for_round(
+        model: &FaultModel,
+        run_seed: u64,
+        round: usize,
+        selected: &[usize],
+    ) -> FaultPlan {
+        FaultPlan {
+            round,
+            clients: selected
+                .iter()
+                .map(|&c| model.client_faults(run_seed, round, c))
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Participation
+// ---------------------------------------------------------------------------
+
+/// The quorum contract every aggregator's `finish` honours.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParticipationPolicy {
+    /// Fraction of the promised uplinks that must arrive before the
+    /// round folds (1.0 = strict: every promised slot, the pre-fault
+    /// contract).
+    pub quorum: f32,
+    /// When some promised slots are missing, renormalize the Eq. 5
+    /// weights over the actual participants (`false` = fold the
+    /// original scales, biasing the update toward zero). Full
+    /// participation never rescales, so a fault-free run is bit-exact
+    /// with the strict engine either way.
+    pub rescale: bool,
+}
+
+impl ParticipationPolicy {
+    /// The pre-fault contract: all promised uplinks, no rescaling.
+    pub fn strict() -> ParticipationPolicy {
+        ParticipationPolicy {
+            quorum: 1.0,
+            rescale: false,
+        }
+    }
+
+    /// Minimum number of arrived uplinks required out of `promised`.
+    /// Always at least 1 (an empty round can never fold).
+    pub fn required_of(&self, promised: usize) -> usize {
+        if promised == 0 {
+            return 0;
+        }
+        let q = (self.quorum as f64).clamp(0.0, 1.0);
+        (((q * promised as f64).ceil()) as usize).clamp(1, promised)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.quorum) || self.quorum.is_nan() {
+            return Err(Error::Config(format!(
+                "participation: quorum must be in [0, 1], got {}",
+                self.quorum
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Default for ParticipationPolicy {
+    fn default() -> Self {
+        ParticipationPolicy::strict()
+    }
+}
+
+/// Why a client's uplink never folded into the round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// Every attempt was dropped in flight.
+    Dropout,
+    /// The drawn straggler latency blew the round deadline.
+    Straggler,
+    /// The last failed attempt was a corrupt uplink the server
+    /// rejected at the wire boundary.
+    Corrupt,
+}
+
+impl DropReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DropReason::Dropout => "dropout",
+            DropReason::Straggler => "straggler",
+            DropReason::Corrupt => "corrupt",
+        }
+    }
+}
+
+/// A client whose uplink never arrived, recorded in
+/// [`super::RoundRecord::dropped`] in slot order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DroppedClient {
+    /// Slot index within the round's selected set.
+    pub slot: usize,
+    /// Global client id.
+    pub client: usize,
+    pub reason: DropReason,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaos_model() -> FaultModel {
+        FaultModel {
+            dropout: 0.4,
+            straggle_p: 0.3,
+            straggle_ms: 250,
+            corrupt_p: 0.5,
+            deadline_ms: 100,
+            max_retries: 2,
+            fault_seed: 0xC0FFEE,
+        }
+    }
+
+    #[test]
+    fn zero_rate_model_draws_no_faults() {
+        let m = FaultModel::none();
+        assert!(!m.is_active());
+        for (round, client) in [(0, 0), (3, 17), (250, 999)] {
+            let cf = m.client_faults(42, round, client);
+            assert_eq!(cf.straggle_ms, 0);
+            assert_eq!(cf.attempts.len(), m.max_retries as usize + 1);
+            assert!(cf.attempts.iter().all(|a| a.clean()));
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        let m = chaos_model();
+        let selected = [3, 1, 4, 1 + 4, 9, 2, 6];
+        let a = FaultPlan::for_round(&m, 42, 5, &selected);
+        let b = FaultPlan::for_round(&m, 42, 5, &selected);
+        assert_eq!(a, b, "same (seed, model, round, selected) must replay");
+
+        let c = FaultPlan::for_round(&m, 43, 5, &selected);
+        let d = FaultPlan::for_round(&m, 42, 6, &selected);
+        let mut m2 = m;
+        m2.fault_seed ^= 1;
+        let e = FaultPlan::for_round(&m2, 42, 5, &selected);
+        assert_ne!(a, c, "run seed must matter");
+        assert_ne!(a, d, "round must matter");
+        assert_ne!(a, e, "fault seed must matter");
+    }
+
+    #[test]
+    fn client_decisions_are_order_independent() {
+        // per-client draws are stateless in (seed, round, client): the
+        // same client gets the same fate whether asked first or last
+        let m = chaos_model();
+        let a = FaultPlan::for_round(&m, 7, 2, &[10, 20, 30]);
+        let b = FaultPlan::for_round(&m, 7, 2, &[30, 10, 20]);
+        assert_eq!(a.clients[0], b.clients[1]);
+        assert_eq!(a.clients[1], b.clients[2]);
+        assert_eq!(a.clients[2], b.clients[0]);
+    }
+
+    #[test]
+    fn chaos_model_actually_fires() {
+        let m = chaos_model();
+        let mut drops = 0;
+        let mut corrupts = 0;
+        let mut stragglers = 0;
+        for client in 0..200 {
+            let cf = m.client_faults(42, 0, client);
+            drops += cf.attempts.iter().filter(|a| a.dropped).count();
+            corrupts += cf.attempts.iter().filter(|a| a.corrupt.is_some()).count();
+            if cf.straggle_ms > 0 {
+                stragglers += 1;
+                assert!(cf.straggle_ms <= m.straggle_ms);
+            }
+        }
+        assert!(drops > 100, "dropout 0.4 × 600 attempts fired {drops} times");
+        assert!(corrupts > 50, "corrupt 0.5 × 200 first attempts fired {corrupts}");
+        assert!(stragglers > 20, "straggle 0.3 × 200 fired {stragglers}");
+    }
+
+    #[test]
+    fn corruption_mutates_encoded_bytes() {
+        let clean: Vec<u8> = (0..64u8).collect();
+
+        let mut flipped = clean.clone();
+        corrupt_bytes(&Corruption::BitFlips { seed: 99, n: 3 }, &mut flipped);
+        assert_eq!(flipped.len(), clean.len());
+        assert_ne!(flipped, clean, "bit flips must change the bytes");
+        let differing_bits: u32 = clean
+            .iter()
+            .zip(&flipped)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert!(differing_bits <= 3, "at most n bits differ");
+
+        let mut cut = clean.clone();
+        corrupt_bytes(&Corruption::Truncate { seed: 99 }, &mut cut);
+        assert!(cut.len() < clean.len(), "truncation must shorten");
+        assert_eq!(&clean[..cut.len()], &cut[..], "truncation keeps a prefix");
+
+        // replay: same corruption seed, same mangled bytes
+        let mut again = clean.clone();
+        corrupt_bytes(&Corruption::BitFlips { seed: 99, n: 3 }, &mut again);
+        assert_eq!(again, flipped);
+
+        let mut empty: Vec<u8> = Vec::new();
+        corrupt_bytes(&Corruption::BitFlips { seed: 1, n: 2 }, &mut empty);
+        assert!(empty.is_empty(), "empty input must not panic");
+    }
+
+    #[test]
+    fn required_of_covers_the_edges() {
+        let strict = ParticipationPolicy::strict();
+        assert_eq!(strict.required_of(8), 8);
+        assert_eq!(strict.required_of(1), 1);
+        assert_eq!(strict.required_of(0), 0);
+
+        let half = ParticipationPolicy {
+            quorum: 0.5,
+            rescale: true,
+        };
+        assert_eq!(half.required_of(8), 4);
+        assert_eq!(half.required_of(5), 3, "ceil(2.5)");
+        assert_eq!(half.required_of(1), 1);
+
+        let zero = ParticipationPolicy {
+            quorum: 0.0,
+            rescale: true,
+        };
+        assert_eq!(zero.required_of(8), 1, "an empty round can never fold");
+    }
+
+    #[test]
+    fn validation_rejects_bad_rates() {
+        let mut m = FaultModel::none();
+        assert!(m.validate().is_ok());
+        m.dropout = 1.5;
+        assert!(m.validate().is_err());
+        m.dropout = 0.0;
+        m.corrupt_p = -0.1;
+        assert!(m.validate().is_err());
+
+        let mut p = ParticipationPolicy::strict();
+        assert!(p.validate().is_ok());
+        p.quorum = 1.01;
+        assert!(p.validate().is_err());
+    }
+}

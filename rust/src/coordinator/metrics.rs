@@ -1,12 +1,15 @@
 //! Per-round records and run-level results (JSON / CSV emission).
 
+use super::faults::DroppedClient;
 use crate::jsonx::Value;
 
 /// One federated round's observations.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
     pub round: usize,
-    /// Mean local training loss over the selected clients.
+    /// Mean local training loss over the *delivered* clients (dropped
+    /// uplinks are excluded; equals the all-clients mean on fault-free
+    /// runs where every uplink is delivered).
     pub train_loss: f64,
     /// Global-model test loss (NaN when not evaluated this round).
     pub test_loss: f64,
@@ -18,6 +21,23 @@ pub struct RoundRecord {
     pub downlink_bytes: u64,
     pub train_ms: f64,
     pub compress_ms: f64,
+    /// Clients selected this round (the promised uplink count).
+    pub selected: usize,
+    /// Uplinks actually delivered and ingested (`selected` minus the
+    /// dropped set; equals `selected` on fault-free runs).
+    pub participants: usize,
+    /// Resend attempts consumed by failed deliveries this round.
+    pub retries: u64,
+    /// Uplinks the server rejected at the wire boundary (corrupt
+    /// encoded bytes that failed to decode). Rejected uplinks never
+    /// touch the byte meter.
+    pub corrupt_rejected: u64,
+    /// Whether the participation quorum was met. `false` means the fold
+    /// was skipped and the global weights carried over unchanged
+    /// (graceful degradation, not an abort).
+    pub quorum_met: bool,
+    /// Clients whose uplink never folded, in slot order.
+    pub dropped: Vec<DroppedClient>,
 }
 
 impl RoundRecord {
@@ -30,6 +50,16 @@ impl RoundRecord {
     }
 
     pub fn to_json(&self) -> Value {
+        let dropped: Vec<Value> = self
+            .dropped
+            .iter()
+            .map(|d| {
+                Value::obj()
+                    .set("slot", d.slot)
+                    .set("client", d.client)
+                    .set("reason", d.reason.name())
+            })
+            .collect();
         Value::obj()
             .set("round", self.round)
             .set("train_loss", self.train_loss)
@@ -39,6 +69,12 @@ impl RoundRecord {
             .set("downlink_bytes", self.downlink_bytes)
             .set("train_ms", self.train_ms)
             .set("compress_ms", self.compress_ms)
+            .set("selected", self.selected)
+            .set("participants", self.participants)
+            .set("retries", self.retries)
+            .set("corrupt_rejected", self.corrupt_rejected)
+            .set("quorum_met", self.quorum_met)
+            .set("dropped", Value::Arr(dropped))
     }
 }
 
@@ -118,13 +154,16 @@ impl RunResult {
         }
         let mut out = String::from(
             "round,train_loss,test_loss,test_acc,uplink_bytes,downlink_bytes,\
-             train_ms,compress_ms\n",
+             train_ms,compress_ms,selected,participants,dropped,retries,\
+             corrupt_rejected,quorum_met\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{},{},{:.3},{:.3}\n",
+                "{},{:.6},{:.6},{:.6},{},{},{:.3},{:.3},{},{},{},{},{},{}\n",
                 r.round, r.train_loss, r.test_loss, r.test_acc, r.uplink_bytes,
-                r.downlink_bytes, r.train_ms, r.compress_ms
+                r.downlink_bytes, r.train_ms, r.compress_ms, r.selected,
+                r.participants, r.dropped.len(), r.retries, r.corrupt_rejected,
+                if r.quorum_met { 1 } else { 0 }
             ));
         }
         std::fs::write(path, out)?;
@@ -175,6 +214,12 @@ mod tests {
             downlink_bytes: 400,
             train_ms: 1.0,
             compress_ms: 0.1,
+            selected: 4,
+            participants: 4,
+            retries: 0,
+            corrupt_rejected: 0,
+            quorum_met: true,
+            dropped: Vec::new(),
         }
     }
 
@@ -227,6 +272,43 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("round,"));
         assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn participation_fields_reach_json_and_csv() {
+        use crate::coordinator::faults::{DropReason, DroppedClient};
+        let mut rec = record(0, 0.5);
+        rec.selected = 4;
+        rec.participants = 2;
+        rec.retries = 3;
+        rec.corrupt_rejected = 1;
+        rec.quorum_met = false;
+        rec.dropped = vec![
+            DroppedClient { slot: 1, client: 9, reason: DropReason::Dropout },
+            DroppedClient { slot: 3, client: 2, reason: DropReason::Corrupt },
+        ];
+
+        let v = rec.to_json();
+        assert_eq!(v.get("participants").unwrap().as_f64().unwrap(), 2.0);
+        assert!(!v.get("quorum_met").unwrap().as_bool().unwrap());
+        let dropped = v.get("dropped").unwrap().as_arr().unwrap();
+        assert_eq!(dropped.len(), 2);
+        assert_eq!(
+            dropped[1].get("reason").unwrap().as_str().unwrap(),
+            "corrupt"
+        );
+
+        let r = RunResult::new(
+            "c".into(), "m".into(), "iid".into(), vec![rec], 10, 1.0, 100, 50,
+        );
+        let path = std::env::temp_dir().join("fedmrn_metrics_faults_test.csv");
+        r.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(header.ends_with("selected,participants,dropped,retries,corrupt_rejected,quorum_met"));
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.ends_with("4,2,2,3,1,0"), "row: {row}");
         std::fs::remove_file(path).ok();
     }
 }

@@ -24,9 +24,15 @@
 //! [`pipeline`] holds the double-buffered round engine that overlaps a
 //! round's evaluation tail with the next round's training
 //! (`RunConfig::pipeline`, byte-identical to the sequential engine).
+//! [`faults`] is the deterministic fault-injection layer (seed-derived
+//! dropout / straggler / wire-corruption plans plus the
+//! [`faults::ParticipationPolicy`] quorum contract every aggregator's
+//! `finish` honours); the default fault-free model is byte-identical to
+//! an engine with no fault layer at all.
 
 pub mod client;
 pub mod config;
+pub mod faults;
 pub mod metrics;
 pub mod parallel;
 pub mod pipeline;
@@ -35,6 +41,7 @@ pub mod server;
 pub mod strategy;
 
 pub use config::{Method, MrnMode, RunConfig};
+pub use faults::{DropReason, DroppedClient, FaultModel, FaultPlan, ParticipationPolicy};
 pub use metrics::{RoundRecord, RunResult};
 pub use server::Federation;
 pub use strategy::{Aggregator, Strategy, TrainCtx};

@@ -47,14 +47,63 @@
 //! `tests::parallel_matches_sequential_bytes` and the differential
 //! harness (`tests/differential.rs`) pin the contract across
 //! threads × tile × d grids for both mask types.
+//!
+//! # Fault containment
+//!
+//! Worker panics never escape a pool: every worker body runs under
+//! `catch_unwind` and surfaces as a typed [`Error::Worker`] carrying
+//! the item index, and every pool mutex is locked through a
+//! poison-recovering guard — one panicking client can fail its round,
+//! not cascade into a poisoned-lock coordinator panic.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Mutex, MutexGuard};
 
 use crate::bitpack;
 use crate::compress::MaskType;
 use crate::error::{Error, Result};
 use crate::noise::{NoiseDist, NoiseGen, NoiseLayout};
+
+/// Render a `catch_unwind` payload as a human-readable message.
+/// `panic!("...")` yields `&str` or `String`; anything else (a custom
+/// `panic_any` payload) falls back to a placeholder.
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload of unknown type".to_string()
+    }
+}
+
+/// Lock a mutex, recovering the guarded data from a poisoned lock.
+/// Every critical section in this module writes one independent slot
+/// (or pushes one error), so data behind a poisoned lock is still
+/// valid; the panic that poisoned it surfaces separately as a typed
+/// [`Error::Worker`] instead of cascading into a coordinator panic.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Run `f(i)`, converting a panic into [`Error::Worker`] so one
+/// misbehaving item tears down its own result, not the whole pool.
+/// Pool-level catches don't know the federated round, so `round` is 0
+/// here (see the [`Error::Worker`] docs); callers that do know the
+/// round (the engines' `run_one`) install their own catch with real
+/// context before the work ever reaches this pool.
+fn call_caught<T, F>(f: &F, i: usize) -> Result<T>
+where
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).unwrap_or_else(|p| {
+        Err(Error::Worker {
+            client: i,
+            round: 0,
+            msg: format!("worker panicked: {}", panic_msg(p.as_ref())),
+        })
+    })
+}
 
 /// Resolve a configured thread count: `0` means "all available cores".
 pub fn resolve_threads(cfg_threads: usize) -> usize {
@@ -109,7 +158,7 @@ where
 {
     let n_threads = resolve_threads(n_threads).min(n_items.max(1));
     if n_threads <= 1 {
-        return (0..n_items).map(&f).collect();
+        return (0..n_items).map(|i| call_caught(&f, i)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<Result<T>>>> =
@@ -121,12 +170,12 @@ where
                 if i >= n_items {
                     break;
                 }
-                let r = f(i);
-                slots.lock().unwrap()[i] = Some(r);
+                let r = call_caught(&f, i);
+                lock_unpoisoned(&slots)[i] = Some(r);
             });
         }
     });
-    let slots = slots.into_inner().unwrap();
+    let slots = slots.into_inner().unwrap_or_else(|p| p.into_inner());
     let mut out = Vec::with_capacity(n_items);
     for (i, slot) in slots.into_iter().enumerate() {
         match slot {
@@ -174,7 +223,7 @@ where
     let n_threads = resolve_threads(n_threads).min(n_items.max(1));
     if n_threads <= 1 {
         for i in 0..n_items {
-            consume(i, f(i)?)?;
+            consume(i, call_caught(&f, i)?)?;
         }
         return Ok(());
     }
@@ -190,7 +239,7 @@ where
                 if i >= n_items {
                     break;
                 }
-                if tx.send((i, f(i))).is_err() {
+                if tx.send((i, call_caught(f, i))).is_err() {
                     break;
                 }
             });
@@ -288,6 +337,33 @@ fn fuse_shard(
     Ok(())
 }
 
+/// [`fuse_shard`] with the pool-wide panic contract: a panic while
+/// fusing update `k` comes back as [`Error::Worker`] carrying `k` as
+/// the client index (`round` 0 — the pool doesn't know it).
+#[allow(clippy::too_many_arguments)]
+fn fuse_shard_caught(
+    k: usize,
+    u: &MaskedUpdate<'_>,
+    dist: NoiseDist,
+    layout: NoiseLayout,
+    mask_type: MaskType,
+    d: usize,
+    range: (usize, usize),
+    buf: &mut [f32],
+    shard: &mut [f32],
+) -> Result<()> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        fuse_shard(u, dist, layout, mask_type, d, range, buf, shard)
+    }))
+    .unwrap_or_else(|p| {
+        Err(Error::Worker {
+            client: k,
+            round: 0,
+            msg: format!("aggregation worker panicked: {}", panic_msg(p.as_ref())),
+        })
+    })
+}
+
 /// Fused FedMRN aggregation (Eq. 5): `w += Σ_k scale_k · (G(s_k) ⊙ m_k)`,
 /// tiled so no full-`d` noise buffer ever exists, parallel over
 /// `threads` workers, byte-identical to the sequential path for every
@@ -329,8 +405,8 @@ pub fn aggregate_masked(
     if threads <= 1 || d < 64 {
         // sequential reference: tile loop per client, in client order
         let mut buf = vec![0.0f32; tile.min(d.max(1))];
-        for u in updates {
-            fuse_shard(u, dist, layout, mask_type, d, (0, d), &mut buf, w)?;
+        for (k, u) in updates.iter().enumerate() {
+            fuse_shard_caught(k, u, dist, layout, mask_type, d, (0, d), &mut buf, w)?;
         }
         return Ok(());
     }
@@ -351,18 +427,23 @@ pub fn aggregate_masked(
             let errs = &errs;
             s.spawn(move || {
                 let mut buf = vec![0.0f32; tile.min(hi - lo)];
-                for u in updates {
-                    if let Err(e) = fuse_shard(
-                        u, dist, layout, mask_type, d, (lo, hi), &mut buf, shard,
+                for (k, u) in updates.iter().enumerate() {
+                    if let Err(e) = fuse_shard_caught(
+                        k, u, dist, layout, mask_type, d, (lo, hi), &mut buf, shard,
                     ) {
-                        errs.lock().unwrap().push(e);
+                        lock_unpoisoned(errs).push(e);
                         return;
                     }
                 }
             });
         }
     });
-    if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+    if let Some(e) = errs
+        .into_inner()
+        .unwrap_or_else(|p| p.into_inner())
+        .into_iter()
+        .next()
+    {
         return Err(e);
     }
     Ok(())
@@ -718,6 +799,49 @@ mod tests {
         }
         // zero items is fine
         run_streamed(0, 4, |i| Ok(i), |_, _: usize| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn panicking_indexed_worker_is_typed_error_not_pool_panic() {
+        for threads in [1usize, 4] {
+            let r: Result<Vec<usize>> = run_indexed(10, threads, |i| {
+                if i == 3 {
+                    panic!("boom {i}");
+                }
+                Ok(i)
+            });
+            match r {
+                Err(Error::Worker { client, round, msg }) => {
+                    assert_eq!(client, 3, "threads={threads}");
+                    assert_eq!(round, 0, "threads={threads}");
+                    assert!(msg.contains("boom"), "threads={threads} msg={msg}");
+                }
+                other => panic!("threads={threads}: expected Worker error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_streamed_worker_is_typed_error_not_pool_panic() {
+        for threads in [1usize, 4] {
+            let r = run_streamed(
+                10,
+                threads,
+                |i| {
+                    if i == 3 {
+                        panic!("stream boom");
+                    }
+                    Ok(i)
+                },
+                |_, _: usize| Ok(()),
+            );
+            match r {
+                Err(Error::Worker { client: 3, round: 0, msg }) => {
+                    assert!(msg.contains("stream boom"), "threads={threads} msg={msg}");
+                }
+                other => panic!("threads={threads}: expected Worker error, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -54,19 +54,51 @@
 
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use crate::data::Split;
 use crate::error::{Error, Result};
 use crate::noise::{derive_seed, NoiseGen};
 use crate::runtime::{ConfigMeta, Runtime};
 use crate::stats::Timer;
-use crate::transport::Meter;
+use crate::transport::{Meter, Payload};
 
 use super::client::{self, Batches, TrainOutcome};
 use super::config::RunConfig;
+use super::faults::{self, DropReason, DroppedClient};
 use super::metrics::RoundRecord;
 use super::parallel;
 use super::strategy::{Strategy, TrainCtx};
+
+/// Default detached-job / rendezvous timeout for the pipelined engine,
+/// seconds. See [`resolve_job_timeout`].
+pub const DEFAULT_JOB_TIMEOUT_SECS: u64 = 30;
+
+/// Resolve the detached-job timeout: the `FEDMRN_PIPELINE_TIMEOUT_SECS`
+/// env var wins, then a nonzero [`RunConfig::job_timeout_secs`], then
+/// [`DEFAULT_JOB_TIMEOUT_SECS`]. Zero / unparsable values fall through
+/// to the next source.
+pub fn resolve_job_timeout(cfg_secs: u64) -> Duration {
+    let secs = std::env::var("FEDMRN_PIPELINE_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&s| s > 0)
+        .unwrap_or(if cfg_secs > 0 {
+            cfg_secs
+        } else {
+            DEFAULT_JOB_TIMEOUT_SECS
+        });
+    Duration::from_secs(secs)
+}
+
+/// A pipeline timeout as a typed error carrying (round, job) context —
+/// a starved rendezvous names *which* step's job never completed
+/// instead of a bare "timed out".
+pub fn job_timeout_error(round: usize, job: &str, timeout: Duration) -> Error {
+    Error::Config(format!(
+        "pipeline: round {round}: {job} timed out after {timeout:?}"
+    ))
+}
 
 /// Run `steps` pipeline steps with at most one detached job in flight.
 ///
@@ -204,35 +236,65 @@ pub(crate) fn train_and_fold(
     let selected_ref = &selected;
     let run_one = |i: usize| -> Result<TrainOutcome> {
         let c = selected_ref[i];
-        let mut crng = NoiseGen::new(derive_seed(cfg.seed, c as u64, r as u64, 2));
-        let batches: Batches = client::make_batches(
-            &split.train,
-            &shards[c],
-            meta,
-            cfg.max_batches_per_epoch,
-            &mut crng,
-        )?;
-        let noise_seed = derive_seed(cfg.seed, c as u64, r as u64, 1);
-        let mut tctx = TrainCtx {
-            meta,
-            cfg,
-            round: r,
-            w: w_ref,
-            w_init,
-            batches: &batches,
-            noise_seed,
-            rng: &mut crng,
+        let body = || -> Result<TrainOutcome> {
+            let mut crng = NoiseGen::new(derive_seed(cfg.seed, c as u64, r as u64, 2));
+            let batches: Batches = client::make_batches(
+                &split.train,
+                &shards[c],
+                meta,
+                cfg.max_batches_per_epoch,
+                &mut crng,
+            )?;
+            let noise_seed = derive_seed(cfg.seed, c as u64, r as u64, 1);
+            let mut tctx = TrainCtx {
+                meta,
+                cfg,
+                round: r,
+                w: w_ref,
+                w_init,
+                batches: &batches,
+                noise_seed,
+                rng: &mut crng,
+            };
+            strategy.local_train(rt, &mut tctx)
         };
-        strategy.local_train(rt, &mut tctx)
+        // a panicking client worker surfaces as a typed error with its
+        // (client, round) context, not a cascading coordinator panic
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).unwrap_or_else(|p| {
+            Err(Error::Worker {
+                client: c,
+                round: r,
+                msg: parallel::panic_msg(p.as_ref()),
+            })
+        })
     };
 
+    // Fault delivery: every decision derives from (seed, round, client)
+    // — the plan is fixed before any client trains and identical across
+    // arrival orders, thread counts and pipelining. The zero-rate
+    // default walks this same path with one clean attempt per client,
+    // which keeps the fault-free engine byte-identical (differential
+    // §8). The fault stream never touches `rng`, so client selection is
+    // unperturbed by arming a model.
+    let fplan = faults::FaultPlan::for_round(&cfg.faults, cfg.seed, r, &selected);
+    let deadline_ms = cfg.faults.deadline_ms;
+
     let mut losses = vec![f64::NAN; selected.len()];
+    let mut delivered = vec![false; selected.len()];
+    let mut dropped: Vec<DroppedClient> = Vec::new();
+    let mut retries = 0u64;
+    let mut corrupt_rejected = 0u64;
     let mut train_ms = 0.0f64;
     let mut compress_ms = 0.0f64;
     {
         let meter = &mut *meter;
         let agg = &mut agg;
         let losses = &mut losses;
+        let delivered = &mut delivered;
+        let dropped = &mut dropped;
+        let retries = &mut retries;
+        let corrupt_rejected = &mut corrupt_rejected;
+        let fplan = &fplan;
         parallel::run_streamed(
             selected.len(),
             cfg.threads,
@@ -240,17 +302,115 @@ pub(crate) fn train_and_fold(
             |slot, outcome: TrainOutcome| {
                 train_ms += outcome.train_ms;
                 compress_ms += outcome.compress_ms;
-                losses[slot] = outcome.train_loss;
-                let decoded = meter.uplink(&outcome.payload)?;
-                let scale = (shards[selected_ref[slot]].len() as f64 / total) as f32;
-                agg.ingest(slot, decoded, scale)
+                let client = selected_ref[slot];
+                let cf = &fplan.clients[slot];
+                // straggler deadline is simulated: the drawn latency is
+                // compared, never slept, so chaos runs stay fast and
+                // deterministic
+                if deadline_ms > 0 && cf.straggle_ms > deadline_ms {
+                    dropped.push(DroppedClient {
+                        slot,
+                        client,
+                        reason: DropReason::Straggler,
+                    });
+                    return Ok(());
+                }
+                let mut last_reason = DropReason::Dropout;
+                for (a, attempt) in cf.attempts.iter().enumerate() {
+                    if a > 0 {
+                        *retries += 1;
+                    }
+                    if attempt.dropped {
+                        last_reason = DropReason::Dropout;
+                        continue;
+                    }
+                    let mut bytes = outcome.payload.encode();
+                    if let Some(c) = &attempt.corrupt {
+                        faults::corrupt_bytes(c, &mut bytes);
+                    }
+                    // decode + ingest first, meter only a delivered
+                    // uplink: a rejected corrupt uplink never pollutes
+                    // the byte/message accounting
+                    let decoded = match Payload::decode(&bytes) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            if attempt.corrupt.is_none() {
+                                // clean bytes must always decode — this
+                                // is an engine bug, not a chaos event
+                                return Err(e);
+                            }
+                            *corrupt_rejected += 1;
+                            last_reason = DropReason::Corrupt;
+                            continue;
+                        }
+                    };
+                    let scale = (shards[client].len() as f64 / total) as f32;
+                    match agg.ingest(slot, decoded, scale) {
+                        Ok(()) => {
+                            meter.count_uplink(bytes.len());
+                            losses[slot] = outcome.train_loss;
+                            delivered[slot] = true;
+                            return Ok(());
+                        }
+                        // a bit-flip can survive decode (no checksum on
+                        // the wire) and bounce off the aggregator's
+                        // variant/dimension validation instead — still
+                        // a rejected corrupt uplink, still retryable
+                        Err(Error::Codec(_)) if attempt.corrupt.is_some() => {
+                            *corrupt_rejected += 1;
+                            last_reason = DropReason::Corrupt;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                dropped.push(DroppedClient {
+                    slot,
+                    client,
+                    reason: last_reason,
+                });
+                Ok(())
             },
         )?;
     }
-    let train_loss = crate::stats::mean(&losses);
+    // arrival order is thread-nondeterministic; slot order is canonical
+    dropped.sort_by_key(|d| d.slot);
+    // mean local loss over the delivered clients only (a dropped
+    // client's loss never reached the server); on fault-free runs this
+    // is the all-clients mean, bit for bit
+    let kept: Vec<f64> = losses
+        .iter()
+        .zip(&delivered)
+        .filter(|(_, &k)| k)
+        .map(|(&l, _)| l)
+        .collect();
+    let train_loss = crate::stats::mean(&kept);
+    let participants = delivered.iter().filter(|&&k| k).count();
 
     // The install: from this point round r+1 may train against `w`.
-    agg.finish(w)?;
+    // A starved quorum degrades gracefully — the weights carry over
+    // unchanged (every aggregator checks quorum before mutating `w`)
+    // and the round is recorded as quorum_met = false; every other
+    // finish error still aborts.
+    let mut quorum_met = true;
+    if let Err(e) = agg.finish(w) {
+        match e {
+            Error::Quorum {
+                round,
+                arrived,
+                promised,
+                required,
+            } => {
+                quorum_met = false;
+                if ctx.verbose {
+                    eprintln!(
+                        "[round {round}] quorum not met ({arrived}/{promised} arrived, \
+                         {required} required): carrying weights forward"
+                    );
+                }
+            }
+            other => return Err(other),
+        }
+    }
 
     let do_eval = cfg.eval_every > 0
         && ((r + 1) % cfg.eval_every == 0 || r + 1 == cfg.rounds);
@@ -272,6 +432,12 @@ pub(crate) fn train_and_fold(
         downlink_bytes: *meter.round_downlink.last().unwrap_or(&0),
         train_ms,
         compress_ms,
+        selected: selected.len(),
+        participants,
+        retries,
+        corrupt_rejected,
+        quorum_met,
+        dropped,
     };
     Ok(FoldedRound { record, eval, fold_ms: t_round.ms() })
 }
@@ -425,13 +591,18 @@ mod tests {
                 Ok((r, if r == 0 { Some(()) } else { None }))
             },
             |()| {
+                // satellite: the rendezvous timeout is configurable
+                // (config knob + FEDMRN_PIPELINE_TIMEOUT_SECS env
+                // override) and its error names the starved (round, job)
+                let timeout = resolve_job_timeout(0);
                 rx.lock()
                     .unwrap()
-                    .recv_timeout(Duration::from_secs(30))
+                    .recv_timeout(timeout)
                     .map_err(|_| {
-                        Error::Config(
-                            "no overlap: produce(1) never ran while job 0 was in flight"
-                                .into(),
+                        job_timeout_error(
+                            0,
+                            "overlap rendezvous (job 0 waiting for produce(1))",
+                            timeout,
                         )
                     })?;
                 Ok(())
@@ -522,6 +693,30 @@ mod tests {
             Err(Error::Config(m)) => assert_eq!(m, "produce boom"),
             other => panic!("want the produce error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn job_timeout_resolution_prefers_env_then_config_then_default() {
+        // no env, no config knob → default
+        std::env::remove_var("FEDMRN_PIPELINE_TIMEOUT_SECS");
+        assert_eq!(
+            resolve_job_timeout(0),
+            Duration::from_secs(DEFAULT_JOB_TIMEOUT_SECS)
+        );
+        // config knob wins over the default
+        assert_eq!(resolve_job_timeout(7), Duration::from_secs(7));
+        // env wins over both; junk / zero env falls through
+        std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "90");
+        assert_eq!(resolve_job_timeout(7), Duration::from_secs(90));
+        std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "0");
+        assert_eq!(resolve_job_timeout(7), Duration::from_secs(7));
+        std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "not-a-number");
+        assert_eq!(resolve_job_timeout(0), Duration::from_secs(DEFAULT_JOB_TIMEOUT_SECS));
+        std::env::remove_var("FEDMRN_PIPELINE_TIMEOUT_SECS");
+
+        let e = job_timeout_error(4, "eval of round 3", Duration::from_secs(9));
+        let msg = e.to_string();
+        assert!(msg.contains("round 4") && msg.contains("eval of round 3"), "{msg}");
     }
 
     #[test]

@@ -375,6 +375,16 @@ mod tests {
                 assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
                 assert_eq!(a.uplink_bytes, b.uplink_bytes);
                 assert_eq!(a.downlink_bytes, b.downlink_bytes);
+                assert_eq!(a.selected, b.selected);
+                assert_eq!(a.participants, b.participants);
+                assert_eq!(a.retries, b.retries);
+                assert_eq!(a.corrupt_rejected, b.corrupt_rejected);
+                assert_eq!(a.quorum_met, b.quorum_met);
+                assert_eq!(a.dropped, b.dropped);
+                // fault-free default: full participation, nothing dropped
+                assert_eq!(a.participants, a.selected);
+                assert!(a.quorum_met);
+                assert!(a.dropped.is_empty());
             }
             assert_eq!(res_s.uplink_bytes, res_p.uplink_bytes);
             assert_eq!(res_s.downlink_bytes, res_p.downlink_bytes);

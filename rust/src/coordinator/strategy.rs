@@ -46,6 +46,17 @@
 //! Every `ingest` validates its payload eagerly: a payload variant
 //! belonging to another method is an [`Error::Codec`] at ingest time —
 //! never a panic, never a silent skip.
+//!
+//! # Participation
+//!
+//! `finish` honours the run's [`ParticipationPolicy`]: when at least
+//! `required_of(promised)` uplinks arrived it folds whichever slots made
+//! it (optionally rescaling the Eq. 5 average over the actual
+//! participants), otherwise it returns a typed [`Error::Quorum`]
+//! *without touching the weights* — so the engine can carry `w` forward
+//! and keep the run alive. Under the strict default (quorum 1.0) any
+//! missing slot is a quorum error, exactly the pre-fault contract; and a
+//! full round never rescales, so fault-free runs stay byte-identical.
 
 use crate::compress::{fedmrn, fedpm as fedpm_codec, sparsify, GradCodec, MaskType};
 use crate::error::{Error, Result};
@@ -56,6 +67,7 @@ use crate::transport::Payload;
 
 use super::client::{self, Batches, TrainOutcome};
 use super::config::{MrnMode, RunConfig};
+use super::faults::ParticipationPolicy;
 use super::parallel;
 
 /// Everything one client's local round sees: the broadcast global state,
@@ -121,15 +133,17 @@ pub trait Aggregator: Send {
     /// duplicate or out-of-range slots are [`Error::Config`]s.
     fn ingest(&mut self, slot: usize, payload: Payload, scale: f32) -> Result<()>;
 
-    /// Fold the round into the global weights. Errors if any of the
-    /// promised `n_uplinks` slots never arrived.
+    /// Fold the round into the global weights. Folds the arrived slots
+    /// when the run's [`ParticipationPolicy`] quorum is met (under the
+    /// strict default that means *every* promised slot); below quorum it
+    /// returns [`Error::Quorum`] and leaves `w` untouched.
     fn finish(&mut self, w: &mut [f32]) -> Result<()>;
 }
 
 /// Slot-indexed parking buffer shared by the order-sensitive
 /// aggregators: `put` rejects duplicates and out-of-range slots,
-/// `take_ordered` rejects any shortfall against the promised count —
-/// including trailing gaps.
+/// `take_quorum` rejects any shortfall below the policy's quorum —
+/// under the strict default that includes trailing gaps.
 struct Slots<T> {
     v: Vec<Option<T>>,
 }
@@ -167,17 +181,59 @@ impl<T> Slots<T> {
         Ok(())
     }
 
-    fn take_ordered(&mut self) -> Result<Vec<T>> {
+    /// Quorum-aware drain: the arrived `(slot, value)` pairs in slot
+    /// order plus the promised count, or a typed [`Error::Quorum`] when
+    /// fewer than `policy.required_of(promised)` arrived. Callers must
+    /// perform this check *before* mutating the global weights so a
+    /// starved round degrades gracefully instead of half-folding.
+    fn take_quorum(
+        &mut self,
+        policy: &ParticipationPolicy,
+        round: usize,
+    ) -> Result<(Vec<(usize, T)>, usize)> {
         let v = std::mem::take(&mut self.v);
-        let n = v.len();
-        let out: Vec<T> = v.into_iter().flatten().collect();
-        if out.len() != n {
-            return Err(Error::Config(format!(
-                "aggregator: only {} of {n} promised uplinks arrived",
-                out.len()
-            )));
+        let promised = v.len();
+        let arrived: Vec<(usize, T)> = v
+            .into_iter()
+            .enumerate()
+            .filter_map(|(slot, t)| t.map(|t| (slot, t)))
+            .collect();
+        let required = policy.required_of(promised);
+        if arrived.len() < required {
+            return Err(Error::Quorum {
+                round,
+                arrived: arrived.len(),
+                promised,
+                required,
+            });
         }
-        Ok(out)
+        Ok((arrived, promised))
+    }
+}
+
+/// Eq. 5 renormalization over the actual participants: `Some(1 / Σ
+/// arrived scales)` only when the policy rescales *and* some promised
+/// slot is missing. A full round returns `None` — the fold multiplies
+/// by nothing at all — so the fault-free path stays bit-exact with the
+/// strict engine (pinned in `tests/differential.rs` §8).
+fn rescale_factor(
+    policy: &ParticipationPolicy,
+    arrived: usize,
+    promised: usize,
+    scale_sum: f64,
+) -> Option<f32> {
+    if policy.rescale && arrived < promised && scale_sum > 0.0 {
+        Some((1.0 / scale_sum) as f32)
+    } else {
+        None
+    }
+}
+
+/// Apply an optional [`rescale_factor`] to one slot's scale.
+fn rescaled(scale: f32, renorm: Option<f32>) -> f32 {
+    match renorm {
+        Some(r) => scale * r,
+        None => scale,
     }
 }
 
@@ -226,8 +282,14 @@ impl Strategy for GradStrategy {
         })
     }
 
-    fn aggregator(&self, _cfg: &RunConfig) -> Box<dyn Aggregator> {
-        Box::new(GradAggregator { codec: self.codec, d: 0, slots: Slots::new() })
+    fn aggregator(&self, cfg: &RunConfig) -> Box<dyn Aggregator> {
+        Box::new(GradAggregator {
+            codec: self.codec,
+            policy: cfg.participation,
+            round: 0,
+            d: 0,
+            slots: Slots::new(),
+        })
     }
 }
 
@@ -239,12 +301,15 @@ impl Strategy for GradStrategy {
 /// arithmetic exactly.
 pub struct GradAggregator {
     codec: GradCodec,
+    policy: ParticipationPolicy,
+    round: usize,
     d: usize,
     slots: Slots<(Payload, f32)>,
 }
 
 impl Aggregator for GradAggregator {
-    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+    fn begin(&mut self, round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.round = round;
         self.d = d;
         self.slots.reset(n_uplinks);
         Ok(())
@@ -258,10 +323,14 @@ impl Aggregator for GradAggregator {
 
     fn finish(&mut self, w: &mut [f32]) -> Result<()> {
         let d = self.d;
-        for (payload, scale) in self.slots.take_ordered()? {
-            let update = self.codec.decode(&payload, d)?;
+        let (arrived, promised) = self.slots.take_quorum(&self.policy, self.round)?;
+        let scale_sum: f64 = arrived.iter().map(|(_, (_, s))| *s as f64).sum();
+        let renorm = rescale_factor(&self.policy, arrived.len(), promised, scale_sum);
+        for (_, (payload, scale)) in &arrived {
+            let update = self.codec.decode(payload, d)?;
+            let s = rescaled(*scale, renorm);
             for (a, v) in w.iter_mut().zip(&update) {
-                *a += scale * v;
+                *a += s * v;
             }
         }
         Ok(())
@@ -319,6 +388,8 @@ impl Strategy for MrnStrategy {
             mask_type: self.mask_type,
             threads: cfg.threads,
             tile: cfg.tile,
+            policy: cfg.participation,
+            round: 0,
             d: 0,
             slots: Slots::new(),
         })
@@ -341,12 +412,15 @@ pub struct MrnAggregator {
     mask_type: MaskType,
     threads: usize,
     tile: usize,
+    policy: ParticipationPolicy,
+    round: usize,
     d: usize,
     slots: Slots<(u64, Vec<u64>, f32)>,
 }
 
 impl Aggregator for MrnAggregator {
-    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+    fn begin(&mut self, round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.round = round;
         self.d = d;
         self.slots.reset(n_uplinks);
         Ok(())
@@ -371,13 +445,15 @@ impl Aggregator for MrnAggregator {
     }
 
     fn finish(&mut self, w: &mut [f32]) -> Result<()> {
-        let parked = self.slots.take_ordered()?;
-        let updates: Vec<parallel::MaskedUpdate> = parked
+        let (arrived, promised) = self.slots.take_quorum(&self.policy, self.round)?;
+        let scale_sum: f64 = arrived.iter().map(|(_, (_, _, s))| *s as f64).sum();
+        let renorm = rescale_factor(&self.policy, arrived.len(), promised, scale_sum);
+        let updates: Vec<parallel::MaskedUpdate> = arrived
             .iter()
-            .map(|(seed, bits, scale)| parallel::MaskedUpdate {
+            .map(|(_, (seed, bits, scale))| parallel::MaskedUpdate {
                 seed: *seed,
                 bits,
-                scale: *scale,
+                scale: rescaled(*scale, renorm),
             })
             .collect();
         parallel::aggregate_masked(
@@ -429,8 +505,15 @@ impl Strategy for PmStrategy {
         })
     }
 
-    fn aggregator(&self, _cfg: &RunConfig) -> Box<dyn Aggregator> {
-        Box::new(PmAggregator { d: 0, counts: Vec::new(), seen: Slots::new(), k: 0 })
+    fn aggregator(&self, cfg: &RunConfig) -> Box<dyn Aggregator> {
+        Box::new(PmAggregator {
+            policy: cfg.participation,
+            round: 0,
+            d: 0,
+            counts: Vec::new(),
+            seen: Slots::new(),
+            k: 0,
+        })
     }
 
     /// Global state = mask scores (zeros ⇒ p = 0.5); frozen random init
@@ -460,8 +543,12 @@ impl Strategy for PmStrategy {
 /// The data-proportional `scale` is ignored — FedPM aggregates an
 /// unweighted mean of the sampled masks (Isik et al., §3). Slots are
 /// still tracked (as a seen-set) so duplicate or missing uplinks are
-/// errors here like everywhere else.
+/// errors here like everywhere else. Under a permissive quorum the mean
+/// over the arrived `k` masks *is* the rescaled-by-actual-participants
+/// estimate, so no extra renormalization is needed.
 pub struct PmAggregator {
+    policy: ParticipationPolicy,
+    round: usize,
     d: usize,
     counts: Vec<u32>,
     seen: Slots<()>,
@@ -469,7 +556,8 @@ pub struct PmAggregator {
 }
 
 impl Aggregator for PmAggregator {
-    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+    fn begin(&mut self, round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.round = round;
         self.d = d;
         self.counts.clear();
         self.counts.resize(d, 0);
@@ -492,7 +580,7 @@ impl Aggregator for PmAggregator {
     }
 
     fn finish(&mut self, w: &mut [f32]) -> Result<()> {
-        self.seen.take_ordered()?;
+        self.seen.take_quorum(&self.policy, self.round)?;
         if self.k == 0 {
             return Err(Error::Codec("fedpm: no payloads".into()));
         }
@@ -544,8 +632,13 @@ impl Strategy for SparsifyStrategy {
         })
     }
 
-    fn aggregator(&self, _cfg: &RunConfig) -> Box<dyn Aggregator> {
-        Box::new(SparsifyAggregator { d: 0, slots: Slots::new() })
+    fn aggregator(&self, cfg: &RunConfig) -> Box<dyn Aggregator> {
+        Box::new(SparsifyAggregator {
+            policy: cfg.participation,
+            round: 0,
+            d: 0,
+            slots: Slots::new(),
+        })
     }
 }
 
@@ -555,12 +648,15 @@ impl Strategy for SparsifyStrategy {
 /// with the slot-ordered weighted average (decoding one client at a
 /// time — the pre-refactor arithmetic exactly).
 pub struct SparsifyAggregator {
+    policy: ParticipationPolicy,
+    round: usize,
     d: usize,
     slots: Slots<(Payload, f32)>,
 }
 
 impl Aggregator for SparsifyAggregator {
-    fn begin(&mut self, _round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+    fn begin(&mut self, round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+        self.round = round;
         self.d = d;
         self.slots.reset(n_uplinks);
         Ok(())
@@ -574,11 +670,15 @@ impl Aggregator for SparsifyAggregator {
 
     fn finish(&mut self, w: &mut [f32]) -> Result<()> {
         let d = self.d;
+        let (arrived, promised) = self.slots.take_quorum(&self.policy, self.round)?;
+        let scale_sum: f64 = arrived.iter().map(|(_, (_, s))| *s as f64).sum();
+        let renorm = rescale_factor(&self.policy, arrived.len(), promised, scale_sum);
         let mut acc = vec![0.0f32; d];
-        for (payload, scale) in self.slots.take_ordered()? {
-            let w_k = sparsify::decode_sparse(&payload, d)?;
+        for (_, (payload, scale)) in &arrived {
+            let w_k = sparsify::decode_sparse(payload, d)?;
+            let s = rescaled(*scale, renorm);
             for (a, v) in acc.iter_mut().zip(&w_k) {
-                *a += scale * v;
+                *a += s * v;
             }
         }
         w.copy_from_slice(&acc);
@@ -876,6 +976,127 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Tentpole pin: with a permissive quorum, `finish` folds whichever
+    /// slots arrived once `required_of(promised)` made it, and below
+    /// quorum returns a typed [`Error::Quorum`] leaving `w` untouched —
+    /// for every ingest discipline.
+    #[test]
+    fn quorum_not_met_is_typed_error_and_leaves_w_untouched() {
+        let d = 64usize;
+        for name in ["fedavg", "fedmrn", "fedpm", "fedsparsify"] {
+            let mut cfg = cfg_for(name);
+            cfg.participation = ParticipationPolicy { quorum: 0.5, rescale: true };
+            let strategy = registry::strategy_for_config(&cfg);
+
+            // 1 of 4 arrived, required = 2: typed quorum error, w intact
+            let mut agg = strategy.aggregator(&cfg);
+            agg.begin(3, d, 4).unwrap();
+            agg.ingest(2, own_payload(name, d), 0.25).unwrap();
+            let mut w = vec![1.5f32; d];
+            let before = w.clone();
+            match agg.finish(&mut w) {
+                Err(Error::Quorum { round, arrived, promised, required }) => {
+                    assert_eq!((round, arrived, promised, required), (3, 1, 4, 2), "{name}");
+                }
+                other => panic!("{name}: want Err(Quorum), got {other:?}"),
+            }
+            assert_eq!(w, before, "{name}: a starved round must not touch w");
+
+            // 2 of 4 arrived meets the quorum: the fold succeeds
+            let mut agg = strategy.aggregator(&cfg);
+            agg.begin(3, d, 4).unwrap();
+            agg.ingest(0, own_payload(name, d), 0.25).unwrap();
+            agg.ingest(3, own_payload(name, d), 0.25).unwrap();
+            agg.finish(&mut w)
+                .unwrap_or_else(|e| panic!("{name}: quorum met but finish failed: {e}"));
+        }
+    }
+
+    /// Full participation must fold identically under the strict policy
+    /// and under a permissive rescaling one: rescaling only engages when
+    /// a promised slot is actually missing (the byte-identity rule the
+    /// fault-free differential pin relies on).
+    #[test]
+    fn full_participation_never_rescales() {
+        let d = 257usize;
+        let n = 4usize;
+        for name in ["fedavg", "fedmrn", "fedpm", "fedsparsify"] {
+            let run = |policy: ParticipationPolicy| -> Vec<f32> {
+                let mut cfg = cfg_for(name);
+                cfg.participation = policy;
+                let strategy = registry::strategy_for_config(&cfg);
+                let mut agg = strategy.aggregator(&cfg);
+                agg.begin(0, d, n).unwrap();
+                for slot in 0..n {
+                    agg.ingest(slot, own_payload(name, d), 1.0 / (slot + 2) as f32)
+                        .unwrap();
+                }
+                let mut w = vec![0.0f32; d];
+                NoiseGen::new(777).fill(NoiseDist::Gaussian { alpha: 1.0 }, &mut w);
+                agg.finish(&mut w).unwrap();
+                w
+            };
+            let strict = run(ParticipationPolicy::strict());
+            let loose = run(ParticipationPolicy { quorum: 0.25, rescale: true });
+            for i in 0..d {
+                assert_eq!(
+                    strict[i].to_bits(),
+                    loose[i].to_bits(),
+                    "{name} i={i}: full rounds must not rescale"
+                );
+            }
+        }
+    }
+
+    /// When slots *are* missing and the policy rescales, the arrived
+    /// scales are renormalized to sum to 1 — the Eq. 5 average over the
+    /// actual participants.
+    #[test]
+    fn rescale_renormalizes_over_actual_participants() {
+        let d = 96usize;
+        // fedavg makes the arithmetic transparent: w += Σ s_k · δ_k
+        let mut cfg = cfg_for("fedavg");
+        cfg.participation = ParticipationPolicy { quorum: 0.5, rescale: true };
+        let strategy = registry::strategy_for_config(&cfg);
+
+        let delta = |k: u64| -> Vec<f32> {
+            let mut v = vec![0.0f32; d];
+            NoiseGen::new(500 + k).fill(NOISE, &mut v);
+            v
+        };
+        // 2 of 3 arrive with raw scales 0.25 and 0.5: renormalized to
+        // 0.25/0.75 and 0.5/0.75
+        let mut agg = strategy.aggregator(&cfg);
+        agg.begin(0, d, 3).unwrap();
+        agg.ingest(0, Payload::Dense(delta(0)), 0.25).unwrap();
+        agg.ingest(2, Payload::Dense(delta(2)), 0.5).unwrap();
+        let mut w = vec![0.0f32; d];
+        agg.finish(&mut w).unwrap();
+
+        let renorm = (1.0f64 / 0.75) as f32;
+        let (d0, d2) = (delta(0), delta(2));
+        for i in 0..d {
+            let want = 0.25 * renorm * d0[i] + 0.5 * renorm * d2[i];
+            assert_eq!(w[i].to_bits(), want.to_bits(), "i={i}");
+        }
+
+        // strict-scales control: without rescale the same shortfall
+        // folds the raw scales (biased toward zero)
+        let mut cfg2 = cfg_for("fedavg");
+        cfg2.participation = ParticipationPolicy { quorum: 0.5, rescale: false };
+        let strategy2 = registry::strategy_for_config(&cfg2);
+        let mut agg = strategy2.aggregator(&cfg2);
+        agg.begin(0, d, 3).unwrap();
+        agg.ingest(0, Payload::Dense(delta(0)), 0.25).unwrap();
+        agg.ingest(2, Payload::Dense(delta(2)), 0.5).unwrap();
+        let mut w2 = vec![0.0f32; d];
+        agg.finish(&mut w2).unwrap();
+        for i in 0..d {
+            let want = 0.25 * d0[i] + 0.5 * d2[i];
+            assert_eq!(w2[i].to_bits(), want.to_bits(), "strict i={i}");
         }
     }
 

@@ -25,6 +25,30 @@ pub enum Error {
     /// Dataset / partitioning invariant violations.
     Data(String),
 
+    /// A round closed below its participation quorum: only `arrived` of
+    /// the `promised` uplinks made it, but the policy required at least
+    /// `required`. Aggregators raise this from `finish` *before*
+    /// touching the global weights, so the round engine can degrade
+    /// gracefully (carry `w` forward) instead of aborting the run.
+    Quorum {
+        round: usize,
+        arrived: usize,
+        promised: usize,
+        required: usize,
+    },
+
+    /// A worker thread panicked mid-round; the panic is caught at the
+    /// pool / engine boundary and surfaced as a typed error with its
+    /// (client, round) context instead of poisoning the coordinator.
+    /// Call sites that only know a work-item index (the thread pools in
+    /// `coordinator::parallel`) report it as `client` with `round = 0`;
+    /// the round engine wraps client closures with the real round.
+    Worker {
+        client: usize,
+        round: usize,
+        msg: String,
+    },
+
     Io(std::io::Error),
 }
 
@@ -37,6 +61,19 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Codec(m) => write!(f, "codec: {m}"),
             Error::Data(m) => write!(f, "data: {m}"),
+            Error::Quorum {
+                round,
+                arrived,
+                promised,
+                required,
+            } => write!(
+                f,
+                "quorum: round {round}: only {arrived} of {promised} promised \
+                 uplinks arrived ({required} required)"
+            ),
+            Error::Worker { client, round, msg } => {
+                write!(f, "worker: client {client}, round {round}: {msg}")
+            }
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -75,5 +112,25 @@ mod tests {
         assert_eq!(Error::Config("x".into()).to_string(), "config: x");
         let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(io.to_string().starts_with("io: "));
+    }
+
+    #[test]
+    fn quorum_and_worker_carry_context() {
+        let q = Error::Quorum {
+            round: 7,
+            arrived: 2,
+            promised: 8,
+            required: 4,
+        };
+        let s = q.to_string();
+        assert!(s.starts_with("quorum: round 7:"), "{s}");
+        assert!(s.contains("2 of 8") && s.contains("4 required"), "{s}");
+
+        let w = Error::Worker {
+            client: 13,
+            round: 3,
+            msg: "boom".into(),
+        };
+        assert_eq!(w.to_string(), "worker: client 13, round 3: boom");
     }
 }

@@ -1,0 +1,137 @@
+//! Accuracy vs client dropout rate — the robustness extension.
+//!
+//! Not a paper artifact: FedMRN's evaluation assumes every selected
+//! client reports back. This sweep arms the deterministic fault layer
+//! ([`crate::coordinator::faults`]) at increasing dropout rates and
+//! measures how each method's final accuracy degrades when the server
+//! folds whatever arrives (quorum + rescale-over-participants), emitting:
+//!
+//!   results/dropout.json            — every RunResult + participation stats
+//!   results/dropout.md              — accuracy matrix (methods × rates)
+//!   results/dropout_<m>_<rate>.csv  — per-round series per arm
+//!
+//! Unless `--quorum`/`--rescale` are given, the sweep defaults to
+//! quorum 0.5 with rescaling — a strict policy would fail every round
+//! in which anyone drops, which is the point of the sweep.
+
+use crate::cli::Args;
+use crate::coordinator::ParticipationPolicy;
+use crate::error::{Error, Result};
+use crate::jsonx::Value;
+use crate::runtime::Runtime;
+use crate::stats::Timer;
+
+use super::{
+    dataset_split, markdown_table, partition_for, run_arm, save_json, ExpOpts,
+};
+
+pub fn dropout(rt: &Runtime, args: &mut Args) -> Result<()> {
+    let mut o = ExpOpts::from_args(args)?;
+    let dataset = args.take_str("dataset", "smoke");
+    let part_name = args.take_str("partition", "iid");
+    let methods = args.take_list("methods", &["fedavg", "fedmrn"]);
+    let rate_names = args.take_list("rates", &["0.0", "0.1", "0.2", "0.3", "0.5"]);
+    args.finish()?;
+
+    let mut rates = Vec::with_capacity(rate_names.len());
+    for r in &rate_names {
+        let v: f32 = r.parse().map_err(|_| {
+            Error::Config(format!("--rates: expected float, got {r:?}"))
+        })?;
+        if !(0.0..=1.0).contains(&v) {
+            return Err(Error::Config(format!(
+                "--rates: dropout must be in [0, 1], got {v}"
+            )));
+        }
+        rates.push(v);
+    }
+    if o.participation == ParticipationPolicy::strict() {
+        o.participation = ParticipationPolicy { quorum: 0.5, rescale: true };
+    }
+    let part = partition_for(&part_name, &dataset)?;
+
+    let t_all = Timer::new();
+    let mut results = Vec::new(); // (method, rate, RunResult)
+    for m in &methods {
+        for (&rate, rname) in rates.iter().zip(&rate_names) {
+            let mut arm = o.clone();
+            arm.faults.dropout = rate;
+            let (config, split) = dataset_split(&dataset, &arm)?;
+            let t = Timer::new();
+            let res = run_arm(rt, &config, split, m, part, &arm, None)?;
+            let promised: usize = res.records.iter().map(|r| r.selected).sum();
+            let arrived: usize = res.records.iter().map(|r| r.participants).sum();
+            let failed = res.records.iter().filter(|r| !r.quorum_met).count();
+            eprintln!(
+                "dropout [{m}/p={rname}] acc {:.4} delivered {arrived}/{promised} \
+                 quorum-failed {failed}/{} rounds ({:.0}s)",
+                res.final_acc(),
+                res.records.len(),
+                t.secs()
+            );
+            res.write_csv(&format!("{}/dropout_{m}_{rname}.csv", arm.out_dir))?;
+            results.push((m.clone(), rname.clone(), res));
+        }
+    }
+
+    let rows: Vec<Value> = results
+        .iter()
+        .map(|(m, rname, r)| {
+            let promised: usize = r.records.iter().map(|x| x.selected).sum();
+            let arrived: usize = r.records.iter().map(|x| x.participants).sum();
+            let retries: u64 = r.records.iter().map(|x| x.retries).sum();
+            let quorum_failed = r.records.iter().filter(|x| !x.quorum_met).count();
+            Value::obj()
+                .set("method", m.as_str())
+                .set("dropout", rname.as_str())
+                .set("promised_uplinks", promised)
+                .set("delivered_uplinks", arrived)
+                .set("retries", retries)
+                .set("quorum_failed_rounds", quorum_failed)
+                .set("result", r.to_json())
+        })
+        .collect();
+    save_json(
+        &o.out_dir,
+        "dropout.json",
+        &Value::obj()
+            .set("dataset", dataset.as_str())
+            .set("partition", part_name.as_str())
+            .set("quorum", o.participation.quorum as f64)
+            .set("rescale", o.participation.rescale)
+            .set("wall_secs", t_all.secs())
+            .set("runs", Value::Arr(rows)),
+    )?;
+
+    let acc_of = |m: &str, rname: &str| -> f64 {
+        results
+            .iter()
+            .find(|(mm, rr, _)| mm == m && rr == rname)
+            .map(|(_, _, r)| r.final_acc())
+            .unwrap_or(f64::NAN)
+    };
+    let md_rows: Vec<(String, Vec<f64>)> = methods
+        .iter()
+        .map(|m| {
+            (m.clone(), rate_names.iter().map(|rn| acc_of(m, rn)).collect())
+        })
+        .collect();
+    let cols: Vec<String> =
+        rate_names.iter().map(|r| format!("p={r}")).collect();
+    let md = markdown_table(
+        &format!(
+            "Accuracy (%) vs client dropout rate — {dataset}/{part_name}, \
+             quorum {:.2}{}",
+            o.participation.quorum,
+            if o.participation.rescale { " + rescale" } else { "" },
+        ),
+        &cols,
+        &md_rows,
+        true,
+    );
+    std::fs::create_dir_all(&o.out_dir)?;
+    std::fs::write(format!("{}/dropout.md", o.out_dir), &md)?;
+    println!("{md}");
+    eprintln!("dropout total {:.0}s", t_all.secs());
+    Ok(())
+}

@@ -10,11 +10,13 @@
 //! | fig5   | [`fig5`]     | Figure 5 (noise distribution / magnitude)    |
 //! | fig6   | [`fig6`]     | Figure 6 (training + compression time)       |
 //! | table3 | [`table3`]   | Table 3 (char-LM LSTM + dense prediction)    |
+//! | dropout| [`dropout`]  | accuracy vs dropout rate (robustness extension)|
 //! | theory | [`theory_exp`]| Theorems 1-2 / Proposition 1 empirical check|
 //!
 //! Scales are configurable; the defaults finish on a CPU testbed. The
 //! recorded runs and their exact flags live in EXPERIMENTS.md.
 
+pub mod dropout;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
@@ -23,7 +25,9 @@ pub mod table3;
 pub mod theory_exp;
 
 use crate::cli::Args;
-use crate::coordinator::{Federation, Method, RunConfig, RunResult};
+use crate::coordinator::{
+    FaultModel, Federation, Method, ParticipationPolicy, RunConfig, RunResult,
+};
 use crate::data::charlm::CharLmSpec;
 use crate::data::segdata::SegSpec;
 use crate::data::synthetic::ImageSpec;
@@ -33,6 +37,7 @@ use crate::jsonx::Value;
 use crate::noise::{NoiseDist, NoiseLayout};
 use crate::runtime::Runtime;
 
+pub use dropout::dropout;
 pub use fig4::fig4;
 pub use fig5::fig5;
 pub use fig6::fig6;
@@ -74,6 +79,17 @@ pub struct ExpOpts {
     /// interleaved is the lane-parallel v2 stream (a *different* draw
     /// order — results change, which is why it is a versioned knob).
     pub noise_layout: NoiseLayout,
+    /// Deterministic fault injection (`--dropout`, `--straggle-p`,
+    /// `--straggle-ms`, `--corrupt-p`, `--deadline-ms`,
+    /// `--max-retries`, `--fault-seed`). Fault-free by default, and the
+    /// fault-free model is byte-identical to the pre-fault engine.
+    pub faults: FaultModel,
+    /// Quorum contract for faulted rounds (`--quorum`, `--rescale`).
+    /// Strict by default: every promised uplink must arrive.
+    pub participation: ParticipationPolicy,
+    /// Pipeline job deadline override, seconds (`--job-timeout-secs`;
+    /// 0 = built-in default, env `FEDMRN_PIPELINE_TIMEOUT_SECS` wins).
+    pub job_timeout_secs: u64,
 }
 
 impl ExpOpts {
@@ -98,6 +114,9 @@ impl ExpOpts {
                 tile: 0,
                 pipeline: false,
                 noise_layout: NoiseLayout::Serial,
+                faults: FaultModel::none(),
+                participation: ParticipationPolicy::strict(),
+                job_timeout_secs: 0,
             },
             // quick: the recorded-run default — tens of minutes for the
             // full Table-1 sweep on this CPU testbed
@@ -117,6 +136,9 @@ impl ExpOpts {
                 tile: 0,
                 pipeline: false,
                 noise_layout: NoiseLayout::Serial,
+                faults: FaultModel::none(),
+                participation: ParticipationPolicy::strict(),
+                job_timeout_secs: 0,
             },
             // full: paper-shaped topology (still scaled in rounds)
             "full" => ExpOpts {
@@ -135,6 +157,9 @@ impl ExpOpts {
                 tile: 0,
                 pipeline: false,
                 noise_layout: NoiseLayout::Serial,
+                faults: FaultModel::none(),
+                participation: ParticipationPolicy::strict(),
+                job_timeout_secs: 0,
             },
             p => return Err(Error::Config(format!("unknown preset {p:?}"))),
         };
@@ -159,6 +184,19 @@ impl ExpOpts {
                  (serial|interleaved)"
             ))
         })?;
+        o.faults.dropout = args.take_f32("dropout", o.faults.dropout)?;
+        o.faults.straggle_p = args.take_f32("straggle-p", o.faults.straggle_p)?;
+        o.faults.straggle_ms = args.take_u64("straggle-ms", o.faults.straggle_ms)?;
+        o.faults.corrupt_p = args.take_f32("corrupt-p", o.faults.corrupt_p)?;
+        o.faults.deadline_ms = args.take_u64("deadline-ms", o.faults.deadline_ms)?;
+        o.faults.max_retries =
+            args.take_usize("max-retries", o.faults.max_retries as usize)? as u32;
+        o.faults.fault_seed = args.take_u64("fault-seed", o.faults.fault_seed)?;
+        o.participation.quorum = args.take_f32("quorum", o.participation.quorum)?;
+        o.participation.rescale = args.take_bool("rescale", o.participation.rescale)?;
+        o.job_timeout_secs = args.take_u64("job-timeout-secs", o.job_timeout_secs)?;
+        o.faults.validate()?;
+        o.participation.validate()?;
         Ok(o)
     }
 }
@@ -306,6 +344,9 @@ pub fn run_arm(
     cfg.tile = o.tile;
     cfg.pipeline = o.pipeline;
     cfg.noise_layout = o.noise_layout;
+    cfg.faults = o.faults;
+    cfg.participation = o.participation;
+    cfg.job_timeout_secs = o.job_timeout_secs;
     let mut fed = Federation::new(rt, cfg, split)?;
     fed.verbose = o.verbose;
     fed.run()
@@ -402,6 +443,48 @@ mod tests {
             ["x", "--preset", "smoke", "--noise-layout", "zigzag"]
                 .iter()
                 .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(ExpOpts::from_args(&mut a).is_err());
+    }
+
+    #[test]
+    fn fault_flags_parse_and_default_off() {
+        let mut a = Args::parse(["x", "--preset", "smoke"].iter().map(|s| s.to_string()))
+            .unwrap();
+        let o = ExpOpts::from_args(&mut a).unwrap();
+        assert_eq!(o.faults, FaultModel::none(), "faults are opt-in");
+        assert_eq!(o.participation, ParticipationPolicy::strict());
+        assert_eq!(o.job_timeout_secs, 0);
+        a.finish().unwrap();
+
+        let mut a = Args::parse(
+            [
+                "x", "--preset", "smoke", "--dropout", "0.2", "--straggle-p", "0.1",
+                "--straggle-ms", "80", "--corrupt-p", "0.05", "--deadline-ms", "50",
+                "--max-retries", "3", "--fault-seed", "9", "--quorum", "0.5",
+                "--rescale", "--job-timeout-secs", "7",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let o = ExpOpts::from_args(&mut a).unwrap();
+        assert_eq!(o.faults.dropout, 0.2);
+        assert_eq!(o.faults.straggle_p, 0.1);
+        assert_eq!(o.faults.straggle_ms, 80);
+        assert_eq!(o.faults.corrupt_p, 0.05);
+        assert_eq!(o.faults.deadline_ms, 50);
+        assert_eq!(o.faults.max_retries, 3);
+        assert_eq!(o.faults.fault_seed, 9);
+        assert_eq!(o.participation.quorum, 0.5);
+        assert!(o.participation.rescale);
+        assert_eq!(o.job_timeout_secs, 7);
+        a.finish().unwrap();
+
+        // bad rates are rejected at parse time, not deep in the run
+        let mut a = Args::parse(
+            ["x", "--preset", "smoke", "--dropout", "1.5"].iter().map(|s| s.to_string()),
         )
         .unwrap();
         assert!(ExpOpts::from_args(&mut a).is_err());

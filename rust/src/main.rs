@@ -3,7 +3,7 @@
 //! ```text
 //! fedmrn info                         list artifacts and configs
 //! fedmrn run    [--flags]             one federated run, any method
-//! fedmrn exp <table1|fig4|fig5|fig6|table3|theory|all> [--flags]
+//! fedmrn exp <table1|fig4|fig5|fig6|table3|dropout|theory|all> [--flags]
 //! fedmrn bench  [--flags]             hot-path kernel + aggregation bench
 //! ```
 //!
@@ -28,13 +28,27 @@ USAGE:
               [--lr F] [--noise-dist uniform|gaussian|bernoulli] [--alpha F]
               [--noise-layout serial|interleaved] [--seed N] [--threads N]
               [--tile N] [--pipeline] [--verbose] [--csv PATH]
+              [--dropout F] [--straggle-p F] [--straggle-ms N]
+              [--corrupt-p F] [--deadline-ms N] [--max-retries N]
+              [--fault-seed N] [--quorum F] [--rescale]
+              [--job-timeout-secs N]
+              fault flags arm the deterministic chaos layer (replayable
+              from the seed; all rates default to 0 = fault-free, which
+              is byte-identical to the pre-fault engine). --quorum sets
+              the fraction of promised uplinks a round needs before the
+              fold runs; --rescale renormalizes Eq. 5 over the clients
+              that actually arrived. --job-timeout-secs bounds pipeline
+              job waits (env FEDMRN_PIPELINE_TIMEOUT_SECS overrides)
               --pipeline overlaps each round's evaluation with the next
               round's training (byte-identical results; wall-clock only)
               --noise-layout selects the G(s) stream layout: serial (the
               wire default, bit-exact with stored seeds) or interleaved
               (lane-parallel v2 — SIMD-width noise fills on both ends;
               a different stream, tagged in the wire seed metadata)
-  fedmrn exp table1|fig4|fig5|fig6|table3|theory|all [--preset ...] [...]
+  fedmrn exp table1|fig4|fig5|fig6|table3|dropout|theory|all [--preset ...]
+              dropout sweeps accuracy vs client dropout rate through the
+              fault layer (--methods, --rates, --dataset; defaults to a
+              0.5 quorum with rescaling unless --quorum/--rescale given)
   fedmrn bench [--d N] [--clients N] [--threads 1,2,4,8]
                [--tiles 64,1024,4096] [--noise-layout serial|interleaved]
                [--warmup N] [--iters N] [--out DIR]
@@ -259,6 +273,7 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
         "fig5" => exp::fig5(&rt, args),
         "fig6" => exp::fig6(&rt, args),
         "table3" => exp::table3(&rt, args),
+        "dropout" => exp::dropout(&rt, args),
         "all" => {
             // `all` shares one flag set; clone per runner
             let snapshot = args.clone();
@@ -267,6 +282,7 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
             exp::fig5(&rt, &mut snapshot.clone())?;
             exp::fig6(&rt, &mut snapshot.clone())?;
             exp::table3(&rt, &mut snapshot.clone())?;
+            exp::dropout(&rt, &mut snapshot.clone())?;
             exp::theory_exp(&mut snapshot.clone())
         }
         other => Err(Error::Config(format!("unknown experiment {other:?}"))),

@@ -293,14 +293,30 @@ impl Meter {
     /// errored round must leave `uplink_bytes` / `uplink_msgs` / the
     /// per-round series exactly as they were.
     pub fn uplink(&mut self, p: &Payload) -> Result<Payload> {
-        let bytes = p.encode();
-        let decoded = Payload::decode(&bytes)?;
-        self.uplink_bytes += bytes.len() as u64;
+        self.uplink_wire(&p.encode())
+    }
+
+    /// [`Meter::uplink`] for callers that already hold the encoded wire
+    /// bytes (the fault layer corrupts *bytes*, so the engine encodes
+    /// first and delivers through this). Same contract: decode first,
+    /// meter only on success.
+    pub fn uplink_wire(&mut self, bytes: &[u8]) -> Result<Payload> {
+        let decoded = Payload::decode(bytes)?;
+        self.count_uplink(bytes.len());
+        Ok(decoded)
+    }
+
+    /// Account one *accepted* uplink of `n` wire bytes. Split out of
+    /// [`Meter::uplink_wire`] for the engine's faulted delivery path,
+    /// where acceptance is decided after decode (the aggregator's
+    /// `ingest` can still reject a bit-flipped message that happens to
+    /// decode) — call this only once the uplink has actually folded.
+    pub fn count_uplink(&mut self, n: usize) {
+        self.uplink_bytes += n as u64;
         self.uplink_msgs += 1;
         if let Some(last) = self.round_uplink.last_mut() {
-            *last += bytes.len() as u64;
+            *last += n as u64;
         }
-        Ok(decoded)
     }
 
     /// Meter a server → client broadcast of `d` dense f32 params. The
@@ -553,6 +569,82 @@ mod tests {
         assert_eq!(m.uplink_bytes, good.encoded_len() as u64);
         assert_eq!(m.uplink_msgs, 1);
         assert_eq!(m.round_uplink, vec![good.encoded_len() as u64]);
+    }
+
+    /// Wire chaos fuzz: random bit flips over every payload variant.
+    /// Whatever the flips produce, `uplink_wire` must either deliver
+    /// (and meter exactly the bytes it accepted) or return
+    /// `Error::Codec` leaving the meter untouched — never panic, never
+    /// a different error kind, never half-metered state.
+    #[test]
+    fn bitflip_fuzz_every_variant_never_panics_meter_stays_clean() {
+        let payloads = vec![
+            Payload::Dense(vec![1.5; 9]),
+            Payload::MaskedSeed {
+                seed: 7,
+                d: 130,
+                layout: NoiseLayout::Interleaved,
+                bits: vec![1, 2, 3],
+            },
+            Payload::SignBits {
+                d: 100,
+                bits: vec![u64::MAX, 3],
+                scales: vec![0.5, 0.25, 0.125],
+                seed: 9,
+            },
+            Payload::Ternary { d: 70, codes: vec![0xAAAA, 0x5555, 1], scales: vec![1.0] },
+            Payload::Sparse { d: 500, idx: vec![3, 50, 499], val: vec![1.0, 2.0, 3.0] },
+            Payload::MaskBits { d: 65, bits: vec![42, 1] },
+        ];
+        let mut g = crate::noise::NoiseGen::new(0xB17F11D);
+        for p in &payloads {
+            let bytes = p.encode();
+            for trial in 0..200 {
+                let mut fuzzed = bytes.clone();
+                let n_flips = g.next_below(4) + 1;
+                for _ in 0..n_flips {
+                    let bit = g.next_below(fuzzed.len() as u64 * 8) as usize;
+                    fuzzed[bit / 8] ^= 1 << (bit % 8);
+                }
+                let mut m = Meter::new();
+                m.begin_round();
+                match m.uplink_wire(&fuzzed) {
+                    Ok(_) => {
+                        assert_eq!(m.uplink_bytes, fuzzed.len() as u64, "{p:?} trial {trial}");
+                        assert_eq!(m.uplink_msgs, 1, "{p:?} trial {trial}");
+                        assert_eq!(m.round_uplink, vec![fuzzed.len() as u64]);
+                    }
+                    Err(Error::Codec(_)) => {
+                        assert_eq!(m.uplink_bytes, 0, "{p:?} trial {trial}");
+                        assert_eq!(m.uplink_msgs, 0, "{p:?} trial {trial}");
+                        assert_eq!(m.round_uplink, vec![0], "{p:?} trial {trial}");
+                    }
+                    Err(e) => panic!("{p:?} trial {trial}: non-codec error {e}"),
+                }
+            }
+        }
+    }
+
+    /// `uplink(p)` and `uplink_wire(&p.encode())` are the same wire
+    /// path: identical decoded payload, identical meter movement.
+    #[test]
+    fn uplink_wire_is_uplink_over_encoded_bytes() {
+        let p = Payload::SignBits {
+            d: 65,
+            bits: vec![u64::MAX, 1],
+            scales: vec![0.5, 0.25],
+            seed: 7,
+        };
+        let mut a = Meter::new();
+        a.begin_round();
+        let via_payload = a.uplink(&p).unwrap();
+        let mut b = Meter::new();
+        b.begin_round();
+        let via_wire = b.uplink_wire(&p.encode()).unwrap();
+        assert_eq!(via_payload, via_wire);
+        assert_eq!(a.uplink_bytes, b.uplink_bytes);
+        assert_eq!(a.uplink_msgs, b.uplink_msgs);
+        assert_eq!(a.round_uplink, b.round_uplink);
     }
 
     #[test]
