@@ -179,6 +179,54 @@ pub fn merge_rows_json(path: &str, new_rows: &[Measurement]) -> crate::Result<()
     Ok(())
 }
 
+/// [`merge_rows_json`] for rows that are already [`Value`] objects —
+/// for suites whose rows carry fields outside the fixed
+/// [`Measurement`] shape (the networked-coordinator loadgen reports
+/// uplinks/s, bytes/s and ingest-latency percentiles into
+/// `BENCH_net.json`; docs/BENCH.md). Same identity key, same
+/// replace-on-key / purge-pre-schema semantics. Every *incoming* row
+/// must carry the key fields (`suite`, `name`, optional
+/// `threads`/`tile`/`layout`) — a keyless row is a typed error rather
+/// than a row the next merge would silently purge.
+pub fn merge_value_rows(path: &str, new_rows: &[Value]) -> crate::Result<()> {
+    let mut by_key: std::collections::HashMap<String, usize> =
+        std::collections::HashMap::new();
+    let mut fresh: Vec<&Value> = Vec::new();
+    for v in new_rows {
+        let key = json_row_key(v).ok_or_else(|| {
+            crate::Error::Json(format!(
+                "bench row missing its suite/name identity fields: {}",
+                v.to_json()
+            ))
+        })?;
+        match by_key.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => fresh[*e.get()] = v,
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(fresh.len());
+                fresh.push(v);
+            }
+        }
+    }
+    let mut out: Vec<Value> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(Value::Arr(rows)) = crate::jsonx::parse(&text) {
+            for row in rows {
+                if let Some(key) = json_row_key(&row) {
+                    if !by_key.contains_key(&key) {
+                        out.push(row);
+                    }
+                }
+            }
+        }
+    }
+    out.extend(fresh.iter().map(|v| (*v).clone()));
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, Value::Arr(out).to_json())?;
+    Ok(())
+}
+
 /// Benchmark runner with fixed warmup/measure counts.
 pub struct Bench {
     pub warmup: usize,
@@ -428,6 +476,41 @@ mod tests {
             .map(|r| r.get("layout").unwrap().as_str().unwrap())
             .collect();
         assert!(layouts.contains(&"interleaved"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn value_row_merge_shares_the_measurement_key_space() {
+        let path = std::env::temp_dir()
+            .join(format!("fedmrn_value_merge_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let row = |p99: f64| {
+            Value::obj()
+                .set("suite", "net")
+                .set("name", "loadgen d=1000 clients=8")
+                .set("threads", 2u64)
+                .set("uplinks_per_s", 123.0)
+                .set("p99_ingest_ms", p99)
+        };
+        merge_value_rows(&path, &[row(5.0)]).unwrap();
+        // same key replaces (and the custom field updates)...
+        merge_value_rows(&path, &[row(7.0)]).unwrap();
+        let rows = crate::jsonx::parse_file(std::path::Path::new(&path)).unwrap();
+        let arr = rows.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("p99_ingest_ms").unwrap().as_f64(), Some(7.0));
+        // ...a Measurement row with a different key coexists, and the
+        // value row survives a Measurement-side merge (shared key space)
+        let mut b = Bench::for_suite("net", 0, 1);
+        b.run_checked("other", Some(1), Tags::default(), || Ok(()));
+        b.merge_json(&path).unwrap();
+        let rows = crate::jsonx::parse_file(std::path::Path::new(&path)).unwrap();
+        assert_eq!(rows.as_arr().unwrap().len(), 2);
+        // keyless incoming rows are a typed error, not a silent write
+        let keyless = Value::obj().set("uplinks_per_s", 1.0);
+        assert!(merge_value_rows(&path, &[keyless]).is_err());
         let _ = std::fs::remove_file(&path);
     }
 }

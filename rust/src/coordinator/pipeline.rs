@@ -74,21 +74,53 @@ use super::strategy::{Strategy, TrainCtx};
 /// seconds. See [`resolve_job_timeout`].
 pub const DEFAULT_JOB_TIMEOUT_SECS: u64 = 30;
 
+/// Resolve a timeout as `env var → config knob → built-in default`,
+/// with an explicit contract for every env-var state (the networked
+/// coordinator's per-connection deadlines reuse this resolver, so its
+/// edge cases are load-bearing):
+///
+/// * **unset, or set to an empty / all-whitespace string** — falls
+///   through to a nonzero `cfg_secs`, then to `default_secs`. Empty
+///   mirrors `VAR= cmd` shell usage: "no override".
+/// * **set to a positive integer (whole seconds)** — wins outright.
+/// * **set to `0` or anything unparsable** — a typed [`Error::Config`]
+///   naming the variable and the rejected value. A zero deadline is
+///   meaningless, and a typo'd override silently becoming a 30-second
+///   default is exactly the surprise this resolver exists to prevent.
+pub fn resolve_timeout_env(
+    var: &str,
+    cfg_secs: u64,
+    default_secs: u64,
+) -> Result<Duration> {
+    if let Ok(raw) = std::env::var(var) {
+        let s = raw.trim();
+        if !s.is_empty() {
+            return match s.parse::<u64>() {
+                Ok(0) => Err(Error::Config(format!(
+                    "{var}: timeout must be >= 1 second, got \"0\" \
+                     (unset the variable to use the config/default)"
+                ))),
+                Ok(secs) => Ok(Duration::from_secs(secs)),
+                Err(_) => Err(Error::Config(format!(
+                    "{var}: expected whole seconds, got {s:?}"
+                ))),
+            };
+        }
+    }
+    Ok(Duration::from_secs(if cfg_secs > 0 { cfg_secs } else { default_secs }))
+}
+
 /// Resolve the detached-job timeout: the `FEDMRN_PIPELINE_TIMEOUT_SECS`
 /// env var wins, then a nonzero [`RunConfig::job_timeout_secs`], then
-/// [`DEFAULT_JOB_TIMEOUT_SECS`]. Zero / unparsable values fall through
-/// to the next source.
-pub fn resolve_job_timeout(cfg_secs: u64) -> Duration {
-    let secs = std::env::var("FEDMRN_PIPELINE_TIMEOUT_SECS")
-        .ok()
-        .and_then(|s| s.trim().parse::<u64>().ok())
-        .filter(|&s| s > 0)
-        .unwrap_or(if cfg_secs > 0 {
-            cfg_secs
-        } else {
-            DEFAULT_JOB_TIMEOUT_SECS
-        });
-    Duration::from_secs(secs)
+/// [`DEFAULT_JOB_TIMEOUT_SECS`]. Env edge cases per
+/// [`resolve_timeout_env`]: empty behaves as unset; garbage or `0` is a
+/// typed `Error::Config`, never a silent fall-through.
+pub fn resolve_job_timeout(cfg_secs: u64) -> Result<Duration> {
+    resolve_timeout_env(
+        "FEDMRN_PIPELINE_TIMEOUT_SECS",
+        cfg_secs,
+        DEFAULT_JOB_TIMEOUT_SECS,
+    )
 }
 
 /// A pipeline timeout as a typed error carrying (round, job) context —
@@ -594,7 +626,7 @@ mod tests {
                 // satellite: the rendezvous timeout is configurable
                 // (config knob + FEDMRN_PIPELINE_TIMEOUT_SECS env
                 // override) and its error names the starved (round, job)
-                let timeout = resolve_job_timeout(0);
+                let timeout = resolve_job_timeout(0)?;
                 rx.lock()
                     .unwrap()
                     .recv_timeout(timeout)
@@ -700,18 +732,35 @@ mod tests {
         // no env, no config knob → default
         std::env::remove_var("FEDMRN_PIPELINE_TIMEOUT_SECS");
         assert_eq!(
-            resolve_job_timeout(0),
+            resolve_job_timeout(0).unwrap(),
             Duration::from_secs(DEFAULT_JOB_TIMEOUT_SECS)
         );
         // config knob wins over the default
-        assert_eq!(resolve_job_timeout(7), Duration::from_secs(7));
-        // env wins over both; junk / zero env falls through
+        assert_eq!(resolve_job_timeout(7).unwrap(), Duration::from_secs(7));
+        // env wins over both
         std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "90");
-        assert_eq!(resolve_job_timeout(7), Duration::from_secs(90));
-        std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "0");
-        assert_eq!(resolve_job_timeout(7), Duration::from_secs(7));
-        std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "not-a-number");
-        assert_eq!(resolve_job_timeout(0), Duration::from_secs(DEFAULT_JOB_TIMEOUT_SECS));
+        assert_eq!(resolve_job_timeout(7).unwrap(), Duration::from_secs(90));
+        // empty / whitespace means "no override": behaves exactly as unset
+        std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "");
+        assert_eq!(resolve_job_timeout(7).unwrap(), Duration::from_secs(7));
+        std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", "   ");
+        assert_eq!(
+            resolve_job_timeout(0).unwrap(),
+            Duration::from_secs(DEFAULT_JOB_TIMEOUT_SECS)
+        );
+        // zero and garbage are typed Config errors naming the variable
+        // and the rejected value — never a silent fall-through to a
+        // surprising default
+        for bad in ["0", " 0 ", "not-a-number", "30s", "-5", "1.5"] {
+            std::env::set_var("FEDMRN_PIPELINE_TIMEOUT_SECS", bad);
+            match resolve_job_timeout(7) {
+                Err(Error::Config(m)) => assert!(
+                    m.contains("FEDMRN_PIPELINE_TIMEOUT_SECS"),
+                    "{bad:?}: error must name the variable, got {m}"
+                ),
+                other => panic!("{bad:?}: want Err(Config), got {other:?}"),
+            }
+        }
         std::env::remove_var("FEDMRN_PIPELINE_TIMEOUT_SECS");
 
         let e = job_timeout_error(4, "eval of round 3", Duration::from_secs(9));

@@ -22,6 +22,14 @@ pub enum Error {
     /// Wire-format decode failures.
     Codec(String),
 
+    /// Networked-coordinator protocol violations that are not byte-level
+    /// codec failures: handshake breaches (unknown client, uplink before
+    /// a slot was assigned, slot-auth mismatch), frame-size-cap
+    /// rejections, and error frames relayed from the remote peer. Raw
+    /// socket failures stay [`Error::Io`]; malformed frame *bytes* stay
+    /// [`Error::Codec`].
+    Net(String),
+
     /// Dataset / partitioning invariant violations.
     Data(String),
 
@@ -60,6 +68,7 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Codec(m) => write!(f, "codec: {m}"),
+            Error::Net(m) => write!(f, "net: {m}"),
             Error::Data(m) => write!(f, "data: {m}"),
             Error::Quorum {
                 round,
@@ -110,6 +119,10 @@ mod tests {
     fn display_prefixes() {
         assert_eq!(Error::Codec("bad tag".into()).to_string(), "codec: bad tag");
         assert_eq!(Error::Config("x".into()).to_string(), "config: x");
+        assert_eq!(
+            Error::Net("slot auth failed".into()).to_string(),
+            "net: slot auth failed"
+        );
         let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(io.to_string().starts_with("io: "));
     }

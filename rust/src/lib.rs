@@ -33,6 +33,7 @@ pub mod error;
 pub mod exp;
 pub mod fwht;
 pub mod jsonx;
+pub mod net;
 pub mod noise;
 pub mod runtime;
 pub mod stats;

@@ -5,6 +5,7 @@
 //! fedmrn run    [--flags]             one federated run, any method
 //! fedmrn exp <table1|fig4|fig5|fig6|table3|dropout|theory|all> [--flags]
 //! fedmrn bench  [--flags]             hot-path kernel + aggregation bench
+//! fedmrn loadgen [--flags]            TCP loopback load generator
 //! ```
 //!
 //! Run `fedmrn help` for the flag reference. Requires `make artifacts`
@@ -58,6 +59,20 @@ USAGE:
                fused regen_sharded (threads × tile) rows, stamped with
                the layout tag; re-runs merge-replace rows on the
                (suite, name, threads, tile, layout) key
+  fedmrn loadgen [--d N] [--clients N] [--conns N] [--rounds N] [--seed N]
+               [--dropout F] [--straggle-p F] [--straggle-ms N]
+               [--corrupt-p F] [--deadline-ms N] [--max-retries N]
+               [--fault-seed N] [--quorum F] [--rescale]
+               [--timeout-secs N] [--out DIR]
+               networked-coordinator load generator: N simulated clients
+               replay seed-derived synthetic FedMRN uplinks over M TCP
+               connections into a loopback coordinator, optionally
+               through the deterministic fault layer. Reports uplinks/s,
+               bytes/s, p50/p99 ingest latency and merges one row per
+               configuration into BENCH_net.json (no artifacts needed;
+               --out defaults to the repo root). --timeout-secs is the
+               per-connection and per-round deadline (env
+               FEDMRN_NET_TIMEOUT_SECS overrides; default 30)
 
 DATASETS (synthetic stand-ins, see DESIGN.md §3):
   fmnist svhn cifar10 cifar100 charlm charlm_tf seg smoke
@@ -105,6 +120,7 @@ fn real_main() -> Result<()> {
         Some("run") => cmd_run(&mut args),
         Some("exp") => cmd_exp(&mut args),
         Some("bench") => cmd_bench(&mut args),
+        Some("loadgen") => cmd_loadgen(&mut args),
         Some(other) => Err(Error::Config(format!(
             "unknown subcommand {other:?} (try `fedmrn help`)"
         ))),
@@ -252,6 +268,75 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
     a.results.extend(r.results);
     let path = path_for("BENCH_aggregate.json");
     a.merge_json(&path)?;
+    eprintln!("merged into {path}");
+    Ok(())
+}
+
+fn cmd_loadgen(args: &mut Args) -> Result<()> {
+    use fedmrn::bench::suites;
+    use fedmrn::coordinator::faults::{FaultModel, ParticipationPolicy};
+    use fedmrn::net::loadgen::{self, LoadgenOpts};
+
+    let mut faults = FaultModel::none();
+    faults.dropout = args.take_f32("dropout", 0.0)?;
+    faults.straggle_p = args.take_f32("straggle-p", 0.0)?;
+    faults.straggle_ms = args.take_u64("straggle-ms", 0)?;
+    faults.corrupt_p = args.take_f32("corrupt-p", 0.0)?;
+    faults.deadline_ms = args.take_u64("deadline-ms", 0)?;
+    faults.max_retries = args.take_usize("max-retries", 1)? as u32;
+    faults.fault_seed = args.take_u64("fault-seed", 0)?;
+    let policy = ParticipationPolicy {
+        quorum: args.take_f32("quorum", 1.0)?,
+        rescale: args.take_bool("rescale", false)?,
+    };
+    let opts = LoadgenOpts {
+        d: args.take_usize("d", 1_000_000)?,
+        clients: args.take_usize("clients", 256)?,
+        conns: args.take_usize("conns", 8)?,
+        rounds: args.take_usize("rounds", 3)?,
+        seed: args.take_u64("seed", 42)?,
+        faults,
+        policy,
+        timeout_secs: args.take_u64("timeout-secs", 0)?,
+    };
+    let out = args.take_opt_str("out");
+    args.finish()?;
+
+    let report = loadgen::run(&opts)?;
+    println!(
+        "loadgen d={} clients={} conns={} rounds={} faults={}",
+        report.d,
+        report.clients,
+        report.conns,
+        report.rounds,
+        if report.faults_on { "on" } else { "off" }
+    );
+    println!(
+        "  delivered {} / {} promised ({} rejected, {} dropped, {} retries, \
+         {} stragglers), quorum met {}/{} rounds",
+        report.delivered,
+        (report.clients * report.rounds) as u64,
+        report.rejected,
+        report.dropped,
+        report.retries,
+        report.stragglers,
+        report.quorum_met_rounds,
+        report.rounds
+    );
+    println!(
+        "  {:.0} uplinks/s, {:.2e} bytes/s, ingest p50 {:.3} ms p99 {:.3} ms, \
+         wall {:.2}s",
+        report.uplinks_per_s,
+        report.bytes_per_s,
+        report.p50_ingest_ms,
+        report.p99_ingest_ms,
+        report.wall_secs
+    );
+    let path = match &out {
+        Some(dir) => format!("{dir}/BENCH_net.json"),
+        None => suites::repo_root_file("BENCH_net.json"),
+    };
+    report.write_row(&path)?;
     eprintln!("merged into {path}");
     Ok(())
 }

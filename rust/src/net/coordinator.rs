@@ -1,0 +1,639 @@
+//! TCP coordinator front end over the streaming [`Aggregator`].
+//!
+//! # Why this layer needs no new algorithm
+//!
+//! The PR-3 streaming `Aggregator` contract guarantees byte-identical
+//! finished weights for **any** uplink arrival order, and the fault /
+//! quorum machinery ([`ParticipationPolicy`]) already decides what
+//! happens when promised uplinks never arrive. The network layer is
+//! therefore pure transport: frames in, typed errors out, ingest as
+//! bytes arrive. `tests/differential.rs` §9 pins a loopback round
+//! against the in-process engine byte for byte.
+//!
+//! # Protocol (frame format: [`super::frame`])
+//!
+//! Per uplink, over any connection (connections may be reused for many
+//! clients — one handshake per uplink):
+//!
+//! ```text
+//! client                              server
+//!   HELLO(round, payload=client id) →
+//!                                   ← ASSIGN(round, slot)   [slot-auth]
+//!   UPLINK(round, slot, payload=Payload bytes) →
+//!                                   ← OK(round, slot)
+//! ```
+//!
+//! The server assigns slots from the round's selection; a client id
+//! outside the selection, an uplink before a handshake, or a slot that
+//! does not match the assignment is a typed [`Error::Net`]. Duplicate
+//! slots and wrong-variant/dimension payloads are rejected with the
+//! **same typed errors [`Aggregator::ingest`] already returns** — the
+//! server simply relays them in an ERR frame and drops the connection;
+//! the accept loop keeps serving.
+//!
+//! # Backpressure, deadlines, bounded memory
+//!
+//! * Every connection read buffer is bounded by the frame-size cap
+//!   [`frame::max_uplink_payload`]`(d)` — checked before the payload
+//!   buffer is sized, so a hostile header cannot balloon memory.
+//! * Per-connection socket deadlines and the round's overall accept
+//!   deadline come from one knob, resolved as
+//!   `FEDMRN_NET_TIMEOUT_SECS → cfg → 30 s` through
+//!   [`resolve_timeout_env`] (the same airtight env contract as the
+//!   pipeline's job timeout: empty = unset, garbage or `0` = typed
+//!   error).
+//! * Ingest and metering are serialized under one lock (see
+//!   [`Meter`]'s single-writer contract): `begin_round` and reporting
+//!   happen strictly outside the serving window, so per-round
+//!   `bytes_up`/`msgs` totals can never interleave across rounds no
+//!   matter how many connections land frames concurrently.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use byteorder::{ByteOrder, LittleEndian};
+
+use crate::coordinator::faults::ParticipationPolicy;
+use crate::coordinator::pipeline::resolve_timeout_env;
+use crate::coordinator::strategy::Aggregator;
+use crate::error::{Error, Result};
+use crate::transport::{Meter, Payload};
+
+use super::frame::{self, Frame, FrameKind};
+
+/// Default per-connection / per-round deadline, seconds.
+pub const DEFAULT_NET_TIMEOUT_SECS: u64 = 30;
+
+/// Resolve the net deadline: `FEDMRN_NET_TIMEOUT_SECS` env var wins,
+/// then a nonzero config value, then [`DEFAULT_NET_TIMEOUT_SECS`].
+/// Same explicit env contract as the pipeline resolver it reuses
+/// ([`resolve_timeout_env`]): empty behaves as unset; garbage or `0`
+/// is a typed `Error::Config`, never a silent fall-through.
+pub fn resolve_net_timeout(cfg_secs: u64) -> Result<Duration> {
+    resolve_timeout_env("FEDMRN_NET_TIMEOUT_SECS", cfg_secs, DEFAULT_NET_TIMEOUT_SECS)
+}
+
+/// Serving knobs for [`serve_round`].
+#[derive(Clone, Copy, Debug)]
+pub struct NetOpts {
+    /// Per-connection socket read/write timeout AND the round's
+    /// overall accept deadline.
+    pub timeout: Duration,
+    /// Accept-poll interval while waiting for connections.
+    pub poll: Duration,
+}
+
+impl NetOpts {
+    /// Resolve from the env/config chain ([`resolve_net_timeout`]).
+    pub fn resolve(cfg_secs: u64) -> Result<NetOpts> {
+        Ok(NetOpts {
+            timeout: resolve_net_timeout(cfg_secs)?,
+            poll: Duration::from_millis(2),
+        })
+    }
+
+    /// A fixed timeout (tests; no env read).
+    pub fn fixed(timeout: Duration) -> NetOpts {
+        NetOpts { timeout, poll: Duration::from_millis(2) }
+    }
+}
+
+/// What the server promises for one round: the dimension, the selected
+/// client ids (index = slot) and each slot's fold scale.
+#[derive(Clone, Debug)]
+pub struct RoundSpec {
+    pub round: usize,
+    pub d: usize,
+    /// `selection[slot]` = the global client id promised that slot.
+    pub selection: Vec<u64>,
+    /// `scales[slot]` = the Eq. 5 fold weight for that slot.
+    pub scales: Vec<f32>,
+}
+
+/// One served round's outcome.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub promised: usize,
+    /// Uplinks decoded, ingested and metered.
+    pub delivered: usize,
+    /// `delivered_slots[slot]` = that slot's uplink folded.
+    pub delivered_slots: Vec<bool>,
+    /// Whether `finish` folded (false = typed quorum degradation; `w`
+    /// untouched).
+    pub quorum_met: bool,
+    /// Connections dropped with a typed error (hostile frames,
+    /// handshake breaches, rejected ingests).
+    pub rejected: u64,
+    /// This round's accepted uplink payload bytes (the meter's
+    /// per-round attribution; frame headers are 20 B of unmetered
+    /// framing so bpp stays comparable with the in-process engine).
+    pub bytes_up: u64,
+    /// Per-accepted-uplink ingest latency (frame payload fully read →
+    /// ingest + metering done), milliseconds, sorted ascending.
+    pub ingest_ms: Vec<f64>,
+}
+
+/// Shared per-round state: everything a connection handler touches,
+/// behind one lock — the serialization that makes the [`Meter`]
+/// single-writer contract hold under concurrent connections.
+struct RoundState<'a> {
+    agg: &'a mut dyn Aggregator,
+    meter: &'a mut Meter,
+    delivered: Vec<bool>,
+    n_delivered: usize,
+    rejected: u64,
+    ingest_ms: Vec<f64>,
+}
+
+/// Serve one round over TCP: accept connections until every promised
+/// slot delivered or the deadline passes, ingesting each uplink into
+/// `agg` as its bytes arrive, then `finish` into `w` under the
+/// aggregator's quorum policy ([`ParticipationPolicy`] — a typed
+/// quorum shortfall degrades gracefully: `quorum_met = false`, `w`
+/// untouched).
+///
+/// The caller owns the listener (bind once, serve many rounds) and the
+/// meter (`serve_round` brackets exactly one `begin_round`).
+pub fn serve_round(
+    listener: &TcpListener,
+    spec: &RoundSpec,
+    agg: &mut dyn Aggregator,
+    meter: &mut Meter,
+    w: &mut [f32],
+    opts: &NetOpts,
+) -> Result<ServeReport> {
+    let n = spec.selection.len();
+    if spec.scales.len() != n {
+        return Err(Error::Config(format!(
+            "serve_round: {} scales for {n} selection slots",
+            spec.scales.len()
+        )));
+    }
+    agg.begin(spec.round, spec.d, n)?;
+    meter.begin_round();
+    listener.set_nonblocking(true)?;
+    let state = Mutex::new(RoundState {
+        agg,
+        meter,
+        delivered: vec![false; n],
+        n_delivered: 0,
+        rejected: 0,
+        ingest_ms: Vec::new(),
+    });
+    let deadline = Instant::now() + opts.timeout;
+    let accept_err: Option<Error> = thread::scope(|s| {
+        loop {
+            if state.lock().unwrap().n_delivered == n {
+                return None;
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = &state;
+                    let timeout = opts.timeout;
+                    s.spawn(move || handle_conn(stream, spec, state, timeout));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(opts.poll);
+                }
+                Err(e) => return Some(Error::Io(e)),
+            }
+        }
+        // scope end: every connection handler joins here, so all
+        // metering for this round lands before the report is read
+    });
+    listener.set_nonblocking(false)?;
+    if let Some(e) = accept_err {
+        return Err(e);
+    }
+    let st = state.into_inner().unwrap();
+    let RoundState { agg, meter, delivered, n_delivered, rejected, mut ingest_ms } = st;
+    ingest_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let quorum_met = match agg.finish(w) {
+        Ok(()) => true,
+        Err(Error::Quorum { .. }) => false,
+        Err(e) => return Err(e),
+    };
+    let bytes_up = meter.round_uplink.last().copied().unwrap_or(0);
+    Ok(ServeReport {
+        promised: n,
+        delivered: n_delivered,
+        delivered_slots: delivered,
+        quorum_met,
+        rejected,
+        bytes_up,
+        ingest_ms,
+    })
+}
+
+/// Best-effort typed-error relay before the connection drops.
+fn send_err(stream: &mut TcpStream, round: u32, e: &Error) {
+    let msg = e.to_string().into_bytes();
+    let cut = msg.len().min(frame::ERR_MSG_CAP);
+    let _ = frame::write_frame(
+        stream,
+        &Frame::new(FrameKind::Err, round, 0, msg[..cut].to_vec()),
+    );
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    spec: &RoundSpec,
+    state: &Mutex<RoundState<'_>>,
+    timeout: Duration,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    if let Err(e) = serve_conn(&mut stream, spec, state) {
+        send_err(&mut stream, spec.round as u32, &e);
+        state.lock().unwrap().rejected += 1;
+        // the connection drops here; the accept loop keeps serving
+    }
+}
+
+/// Drive one connection until clean EOF or the first typed error.
+fn serve_conn(
+    stream: &mut TcpStream,
+    spec: &RoundSpec,
+    state: &Mutex<RoundState<'_>>,
+) -> Result<()> {
+    let cap = frame::max_uplink_payload(spec.d);
+    let round = spec.round as u32;
+    // slot-auth state: one assignment per handshake, consumed by the
+    // uplink that follows it (connection reuse = HELLO again)
+    let mut assigned: Option<u32> = None;
+    loop {
+        let f = match frame::read_frame(stream, cap)? {
+            Some(f) => f,
+            None => return Ok(()),
+        };
+        if f.round != round {
+            return Err(Error::Net(format!(
+                "round mismatch: frame for round {}, serving round {round}",
+                f.round
+            )));
+        }
+        match f.kind {
+            FrameKind::Hello => {
+                if f.payload.len() != frame::HELLO_LEN {
+                    return Err(Error::Net(format!(
+                        "hello payload must be {} bytes, got {}",
+                        frame::HELLO_LEN,
+                        f.payload.len()
+                    )));
+                }
+                let client = LittleEndian::read_u64(&f.payload);
+                let slot = spec
+                    .selection
+                    .iter()
+                    .position(|&c| c == client)
+                    .ok_or_else(|| {
+                        Error::Net(format!(
+                            "client {client} is not in round {round}'s selection"
+                        ))
+                    })?;
+                assigned = Some(slot as u32);
+                frame::write_frame(
+                    stream,
+                    &Frame::new(FrameKind::Assign, round, slot as u32, Vec::new()),
+                )?;
+            }
+            FrameKind::Uplink => {
+                let slot = assigned.take().ok_or_else(|| {
+                    Error::Net("uplink before a slot-auth handshake".into())
+                })?;
+                if f.slot != slot {
+                    return Err(Error::Net(format!(
+                        "slot auth: frame claims slot {}, assigned {slot}",
+                        f.slot
+                    )));
+                }
+                let t0 = Instant::now();
+                let payload = Payload::decode(&f.payload)?;
+                {
+                    // ingest + metering under one lock: duplicate-slot
+                    // and wrong-variant rejections are the aggregator's
+                    // own typed errors, relayed as-is
+                    let mut st = state.lock().unwrap();
+                    st.agg.ingest(slot as usize, payload, spec.scales[slot as usize])?;
+                    st.meter.count_uplink(f.payload.len());
+                    st.delivered[slot as usize] = true;
+                    st.n_delivered += 1;
+                    st.ingest_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                frame::write_frame(
+                    stream,
+                    &Frame::new(FrameKind::Ok, round, slot, Vec::new()),
+                )?;
+            }
+            other => {
+                return Err(Error::Net(format!(
+                    "unexpected {other:?} frame from a client"
+                )))
+            }
+        }
+    }
+}
+
+/// Client half of the protocol: one TCP connection, reusable for many
+/// uplinks (one handshake each).
+pub struct NetClient {
+    stream: TcpStream,
+    cap: usize,
+    round: u32,
+}
+
+impl NetClient {
+    pub fn connect(
+        addr: std::net::SocketAddr,
+        d: usize,
+        round: usize,
+        timeout: Duration,
+    ) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(NetClient {
+            stream,
+            cap: frame::max_uplink_payload(d),
+            round: round as u32,
+        })
+    }
+
+    /// Full slot-auth handshake plus one uplink:
+    /// HELLO(client) → ASSIGN(slot) → UPLINK(slot, bytes) → OK.
+    /// Returns the assigned slot. A server ERR frame surfaces as
+    /// [`Error::Net`] carrying the server's typed-error text; the
+    /// server has dropped the connection, so the caller must reconnect
+    /// before retrying.
+    pub fn deliver(&mut self, client: u64, payload_bytes: &[u8]) -> Result<u32> {
+        frame::write_frame(
+            &mut self.stream,
+            &Frame::new(
+                FrameKind::Hello,
+                self.round,
+                0,
+                client.to_le_bytes().to_vec(),
+            ),
+        )?;
+        let assign = self.expect(FrameKind::Assign)?;
+        let slot = assign.slot;
+        frame::write_frame(
+            &mut self.stream,
+            &Frame::new(FrameKind::Uplink, self.round, slot, payload_bytes.to_vec()),
+        )?;
+        self.expect(FrameKind::Ok)?;
+        Ok(slot)
+    }
+
+    fn expect(&mut self, want: FrameKind) -> Result<Frame> {
+        let f = frame::read_frame(&mut self.stream, self.cap)?.ok_or_else(|| {
+            Error::Net("server closed the connection mid-exchange".into())
+        })?;
+        if f.kind == FrameKind::Err {
+            return Err(Error::Net(format!(
+                "server rejected: {}",
+                String::from_utf8_lossy(&f.payload)
+            )));
+        }
+        if f.kind != want {
+            return Err(Error::Net(format!(
+                "expected an {want:?} frame, got {:?}",
+                f.kind
+            )));
+        }
+        Ok(f)
+    }
+}
+
+/// The quorum policy is applied by the aggregator the caller builds —
+/// re-exported here so the doc links above resolve.
+pub type Policy = ParticipationPolicy;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry;
+    use crate::coordinator::{Method, RunConfig};
+    use crate::noise::NoiseDist;
+    use std::io::{Read, Write};
+
+    const DIST: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+    fn fedavg_cfg() -> RunConfig {
+        let mut cfg = RunConfig::new("smoke_mlp", Method::parse("fedavg", DIST).unwrap());
+        cfg.noise = DIST;
+        cfg
+    }
+
+    fn dense_payload(d: usize, k: u64) -> Payload {
+        Payload::Dense((0..d).map(|i| ((i as u64 + 3 * k) % 17) as f32 * 0.25 - 1.0).collect())
+    }
+
+    fn opts() -> NetOpts {
+        NetOpts::fixed(Duration::from_secs(10))
+    }
+
+    /// Satellite pin: per-round `bytes_up`/`msgs` attribution stays
+    /// exact when frames from many concurrent connections land in one
+    /// round — the metering-under-the-ingest-lock serialization.
+    #[test]
+    fn multi_connection_metering_attributes_rounds_exactly() {
+        let d = 257usize;
+        let n = 12usize;
+        let conns = 4usize;
+        let cfg = fedavg_cfg();
+        let strategy = registry::strategy_for_config(&cfg);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut meter = Meter::new();
+        let mut w = vec![0.0f32; d];
+
+        let mut per_round_bytes = Vec::new();
+        for round in 0..2usize {
+            let payloads: Vec<Payload> =
+                (0..n).map(|k| dense_payload(d, 100 * round as u64 + k as u64)).collect();
+            per_round_bytes
+                .push(payloads.iter().map(|p| p.encoded_len() as u64).sum::<u64>());
+            let spec = RoundSpec {
+                round,
+                d,
+                selection: (0..n as u64).collect(),
+                scales: vec![1.0 / n as f32; n],
+            };
+            let mut agg = strategy.aggregator(&cfg);
+            let report = thread::scope(|s| {
+                for c in 0..conns {
+                    let payloads = payloads.clone();
+                    s.spawn(move || {
+                        let mut cl =
+                            NetClient::connect(addr, d, round, Duration::from_secs(10))
+                                .unwrap();
+                        // connection reuse: this worker's share of the
+                        // N clients over ONE connection
+                        for k in (c..n).step_by(conns) {
+                            let bytes = payloads[k].try_encode().unwrap();
+                            let slot = cl.deliver(k as u64, &bytes).unwrap();
+                            assert_eq!(slot as usize, k);
+                        }
+                    });
+                }
+                serve_round(&listener, &spec, agg.as_mut(), &mut meter, &mut w, &opts())
+                    .unwrap()
+            });
+            assert_eq!(report.delivered, n);
+            assert!(report.quorum_met);
+            assert_eq!(report.rejected, 0);
+            assert_eq!(report.ingest_ms.len(), n);
+            assert_eq!(report.bytes_up, per_round_bytes[round]);
+        }
+        // exact per-round attribution across both rounds, no
+        // interleave, no double counting
+        assert_eq!(meter.round_uplink, per_round_bytes);
+        assert_eq!(meter.uplink_msgs, 2 * n as u64);
+        assert_eq!(meter.uplink_bytes, per_round_bytes.iter().sum::<u64>());
+
+        // and the folded weights equal a direct in-process ingest of
+        // the round-1 payloads (arrival order cannot matter)
+        let payloads: Vec<Payload> = (0..n).map(|k| dense_payload(d, 100 + k as u64)).collect();
+        let mut agg = strategy.aggregator(&cfg);
+        agg.begin(1, d, n).unwrap();
+        for (k, p) in payloads.iter().enumerate() {
+            agg.ingest(k, p.clone(), 1.0 / n as f32).unwrap();
+        }
+        let mut want = vec![0.0f32; d];
+        agg.finish(&mut want).unwrap();
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "networked round weights differ from in-process ingest"
+        );
+    }
+
+    /// Hostile frames and protocol breaches are typed errors that drop
+    /// one connection and never kill the accept loop.
+    #[test]
+    fn hostile_connections_never_kill_the_server() {
+        let d = 64usize;
+        let n = 2usize;
+        let cfg = fedavg_cfg();
+        let strategy = registry::strategy_for_config(&cfg);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut meter = Meter::new();
+        let mut w = vec![0.0f32; d];
+        let spec = RoundSpec {
+            round: 0,
+            d,
+            selection: vec![10, 11],
+            scales: vec![0.5, 0.5],
+        };
+        let payloads: Vec<Payload> = (0..n).map(|k| dense_payload(d, k as u64)).collect();
+        let mut agg = strategy.aggregator(&cfg);
+
+        // raw hostile connection: write `bytes`, read to EOF (so the
+        // server has fully processed + dropped it before we move on)
+        let hostile = |bytes: &[u8]| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(bytes).unwrap();
+            // half-close so the server sees EOF instead of waiting out
+            // its socket timeout for a next frame that never comes
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut sink = Vec::new();
+            let _ = s.read_to_end(&mut sink);
+            sink
+        };
+
+        let report = thread::scope(|s| {
+            let h = s.spawn(|| {
+                let mut hostile_count = 0u64;
+                // bad magic
+                hostile(b"XXXXXXXXXXXXXXXXXXXXXXXX");
+                hostile_count += 1;
+                // oversized declared payload_len (u32::MAX)
+                let mut b = Frame::new(FrameKind::Uplink, 0, 0, Vec::new()).to_bytes();
+                b[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+                let err = hostile(&b);
+                assert!(!err.is_empty(), "cap breach should get an ERR frame");
+                hostile_count += 1;
+                // truncated header (connection dies mid-frame)
+                hostile(&Frame::new(FrameKind::Hello, 0, 0, vec![0; 8]).to_bytes()[..7]);
+                hostile_count += 1;
+                // uplink before any handshake
+                hostile(&Frame::new(FrameKind::Uplink, 0, 0, vec![1, 2, 3]).to_bytes());
+                hostile_count += 1;
+                // wrong round
+                hostile(&Frame::new(FrameKind::Hello, 9, 0, 10u64.to_le_bytes().to_vec()).to_bytes());
+                hostile_count += 1;
+                // client id outside the selection
+                hostile(&Frame::new(FrameKind::Hello, 0, 0, 99u64.to_le_bytes().to_vec()).to_bytes());
+                hostile_count += 1;
+
+                // first good delivery
+                let mut cl = NetClient::connect(addr, d, 0, Duration::from_secs(10)).unwrap();
+                cl.deliver(10, &payloads[0].try_encode().unwrap()).unwrap();
+                // duplicate slot: rejected with the aggregator's own
+                // typed ingest error, relayed over the wire
+                let mut dup = NetClient::connect(addr, d, 0, Duration::from_secs(10)).unwrap();
+                match dup.deliver(10, &payloads[0].try_encode().unwrap()) {
+                    Err(Error::Net(m)) => assert!(m.contains("server rejected"), "{m}"),
+                    other => panic!("duplicate slot: want Err(Net), got {other:?}"),
+                }
+                hostile_count += 1;
+                // the server is still serving: the round completes
+                let mut cl = NetClient::connect(addr, d, 0, Duration::from_secs(10)).unwrap();
+                cl.deliver(11, &payloads[1].try_encode().unwrap()).unwrap();
+                hostile_count
+            });
+            let report = serve_round(
+                &listener,
+                &spec,
+                agg.as_mut(),
+                &mut meter,
+                &mut w,
+                &opts(),
+            )
+            .unwrap();
+            let hostile_count = h.join().unwrap();
+            (report, hostile_count)
+        });
+        let (report, hostile_count) = report;
+        assert_eq!(report.delivered, n);
+        assert!(report.quorum_met);
+        assert_eq!(
+            report.rejected, hostile_count,
+            "every hostile connection must be counted rejected"
+        );
+        // the fold is untouched by the garbage: equals in-process
+        let mut agg = strategy.aggregator(&cfg);
+        agg.begin(0, d, n).unwrap();
+        for (k, p) in payloads.iter().enumerate() {
+            agg.ingest(k, p.clone(), 0.5).unwrap();
+        }
+        let mut want = vec![0.0f32; d];
+        agg.finish(&mut want).unwrap();
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn net_timeout_resolution_delegates_to_the_shared_contract() {
+        // env deliberately untouched here (other tests run in
+        // parallel); the env half of the contract is pinned on the
+        // shared resolver via FEDMRN_PIPELINE_TIMEOUT_SECS
+        assert_eq!(resolve_net_timeout(4).unwrap(), Duration::from_secs(4));
+        assert_eq!(
+            resolve_net_timeout(0).unwrap(),
+            Duration::from_secs(DEFAULT_NET_TIMEOUT_SECS)
+        );
+    }
+}

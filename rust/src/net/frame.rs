@@ -1,0 +1,330 @@
+//! Length-prefixed wire frames for the networked coordinator.
+//!
+//! A frame is a fixed 20-byte header followed by `payload_len` payload
+//! bytes. All integers are little endian, matching the [`Payload`]
+//! codec the payload bytes carry:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic          "FMRN" (0x4E52_4D46 LE)
+//!      4     2  frame_version  1
+//!      6     2  kind           HELLO/ASSIGN/UPLINK/OK/ERR
+//!      8     4  round
+//!     12     4  slot
+//!     16     4  payload_len    checked against the frame-size cap
+//!                              BEFORE any buffer is sized
+//! ```
+//!
+//! Error taxonomy: malformed frame *bytes* (bad magic, unsupported
+//! version, unknown kind, truncated header or payload) are
+//! [`Error::Codec`] — the same class the [`Payload`] codec uses;
+//! a well-formed header whose declared length exceeds the cap is an
+//! [`Error::Net`] policy rejection. Both are typed errors the server
+//! answers with an ERR frame before dropping the connection — a
+//! hostile frame can never kill the accept loop
+//! (`tests/differential.rs` §9).
+
+use byteorder::{ByteOrder, LittleEndian};
+
+use crate::error::{Error, Result};
+use crate::transport::Payload;
+
+/// Frame magic: the bytes `FMRN`, read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FMRN");
+
+/// The (only) frame format version this build speaks.
+pub const FRAME_V1: u16 = 1;
+
+/// Fixed header size, bytes.
+pub const HEADER_LEN: usize = 20;
+
+/// A HELLO payload is exactly one little-endian u64 client id.
+pub const HELLO_LEN: usize = 8;
+
+/// Cap on an ERR frame's message payload, bytes.
+pub const ERR_MSG_CAP: usize = 512;
+
+/// What a frame means. HELLO/UPLINK flow client → server, the rest
+/// server → client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server: slot-auth handshake; payload = u64 client id.
+    Hello = 1,
+    /// Server → client: the slot assigned from the round's selection.
+    Assign = 2,
+    /// Client → server: one encoded [`Payload`] for the assigned slot.
+    Uplink = 3,
+    /// Server → client: the uplink decoded, ingested and metered.
+    Ok = 4,
+    /// Server → client: a typed error's display text; the connection
+    /// is dropped right after.
+    Err = 5,
+}
+
+impl FrameKind {
+    pub fn from_wire(k: u16) -> Option<FrameKind> {
+        match k {
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::Assign),
+            3 => Some(FrameKind::Uplink),
+            4 => Some(FrameKind::Ok),
+            5 => Some(FrameKind::Err),
+            _ => None,
+        }
+    }
+
+    pub fn wire(self) -> u16 {
+        self as u16
+    }
+}
+
+/// One wire frame (header fields + owned payload bytes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub round: u32,
+    pub slot: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, round: u32, slot: u32, payload: Vec<u8>) -> Frame {
+        Frame { kind, round, slot, payload }
+    }
+
+    /// Serialize header + payload. Frames are built in-process from
+    /// already-capped payloads, so an over-length payload is a caller
+    /// bug, not a wire condition — asserted, mirroring the
+    /// [`Payload::try_encode`] count contract at the layer below.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let len = u32::try_from(self.payload.len())
+            .expect("frame payload exceeds the u32 wire framing");
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&FRAME_V1.to_le_bytes());
+        out.extend_from_slice(&self.kind.wire().to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.slot.to_le_bytes());
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+}
+
+/// A parsed, validated frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Header {
+    pub kind: FrameKind,
+    pub round: u32,
+    pub slot: u32,
+    pub payload_len: usize,
+}
+
+/// Hard per-connection frame-size cap for rounds at dimension `d`,
+/// derived from [`Payload::encoded_len`] bounds: the largest
+/// legitimate uplink at dimension `d` is a `Sparse` payload with
+/// `k = d` pairs (`1 + 4 + 4 + 8d` bytes); every other variant is
+/// smaller (`Dense` is `5 + 4d`, `SignBits` at most `25 + 5d` even
+/// with one scale per parameter, the FedMRN mask about `d/8`). The
+/// slack absorbs tiny-`d` constant terms. A declared `payload_len`
+/// beyond this is rejected **before** any buffer is sized, so memory
+/// per connection stays bounded no matter what a hostile header
+/// claims.
+pub fn max_uplink_payload(d: usize) -> usize {
+    9 + 8 * d + 64
+}
+
+/// Parse and validate a `HEADER_LEN`-byte header. `max_payload` is the
+/// frame-size cap ([`max_uplink_payload`]) — enforced here so no
+/// caller can forget it between parsing and allocating.
+pub fn parse_header(b: &[u8], max_payload: usize) -> Result<Header> {
+    debug_assert_eq!(b.len(), HEADER_LEN);
+    let magic = LittleEndian::read_u32(&b[0..4]);
+    if magic != MAGIC {
+        return Err(Error::Codec(format!(
+            "frame: bad magic {magic:#010x} (want {MAGIC:#010x})"
+        )));
+    }
+    let version = LittleEndian::read_u16(&b[4..6]);
+    if version != FRAME_V1 {
+        return Err(Error::Codec(format!(
+            "frame: unsupported frame_version {version} (this build speaks v{FRAME_V1})"
+        )));
+    }
+    let kind_raw = LittleEndian::read_u16(&b[6..8]);
+    let kind = FrameKind::from_wire(kind_raw)
+        .ok_or_else(|| Error::Codec(format!("frame: unknown kind {kind_raw}")))?;
+    let round = LittleEndian::read_u32(&b[8..12]);
+    let slot = LittleEndian::read_u32(&b[12..16]);
+    let payload_len = LittleEndian::read_u32(&b[16..20]) as usize;
+    if payload_len > max_payload {
+        return Err(Error::Net(format!(
+            "frame: declared payload_len {payload_len} exceeds the \
+             {max_payload}-byte cap"
+        )));
+    }
+    Ok(Header { kind, round, slot, payload_len })
+}
+
+/// Read one frame off a stream with a bounded buffer.
+///
+/// `Ok(None)` is a clean EOF **between** frames (the peer closed an
+/// idle connection — the normal end of a connection-reuse session). A
+/// connection that dies mid-frame is a typed [`Error::Codec`]
+/// (truncated header / truncated payload); socket timeouts and resets
+/// surface as [`Error::Io`]. The declared payload length is validated
+/// against `max_payload` before the payload buffer is sized.
+pub fn read_frame(r: &mut impl std::io::Read, max_payload: usize) -> Result<Option<Frame>> {
+    let mut hdr = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::Codec(format!(
+                    "frame: truncated header ({got} of {HEADER_LEN} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let h = parse_header(&hdr, max_payload)?;
+    let mut payload = vec![0u8; h.payload_len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Codec(format!(
+                "frame: truncated payload (want {} bytes)",
+                h.payload_len
+            ))
+        } else {
+            Error::Io(e)
+        }
+    })?;
+    Ok(Some(Frame { kind: h.kind, round: h.round, slot: h.slot, payload }))
+}
+
+/// Write one frame and flush it.
+pub fn write_frame(w: &mut impl std::io::Write, f: &Frame) -> Result<()> {
+    w.write_all(&f.to_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noise::NoiseLayout;
+
+    fn cursor(bytes: Vec<u8>) -> std::io::Cursor<Vec<u8>> {
+        std::io::Cursor::new(bytes)
+    }
+
+    #[test]
+    fn frame_header_roundtrips_and_rejects_hostile_fields() {
+        let f = Frame::new(FrameKind::Uplink, 7, 3, vec![1, 2, 3, 4, 5]);
+        let bytes = f.to_bytes();
+        assert_eq!(bytes.len(), HEADER_LEN + 5);
+        let got = read_frame(&mut cursor(bytes.clone()), 64).unwrap().unwrap();
+        assert_eq!(got, f);
+
+        // empty stream: clean EOF between frames
+        assert_eq!(read_frame(&mut cursor(Vec::new()), 64).unwrap(), None);
+
+        // bad magic / bad version / unknown kind → typed Codec errors
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        match read_frame(&mut cursor(b), 64) {
+            Err(Error::Codec(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("bad magic: want Err(Codec), got {other:?}"),
+        }
+        let mut b = bytes.clone();
+        b[4] = 0x7F;
+        match read_frame(&mut cursor(b), 64) {
+            Err(Error::Codec(m)) => assert!(m.contains("frame_version"), "{m}"),
+            other => panic!("bad version: want Err(Codec), got {other:?}"),
+        }
+        let mut b = bytes.clone();
+        b[6] = 99;
+        match read_frame(&mut cursor(b), 64) {
+            Err(Error::Codec(m)) => assert!(m.contains("kind"), "{m}"),
+            other => panic!("bad kind: want Err(Codec), got {other:?}"),
+        }
+
+        // truncated header and truncated payload → typed Codec errors
+        for cut in [1, HEADER_LEN - 1, HEADER_LEN + 2] {
+            let b = bytes[..cut].to_vec();
+            match read_frame(&mut cursor(b), 64) {
+                Err(Error::Codec(m)) => assert!(m.contains("truncated"), "cut {cut}: {m}"),
+                other => panic!("cut {cut}: want Err(Codec), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_declared_frame_is_rejected_before_allocation() {
+        // a header declaring a ~4 GB payload must be refused at the
+        // header-parse gate (Error::Net), before any buffer is sized
+        let mut f = Frame::new(FrameKind::Uplink, 0, 0, Vec::new());
+        f.payload = vec![0u8; 4];
+        let mut bytes = f.to_bytes();
+        bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        match read_frame(&mut cursor(bytes), max_uplink_payload(1024)) {
+            Err(Error::Net(m)) => {
+                assert!(m.contains("cap") && m.contains("payload_len"), "{m}")
+            }
+            other => panic!("want Err(Net), got {other:?}"),
+        }
+        // and parse_header alone applies the same gate
+        let hdr = Frame::new(FrameKind::Hello, 0, 0, vec![0u8; 100]).to_bytes();
+        assert!(parse_header(&hdr[..HEADER_LEN], 8).is_err());
+        assert!(parse_header(&hdr[..HEADER_LEN], 100).is_ok());
+    }
+
+    #[test]
+    fn frame_size_cap_covers_every_codec_at_dimension_d() {
+        // the cap is "derived from Payload::encoded_len bounds": every
+        // legitimate payload shape at dimension d must fit under it,
+        // including the worst cases (dense, k = d sparse, per-64-chunk
+        // scale vectors)
+        for d in [1usize, 63, 64, 65, 1000, 10_007] {
+            let cap = max_uplink_payload(d);
+            let words = d.div_ceil(64);
+            let shapes = [
+                Payload::Dense(vec![0.0; d]),
+                Payload::MaskedSeed {
+                    seed: 1,
+                    d: d as u32,
+                    layout: NoiseLayout::Serial,
+                    bits: vec![0; words],
+                },
+                Payload::SignBits {
+                    d: d as u32,
+                    bits: vec![0; words],
+                    scales: vec![0.0; words],
+                    seed: 1,
+                },
+                Payload::Ternary {
+                    d: d as u32,
+                    codes: vec![0; (2 * d).div_ceil(64)],
+                    scales: vec![0.0; words],
+                },
+                Payload::Sparse {
+                    d: d as u32,
+                    idx: vec![0; d],
+                    val: vec![0.0; d],
+                },
+                Payload::MaskBits { d: d as u32, bits: vec![0; words] },
+            ];
+            for p in &shapes {
+                assert!(
+                    p.encoded_len() <= cap,
+                    "d={d}: {:?} needs {} bytes, cap {cap}",
+                    std::mem::discriminant(p),
+                    p.encoded_len()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,478 @@
+//! Load generator for the networked coordinator: `fedmrn loadgen`.
+//!
+//! Replays seed-derived synthetic FedMRN uplinks from N simulated
+//! clients over M reused TCP connections (N ≫ cores is the point —
+//! each connection carries many clients' handshake+uplink exchanges
+//! back to back), optionally routed through [`FaultModel`] corruption
+//! with the same per-attempt discipline as the in-process chaos path
+//! (straggler past the deadline misses the round; a dropped attempt is
+//! retried; corrupted bytes that the server rejects cost a reconnect
+//! and a retry). Reports uplinks/s, bytes/s and p50/p99 ingest latency
+//! and merges one row per configuration into the `BENCH_net.json`
+//! suite (merge-by-key, same writer discipline as every other bench
+//! suite — re-running updates rows in place, never duplicates them).
+//!
+//! Everything is derived from `(seed, round, client)` through
+//! [`derive_seed`], so two runs with the same options replay the exact
+//! same uplinks and the exact same faults.
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::bench;
+use crate::coordinator::faults::{corrupt_bytes, FaultModel, FaultPlan, ParticipationPolicy};
+use crate::coordinator::registry;
+use crate::coordinator::{Method, RunConfig};
+use crate::error::{Error, Result};
+use crate::jsonx::Value;
+use crate::noise::{derive_seed, NoiseDist, NoiseGen, NoiseLayout};
+use crate::stats;
+use crate::transport::{Meter, Payload};
+
+use super::coordinator::{serve_round, NetClient, NetOpts, RoundSpec, ServeReport};
+
+/// Stream tag for loadgen mask bits in [`derive_seed`]'s stream slot
+/// (distinct from training/fault streams so synthetic uplinks never
+/// collide with real ones at the same coordinates).
+const LOADGEN_STREAM: u64 = 0x10AD;
+
+/// The noise distribution the synthetic run declares. Loadgen never
+/// regenerates noise client-side (only the server does, at finish), so
+/// any fixed dist works; this matches the repo-wide test default.
+const LOADGEN_DIST: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+/// One deterministic synthetic uplink: a FedMRN `MaskedSeed` payload
+/// whose mask bits are drawn from `derive_seed(seed, client, round,
+/// LOADGEN_STREAM)`. Tail bits past `d` are masked to zero so the
+/// payload is exactly what a real client would put on the wire.
+pub fn synth_uplink(run_seed: u64, round: usize, client: usize, d: usize) -> Payload {
+    let seed = derive_seed(run_seed, client as u64, round as u64, LOADGEN_STREAM);
+    let mut g = NoiseGen::new(seed);
+    let words = d.div_ceil(64);
+    let mut bits: Vec<u64> = (0..words).map(|_| g.next_u64()).collect();
+    if d % 64 != 0 {
+        bits[words - 1] &= (1u64 << (d % 64)) - 1;
+    }
+    Payload::MaskedSeed {
+        seed,
+        d: d as u32,
+        layout: NoiseLayout::Serial,
+        bits,
+    }
+}
+
+/// Loadgen configuration (CLI flags map 1:1; see `fedmrn help`).
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// Model dimension of the synthetic uplinks.
+    pub d: usize,
+    /// Simulated clients per round (slot = client id).
+    pub clients: usize,
+    /// TCP connections the clients are multiplexed over.
+    pub conns: usize,
+    pub rounds: usize,
+    pub seed: u64,
+    pub faults: FaultModel,
+    pub policy: ParticipationPolicy,
+    /// Config half of the deadline chain: `FEDMRN_NET_TIMEOUT_SECS`
+    /// env, then this (if nonzero), then the 30 s default.
+    pub timeout_secs: u64,
+}
+
+impl LoadgenOpts {
+    pub fn validate(&self) -> Result<()> {
+        if self.d == 0 || self.clients == 0 || self.conns == 0 || self.rounds == 0 {
+            return Err(Error::Config(
+                "loadgen: d, clients, conns and rounds must all be >= 1".into(),
+            ));
+        }
+        self.faults.validate()?;
+        self.policy.validate()
+    }
+}
+
+/// What one loadgen run measured. `delivered`/`rejected`/
+/// `payload_bytes` are the **server's** accounting (the meter under
+/// the ingest lock); `dropped`/`retries`/`stragglers` are the client
+/// side's fault-plan accounting.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    pub d: usize,
+    pub clients: usize,
+    pub conns: usize,
+    pub rounds: usize,
+    pub faults_on: bool,
+    /// Uplinks the server decoded, ingested and metered.
+    pub delivered: u64,
+    /// Connections the server dropped with a typed error.
+    pub rejected: u64,
+    /// Attempts that never reached the wire (fault plan `dropped`).
+    pub dropped: u64,
+    /// Re-sends after a dropped or rejected attempt.
+    pub retries: u64,
+    /// Clients whose straggle latency exceeded the fault deadline
+    /// (missed the round entirely, no attempts).
+    pub stragglers: u64,
+    /// Server-metered uplink payload bytes (20 B/frame of header
+    /// framing is intentionally not metered; see docs/BENCH.md).
+    pub payload_bytes: u64,
+    pub quorum_met_rounds: usize,
+    pub uplinks_per_s: f64,
+    pub bytes_per_s: f64,
+    pub p50_ingest_ms: f64,
+    pub p99_ingest_ms: f64,
+    pub wall_secs: f64,
+}
+
+impl LoadgenReport {
+    /// One `BENCH_net.json` row, keyed like every other suite row
+    /// (suite, name, threads) so re-runs merge in place.
+    pub fn to_row(&self) -> Value {
+        Value::obj()
+            .set("suite", "net")
+            .set(
+                "name",
+                format!(
+                    "loadgen d={} clients={} faults={}",
+                    self.d,
+                    self.clients,
+                    if self.faults_on { "on" } else { "off" }
+                ),
+            )
+            .set("threads", self.conns)
+            .set("rounds", self.rounds)
+            .set("delivered", self.delivered)
+            .set("rejected", self.rejected)
+            .set("dropped", self.dropped)
+            .set("retries", self.retries)
+            .set("stragglers", self.stragglers)
+            .set("payload_bytes", self.payload_bytes)
+            .set("quorum_met_rounds", self.quorum_met_rounds)
+            .set("uplinks_per_s", self.uplinks_per_s)
+            .set("bytes_per_s", self.bytes_per_s)
+            .set("p50_ingest_ms", self.p50_ingest_ms)
+            .set("p99_ingest_ms", self.p99_ingest_ms)
+            .set("wall_secs", self.wall_secs)
+    }
+
+    /// Merge this run's row into `path` (create-or-update by key).
+    pub fn write_row(&self, path: &str) -> Result<()> {
+        bench::merge_value_rows(path, &[self.to_row()])
+    }
+}
+
+/// Client-side per-worker accounting, summed after the scope joins.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerStats {
+    dropped: u64,
+    retries: u64,
+    stragglers: u64,
+    sent_rejected: u64,
+}
+
+/// Run the load generator: bind a loopback listener, then for each
+/// round serve with [`serve_round`] on this thread while `conns`
+/// worker threads replay their share of the `clients` uplinks
+/// (`client % conns == worker`) over one reused connection each.
+pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    opts.validate()?;
+    let net = NetOpts::resolve(opts.timeout_secs)?;
+    let faults_on = opts.faults.is_active();
+    let method = Method::parse("fedmrn", LOADGEN_DIST)?;
+    let mut cfg = RunConfig::new("smoke_mlp", method);
+    cfg.noise = LOADGEN_DIST;
+    cfg.participation = opts.policy;
+    let strategy = registry::strategy_for_config(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+
+    let mut report = LoadgenReport {
+        d: opts.d,
+        clients: opts.clients,
+        conns: opts.conns,
+        rounds: opts.rounds,
+        faults_on,
+        ..LoadgenReport::default()
+    };
+    let mut all_ingest_ms: Vec<f64> = Vec::new();
+    let mut meter = Meter::new();
+    let mut w = vec![0.0f32; opts.d];
+    let t0 = Instant::now();
+
+    for round in 0..opts.rounds {
+        let selected: Vec<usize> = (0..opts.clients).collect();
+        let plan = faults_on.then(|| {
+            FaultPlan::for_round(&opts.faults, opts.seed, round, &selected)
+        });
+        let spec = RoundSpec {
+            round,
+            d: opts.d,
+            selection: (0..opts.clients as u64).collect(),
+            scales: vec![1.0 / opts.clients as f32; opts.clients],
+        };
+        let mut agg = strategy.aggregator(&cfg);
+        let (served, worker_stats) = thread::scope(|s| -> Result<(ServeReport, WorkerStats)> {
+            let handles: Vec<_> = (0..opts.conns)
+                .map(|c| {
+                    let plan = plan.as_ref();
+                    let timeout = net.timeout;
+                    s.spawn(move || {
+                        run_worker(addr, opts, round, c, plan, timeout)
+                    })
+                })
+                .collect();
+            let served = serve_round(
+                &listener,
+                &spec,
+                agg.as_mut(),
+                &mut meter,
+                &mut w,
+                &net,
+            )?;
+            let mut stats = WorkerStats::default();
+            for h in handles {
+                let ws = h
+                    .join()
+                    .map_err(|_| Error::Net("loadgen worker panicked".into()))??;
+                stats.dropped += ws.dropped;
+                stats.retries += ws.retries;
+                stats.stragglers += ws.stragglers;
+                stats.sent_rejected += ws.sent_rejected;
+            }
+            Ok((served, stats))
+        })?;
+        report.delivered += served.delivered as u64;
+        report.rejected += served.rejected;
+        report.payload_bytes += served.bytes_up;
+        report.quorum_met_rounds += served.quorum_met as usize;
+        report.dropped += worker_stats.dropped;
+        report.retries += worker_stats.retries;
+        report.stragglers += worker_stats.stragglers;
+        all_ingest_ms.extend(served.ingest_ms);
+    }
+
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    report.wall_secs = wall;
+    report.uplinks_per_s = report.delivered as f64 / wall;
+    report.bytes_per_s = report.payload_bytes as f64 / wall;
+    all_ingest_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if !all_ingest_ms.is_empty() {
+        report.p50_ingest_ms = stats::percentile(&all_ingest_ms, 0.50);
+        report.p99_ingest_ms = stats::percentile(&all_ingest_ms, 0.99);
+    }
+    Ok(report)
+}
+
+/// One connection worker: replay clients `worker, worker + conns, ...`
+/// over a single reused [`NetClient`], applying the fault plan's
+/// per-attempt discipline (mirroring the in-process chaos oracle in
+/// `tests/differential.rs` §8):
+///
+/// * straggle past the fault deadline → the client misses the round,
+///   no attempts;
+/// * a `dropped` attempt never reaches the wire, the next attempt (if
+///   any) is a retry;
+/// * a `corrupt` attempt's bytes are mangled first; if the server
+///   rejects them (typed ERR, connection dropped) the worker
+///   reconnects and retries. Mangled bytes that still decode to a
+///   well-formed payload are delivered — exactly what a real server
+///   could not distinguish either.
+fn run_worker(
+    addr: std::net::SocketAddr,
+    opts: &LoadgenOpts,
+    round: usize,
+    worker: usize,
+    plan: Option<&FaultPlan>,
+    timeout: Duration,
+) -> Result<WorkerStats> {
+    let mut stats = WorkerStats::default();
+    let mut conn: Option<NetClient> = None;
+    for client in (worker..opts.clients).step_by(opts.conns) {
+        let clean = synth_uplink(opts.seed, round, client, opts.d)
+            .try_encode()?;
+        let attempts: Vec<(bool, Option<crate::coordinator::faults::Corruption>)> =
+            match plan {
+                None => vec![(false, None)],
+                Some(p) => {
+                    let cf = &p.clients[client];
+                    let deadline = opts.faults.deadline_ms;
+                    if deadline > 0 && cf.straggle_ms > deadline {
+                        stats.stragglers += 1;
+                        continue;
+                    }
+                    cf.attempts.iter().map(|a| (a.dropped, a.corrupt)).collect()
+                }
+            };
+        for (i, (dropped, corrupt)) in attempts.iter().enumerate() {
+            if i > 0 {
+                stats.retries += 1;
+            }
+            if *dropped {
+                stats.dropped += 1;
+                continue;
+            }
+            let mut bytes = clean.clone();
+            if let Some(c) = corrupt {
+                corrupt_bytes(c, &mut bytes);
+            }
+            let cl = match conn.as_mut() {
+                Some(cl) => cl,
+                None => {
+                    conn = Some(NetClient::connect(addr, opts.d, round, timeout)?);
+                    conn.as_mut().unwrap()
+                }
+            };
+            match cl.deliver(client as u64, &bytes) {
+                Ok(_) => break,
+                Err(Error::Net(_)) | Err(Error::Codec(_)) => {
+                    // the server rejected the bytes (typed ERR) and
+                    // dropped the connection; reconnect before any
+                    // retry — and before the next client's exchange
+                    stats.sent_rejected += 1;
+                    conn = None;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonx;
+
+    fn base_opts() -> LoadgenOpts {
+        LoadgenOpts {
+            d: 513,
+            clients: 12,
+            conns: 3,
+            rounds: 2,
+            seed: 7,
+            faults: FaultModel::none(),
+            policy: ParticipationPolicy::strict(),
+            timeout_secs: 10,
+        }
+    }
+
+    #[test]
+    fn synthetic_uplinks_are_deterministic_and_well_formed() {
+        let a = synth_uplink(7, 3, 11, 513);
+        let b = synth_uplink(7, 3, 11, 513);
+        assert_eq!(a.try_encode().unwrap(), b.try_encode().unwrap());
+        let c = synth_uplink(7, 3, 12, 513);
+        assert_ne!(a.try_encode().unwrap(), c.try_encode().unwrap());
+        let Payload::MaskedSeed { d, bits, .. } = &a else {
+            panic!("synth uplink must be MaskedSeed");
+        };
+        assert_eq!(*d, 513);
+        assert_eq!(bits.len(), 513usize.div_ceil(64));
+        // tail bits past d are zero: bit 513 lives at word 8, bit 1
+        assert_eq!(bits[8] & !1u64, 0);
+    }
+
+    /// Emulate the server's accept/reject decision for one attempt's
+    /// wire bytes: decode + the fedmrn ingest validation (variant,
+    /// dimension, bit length, layout). Pure, so the faulted loadgen
+    /// run below has an exact expected outcome instead of a
+    /// probabilistic one.
+    fn server_accepts(bytes: &[u8], d: usize) -> bool {
+        match Payload::decode(bytes) {
+            Ok(p) => crate::compress::fedmrn::parts(&p, d)
+                .map(|(_, layout, _)| layout == NoiseLayout::Serial)
+                .unwrap_or(false),
+            Err(_) => false,
+        }
+    }
+
+    #[test]
+    fn loopback_loadgen_smoke_reports_and_merges_rows() {
+        let path = std::env::temp_dir()
+            .join(format!("fedmrn_loadgen_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        // clean run: every uplink lands, quorum met every round
+        let opts = base_opts();
+        let rep = run(&opts).unwrap();
+        let total = (opts.clients * opts.rounds) as u64;
+        assert_eq!(rep.delivered, total);
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(rep.dropped + rep.retries + rep.stragglers, 0);
+        assert_eq!(rep.quorum_met_rounds, opts.rounds);
+        let per_uplink = synth_uplink(opts.seed, 0, 0, opts.d).encoded_len() as u64;
+        assert_eq!(rep.payload_bytes, per_uplink * total);
+        assert!(rep.uplinks_per_s > 0.0);
+        assert!(rep.p50_ingest_ms >= 0.0 && rep.p99_ingest_ms >= rep.p50_ingest_ms);
+
+        // the row merges by key: writing twice yields ONE row
+        let spath = path.to_str().unwrap();
+        rep.write_row(spath).unwrap();
+        rep.write_row(spath).unwrap();
+        let rows = jsonx::parse_file(&path).unwrap();
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("suite").unwrap().as_str().unwrap(), "net");
+        assert!(rows[0].get("uplinks_per_s").unwrap().as_f64().unwrap() > 0.0);
+
+        // faulted run: different key (faults=on) → second row; the
+        // chaos discipline keeps the server alive through corrupt
+        // uplinks and the books consistent
+        let mut opts = base_opts();
+        opts.faults = FaultModel {
+            dropout: 0.3,
+            corrupt_p: 0.4,
+            max_retries: 2,
+            ..FaultModel::none()
+        };
+        opts.policy = ParticipationPolicy { quorum: 0.25, rescale: true };
+        opts.timeout_secs = 2; // rounds with missing slots wait out the deadline
+        let rep2 = run(&opts).unwrap();
+
+        // replay the pure fault plan to get the EXACT expected books
+        // (the worker discipline: skip dropped attempts, bounce at the
+        // server on bytes that fail decode/ingest validation, break on
+        // the first accepted attempt)
+        let (mut e_del, mut e_drop, mut e_retry, mut e_rej) = (0u64, 0u64, 0u64, 0u64);
+        for round in 0..opts.rounds {
+            let selected: Vec<usize> = (0..opts.clients).collect();
+            let plan = FaultPlan::for_round(&opts.faults, opts.seed, round, &selected);
+            for client in 0..opts.clients {
+                let clean = synth_uplink(opts.seed, round, client, opts.d)
+                    .try_encode()
+                    .unwrap();
+                for (i, a) in plan.clients[client].attempts.iter().enumerate() {
+                    if i > 0 {
+                        e_retry += 1;
+                    }
+                    if a.dropped {
+                        e_drop += 1;
+                        continue;
+                    }
+                    let mut bytes = clean.clone();
+                    if let Some(c) = &a.corrupt {
+                        corrupt_bytes(c, &mut bytes);
+                    }
+                    if server_accepts(&bytes, opts.d) {
+                        e_del += 1;
+                        break;
+                    }
+                    e_rej += 1;
+                }
+            }
+        }
+        assert_eq!(rep2.delivered, e_del);
+        assert_eq!(rep2.dropped, e_drop);
+        assert_eq!(rep2.retries, e_retry);
+        assert_eq!(rep2.rejected, e_rej);
+        assert!(rep2.delivered <= total);
+        assert!(e_drop + e_rej > 0, "fault plan drew no faults at these rates");
+
+        rep2.write_row(spath).unwrap();
+        let rows = jsonx::parse_file(&path).unwrap();
+        assert_eq!(rows.as_arr().unwrap().len(), 2);
+
+        let _ = std::fs::remove_file(&path);
+    }
+}

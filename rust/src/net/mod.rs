@@ -1,0 +1,38 @@
+//! Networked coordinator front end: TCP transport over the [`Payload`]
+//! codec (arXiv:2408.03220 reproduction, PR 7).
+//!
+//! Three layers, bottom up:
+//!
+//! * [`frame`] — length-prefixed wire frames: a versioned 20-byte
+//!   header (magic, frame_version, kind, round, slot, payload_len)
+//!   with a hard frame-size cap derived from
+//!   [`Payload::encoded_len`] bounds, enforced before any buffer is
+//!   sized.
+//! * [`coordinator`] — [`serve_round`]: slot-auth handshake, bounded
+//!   per-connection reads, per-connection deadlines from the shared
+//!   env/config timeout resolver, ingest-as-bytes-arrive into the
+//!   streaming [`Aggregator`] behind the quorum /
+//!   `ParticipationPolicy` path. Plus [`NetClient`], the client half.
+//! * [`loadgen`] — the `fedmrn loadgen` harness: N simulated clients
+//!   replaying seed-derived synthetic uplinks over M reused
+//!   connections (N ≫ cores), optionally through `FaultModel`
+//!   corruption, reporting uplinks/s, bytes/s and p99 ingest latency
+//!   into the `BENCH_net.json` suite.
+//!
+//! Byte-identity with the in-process engine (any arrival order, any
+//! connection interleaving) is pinned in `tests/differential.rs` §9.
+//!
+//! [`Payload`]: crate::transport::Payload
+//! [`Payload::encoded_len`]: crate::transport::Payload::encoded_len
+//! [`Aggregator`]: crate::coordinator::strategy::Aggregator
+
+pub mod coordinator;
+pub mod frame;
+pub mod loadgen;
+
+pub use coordinator::{
+    resolve_net_timeout, serve_round, NetClient, NetOpts, RoundSpec, ServeReport,
+    DEFAULT_NET_TIMEOUT_SECS,
+};
+pub use frame::{max_uplink_payload, Frame, FrameKind, FRAME_V1, HEADER_LEN, MAGIC};
+pub use loadgen::{LoadgenOpts, LoadgenReport};

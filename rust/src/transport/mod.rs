@@ -42,8 +42,73 @@ const TAG_SPARSE: u8 = 5;
 const TAG_MASK: u8 = 6;
 
 impl Payload {
+    /// Validate that a count field fits the wire's `u32` framing.
+    ///
+    /// The encoder writes vector lengths as `u32`; a `len > u32::MAX`
+    /// would silently wrap under `as u32` and round-trip to a
+    /// *different* payload (the decode side carefully bounds declared
+    /// counts with `need_elems`, so the asymmetry was encode-only).
+    /// Factored out so the boundary is testable without allocating a
+    /// 16 GB vector.
+    fn wire_count(field: &'static str, len: usize) -> Result<u32> {
+        u32::try_from(len).map_err(|_| {
+            Error::Codec(format!(
+                "encode: {field} count {len} exceeds the u32 wire framing"
+            ))
+        })
+    }
+
+    /// Check every count invariant [`Payload::try_encode`] relies on.
+    fn check_wire_counts(&self) -> Result<()> {
+        match self {
+            Payload::Dense(v) => {
+                Self::wire_count("dense", v.len())?;
+            }
+            Payload::MaskedSeed { .. } | Payload::MaskBits { .. } => {
+                // word counts are derived from `d: u32` on both ends
+            }
+            Payload::SignBits { scales, .. } | Payload::Ternary { scales, .. } => {
+                Self::wire_count("scales", scales.len())?;
+            }
+            Payload::Sparse { idx, val, .. } => {
+                Self::wire_count("sparse idx", idx.len())?;
+                if idx.len() != val.len() {
+                    return Err(Error::Codec(format!(
+                        "encode: sparse idx/val length mismatch ({} vs {})",
+                        idx.len(),
+                        val.len()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Serialize to wire bytes (1-byte tag + fields, little endian).
+    ///
+    /// Fallible counterpart of [`Payload::encode`]: a payload whose
+    /// count fields cannot be represented in the `u32` wire framing
+    /// (or a sparse payload with mismatched `idx`/`val` lengths) is a
+    /// typed [`Error::Codec`] instead of a silent truncating `as u32`
+    /// cast. Transport boundaries (the networked coordinator, anything
+    /// handling payloads it did not build) must use this; in-process
+    /// callers that construct payloads from in-range model dimensions
+    /// may keep using `encode`.
+    pub fn try_encode(&self) -> Result<Vec<u8>> {
+        self.check_wire_counts()?;
+        Ok(self.encode_unchecked())
+    }
+
+    /// [`Payload::try_encode`] for trusted in-process payloads; panics
+    /// (instead of truncating) if a count field exceeds the `u32` wire
+    /// framing — which no in-range model dimension can produce.
     pub fn encode(&self) -> Vec<u8> {
+        self.check_wire_counts()
+            .expect("payload count exceeds the u32 wire framing");
+        self.encode_unchecked()
+    }
+
+    fn encode_unchecked(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.encoded_len());
         match self {
             Payload::Dense(v) => {
@@ -266,6 +331,21 @@ impl<'a> Reader<'a> {
 
 /// Byte accounting across a run: uplink / downlink, totals and per
 /// round.
+///
+/// # Concurrency contract (single writer)
+///
+/// `Meter` is deliberately `&mut self` everywhere: per-round
+/// attribution works by mutating the **last** entry of the round
+/// series, so all metering for a round must be serialized and strictly
+/// fenced between that round's [`Meter::begin_round`] and the next.
+/// The in-process engine satisfies this by keeping every meter call on
+/// the main thread (see the meter-attribution notes in
+/// `coordinator::pipeline`); the networked coordinator satisfies it by
+/// placing the meter behind the same lock as the aggregator it meters
+/// for (`net::coordinator`), so frames arriving concurrently on many
+/// connections land one at a time, and `begin_round` / reporting
+/// happen strictly outside the serving window. Pinned by
+/// `multi_connection_metering_attributes_rounds_exactly`.
 #[derive(Clone, Debug, Default)]
 pub struct Meter {
     pub uplink_bytes: u64,
@@ -352,6 +432,36 @@ mod tests {
         let bytes = p.encode();
         assert_eq!(bytes.len(), p.encoded_len());
         assert_eq!(Payload::decode(&bytes).unwrap(), p);
+    }
+
+    #[test]
+    fn try_encode_rejects_oversized_counts() {
+        // The u32 boundary itself, without allocating a 16 GB vector:
+        // `wire_count` is the exact gate `try_encode` applies to every
+        // length-prefixed field.
+        assert_eq!(
+            Payload::wire_count("dense", u32::MAX as usize).unwrap(),
+            u32::MAX
+        );
+        match Payload::wire_count("dense", u32::MAX as usize + 1) {
+            Err(Error::Codec(m)) => {
+                assert!(m.contains("dense") && m.contains("u32"), "{m}")
+            }
+            other => panic!("want Err(Codec), got {other:?}"),
+        }
+        // In-range payloads: try_encode ≡ encode, byte for byte.
+        let p = Payload::Sparse { d: 10, idx: vec![1, 3], val: vec![0.5, -0.5] };
+        assert_eq!(p.try_encode().unwrap(), p.encode());
+        let p = Payload::Dense(vec![1.0, 2.0]);
+        assert_eq!(p.try_encode().unwrap(), p.encode());
+        // A sparse payload with mismatched idx/val lengths could never
+        // round-trip to itself: typed error at encode time, not a
+        // trailing-bytes surprise at decode time.
+        let bad = Payload::Sparse { d: 10, idx: vec![1, 3], val: vec![0.5] };
+        match bad.try_encode() {
+            Err(Error::Codec(m)) => assert!(m.contains("idx/val"), "{m}"),
+            other => panic!("want Err(Codec), got {other:?}"),
+        }
     }
 
     #[test]

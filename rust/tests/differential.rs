@@ -28,7 +28,11 @@
 //! pins the fault-injection layer: typed quorum errors from every
 //! Table-1 aggregator, fault-free plans byte-identical to the pre-fault
 //! engine, and chaos replay determinism (`FEDMRN_CHAOS_TRIALS` deepens
-//! the artifact-free sweep).
+//! the artifact-free sweep). Section 9 pins the networked coordinator:
+//! a loopback TCP round (any connection order, with and without the
+//! FaultModel armed) must finish byte-identical to the in-process
+//! engine, and hostile frames must be typed per-connection errors that
+//! never kill the accept loop.
 
 use fedmrn::bitpack;
 use fedmrn::compress::{
@@ -1557,4 +1561,315 @@ fn chaos_engine_replay_identical_dropped_sets_and_weights() {
             assert_eq!(res_a.uplink_msgs, res_b.uplink_msgs, "{c2}");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// 9. loopback networked coordinator ≡ the in-process engine, byte for byte
+// ---------------------------------------------------------------------------
+//
+// PR 7 puts a TCP front end (length-prefixed frames over the Payload
+// codec, slot-auth handshake, bounded reads, deadlines) in front of the
+// streaming Aggregator. The acceptance contract: a round served over
+// loopback — any connection order, with or without the FaultModel armed
+// — finishes with weights byte-identical to the in-process engine, and
+// hostile frames are typed errors that drop one connection without ever
+// killing the server.
+
+use fedmrn::net::{
+    frame, serve_round, Frame, FrameKind, NetClient, NetOpts, RoundSpec, ServeReport,
+};
+
+/// Serve one Table-1 round over loopback while `client` drives the
+/// uplinks from another thread; returns the finished weights and the
+/// server's report plus whatever the client closure returned.
+/// `deadline_secs` is the round's serve deadline — rounds that deliver
+/// every slot exit early, so only fault rounds (which must wait the
+/// deadline out) need it small.
+fn net_round<T: Send>(
+    name: &str,
+    d: usize,
+    n: usize,
+    scales: &[f32],
+    policy: ParticipationPolicy,
+    deadline_secs: u64,
+    client: impl FnOnce(std::net::SocketAddr) -> T + Send,
+) -> (Vec<f32>, ServeReport, T) {
+    let m = Method::parse(name, ING_DIST).unwrap();
+    let mut cfg = RunConfig::new("smoke_mlp", m);
+    cfg.noise = ING_DIST;
+    cfg.participation = policy;
+    let strategy = registry::strategy_for_config(&cfg);
+    let mut agg = strategy.aggregator(&cfg);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let spec = RoundSpec {
+        round: 0,
+        d,
+        selection: (0..n as u64).collect(),
+        scales: scales.to_vec(),
+    };
+    let mut meter = Meter::new();
+    let mut w = ing_start_w(d);
+    let (report, out) = std::thread::scope(|s| {
+        let h = s.spawn(move || client(addr));
+        let report = serve_round(
+            &listener,
+            &spec,
+            agg.as_mut(),
+            &mut meter,
+            &mut w,
+            &NetOpts::fixed(std::time::Duration::from_secs(deadline_secs)),
+        )
+        .unwrap();
+        (report, h.join().unwrap())
+    });
+    (w, report, out)
+}
+
+#[test]
+fn loopback_round_is_byte_identical_to_in_process_for_table1_roster() {
+    let d = 1031usize;
+    let n = 5usize;
+    let scales: Vec<f32> = (0..n).map(|k| 1.0 / (k + 2) as f32).collect();
+    for name in registry::table1_names() {
+        let payloads: Vec<Payload> = (0..n).map(|k| ing_payload(name, d, k)).collect();
+        let want = ing_oracle(name, d, &payloads, &scales);
+        for order in ing_orders(n) {
+            // one reused connection delivering in `order` pins the exact
+            // ingest sequence the in-process §5 pin already covers
+            let payloads_ref = &payloads;
+            let order_ref = &order;
+            let (w, report, ()) = net_round(
+                name,
+                d,
+                n,
+                &scales,
+                ParticipationPolicy::strict(),
+                20,
+                move |addr| {
+                    let mut cl = NetClient::connect(
+                        addr,
+                        d,
+                        0,
+                        std::time::Duration::from_secs(20),
+                    )
+                    .unwrap();
+                    for &slot in order_ref {
+                        let bytes = payloads_ref[slot].try_encode().unwrap();
+                        let got = cl.deliver(slot as u64, &bytes).unwrap();
+                        assert_eq!(got as usize, slot, "{name}: slot auth");
+                    }
+                },
+            );
+            assert_eq!(report.delivered, n);
+            assert!(report.quorum_met);
+            assert_eq!(report.rejected, 0);
+            let wire: u64 = payloads.iter().map(|p| p.encoded_len() as u64).sum();
+            assert_eq!(report.bytes_up, wire, "{name}: metered uplink bytes");
+            assert_bytes_eq(&want, &w, &format!("{name} net order {order:?}"));
+        }
+    }
+}
+
+#[test]
+fn loopback_round_with_faults_matches_chaos_oracle() {
+    // The networked delivery discipline under an armed FaultModel
+    // (straggler deadline, bounded retries, corrupt bytes bounced by
+    // the server costing a reconnect) must land exactly where the §8
+    // in-process chaos oracle lands: same delivered set, same quorum
+    // verdict, same metered bytes, byte-identical weights.
+    let model = FaultModel {
+        dropout: 0.3,
+        straggle_p: 0.25,
+        straggle_ms: 40,
+        corrupt_p: 0.35,
+        deadline_ms: 20,
+        max_retries: 2,
+        fault_seed: 0xC0DE,
+    };
+    let policy = ParticipationPolicy { quorum: 0.25, rescale: true };
+    let d = 1031usize;
+    let n = 6usize;
+    // slot = client id here: the TCP handshake maps ids through the
+    // selection, and the fault plan is materialized per-slot
+    let selected: Vec<usize> = (0..n).collect();
+    let scales: Vec<f32> = (0..n).map(|k| 1.0 / (k + 2) as f32).collect();
+    let mut any_fault = false;
+    for name in ["fedmrn", "fedavg"] {
+        let payloads: Vec<Payload> = (0..n).map(|k| ing_payload(name, d, k)).collect();
+        for round_seed in [42u64, 43] {
+            let orders = ing_orders(n);
+            let order = &orders[3]; // the shuffled order
+            let base = chaos_deliver(
+                name, d, &payloads, &scales, &model, round_seed, 0, &selected, order,
+                policy,
+            );
+            any_fault |=
+                !base.dropped.is_empty() || base.retries > 0 || base.corrupt_rejected > 0;
+            let plan = FaultPlan::for_round(&model, round_seed, 0, &selected);
+            let payloads_ref = &payloads;
+            let (plan_ref, model_ref) = (&plan, &model);
+            // 2 s deadline: fault rounds leave slots undelivered, so the
+            // server must wait the round out — keep that wait short
+            let (w, report, net_rejected) = net_round(
+                name,
+                d,
+                n,
+                &scales,
+                policy,
+                2,
+                move |addr| {
+                    let timeout = std::time::Duration::from_secs(20);
+                    let mut conn: Option<NetClient> = None;
+                    let mut rejected = 0u64;
+                    for &slot in order {
+                        let cf = &plan_ref.clients[slot];
+                        if model_ref.deadline_ms > 0 && cf.straggle_ms > model_ref.deadline_ms {
+                            continue; // straggler misses the round
+                        }
+                        let clean = payloads_ref[slot].try_encode().unwrap();
+                        let mut done = false;
+                        for attempt in &cf.attempts {
+                            if done {
+                                break;
+                            }
+                            if attempt.dropped {
+                                continue;
+                            }
+                            let mut bytes = clean.clone();
+                            if let Some(c) = &attempt.corrupt {
+                                faults::corrupt_bytes(c, &mut bytes);
+                            }
+                            let cl = match conn.as_mut() {
+                                Some(cl) => cl,
+                                None => {
+                                    conn = Some(
+                                        NetClient::connect(addr, d, 0, timeout).unwrap(),
+                                    );
+                                    conn.as_mut().unwrap()
+                                }
+                            };
+                            match cl.deliver(slot as u64, &bytes) {
+                                Ok(_) => done = true,
+                                Err(Error::Net(_)) | Err(Error::Codec(_)) => {
+                                    assert!(
+                                        attempt.corrupt.is_some(),
+                                        "{name} slot {slot}: clean bytes bounced"
+                                    );
+                                    rejected += 1;
+                                    conn = None; // server dropped us; reconnect
+                                }
+                                Err(e) => panic!("{name} slot {slot}: {e}"),
+                            }
+                        }
+                    }
+                    rejected
+                },
+            );
+            let c = format!("{name} seed {round_seed}");
+            assert_eq!(
+                report.delivered_slots, base.delivered,
+                "{c}: delivered set over TCP"
+            );
+            assert_eq!(report.quorum_met, base.quorum_met, "{c}: quorum verdict");
+            assert_eq!(report.bytes_up, base.uplink_bytes, "{c}: metered bytes");
+            assert_eq!(net_rejected, base.corrupt_rejected, "{c}: rejected uplinks");
+            assert_eq!(report.rejected, net_rejected, "{c}: server/client books");
+            assert_bytes_eq(&base.w, &w, &format!("{c}: weights over TCP"));
+        }
+    }
+    assert!(any_fault, "fault model fired nothing — the loopback pin is vacuous");
+}
+
+#[test]
+fn hostile_frames_never_kill_the_loopback_server() {
+    // Frame fuzz over a real socket: truncated headers, oversized
+    // declared lengths, bad magic/version/kind, handshake breaches —
+    // each drops exactly its own connection with a typed error while a
+    // full Table-1 FedMRN round completes byte-identically around them.
+    use std::io::{Read, Write};
+    let d = 1031usize;
+    let n = 5usize;
+    let scales: Vec<f32> = (0..n).map(|k| 1.0 / (k + 2) as f32).collect();
+    let payloads: Vec<Payload> = (0..n).map(|k| ing_payload("fedmrn", d, k)).collect();
+    let want = ing_oracle("fedmrn", d, &payloads, &scales);
+    let payloads_ref = &payloads;
+
+    let (w, report, hostile_count) = net_round(
+        "fedmrn",
+        d,
+        n,
+        &scales,
+        ParticipationPolicy::strict(),
+        20,
+        move |addr| {
+            let timeout = std::time::Duration::from_secs(20);
+            let hostile = |bytes: &[u8]| {
+                let mut s = std::net::TcpStream::connect(addr).unwrap();
+                s.set_read_timeout(Some(timeout)).unwrap();
+                s.write_all(bytes).unwrap();
+                s.shutdown(std::net::Shutdown::Write).unwrap();
+                let mut sink = Vec::new();
+                let _ = s.read_to_end(&mut sink);
+                sink
+            };
+            let mut count = 0u64;
+            // bad magic
+            hostile(&[0xFFu8; frame::HEADER_LEN]);
+            count += 1;
+            // wrong frame_version
+            let mut b = Frame::new(FrameKind::Hello, 0, 0, vec![0; 8]).to_bytes();
+            b[4] = 0x7F;
+            hostile(&b);
+            count += 1;
+            // unknown kind
+            let mut b = Frame::new(FrameKind::Hello, 0, 0, vec![0; 8]).to_bytes();
+            b[6] = 99;
+            hostile(&b);
+            count += 1;
+            // truncated header
+            hostile(&Frame::new(FrameKind::Hello, 0, 0, vec![0; 8]).to_bytes()[..9]);
+            count += 1;
+            // oversized declared payload_len: refused before allocation
+            let mut b = Frame::new(FrameKind::Uplink, 0, 0, Vec::new()).to_bytes();
+            b[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+            let reply = hostile(&b);
+            assert!(!reply.is_empty(), "cap breach must get a typed ERR frame");
+            count += 1;
+            // truncated payload (header promises more bytes than sent)
+            let b = Frame::new(FrameKind::Uplink, 0, 0, vec![0; 64]).to_bytes();
+            hostile(&b[..b.len() - 10]);
+            count += 1;
+            // uplink before any handshake
+            hostile(&Frame::new(FrameKind::Uplink, 0, 0, vec![1, 2, 3]).to_bytes());
+            count += 1;
+            // client id outside the round's selection
+            hostile(
+                &Frame::new(FrameKind::Hello, 0, 0, 999u64.to_le_bytes().to_vec())
+                    .to_bytes(),
+            );
+            count += 1;
+
+            // the server is still serving: a clean round lands through
+            // one reused connection, interleaved with one more breach
+            let mut cl = NetClient::connect(addr, d, 0, timeout).unwrap();
+            for slot in 0..n {
+                if slot == 2 {
+                    // mid-round hostile burst on a separate connection
+                    hostile(b"not a frame at all, definitely not");
+                    count += 1;
+                }
+                let bytes = payloads_ref[slot].try_encode().unwrap();
+                cl.deliver(slot as u64, &bytes).unwrap();
+            }
+            count
+        },
+    );
+    assert_eq!(report.delivered, n);
+    assert!(report.quorum_met);
+    assert_eq!(
+        report.rejected, hostile_count,
+        "each hostile connection must be one typed rejection"
+    );
+    assert_bytes_eq(&want, &w, "fedmrn weights despite the fuzz");
 }

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Build release and regenerate the perf-trajectory files at the repo
-# root (BENCH_bitpack.json, BENCH_aggregate.json). Schema: docs/BENCH.md.
+# root (BENCH_bitpack.json, BENCH_aggregate.json, BENCH_net.json).
+# Schema: docs/BENCH.md.
 # Rows merge by (suite, name, threads, tile, layout) key, so re-runs
 # replace rather than duplicate.
 #
@@ -31,6 +32,12 @@ if [ "$#" -gt 0 ]; then
     cargo run --release -- bench "$@"
 fi
 
+# Network rows: loopback loadgen through the TCP coordinator
+# (docs/BENCH.md "Network rows"). Merges into BENCH_net.json by
+# (suite, name, threads). Loopback only — no external sockets.
+cargo run --release -- loadgen --d 1000000 --clients 128 --conns 8 \
+    --rounds 3
+
 # Engine-level rows (pipeline=off vs pipeline=on per method) need the
 # compiled artifacts; skip cleanly on a kernel-only checkout.
 if [ -e artifacts/manifest.json ]; then
@@ -43,4 +50,4 @@ else
 fi
 
 echo "== committed perf trajectory =="
-ls -l BENCH_bitpack.json BENCH_aggregate.json
+ls -l BENCH_bitpack.json BENCH_aggregate.json BENCH_net.json
