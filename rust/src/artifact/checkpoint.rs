@@ -1,0 +1,718 @@
+//! Checkpoint artifacts: a run's full resumable state on disk, pinned
+//! by a digest manifest and (optionally) a detached HMAC signature.
+//!
+//! Directory layout — one subdirectory per checkpointed round under the
+//! configured checkpoint dir, plus a `LATEST` pointer file:
+//!
+//! ```text
+//! <dir>/
+//!   LATEST                      # "round-<k>\n" — the newest checkpoint
+//!   round-<k>/
+//!     manifest.json             # schema, fingerprint, entry digests
+//!     manifest.json.sig         # detached HMAC-SHA256 (when a key is set)
+//!     config.json               # RunConfig::to_json_value, verbatim
+//!     w.f32le                   # global state, little-endian f32
+//!     w_init.f32le              # frozen init weights (FedPM; optional)
+//!     records.json              # RoundRecord history, rounds 0..k
+//!     meter_round_uplink.u64le  # per-round byte series, little-endian u64
+//!     meter_round_downlink.u64le
+//! ```
+//!
+//! Writes are atomic at the directory level: everything lands in
+//! `round-<k>.tmp/`, which is renamed into place only once the manifest
+//! (and signature) are on disk, and `LATEST` is itself written through a
+//! tmp + rename. A crash mid-checkpoint leaves at worst a stale `.tmp`
+//! that the next write replaces — never a half-readable checkpoint.
+//!
+//! The resume contract (pinned by `tests/differential.rs` §10): loading
+//! the round-`k` checkpoint and running rounds `k..n` is byte-identical
+//! to the uninterrupted run in `w` and every non-timing record field,
+//! because the checkpoint captures the *complete* engine state — weights,
+//! byte meter, the run RNG's raw state words, and the record history.
+//! Client-side randomness needs no snapshot at all: every client stream
+//! is derived per `(client, round)` from the config seed.
+
+use std::path::{Path, PathBuf};
+
+use super::manifest::Manifest;
+use super::sha256::sha256_hex;
+use super::sign::{self, SignStatus};
+use crate::coordinator::{RoundRecord, RunConfig};
+use crate::error::{Error, Result};
+use crate::jsonx::{self, Value};
+use crate::transport::Meter;
+
+/// Manifest `kind` for run checkpoints.
+pub const CHECKPOINT_KIND: &str = "checkpoint";
+
+/// Config keys excluded from [`config_fingerprint`]: knobs that are
+/// proven result-neutral (engine selection, parallelism, checkpoint
+/// cadence — the differential harness pins byte-identical results across
+/// all of them). A resume may change these freely; anything else is a
+/// different run and the fingerprint check rejects it.
+const NEUTRAL_KEYS: &[&str] = &[
+    "threads",
+    "tile",
+    "pipeline",
+    "job_timeout_secs",
+    "checkpoint_every",
+    "checkpoint_dir",
+];
+
+/// sha256 over the canonical config JSON with result-neutral keys
+/// removed. Two configs fingerprint equal iff they produce bit-identical
+/// runs (modulo timing), which is exactly the condition for a resume to
+/// be sound.
+pub fn config_fingerprint(cfg: &RunConfig) -> String {
+    let kept = match cfg.to_json_value() {
+        Value::Obj(entries) => entries
+            .into_iter()
+            .filter(|(k, _)| !NEUTRAL_KEYS.contains(&k.as_str()))
+            .collect(),
+        other => vec![("config".to_string(), other)],
+    };
+    sha256_hex(Value::Obj(kept).to_json().as_bytes())
+}
+
+/// Dataset provenance stamped into a checkpoint so `--resume` can
+/// regenerate the exact split (splits are deterministic in the run seed
+/// and these scale knobs — see [`crate::exp::dataset_split_with`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DatasetMeta {
+    /// Dataset name as given to `fedmrn run --dataset`.
+    pub dataset: String,
+    pub per_class: usize,
+    pub test_per_class: usize,
+}
+
+/// A run's full resumable state, as captured after `next_round`
+/// completed rounds.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub config: RunConfig,
+    /// First round index the resumed run will execute.
+    pub next_round: usize,
+    /// Global state (`Federation::w`) after round `next_round - 1`.
+    pub w: Vec<f32>,
+    /// Frozen init weights for strategies that keep them (FedPM).
+    pub w_init: Option<Vec<f32>>,
+    /// Byte meter with totals and the per-round series for rounds
+    /// `0..next_round`.
+    pub meter: Meter,
+    /// Raw xoshiro256++ state words of the run RNG (the client
+    /// selector) — the only stateful RNG in the engine.
+    pub rng_state: [u64; 4],
+    /// Record history for rounds `0..next_round`.
+    pub records: Vec<RoundRecord>,
+    pub dataset: Option<DatasetMeta>,
+}
+
+// -- little-endian payload codecs -------------------------------------------
+
+fn f32s_to_le(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn f32s_from_le(bytes: &[u8], what: &str) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Artifact(format!(
+            "{what}: {} bytes is not a whole number of f32 words",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn u64s_to_le(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u64s_from_le(bytes: &[u8], what: &str) -> Result<Vec<u64>> {
+    if bytes.len() % 8 != 0 {
+        return Err(Error::Artifact(format!(
+            "{what}: {} bytes is not a whole number of u64 words",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| {
+            u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+        })
+        .collect())
+}
+
+// -- save -------------------------------------------------------------------
+
+/// Write `ck` under `dir/round-<next_round>/` atomically (tmp dir +
+/// rename), update the `LATEST` pointer, and sign the manifest when a
+/// key is given. Existing checkpoints for other rounds are kept — the
+/// directory accumulates a resumable history.
+pub fn save(ck: &Checkpoint, dir: &Path, key: Option<&[u8]>) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let name = format!("round-{}", ck.next_round);
+    let final_dir = dir.join(&name);
+    let tmp = dir.join(format!("{name}.tmp"));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp)?;
+    }
+    std::fs::create_dir_all(&tmp)?;
+
+    std::fs::write(tmp.join("config.json"), ck.config.to_json_value().to_json())?;
+    std::fs::write(tmp.join("w.f32le"), f32s_to_le(&ck.w))?;
+    if let Some(wi) = &ck.w_init {
+        std::fs::write(tmp.join("w_init.f32le"), f32s_to_le(wi))?;
+    }
+    let records: Vec<Value> = ck.records.iter().map(|r| r.to_json()).collect();
+    std::fs::write(tmp.join("records.json"), Value::Arr(records).to_json())?;
+    std::fs::write(
+        tmp.join("meter_round_uplink.u64le"),
+        u64s_to_le(&ck.meter.round_uplink),
+    )?;
+    std::fs::write(
+        tmp.join("meter_round_downlink.u64le"),
+        u64s_to_le(&ck.meter.round_downlink),
+    )?;
+
+    let mut m = Manifest::new(CHECKPOINT_KIND);
+    m.round = Some(ck.next_round as u64);
+    m.config_fingerprint = Some(config_fingerprint(&ck.config));
+    m.meta = Value::obj()
+        .set("next_round", ck.next_round)
+        .set(
+            "rng_state",
+            Value::Arr(ck.rng_state.iter().map(|&s| Value::from(s)).collect()),
+        )
+        .set(
+            "meter",
+            Value::obj()
+                .set("uplink_bytes", ck.meter.uplink_bytes)
+                .set("downlink_bytes", ck.meter.downlink_bytes)
+                .set("uplink_msgs", ck.meter.uplink_msgs),
+        )
+        .set(
+            "dataset",
+            match &ck.dataset {
+                Some(d) => Value::obj()
+                    .set("name", d.dataset.as_str())
+                    .set("per_class", d.per_class)
+                    .set("test_per_class", d.test_per_class),
+                None => Value::Null,
+            },
+        );
+    for name in [
+        "config.json",
+        "w.f32le",
+        "records.json",
+        "meter_round_uplink.u64le",
+        "meter_round_downlink.u64le",
+    ] {
+        m.add_file(&tmp, name)?;
+    }
+    if ck.w_init.is_some() {
+        m.add_file(&tmp, "w_init.f32le")?;
+    }
+    let mpath = tmp.join("manifest.json");
+    std::fs::write(&mpath, m.to_json())?;
+    if let Some(k) = key {
+        sign::sign_file(&mpath, k)?;
+    }
+
+    if final_dir.exists() {
+        std::fs::remove_dir_all(&final_dir)?;
+    }
+    std::fs::rename(&tmp, &final_dir)?;
+
+    let latest_tmp = dir.join("LATEST.tmp");
+    std::fs::write(&latest_tmp, format!("{name}\n"))?;
+    std::fs::rename(&latest_tmp, dir.join("LATEST"))?;
+    Ok(final_dir)
+}
+
+// -- load -------------------------------------------------------------------
+
+/// Resolve a user-supplied path to a concrete checkpoint directory:
+/// the path itself if it holds a `manifest.json`, else the directory
+/// named by its `LATEST` pointer, else the highest `round-<k>` child.
+pub fn resolve_dir(path: &Path) -> Result<PathBuf> {
+    if path.join("manifest.json").is_file() {
+        return Ok(path.to_path_buf());
+    }
+    let latest = path.join("LATEST");
+    if latest.is_file() {
+        let name = std::fs::read_to_string(&latest)?.trim().to_string();
+        // the pointer is data from disk: hold it to plain-child-name
+        // discipline like manifest entry paths
+        if name.is_empty()
+            || name.contains('/')
+            || name.contains('\\')
+            || name.contains("..")
+        {
+            return Err(Error::Artifact(format!(
+                "LATEST pointer {name:?} is not a plain directory name"
+            )));
+        }
+        let d = path.join(&name);
+        if d.join("manifest.json").is_file() {
+            return Ok(d);
+        }
+        return Err(Error::Artifact(format!(
+            "LATEST points at {name:?} but {name}/manifest.json is missing"
+        )));
+    }
+    let mut best: Option<(u64, PathBuf)> = None;
+    if let Ok(rd) = std::fs::read_dir(path) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(k) =
+                name.strip_prefix("round-").and_then(|s| s.parse::<u64>().ok())
+            {
+                let d = e.path();
+                if d.join("manifest.json").is_file()
+                    && best.as_ref().map_or(true, |(b, _)| k > *b)
+                {
+                    best = Some((k, d));
+                }
+            }
+        }
+    }
+    best.map(|(_, d)| d).ok_or_else(|| {
+        Error::Artifact(format!(
+            "{}: no checkpoint found (no manifest.json, LATEST pointer, or \
+             round-* directory)",
+            path.display()
+        ))
+    })
+}
+
+fn meta_u64(v: &Value, key: &str) -> Result<u64> {
+    v.req(key)?
+        .as_u64()
+        .ok_or_else(|| Error::Artifact(format!("meta {key} is not an integer")))
+}
+
+/// Load and fully validate a checkpoint: signature (per the key given),
+/// payload digests, config fingerprint, and internal consistency
+/// (record / meter-series lengths match `next_round`). Any mismatch is
+/// a typed error; nothing about a hostile artifact can panic or
+/// over-allocate (sizes are validated by the manifest layer before any
+/// read).
+pub fn load(path: &Path, key: Option<&[u8]>) -> Result<(Checkpoint, SignStatus)> {
+    let dir = resolve_dir(path)?;
+    let mpath = dir.join("manifest.json");
+    let status = sign::verify_file(&mpath, key)?;
+    let m = Manifest::load(&mpath)?;
+    if m.kind != CHECKPOINT_KIND {
+        return Err(Error::Artifact(format!(
+            "manifest kind {:?} is not {CHECKPOINT_KIND:?}",
+            m.kind
+        )));
+    }
+    m.verify_payloads(&dir)?;
+
+    let cfg_bytes = m.read_payload(&dir, "config.json")?;
+    let cfg_text = String::from_utf8(cfg_bytes)
+        .map_err(|_| Error::Artifact("config.json is not UTF-8".into()))?;
+    let config = RunConfig::from_json_value(&jsonx::parse(&cfg_text)?)?;
+    let fp = config_fingerprint(&config);
+    match &m.config_fingerprint {
+        Some(want) if *want == fp => {}
+        Some(want) => {
+            return Err(Error::Artifact(format!(
+                "config fingerprint mismatch: manifest declares {want}, \
+                 config.json hashes to {fp}"
+            )))
+        }
+        None => {
+            return Err(Error::Artifact(
+                "checkpoint manifest has no config_fingerprint".into(),
+            ))
+        }
+    }
+
+    let next_round = meta_u64(&m.meta, "next_round")? as usize;
+    if m.round != Some(next_round as u64) {
+        return Err(Error::Artifact(format!(
+            "manifest round {:?} disagrees with meta next_round {next_round}",
+            m.round
+        )));
+    }
+    if next_round == 0 || next_round > config.rounds {
+        return Err(Error::Artifact(format!(
+            "next_round {next_round} out of range (run has {} rounds)",
+            config.rounds
+        )));
+    }
+    let raw_state = m
+        .meta
+        .req("rng_state")?
+        .as_arr()
+        .ok_or_else(|| Error::Artifact("meta rng_state is not an array".into()))?;
+    if raw_state.len() != 4 {
+        return Err(Error::Artifact(format!(
+            "meta rng_state has {} words, want 4",
+            raw_state.len()
+        )));
+    }
+    let mut rng_state = [0u64; 4];
+    for (i, w) in raw_state.iter().enumerate() {
+        rng_state[i] = w.as_u64().ok_or_else(|| {
+            Error::Artifact(format!("meta rng_state[{i}] is not a u64"))
+        })?;
+    }
+    if rng_state == [0; 4] {
+        return Err(Error::Artifact(
+            "meta rng_state is all-zero (not a valid xoshiro state)".into(),
+        ));
+    }
+
+    let mv = m.meta.req("meter")?;
+    let meter = Meter {
+        uplink_bytes: meta_u64(mv, "uplink_bytes")?,
+        downlink_bytes: meta_u64(mv, "downlink_bytes")?,
+        uplink_msgs: meta_u64(mv, "uplink_msgs")?,
+        round_uplink: u64s_from_le(
+            &m.read_payload(&dir, "meter_round_uplink.u64le")?,
+            "meter_round_uplink.u64le",
+        )?,
+        round_downlink: u64s_from_le(
+            &m.read_payload(&dir, "meter_round_downlink.u64le")?,
+            "meter_round_downlink.u64le",
+        )?,
+    };
+
+    let w = f32s_from_le(&m.read_payload(&dir, "w.f32le")?, "w.f32le")?;
+    let w_init = if m.entry("w_init.f32le").is_ok() {
+        Some(f32s_from_le(
+            &m.read_payload(&dir, "w_init.f32le")?,
+            "w_init.f32le",
+        )?)
+    } else {
+        None
+    };
+
+    let rec_bytes = m.read_payload(&dir, "records.json")?;
+    let rec_text = String::from_utf8(rec_bytes)
+        .map_err(|_| Error::Artifact("records.json is not UTF-8".into()))?;
+    let raw_records = jsonx::parse(&rec_text)?;
+    let raw_records = raw_records
+        .as_arr()
+        .ok_or_else(|| Error::Artifact("records.json is not an array".into()))?;
+    let mut records = Vec::with_capacity(raw_records.len());
+    for r in raw_records {
+        records.push(RoundRecord::from_json(r)?);
+    }
+
+    if records.len() != next_round
+        || meter.round_uplink.len() != next_round
+        || meter.round_downlink.len() != next_round
+    {
+        return Err(Error::Artifact(format!(
+            "checkpoint claims {next_round} completed rounds but carries \
+             {} records and {}/{} meter rows",
+            records.len(),
+            meter.round_uplink.len(),
+            meter.round_downlink.len()
+        )));
+    }
+    if w.is_empty() {
+        return Err(Error::Artifact("checkpoint w is empty".into()));
+    }
+
+    let dataset = match m.meta.get("dataset") {
+        None | Some(Value::Null) => None,
+        Some(d) => Some(DatasetMeta {
+            dataset: d
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| {
+                    Error::Artifact("meta dataset.name is not a string".into())
+                })?
+                .to_string(),
+            per_class: meta_u64(d, "per_class")? as usize,
+            test_per_class: meta_u64(d, "test_per_class")? as usize,
+        }),
+    };
+
+    Ok((
+        Checkpoint {
+            config,
+            next_round,
+            w,
+            w_init,
+            meter,
+            rng_state,
+            records,
+            dataset,
+        },
+        status,
+    ))
+}
+
+// -- engine hook ------------------------------------------------------------
+
+/// The engine's checkpoint writer, built once per run from the config.
+/// Holds everything `run_rounds` can't know: the output directory and
+/// cadence, the signing key (resolved once, from `FEDMRN_SIGN_KEY`),
+/// dataset provenance, and — on a resumed run — the record history from
+/// before the resume point, so every checkpoint carries rounds `0..k`.
+pub struct CheckpointSink {
+    dir: PathBuf,
+    every: usize,
+    key: Option<Vec<u8>>,
+    dataset: Option<DatasetMeta>,
+    prior: Vec<RoundRecord>,
+}
+
+impl CheckpointSink {
+    /// `None` when checkpointing is off (`checkpoint_every == 0`).
+    pub fn for_config(cfg: &RunConfig) -> Result<Option<CheckpointSink>> {
+        if cfg.checkpoint_every == 0 {
+            return Ok(None);
+        }
+        let dir = cfg.checkpoint_dir.clone().ok_or_else(|| {
+            Error::Config("--checkpoint-every requires --checkpoint-dir".into())
+        })?;
+        Ok(Some(CheckpointSink {
+            dir: PathBuf::from(dir),
+            every: cfg.checkpoint_every,
+            key: sign::resolve_key(None)?,
+            dataset: None,
+            prior: Vec::new(),
+        }))
+    }
+
+    pub fn with_dataset(mut self, dataset: Option<DatasetMeta>) -> CheckpointSink {
+        self.dataset = dataset;
+        self
+    }
+
+    pub fn with_prior(mut self, prior: Vec<RoundRecord>) -> CheckpointSink {
+        self.prior = prior;
+        self
+    }
+
+    /// Checkpoint after `completed` rounds?
+    pub fn should_write(&self, completed: usize) -> bool {
+        completed > 0 && completed % self.every == 0
+    }
+
+    /// Capture-and-save: `new_records` are the records produced since
+    /// the run (re)started; the sink prepends its prior history.
+    #[allow(clippy::too_many_arguments)]
+    pub fn write(
+        &self,
+        cfg: &RunConfig,
+        next_round: usize,
+        w: &[f32],
+        w_init: Option<&[f32]>,
+        meter: &Meter,
+        rng_state: [u64; 4],
+        new_records: &[RoundRecord],
+    ) -> Result<PathBuf> {
+        let mut records = self.prior.clone();
+        records.extend_from_slice(new_records);
+        let ck = Checkpoint {
+            config: cfg.clone(),
+            next_round,
+            w: w.to_vec(),
+            w_init: w_init.map(|x| x.to_vec()),
+            meter: meter.clone(),
+            rng_state,
+            records,
+            dataset: self.dataset.clone(),
+        };
+        save(&ck, &self.dir, self.key.as_deref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Method;
+    use crate::noise::NoiseDist;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedmrn_ckpt_{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn record(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 0.5 / (round + 1) as f64,
+            test_loss: f64::NAN,
+            test_acc: f64::NAN,
+            uplink_bytes: 1000 + round as u64,
+            downlink_bytes: 2000 + round as u64,
+            train_ms: 1.0,
+            compress_ms: 0.5,
+            selected: 4,
+            participants: 4,
+            retries: 0,
+            corrupt_rejected: 0,
+            quorum_met: true,
+            dropped: Vec::new(),
+        }
+    }
+
+    fn checkpoint(next_round: usize) -> Checkpoint {
+        let noise = NoiseDist::Uniform { alpha: 0.01 };
+        let mut cfg =
+            RunConfig::new("smoke_mlp", Method::parse("fedmrn", noise).unwrap());
+        cfg.rounds = 8;
+        let mut meter = Meter::new();
+        for r in 0..next_round {
+            meter.round_uplink.push(1000 + r as u64);
+            meter.round_downlink.push(2000 + r as u64);
+            meter.uplink_bytes += 1000 + r as u64;
+            meter.downlink_bytes += 2000 + r as u64;
+            meter.uplink_msgs += 4;
+        }
+        Checkpoint {
+            config: cfg,
+            next_round,
+            // exercise exact f32 bit round-trips, incl. -0.0 and subnormals
+            w: vec![1.5, -0.0, f32::MIN_POSITIVE / 2.0, -3.25e-7, 42.0],
+            w_init: None,
+            meter,
+            rng_state: [u64::MAX, 2, 3, 4],
+            records: (0..next_round).map(record).collect(),
+            dataset: Some(DatasetMeta {
+                dataset: "smoke".into(),
+                per_class: 24,
+                test_per_class: 16,
+            }),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_bit_exact() {
+        let dir = tmp("roundtrip");
+        let ck = checkpoint(2);
+        let written = save(&ck, &dir, None).unwrap();
+        assert_eq!(written, dir.join("round-2"));
+        assert_eq!(
+            std::fs::read_to_string(dir.join("LATEST")).unwrap().trim(),
+            "round-2"
+        );
+
+        // resolve via the parent dir (LATEST) and the round dir directly
+        for path in [dir.clone(), dir.join("round-2")] {
+            let (back, status) = load(&path, None).unwrap();
+            assert_eq!(status, SignStatus::Unsigned);
+            assert_eq!(back.next_round, 2);
+            assert_eq!(back.w.len(), ck.w.len());
+            for (a, b) in back.w.iter().zip(&ck.w) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(back.rng_state, ck.rng_state);
+            assert_eq!(back.meter.uplink_bytes, ck.meter.uplink_bytes);
+            assert_eq!(back.meter.round_uplink, ck.meter.round_uplink);
+            assert_eq!(back.meter.round_downlink, ck.meter.round_downlink);
+            assert_eq!(back.records.len(), 2);
+            assert_eq!(back.records[1].uplink_bytes, 1001);
+            assert!(back.records[1].test_acc.is_nan());
+            assert_eq!(back.dataset, ck.dataset);
+            assert_eq!(
+                config_fingerprint(&back.config),
+                config_fingerprint(&ck.config)
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_tracks_the_newest_round_and_old_rounds_stay() {
+        let dir = tmp("latest");
+        save(&checkpoint(2), &dir, None).unwrap();
+        save(&checkpoint(4), &dir, None).unwrap();
+        assert!(dir.join("round-2/manifest.json").is_file(), "history kept");
+        let (back, _) = load(&dir, None).unwrap();
+        assert_eq!(back.next_round, 4);
+        let (old, _) = load(&dir.join("round-2"), None).unwrap();
+        assert_eq!(old.next_round, 2);
+
+        // no LATEST → fall back to the highest round-* child
+        std::fs::remove_file(dir.join("LATEST")).unwrap();
+        let (back, _) = load(&dir, None).unwrap();
+        assert_eq!(back.next_round, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn signed_checkpoint_verifies_and_rejects_wrong_key() {
+        let dir = tmp("signed");
+        save(&checkpoint(2), &dir, Some(b"k1")).unwrap();
+        let (_, status) = load(&dir, Some(b"k1")).unwrap();
+        assert_eq!(status, SignStatus::SignedVerified);
+        let (_, status) = load(&dir, None).unwrap();
+        assert_eq!(status, SignStatus::SignedUnverified);
+        let err = load(&dir, Some(b"wrong")).unwrap_err();
+        assert!(matches!(err, Error::Signature(_)), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_ignores_neutral_knobs_only() {
+        let noise = NoiseDist::Uniform { alpha: 0.01 };
+        let base =
+            RunConfig::new("smoke_mlp", Method::parse("fedmrn", noise).unwrap());
+        let fp = config_fingerprint(&base);
+
+        let mut neutral = base.clone();
+        neutral.threads = 8;
+        neutral.tile = 4096;
+        neutral.pipeline = true;
+        neutral.job_timeout_secs = 99;
+        neutral.checkpoint_every = 3;
+        neutral.checkpoint_dir = Some("/tmp/elsewhere".into());
+        assert_eq!(config_fingerprint(&neutral), fp, "neutral knobs excluded");
+
+        let mut hot = base.clone();
+        hot.seed = 2;
+        assert_ne!(config_fingerprint(&hot), fp, "seed is result-affecting");
+        let mut hot = base;
+        hot.lr = 0.2;
+        assert_ne!(config_fingerprint(&hot), fp, "lr is result-affecting");
+    }
+
+    #[test]
+    fn hostile_latest_pointer_rejected() {
+        let dir = tmp("hostile_latest");
+        save(&checkpoint(2), &dir, None).unwrap();
+        for bad in ["../escape", "a/b", "round-2/.."] {
+            std::fs::write(dir.join("LATEST"), bad).unwrap();
+            let err = load(&dir, None).unwrap_err();
+            assert!(matches!(err, Error::Artifact(_)), "{bad}: {err}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inconsistent_round_counts_rejected() {
+        // records.json claiming fewer rounds than next_round must reject
+        // even though every digest matches (the manifest pins whatever
+        // was written — consistency is the loader's job)
+        let dir = tmp("inconsistent");
+        let mut ck = checkpoint(3);
+        ck.records.pop();
+        save(&ck, &dir, None).unwrap();
+        let err = load(&dir, None).unwrap_err();
+        assert!(err.to_string().contains("2 records"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,408 @@
+//! Versioned, digest-pinned artifact manifests (SNIPPETS Snippet 1 /
+//! artcode RFC 0005 shape: a `manifest.json` naming payload files, each
+//! with a byte length and a sha256).
+//!
+//! Boundary discipline mirrors `Payload::decode`: every declared size is
+//! validated *before* any allocation or file read, unknown schema
+//! versions are typed errors (never a best-effort parse), and a digest
+//! mismatch on any payload rejects the whole artifact — there is no
+//! partial load that silently diverges.
+
+use std::path::{Path, PathBuf};
+
+use super::sha256::{sha256_file, sha256_hex};
+use crate::error::{Error, Result};
+use crate::jsonx::{self, Value};
+
+/// The one schema this build reads and writes. Readers reject anything
+/// else with a typed error; bumping it is a deliberate wire event (the
+/// `MaskedSeed` layout-tag precedent).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Hard cap on a single declared payload size (checked before the file
+/// is opened, let alone read). d=4M f32 weights are 16 MB; 1 GiB leaves
+/// room for absurd-but-honest payloads while a hostile manifest cannot
+/// demand an allocation past it.
+pub const MAX_ENTRY_BYTES: u64 = 1 << 30;
+
+/// One payload file named by the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    /// File name relative to the manifest's directory. Plain names
+    /// only — separators and `..` are rejected at parse time so a
+    /// hostile manifest cannot traverse outside its artifact dir.
+    pub path: String,
+    pub bytes: u64,
+    /// Lowercase hex sha256 of the file contents.
+    pub sha256: String,
+}
+
+/// A parsed, validated artifact manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub schema_version: u64,
+    /// Artifact kind: `"checkpoint"` for run state, `"files"` for a
+    /// plain signed file set (bench trajectories).
+    pub kind: String,
+    /// Next round index for checkpoints (absent for `"files"`).
+    pub round: Option<u64>,
+    /// Fingerprint of the producing run's config (see
+    /// [`crate::artifact::checkpoint::config_fingerprint`]); absent for
+    /// plain file sets.
+    pub config_fingerprint: Option<String>,
+    /// Free-form metadata object (RNG state, meter totals, dataset
+    /// provenance — whatever the producer wants digest-pinned alongside
+    /// the entries; the signature covers it because it covers the
+    /// manifest bytes).
+    pub meta: Value,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn new(kind: &str) -> Manifest {
+        Manifest {
+            schema_version: SCHEMA_VERSION,
+            kind: kind.to_string(),
+            round: None,
+            config_fingerprint: None,
+            meta: Value::obj(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Hash `dir/name` and append it as an entry.
+    pub fn add_file(&mut self, dir: &Path, name: &str) -> Result<()> {
+        validate_entry_path(name)?;
+        let p = dir.join(name);
+        let len = std::fs::metadata(&p)
+            .map_err(|e| Error::Artifact(format!("stat {}: {e}", p.display())))?
+            .len();
+        if len > MAX_ENTRY_BYTES {
+            return Err(Error::Artifact(format!(
+                "{name}: {len} bytes exceeds the {MAX_ENTRY_BYTES}-byte entry cap"
+            )));
+        }
+        let digest = sha256_file(&p)
+            .map_err(|e| Error::Artifact(format!("read {}: {e}", p.display())))?;
+        self.entries.push(Entry {
+            path: name.to_string(),
+            bytes: len,
+            sha256: super::sha256::hex(&digest),
+        });
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.path == name)
+            .ok_or_else(|| Error::Artifact(format!("manifest has no entry {name:?}")))
+    }
+
+    // -- serialization -----------------------------------------------------
+
+    pub fn to_value(&self) -> Value {
+        let entries: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Value::obj()
+                    .set("path", e.path.as_str())
+                    .set("bytes", e.bytes)
+                    .set("sha256", e.sha256.as_str())
+            })
+            .collect();
+        let mut v = Value::obj()
+            .set("schema_version", self.schema_version)
+            .set("kind", self.kind.as_str());
+        if let Some(r) = self.round {
+            v = v.set("round", r);
+        }
+        if let Some(fp) = &self.config_fingerprint {
+            v = v.set("config_fingerprint", fp.as_str());
+        }
+        v.set("meta", self.meta.clone()).set("entries", Value::Arr(entries))
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().to_json()
+    }
+
+    pub fn from_json(text: &str) -> Result<Manifest> {
+        Self::from_value(&jsonx::parse(text)?)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Manifest> {
+        let schema_version = v
+            .req("schema_version")?
+            .as_u64()
+            .ok_or_else(|| Error::Artifact("schema_version is not an integer".into()))?;
+        if schema_version != SCHEMA_VERSION {
+            return Err(Error::Artifact(format!(
+                "unsupported schema_version {schema_version} (this build reads \
+                 {SCHEMA_VERSION})"
+            )));
+        }
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| Error::Artifact("kind is not a string".into()))?
+            .to_string();
+        let round = match v.get("round") {
+            None => None,
+            Some(r) => Some(r.as_u64().ok_or_else(|| {
+                Error::Artifact("round is not a non-negative integer".into())
+            })?),
+        };
+        let config_fingerprint = match v.get("config_fingerprint") {
+            None => None,
+            Some(f) => Some(
+                f.as_str()
+                    .ok_or_else(|| {
+                        Error::Artifact("config_fingerprint is not a string".into())
+                    })?
+                    .to_string(),
+            ),
+        };
+        let meta = v.get("meta").cloned().unwrap_or_else(Value::obj);
+        let raw_entries = v
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("entries is not an array".into()))?;
+        let mut entries = Vec::with_capacity(raw_entries.len());
+        for e in raw_entries {
+            let path = e
+                .req("path")?
+                .as_str()
+                .ok_or_else(|| Error::Artifact("entry path is not a string".into()))?
+                .to_string();
+            validate_entry_path(&path)?;
+            let bytes = e.req("bytes")?.as_u64().ok_or_else(|| {
+                Error::Artifact(format!("entry {path:?}: bytes is not an integer"))
+            })?;
+            if bytes > MAX_ENTRY_BYTES {
+                return Err(Error::Artifact(format!(
+                    "entry {path:?} declares {bytes} bytes, past the \
+                     {MAX_ENTRY_BYTES}-byte cap"
+                )));
+            }
+            let sha = e.req("sha256")?.as_str().ok_or_else(|| {
+                Error::Artifact(format!("entry {path:?}: sha256 is not a string"))
+            })?;
+            if sha.len() != 64
+                || !sha.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+            {
+                return Err(Error::Artifact(format!(
+                    "entry {path:?}: sha256 is not 64 lowercase hex chars"
+                )));
+            }
+            if entries.iter().any(|prev: &Entry| prev.path == path) {
+                return Err(Error::Artifact(format!("duplicate entry {path:?}")));
+            }
+            entries.push(Entry { path, bytes, sha256: sha.to_string() });
+        }
+        Ok(Manifest {
+            schema_version,
+            kind,
+            round,
+            config_fingerprint,
+            meta,
+            entries,
+        })
+    }
+
+    /// Load and validate `path` (errors carry the file path via
+    /// `jsonx::parse_file`).
+    pub fn load(path: &Path) -> Result<Manifest> {
+        Self::from_value(&jsonx::parse_file(path)?)
+    }
+
+    // -- payload verification ---------------------------------------------
+
+    /// Check every entry against the files in `dir`: declared size must
+    /// match the on-disk size (before hashing — the cheap reject), then
+    /// the digest must match. Any mismatch is a typed error naming the
+    /// entry.
+    pub fn verify_payloads(&self, dir: &Path) -> Result<()> {
+        for e in &self.entries {
+            let p = dir.join(&e.path);
+            let len = std::fs::metadata(&p)
+                .map_err(|_| {
+                    Error::Artifact(format!("payload {} is missing", e.path))
+                })?
+                .len();
+            if len != e.bytes {
+                return Err(Error::Artifact(format!(
+                    "payload {}: {len} bytes on disk, manifest declares {}",
+                    e.path, e.bytes
+                )));
+            }
+            let digest = sha256_file(&p)
+                .map_err(|err| Error::Artifact(format!("read {}: {err}", e.path)))?;
+            if super::sha256::hex(&digest) != e.sha256 {
+                return Err(Error::Artifact(format!(
+                    "payload {}: digest mismatch (tampered or corrupt)",
+                    e.path
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Read one payload, validating its declared size before allocating
+    /// and its digest after reading.
+    pub fn read_payload(&self, dir: &Path, name: &str) -> Result<Vec<u8>> {
+        let e = self.entry(name)?;
+        let p = dir.join(&e.path);
+        let len = std::fs::metadata(&p)
+            .map_err(|_| Error::Artifact(format!("payload {name} is missing")))?
+            .len();
+        if len != e.bytes {
+            return Err(Error::Artifact(format!(
+                "payload {name}: {len} bytes on disk, manifest declares {}",
+                e.bytes
+            )));
+        }
+        let data = std::fs::read(&p)
+            .map_err(|err| Error::Artifact(format!("read {name}: {err}")))?;
+        if sha256_hex(&data) != e.sha256 {
+            return Err(Error::Artifact(format!(
+                "payload {name}: digest mismatch (tampered or corrupt)"
+            )));
+        }
+        Ok(data)
+    }
+}
+
+/// Entry paths are plain file names within the artifact directory —
+/// no separators, no traversal, nothing hidden.
+fn validate_entry_path(p: &str) -> Result<()> {
+    if p.is_empty()
+        || p.contains('/')
+        || p.contains('\\')
+        || p.contains("..")
+        || p.starts_with('.')
+    {
+        return Err(Error::Artifact(format!(
+            "entry path {p:?} is not a plain file name"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedmrn_manifest_{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_and_verify() {
+        let dir = tmp("roundtrip");
+        std::fs::write(dir.join("a.bin"), b"hello payload").unwrap();
+        std::fs::write(dir.join("b.bin"), vec![7u8; 1000]).unwrap();
+        let mut m = Manifest::new("files");
+        m.add_file(&dir, "a.bin").unwrap();
+        m.add_file(&dir, "b.bin").unwrap();
+        m.meta = Value::obj().set("producer", "test");
+
+        let text = m.to_json();
+        let back = Manifest::from_json(&text).unwrap();
+        assert_eq!(back, m);
+        back.verify_payloads(&dir).unwrap();
+        assert_eq!(back.read_payload(&dir, "a.bin").unwrap(), b"hello payload");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_schema_version_is_typed_error() {
+        let m = Manifest::new("files");
+        let text = m.to_json().replace("\"schema_version\":1", "\"schema_version\":2");
+        let err = Manifest::from_json(&text).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+        assert!(err.to_string().contains("schema_version 2"), "{err}");
+    }
+
+    #[test]
+    fn oversized_declared_entry_rejected_before_read() {
+        let huge = MAX_ENTRY_BYTES + 1;
+        let text = format!(
+            "{{\"schema_version\":1,\"kind\":\"files\",\"entries\":[\
+             {{\"path\":\"w.bin\",\"bytes\":{huge},\"sha256\":\"{}\"}}]}}",
+            "0".repeat(64)
+        );
+        let err = Manifest::from_json(&text).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn hostile_entry_paths_rejected() {
+        for bad in ["../w.bin", "a/b.bin", "a\\b.bin", "", ".hidden", "a..b"] {
+            let text = format!(
+                "{{\"schema_version\":1,\"kind\":\"files\",\"entries\":[\
+                 {{\"path\":{:?},\"bytes\":1,\"sha256\":\"{}\"}}]}}",
+                bad,
+                "0".repeat(64)
+            );
+            assert!(
+                Manifest::from_json(&text).is_err(),
+                "path {bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn size_and_digest_mismatches_are_typed() {
+        let dir = tmp("mismatch");
+        std::fs::write(dir.join("a.bin"), b"original contents").unwrap();
+        let mut m = Manifest::new("files");
+        m.add_file(&dir, "a.bin").unwrap();
+
+        // same length, different bytes → digest mismatch
+        std::fs::write(dir.join("a.bin"), b"tampered contents").unwrap();
+        let err = m.verify_payloads(&dir).unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+        let err = m.read_payload(&dir, "a.bin").unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+
+        // different length → size mismatch (before hashing)
+        std::fs::write(dir.join("a.bin"), b"short").unwrap();
+        let err = m.verify_payloads(&dir).unwrap_err();
+        assert!(err.to_string().contains("bytes on disk"), "{err}");
+
+        // missing file
+        std::fs::remove_file(dir.join("a.bin")).unwrap();
+        let err = m.verify_payloads(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_entries_rejected() {
+        let text = format!(
+            "{{\"schema_version\":1,\"kind\":\"files\",\"entries\":[\
+             {{\"path\":\"a.bin\",\"bytes\":1,\"sha256\":\"{h}\"}},\
+             {{\"path\":\"a.bin\",\"bytes\":2,\"sha256\":\"{h}\"}}]}}",
+            h = "0".repeat(64)
+        );
+        let err = Manifest::from_json(&text).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn u64_round_and_meta_survive() {
+        let mut m = Manifest::new("checkpoint");
+        m.round = Some(12);
+        m.config_fingerprint = Some("ab".repeat(32));
+        m.meta = Value::obj().set("rng_s0", u64::MAX).set("next_round", 12u64);
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.round, Some(12));
+        assert_eq!(back.meta.get("rng_s0").unwrap().as_u64(), Some(u64::MAX));
+        assert_eq!(back, m);
+    }
+}

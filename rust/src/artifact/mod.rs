@@ -1,0 +1,29 @@
+//! Signed, resumable run artifacts (docs/ARTIFACT.md).
+//!
+//! Four layers, each usable on its own:
+//!
+//! * [`sha256`] — dependency-free SHA-256 / HMAC-SHA256, pinned by NIST
+//!   and RFC 4231 golden vectors (the same no-crates discipline as
+//!   [`crate::jsonx`]).
+//! * [`manifest`] — versioned `manifest.json` naming payload files with
+//!   per-entry byte lengths and digests; declared sizes are validated
+//!   before any allocation, unknown schema versions and digest
+//!   mismatches are typed errors.
+//! * [`sign`] — detached HMAC-SHA256 over the manifest bytes
+//!   (`manifest.json.sig`); because payload digests live inside the
+//!   manifest, the signature transitively pins every payload.
+//! * [`checkpoint`] — the run-state artifact: weights, byte meter, run
+//!   RNG state and record history under one manifest, written atomically
+//!   every `--checkpoint-every` rounds and resumable byte-identically
+//!   (`fedmrn run --resume`, pinned by `tests/differential.rs` §10).
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod sha256;
+pub mod sign;
+
+pub use checkpoint::{
+    config_fingerprint, Checkpoint, CheckpointSink, DatasetMeta,
+};
+pub use manifest::{Entry, Manifest, MAX_ENTRY_BYTES, SCHEMA_VERSION};
+pub use sign::SignStatus;

@@ -1,0 +1,237 @@
+//! Detached HMAC-SHA256 signing of manifest bytes.
+//!
+//! The signature lives next to the manifest as `<manifest>.sig` — 64
+//! lowercase hex chars plus a trailing newline — and covers the exact
+//! manifest file bytes. Because every payload's sha256 is *inside* the
+//! manifest, signing the manifest transitively pins the payloads: flip
+//! one bit anywhere and either the digest check ([`Error::Artifact`])
+//! or the HMAC check ([`Error::Signature`]) rejects.
+//!
+//! Keys are raw bytes from a file (`--key`) or the `FEDMRN_SIGN_KEY`
+//! environment variable (the CI/bench path). Verification distinguishes
+//! three outcomes by type: unsigned (no `.sig` when one was demanded),
+//! bad signature (HMAC mismatch), and — at the caller's layer — bad
+//! digest from the manifest's own payload verification.
+
+use std::path::{Path, PathBuf};
+
+use super::sha256::{ct_eq, hex, hmac_sha256};
+use crate::error::{Error, Result};
+
+/// Environment variable consulted when no key file is given.
+pub const KEY_ENV: &str = "FEDMRN_SIGN_KEY";
+
+/// How a manifest's signature checked out (the non-error outcomes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SignStatus {
+    /// A `.sig` was present and its HMAC matched under the given key.
+    SignedVerified,
+    /// A `.sig` was present but no key was supplied to check it.
+    SignedUnverified,
+    /// No `.sig` next to the manifest (and no key demanded one).
+    Unsigned,
+}
+
+impl SignStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SignStatus::SignedVerified => "signed (verified)",
+            SignStatus::SignedUnverified => "signed (no key given; unverified)",
+            SignStatus::Unsigned => "unsigned",
+        }
+    }
+}
+
+/// `<manifest>.sig` — the detached signature path for a manifest file.
+pub fn sig_path(manifest: &Path) -> PathBuf {
+    let mut os = manifest.as_os_str().to_os_string();
+    os.push(".sig");
+    PathBuf::from(os)
+}
+
+/// Resolve a signing key: the key file if given, else `FEDMRN_SIGN_KEY`,
+/// else `None`. An empty key (empty file or empty env var) is a typed
+/// error rather than a silently weak MAC.
+pub fn resolve_key(key_file: Option<&str>) -> Result<Option<Vec<u8>>> {
+    let key = match key_file {
+        Some(p) => Some(std::fs::read(p).map_err(|e| {
+            Error::Signature(format!("read key file {p}: {e}"))
+        })?),
+        None => std::env::var(KEY_ENV).ok().map(|s| s.into_bytes()),
+    };
+    if let Some(k) = &key {
+        if k.is_empty() {
+            return Err(Error::Signature("signing key is empty".into()));
+        }
+    }
+    Ok(key)
+}
+
+/// Sign the manifest file's exact bytes; writes `<manifest>.sig`
+/// atomically (tmp + rename) and returns its path.
+pub fn sign_file(manifest: &Path, key: &[u8]) -> Result<PathBuf> {
+    if key.is_empty() {
+        return Err(Error::Signature("signing key is empty".into()));
+    }
+    let bytes = std::fs::read(manifest).map_err(|e| {
+        Error::Signature(format!("read {}: {e}", manifest.display()))
+    })?;
+    let mac = hmac_sha256(key, &bytes);
+    let sp = sig_path(manifest);
+    let tmp = sp.with_extension("sig.tmp");
+    std::fs::write(&tmp, format!("{}\n", hex(&mac)))?;
+    std::fs::rename(&tmp, &sp)?;
+    Ok(sp)
+}
+
+/// Verify the manifest file's detached signature.
+///
+/// * `.sig` present, key given → HMAC check: [`SignStatus::SignedVerified`]
+///   or a typed [`Error::Signature`] on mismatch / malformed sig.
+/// * `.sig` present, no key → [`SignStatus::SignedUnverified`].
+/// * no `.sig`, key given → typed [`Error::Signature`] ("unsigned").
+/// * no `.sig`, no key → [`SignStatus::Unsigned`].
+pub fn verify_file(manifest: &Path, key: Option<&[u8]>) -> Result<SignStatus> {
+    let sp = sig_path(manifest);
+    let sig_text = match std::fs::read_to_string(&sp) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return match key {
+                Some(_) => Err(Error::Signature(format!(
+                    "{} is unsigned (no {})",
+                    manifest.display(),
+                    sp.display()
+                ))),
+                None => Ok(SignStatus::Unsigned),
+            };
+        }
+        Err(e) => {
+            return Err(Error::Signature(format!("read {}: {e}", sp.display())))
+        }
+    };
+    let Some(key) = key else {
+        return Ok(SignStatus::SignedUnverified);
+    };
+    let sig_hex = sig_text.trim();
+    let expected = decode_hex64(sig_hex).ok_or_else(|| {
+        Error::Signature(format!(
+            "{}: malformed signature (want 64 hex chars)",
+            sp.display()
+        ))
+    })?;
+    let bytes = std::fs::read(manifest).map_err(|e| {
+        Error::Signature(format!("read {}: {e}", manifest.display()))
+    })?;
+    let mac = hmac_sha256(key, &bytes);
+    if !ct_eq(&mac, &expected) {
+        return Err(Error::Signature(format!(
+            "{}: signature mismatch (manifest tampered or wrong key)",
+            manifest.display()
+        )));
+    }
+    Ok(SignStatus::SignedVerified)
+}
+
+fn decode_hex64(s: &str) -> Option<[u8; 32]> {
+    if s.len() != 64 {
+        return None;
+    }
+    let mut out = [0u8; 32];
+    for (i, chunk) in s.as_bytes().chunks_exact(2).enumerate() {
+        let hi = (chunk[0] as char).to_digit(16)?;
+        let lo = (chunk[1] as char).to_digit(16)?;
+        out[i] = ((hi << 4) | lo) as u8;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedmrn_sign_{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn sign_verify_roundtrip() {
+        let dir = tmp("roundtrip");
+        let m = dir.join("manifest.json");
+        std::fs::write(&m, b"{\"schema_version\":1}").unwrap();
+        let sp = sign_file(&m, b"fedmrn-dev-key").unwrap();
+        assert_eq!(sp, sig_path(&m));
+        // HMAC pinned against python hmac/hashlib for these exact bytes
+        let sig = std::fs::read_to_string(&sp).unwrap();
+        assert_eq!(
+            sig.trim(),
+            "1cc5ba262636c13e8a8b312298e1ea182562608455149e32193b1b15d9652a7f"
+        );
+        assert_eq!(
+            verify_file(&m, Some(b"fedmrn-dev-key")).unwrap(),
+            SignStatus::SignedVerified
+        );
+        assert_eq!(
+            verify_file(&m, None).unwrap(),
+            SignStatus::SignedUnverified
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_manifest_and_wrong_key_are_signature_errors() {
+        let dir = tmp("tamper");
+        let m = dir.join("manifest.json");
+        std::fs::write(&m, b"{\"schema_version\":1}").unwrap();
+        sign_file(&m, b"k1").unwrap();
+
+        // wrong key
+        let err = verify_file(&m, Some(b"k2")).unwrap_err();
+        assert!(matches!(err, Error::Signature(_)), "{err}");
+
+        // tampered manifest bytes (same length)
+        std::fs::write(&m, b"{\"schema_version\":9}").unwrap();
+        let err = verify_file(&m, Some(b"k1")).unwrap_err();
+        assert!(err.to_string().contains("signature mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unsigned_with_key_is_typed_error_without_key_is_status() {
+        let dir = tmp("unsigned");
+        let m = dir.join("manifest.json");
+        std::fs::write(&m, b"{}").unwrap();
+        assert_eq!(verify_file(&m, None).unwrap(), SignStatus::Unsigned);
+        let err = verify_file(&m, Some(b"k")).unwrap_err();
+        assert!(matches!(err, Error::Signature(_)), "{err}");
+        assert!(err.to_string().contains("unsigned"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_signature_is_typed_error() {
+        let dir = tmp("malformed");
+        let m = dir.join("manifest.json");
+        std::fs::write(&m, b"{}").unwrap();
+        for bad in ["zz".to_string(), "g".repeat(64), "ab".repeat(31)] {
+            std::fs::write(sig_path(&m), &bad).unwrap();
+            let err = verify_file(&m, Some(b"k")).unwrap_err();
+            assert!(matches!(err, Error::Signature(_)), "{bad}: {err}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_key_rejected() {
+        let dir = tmp("emptykey");
+        let m = dir.join("manifest.json");
+        std::fs::write(&m, b"{}").unwrap();
+        assert!(sign_file(&m, b"").is_err());
+        let kf = dir.join("key");
+        std::fs::write(&kf, b"").unwrap();
+        assert!(resolve_key(Some(kf.to_str().unwrap())).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

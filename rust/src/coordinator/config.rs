@@ -4,6 +4,7 @@ use super::faults::{FaultModel, ParticipationPolicy};
 use crate::compress::{GradCodec, MaskType};
 use crate::data::partition::Partition;
 use crate::error::{Error, Result};
+use crate::jsonx::Value;
 use crate::noise::{NoiseDist, NoiseLayout};
 
 /// FedMRN masking mode (the Figure-4 ablation axis).
@@ -128,6 +129,14 @@ pub struct RunConfig {
     /// `FEDMRN_PIPELINE_TIMEOUT_SECS` overrides both — see
     /// [`crate::coordinator::pipeline::resolve_job_timeout`]).
     pub job_timeout_secs: u64,
+    /// Write a signed-manifest checkpoint every `checkpoint_every`
+    /// completed rounds (0 = off; [`crate::artifact::checkpoint`]).
+    /// Result-neutral: checkpointing never touches the run RNG or the
+    /// weights, so any value produces byte-identical runs.
+    pub checkpoint_every: usize,
+    /// Directory for checkpoint artifacts (`round-<k>/` subdirs plus a
+    /// `LATEST` pointer). Required when `checkpoint_every > 0`.
+    pub checkpoint_dir: Option<String>,
 }
 
 impl RunConfig {
@@ -153,6 +162,8 @@ impl RunConfig {
             faults: FaultModel::none(),
             participation: ParticipationPolicy::strict(),
             job_timeout_secs: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
         }
     }
 
@@ -196,7 +207,170 @@ impl RunConfig {
                 ));
             }
         }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_none() {
+            return Err(Error::Config(
+                "--checkpoint-every requires --checkpoint-dir".into(),
+            ));
+        }
         Ok(())
+    }
+
+    // -- checkpoint serialization ------------------------------------------
+
+    /// Serialize every config field to JSON — the inverse of
+    /// [`RunConfig::from_json_value`], used by the checkpoint artifact so
+    /// a resumed run reconstructs the exact producing configuration.
+    /// `method` serializes by registry canonical name (the single name
+    /// surface; parameterised variants normalize to their registry
+    /// forms), `partition` carries its numeric parameters explicitly
+    /// because `Partition::name()` drops them.
+    pub fn to_json_value(&self) -> Value {
+        let (pname, beta, k) = match self.partition {
+            Partition::Iid => ("iid", 0.0, 0usize),
+            Partition::Dirichlet { beta } => ("noniid1", beta, 0),
+            Partition::LabelK { k } => ("noniid2", 0.0, k),
+        };
+        Value::obj()
+            .set("config", self.config.as_str())
+            .set("method", self.method.name())
+            .set("rounds", self.rounds)
+            .set("n_clients", self.n_clients)
+            .set("clients_per_round", self.clients_per_round)
+            .set("local_epochs", self.local_epochs)
+            .set("lr", self.lr as f64)
+            .set("noise_kind", self.noise.kind())
+            .set("noise_alpha", self.noise.alpha() as f64)
+            .set("noise_layout", self.noise_layout.name())
+            .set(
+                "partition",
+                Value::obj().set("name", pname).set("beta", beta).set("k", k),
+            )
+            .set("seed", self.seed)
+            .set("eval_every", self.eval_every)
+            .set("max_batches_per_epoch", self.max_batches_per_epoch)
+            .set("threads", self.threads)
+            .set("tile", self.tile)
+            .set("pipeline", self.pipeline)
+            .set(
+                "faults",
+                Value::obj()
+                    .set("dropout", self.faults.dropout as f64)
+                    .set("straggle_p", self.faults.straggle_p as f64)
+                    .set("straggle_ms", self.faults.straggle_ms)
+                    .set("corrupt_p", self.faults.corrupt_p as f64)
+                    .set("deadline_ms", self.faults.deadline_ms)
+                    .set("max_retries", self.faults.max_retries)
+                    .set("fault_seed", self.faults.fault_seed),
+            )
+            .set(
+                "participation",
+                Value::obj()
+                    .set("quorum", self.participation.quorum as f64)
+                    .set("rescale", self.participation.rescale),
+            )
+            .set("job_timeout_secs", self.job_timeout_secs)
+            .set("checkpoint_every", self.checkpoint_every)
+            .set(
+                "checkpoint_dir",
+                match &self.checkpoint_dir {
+                    Some(d) => Value::Str(d.clone()),
+                    None => Value::Null,
+                },
+            )
+    }
+
+    /// Reconstruct a config serialized by [`RunConfig::to_json_value`].
+    /// Every field is required (no defaults smuggled past the digest) and
+    /// type mismatches are typed errors.
+    pub fn from_json_value(v: &Value) -> Result<RunConfig> {
+        fn s(v: &Value, key: &str) -> Result<String> {
+            Ok(v.req(key)?
+                .as_str()
+                .ok_or_else(|| Error::Config(format!("{key} is not a string")))?
+                .to_string())
+        }
+        fn us(v: &Value, key: &str) -> Result<usize> {
+            v.req(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Config(format!("{key} is not an integer")))
+        }
+        fn u64_of(v: &Value, key: &str) -> Result<u64> {
+            v.req(key)?
+                .as_u64()
+                .ok_or_else(|| Error::Config(format!("{key} is not an integer")))
+        }
+        fn f(v: &Value, key: &str) -> Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("{key} is not a number")))
+        }
+        fn b(v: &Value, key: &str) -> Result<bool> {
+            v.req(key)?
+                .as_bool()
+                .ok_or_else(|| Error::Config(format!("{key} is not a bool")))
+        }
+        let noise = NoiseDist::parse(&s(v, "noise_kind")?, f(v, "noise_alpha")? as f32)
+            .ok_or_else(|| Error::Config("unknown noise_kind".into()))?;
+        let method = Method::parse(&s(v, "method")?, noise)?;
+        let noise_layout = NoiseLayout::parse(&s(v, "noise_layout")?)
+            .ok_or_else(|| Error::Config("unknown noise_layout".into()))?;
+        let p = v.req("partition")?;
+        let partition = Partition::parse(
+            &s(p, "name")?,
+            f(p, "beta")?,
+            us(p, "k")?,
+        )
+        .ok_or_else(|| Error::Config("unknown partition".into()))?;
+        let fl = v.req("faults")?;
+        let faults = FaultModel {
+            dropout: f(fl, "dropout")? as f32,
+            straggle_p: f(fl, "straggle_p")? as f32,
+            straggle_ms: u64_of(fl, "straggle_ms")?,
+            corrupt_p: f(fl, "corrupt_p")? as f32,
+            deadline_ms: u64_of(fl, "deadline_ms")?,
+            max_retries: u64_of(fl, "max_retries")? as u32,
+            fault_seed: u64_of(fl, "fault_seed")?,
+        };
+        let pp = v.req("participation")?;
+        let participation = ParticipationPolicy {
+            quorum: f(pp, "quorum")? as f32,
+            rescale: b(pp, "rescale")?,
+        };
+        let checkpoint_dir = match v.req("checkpoint_dir")? {
+            Value::Null => None,
+            d => Some(
+                d.as_str()
+                    .ok_or_else(|| {
+                        Error::Config("checkpoint_dir is not a string".into())
+                    })?
+                    .to_string(),
+            ),
+        };
+        let cfg = RunConfig {
+            config: s(v, "config")?,
+            method,
+            rounds: us(v, "rounds")?,
+            n_clients: us(v, "n_clients")?,
+            clients_per_round: us(v, "clients_per_round")?,
+            local_epochs: us(v, "local_epochs")?,
+            lr: f(v, "lr")? as f32,
+            noise,
+            noise_layout,
+            partition,
+            seed: u64_of(v, "seed")?,
+            eval_every: us(v, "eval_every")?,
+            max_batches_per_epoch: us(v, "max_batches_per_epoch")?,
+            threads: us(v, "threads")?,
+            tile: us(v, "tile")?,
+            pipeline: b(v, "pipeline")?,
+            faults,
+            participation,
+            job_timeout_secs: u64_of(v, "job_timeout_secs")?,
+            checkpoint_every: us(v, "checkpoint_every")?,
+            checkpoint_dir,
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 }
 
@@ -305,6 +479,101 @@ mod tests {
         let mut cfg = RunConfig::new("smoke_mlp", mrn);
         cfg.noise_layout = NoiseLayout::Interleaved;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn config_json_roundtrip_every_field() {
+        let mut cfg = RunConfig::new("fmnist_cnn4", Method::parse("fedmrns", NOISE).unwrap());
+        cfg.rounds = 7;
+        cfg.n_clients = 13;
+        cfg.clients_per_round = 4;
+        cfg.local_epochs = 2;
+        cfg.lr = 0.05;
+        cfg.noise = NoiseDist::Uniform { alpha: 5e-3 };
+        cfg.noise_layout = NoiseLayout::Interleaved;
+        cfg.partition = Partition::Dirichlet { beta: 0.25 };
+        cfg.seed = u64::MAX - 17; // exercises the lossless-integer path
+        cfg.eval_every = 2;
+        cfg.max_batches_per_epoch = 3;
+        cfg.threads = 4;
+        cfg.tile = 128;
+        cfg.pipeline = true;
+        cfg.faults = FaultModel {
+            dropout: 0.25,
+            straggle_p: 0.3,
+            straggle_ms: 250,
+            corrupt_p: 0.4,
+            deadline_ms: 100,
+            max_retries: 2,
+            fault_seed: 0xC0FFEE,
+        };
+        cfg.participation = ParticipationPolicy { quorum: 0.5, rescale: true };
+        cfg.job_timeout_secs = 11;
+        cfg.checkpoint_every = 2;
+        cfg.checkpoint_dir = Some("/tmp/ckpt".into());
+
+        let text = cfg.to_json_value().to_json();
+        let back = RunConfig::from_json_value(&crate::jsonx::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.config, cfg.config);
+        assert_eq!(back.method, cfg.method);
+        assert_eq!(back.rounds, cfg.rounds);
+        assert_eq!(back.n_clients, cfg.n_clients);
+        assert_eq!(back.clients_per_round, cfg.clients_per_round);
+        assert_eq!(back.local_epochs, cfg.local_epochs);
+        assert_eq!(back.lr, cfg.lr);
+        assert_eq!(back.noise, cfg.noise);
+        assert_eq!(back.noise_layout, cfg.noise_layout);
+        assert_eq!(back.partition, cfg.partition);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.eval_every, cfg.eval_every);
+        assert_eq!(back.max_batches_per_epoch, cfg.max_batches_per_epoch);
+        assert_eq!(back.threads, cfg.threads);
+        assert_eq!(back.tile, cfg.tile);
+        assert_eq!(back.pipeline, cfg.pipeline);
+        assert_eq!(back.faults, cfg.faults);
+        assert_eq!(back.participation, cfg.participation);
+        assert_eq!(back.job_timeout_secs, cfg.job_timeout_secs);
+        assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
+        assert_eq!(back.checkpoint_dir, cfg.checkpoint_dir);
+
+        // LabelK partition and a None checkpoint_dir round-trip too
+        let mut cfg2 = RunConfig::new("smoke_mlp", Method::FedAvg);
+        cfg2.partition = Partition::LabelK { k: 2 };
+        let back2 = RunConfig::from_json_value(
+            &crate::jsonx::parse(&cfg2.to_json_value().to_json()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back2.partition, cfg2.partition);
+        assert_eq!(back2.checkpoint_dir, None);
+    }
+
+    #[test]
+    fn config_from_json_rejects_missing_and_mistyped_fields() {
+        let cfg = RunConfig::new("smoke_mlp", Method::FedAvg);
+        let good = cfg.to_json_value().to_json();
+        // validates — then each mutation must be a typed error
+        RunConfig::from_json_value(&crate::jsonx::parse(&good).unwrap()).unwrap();
+        for bad in [
+            good.replace("\"rounds\":15", "\"rounds\":\"15\""),
+            good.replace("\"method\":\"fedavg\"", "\"method\":\"nope\""),
+            good.replace("\"pipeline\":false", "\"pipeline\":3"),
+            good.replace("\"seed\":1,", ""),
+        ] {
+            let v = crate::jsonx::parse(&bad).unwrap();
+            assert!(RunConfig::from_json_value(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_every_requires_dir() {
+        let mut cfg = RunConfig::new("smoke_mlp", Method::FedAvg);
+        cfg.checkpoint_every = 2;
+        assert!(cfg.validate().is_err());
+        cfg.checkpoint_dir = Some("/tmp/x".into());
+        cfg.validate().unwrap();
+        cfg.checkpoint_every = 0;
+        cfg.validate().unwrap(); // dir without every is inert, not an error
     }
 
     #[test]

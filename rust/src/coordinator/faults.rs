@@ -323,6 +323,16 @@ impl DropReason {
             DropReason::Corrupt => "corrupt",
         }
     }
+
+    /// Inverse of [`DropReason::name`] — checkpoint record restore.
+    pub fn parse(s: &str) -> Option<DropReason> {
+        match s {
+            "dropout" => Some(DropReason::Dropout),
+            "straggler" => Some(DropReason::Straggler),
+            "corrupt" => Some(DropReason::Corrupt),
+            _ => None,
+        }
+    }
 }
 
 /// A client whose uplink never arrived, recorded in

@@ -1,6 +1,7 @@
 //! Per-round records and run-level results (JSON / CSV emission).
 
-use super::faults::DroppedClient;
+use super::faults::{DropReason, DroppedClient};
+use crate::error::{Error, Result};
 use crate::jsonx::Value;
 
 /// One federated round's observations.
@@ -75,6 +76,66 @@ impl RoundRecord {
             .set("corrupt_rejected", self.corrupt_rejected)
             .set("quorum_met", self.quorum_met)
             .set("dropped", Value::Arr(dropped))
+    }
+
+    /// Inverse of [`RoundRecord::to_json`] — checkpoint record restore.
+    /// NaN evaluation fields round-trip through JSON `null` (JSON has no
+    /// NaN; `to_json` emits null for non-finite floats).
+    pub fn from_json(v: &Value) -> Result<RoundRecord> {
+        fn f64_or_nan(v: &Value, key: &str) -> Result<f64> {
+            let x = v.req(key)?;
+            if x.is_null() {
+                return Ok(f64::NAN);
+            }
+            x.as_f64()
+                .ok_or_else(|| Error::Json(format!("{key} is not a number")))
+        }
+        fn u64_of(v: &Value, key: &str) -> Result<u64> {
+            v.req(key)?
+                .as_u64()
+                .ok_or_else(|| Error::Json(format!("{key} is not an integer")))
+        }
+        fn usize_of(v: &Value, key: &str) -> Result<usize> {
+            Ok(u64_of(v, key)? as usize)
+        }
+        let raw_dropped = v
+            .req("dropped")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("dropped is not an array".into()))?;
+        let mut dropped = Vec::with_capacity(raw_dropped.len());
+        for d in raw_dropped {
+            let reason_name = d
+                .req("reason")?
+                .as_str()
+                .ok_or_else(|| Error::Json("drop reason is not a string".into()))?;
+            let reason = DropReason::parse(reason_name).ok_or_else(|| {
+                Error::Json(format!("unknown drop reason {reason_name:?}"))
+            })?;
+            dropped.push(DroppedClient {
+                slot: usize_of(d, "slot")?,
+                client: usize_of(d, "client")?,
+                reason,
+            });
+        }
+        Ok(RoundRecord {
+            round: usize_of(v, "round")?,
+            train_loss: f64_or_nan(v, "train_loss")?,
+            test_loss: f64_or_nan(v, "test_loss")?,
+            test_acc: f64_or_nan(v, "test_acc")?,
+            uplink_bytes: u64_of(v, "uplink_bytes")?,
+            downlink_bytes: u64_of(v, "downlink_bytes")?,
+            train_ms: f64_or_nan(v, "train_ms")?,
+            compress_ms: f64_or_nan(v, "compress_ms")?,
+            selected: usize_of(v, "selected")?,
+            participants: usize_of(v, "participants")?,
+            retries: u64_of(v, "retries")?,
+            corrupt_rejected: u64_of(v, "corrupt_rejected")?,
+            quorum_met: v
+                .req("quorum_met")?
+                .as_bool()
+                .ok_or_else(|| Error::Json("quorum_met is not a bool".into()))?,
+            dropped,
+        })
     }
 }
 
@@ -273,6 +334,37 @@ mod tests {
         assert!(text.starts_with("round,"));
         assert_eq!(text.lines().count(), 2);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn record_json_roundtrip_including_nan_and_dropped() {
+        use crate::coordinator::faults::{DropReason, DroppedClient};
+        let mut rec = record(3, f64::NAN);
+        rec.test_loss = f64::NAN;
+        rec.uplink_bytes = u64::MAX; // lossless through jsonx::Value::Int
+        rec.retries = 2;
+        rec.quorum_met = false;
+        rec.dropped = vec![DroppedClient {
+            slot: 1,
+            client: 9,
+            reason: DropReason::Straggler,
+        }];
+        let text = rec.to_json().to_json();
+        let back = RoundRecord::from_json(&crate::jsonx::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.round, 3);
+        assert!(back.test_acc.is_nan() && back.test_loss.is_nan());
+        assert_eq!(back.uplink_bytes, u64::MAX);
+        assert_eq!(back.retries, 2);
+        assert!(!back.quorum_met);
+        assert_eq!(back.dropped, rec.dropped);
+
+        // missing field and unknown drop reason are typed errors
+        let v = crate::jsonx::parse("{\"round\": 1}").unwrap();
+        assert!(RoundRecord::from_json(&v).is_err());
+        let bad = text.replace("straggler", "gremlin");
+        let v = crate::jsonx::parse(&bad).unwrap();
+        assert!(RoundRecord::from_json(&v).is_err());
     }
 
     #[test]

@@ -56,6 +56,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
+use crate::artifact::checkpoint::CheckpointSink;
 use crate::data::Split;
 use crate::error::{Error, Result};
 use crate::noise::{derive_seed, NoiseGen};
@@ -515,49 +516,104 @@ pub(crate) fn sequential_round(
     Ok(rec)
 }
 
-/// Drive a full run on the engine selected by `cfg.pipeline`.
+/// State snapshot taken at fold time for a round that checkpoints —
+/// on the pipelined engine the write is deferred to the merge step
+/// (where the round's evaluated record exists), but `w`/meter/RNG must
+/// be captured *before* the next round's produce mutates them.
+struct CkSnapshot {
+    w: Vec<f32>,
+    meter: Meter,
+    rng_state: [u64; 4],
+}
+
+/// Drive rounds `start..cfg.rounds` on the engine selected by
+/// `cfg.pipeline` (`start > 0` after a checkpoint resume — round
+/// indices stay absolute, so every per-(client, round) derived stream
+/// is the one the uninterrupted run would draw).
 ///
 /// `trace`, when provided, receives a bit-exact clone of `w` the moment
 /// each round's fold installs — the differential harness compares these
 /// across engines. Records come back in round order on both engines; an
 /// `Ok` run is byte-identical either way (an `Err` run may surface a
 /// deferred evaluation error one round later on the pipelined engine).
+///
+/// `sink`, when provided, writes a checkpoint artifact after every
+/// round it elects ([`CheckpointSink::should_write`]). Checkpointing
+/// never touches `w`, the meter, or the RNG — it is result-neutral by
+/// construction, which is what lets the fingerprint exclude it.
 pub(crate) fn run_rounds(
     ctx: &EngineCtx<'_>,
     w: &mut Vec<f32>,
     meter: &mut Meter,
     rng: &mut NoiseGen,
     mut trace: Option<&mut Vec<Vec<f32>>>,
+    start: usize,
+    sink: Option<&CheckpointSink>,
 ) -> Result<Vec<RoundRecord>> {
     let rounds = ctx.cfg.rounds;
-    let mut records: Vec<RoundRecord> = Vec::with_capacity(rounds);
+    let mut records: Vec<RoundRecord> =
+        Vec::with_capacity(rounds.saturating_sub(start));
     if !ctx.cfg.pipeline {
-        for r in 0..rounds {
+        for r in start..rounds {
             let rec = sequential_round(ctx, r, w, meter, rng)?;
             if let Some(t) = trace.as_deref_mut() {
                 t.push(w.clone());
             }
             records.push(rec);
+            if let Some(s) = sink {
+                if s.should_write(r + 1) {
+                    s.write(
+                        ctx.cfg,
+                        r + 1,
+                        w,
+                        ctx.w_init,
+                        meter,
+                        rng.state_words(),
+                        &records,
+                    )?;
+                }
+            }
         }
         return Ok(records);
     }
     let records_ref = &mut records;
     double_buffered(
-        rounds,
-        |r| {
+        rounds - start,
+        |i| {
+            let r = start + i;
             let folded = train_and_fold(ctx, r, w, meter, rng)?;
             if let Some(t) = trace.as_deref_mut() {
                 t.push(w.clone());
             }
-            Ok(((folded.record, folded.fold_ms), folded.eval))
+            let snap = match sink {
+                Some(s) if s.should_write(r + 1) => Some(CkSnapshot {
+                    w: w.clone(),
+                    meter: meter.clone(),
+                    rng_state: rng.state_words(),
+                }),
+                _ => None,
+            };
+            Ok(((folded.record, folded.fold_ms, snap), folded.eval))
         },
         |w_eval: Arc<Vec<f32>>| eval_snapshot(ctx, &w_eval),
-        |_r, (mut rec, fold_ms), out| {
+        |_i, (mut rec, fold_ms, snap), out| {
             if let Some((test_loss, test_acc)) = out {
                 rec.set_eval(test_loss, test_acc);
             }
             log_round(ctx, &rec, fold_ms);
+            let next_round = rec.round + 1;
             records_ref.push(rec);
+            if let (Some(s), Some(snap)) = (sink, snap) {
+                s.write(
+                    ctx.cfg,
+                    next_round,
+                    &snap.w,
+                    ctx.w_init,
+                    &snap.meter,
+                    snap.rng_state,
+                    records_ref,
+                )?;
+            }
             Ok(())
         },
     )?;

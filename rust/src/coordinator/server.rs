@@ -28,6 +28,9 @@
 //! n_j`, computable before any client finishes because shard sizes are
 //! fixed — which is what lets ingestion start immediately.
 
+use crate::artifact::checkpoint::{
+    config_fingerprint, Checkpoint, CheckpointSink, DatasetMeta,
+};
 use crate::data::{partition, Split};
 use crate::error::{Error, Result};
 use crate::noise::NoiseGen;
@@ -65,6 +68,17 @@ pub struct Federation<'rt> {
     pub capture_w_trace: bool,
     /// Per-round weight snapshots (see [`Federation::capture_w_trace`]).
     pub w_trace: Vec<Vec<f32>>,
+    /// First round index [`Federation::run`] will execute (non-zero
+    /// only after [`Federation::resume`]).
+    start_round: usize,
+    /// Records restored from a resumed checkpoint (rounds
+    /// `0..start_round`); prepended to [`crate::coordinator::RunResult`]
+    /// and to every checkpoint this run writes.
+    prior_records: Vec<RoundRecord>,
+    /// Dataset provenance stamped into checkpoints so `--resume` can
+    /// regenerate the split (`None` for caller-supplied splits — such
+    /// checkpoints load but cannot be resumed from the CLI).
+    pub dataset_meta: Option<DatasetMeta>,
 }
 
 impl<'rt> Federation<'rt> {
@@ -104,7 +118,73 @@ impl<'rt> Federation<'rt> {
             verbose: false,
             capture_w_trace: false,
             w_trace: Vec::new(),
+            start_round: 0,
+            prior_records: Vec::new(),
+            dataset_meta: None,
         })
+    }
+
+    /// Construct a resumed run from a loaded [`Checkpoint`]. `cfg` is
+    /// the run configuration to use — normally the checkpoint's own,
+    /// optionally with **result-neutral** overrides (threads, tile,
+    /// pipeline, job timeout, checkpoint cadence); any result-affecting
+    /// difference is rejected by the config fingerprint. The restored
+    /// engine state (weights, meter, run RNG, record history) makes
+    /// rounds `next_round..rounds` byte-identical to an uninterrupted
+    /// run (pinned by `tests/differential.rs` §10).
+    pub fn resume(
+        rt: &'rt Runtime,
+        cfg: RunConfig,
+        split: Split,
+        ck: Checkpoint,
+    ) -> Result<Federation<'rt>> {
+        if config_fingerprint(&cfg) != config_fingerprint(&ck.config) {
+            return Err(Error::Config(
+                "resume config differs from the checkpoint's in a \
+                 result-affecting field (only threads/tile/pipeline/\
+                 job-timeout/checkpoint knobs may change across a resume)"
+                    .into(),
+            ));
+        }
+        let mut fed = Federation::new(rt, cfg, split)?;
+        if ck.next_round > fed.cfg.rounds {
+            return Err(Error::Config(format!(
+                "checkpoint is at round {} but the run has only {} rounds",
+                ck.next_round, fed.cfg.rounds
+            )));
+        }
+        if ck.w.len() != fed.w.len() {
+            return Err(Error::Config(format!(
+                "checkpoint w has {} params, config {:?} expects {}",
+                ck.w.len(),
+                fed.cfg.config,
+                fed.w.len()
+            )));
+        }
+        match (&ck.w_init, &fed.w_init) {
+            (Some(a), Some(b)) if a.len() == b.len() => {}
+            (None, None) => {}
+            _ => {
+                return Err(Error::Config(
+                    "checkpoint w_init does not match the strategy's \
+                     global-state shape"
+                        .into(),
+                ))
+            }
+        }
+        let rng = NoiseGen::from_state_words(ck.rng_state).ok_or_else(|| {
+            Error::Config("checkpoint RNG state is invalid (all-zero)".into())
+        })?;
+        fed.w = ck.w;
+        if ck.w_init.is_some() {
+            fed.w_init = ck.w_init;
+        }
+        fed.meter = ck.meter;
+        fed.rng = rng;
+        fed.start_round = ck.next_round;
+        fed.prior_records = ck.records;
+        fed.dataset_meta = ck.dataset;
+        Ok(fed)
     }
 
     /// Shard sizes (diagnostics / tests).
@@ -152,9 +232,13 @@ impl<'rt> Federation<'rt> {
     /// aside).
     pub fn run(&mut self) -> Result<RunResult> {
         let t = Timer::new();
+        let sink = CheckpointSink::for_config(&self.cfg)?.map(|s| {
+            s.with_dataset(self.dataset_meta.clone())
+                .with_prior(self.prior_records.clone())
+        });
         let mut trace: Option<Vec<Vec<f32>>> =
             if self.capture_w_trace { Some(Vec::new()) } else { None };
-        let records = {
+        let new_records = {
             let ctx = pipeline::EngineCtx {
                 rt: self.rt,
                 cfg: &self.cfg,
@@ -165,11 +249,21 @@ impl<'rt> Federation<'rt> {
                 w_init: self.w_init.as_deref(),
                 verbose: self.verbose,
             };
-            pipeline::run_rounds(&ctx, &mut self.w, &mut self.meter, &mut self.rng, trace.as_mut())?
+            pipeline::run_rounds(
+                &ctx,
+                &mut self.w,
+                &mut self.meter,
+                &mut self.rng,
+                trace.as_mut(),
+                self.start_round,
+                sink.as_ref(),
+            )?
         };
         if let Some(trace) = trace {
             self.w_trace = trace;
         }
+        let mut records = self.prior_records.clone();
+        records.extend(new_records);
         Ok(RunResult::new(
             self.cfg.config.clone(),
             self.cfg.method.name(),

@@ -33,6 +33,13 @@ pub enum Error {
     /// Dataset / partitioning invariant violations.
     Data(String),
 
+    /// Artifact signature failures: a manifest that should be signed
+    /// but has no detached signature, or an HMAC that does not match
+    /// the manifest bytes. Digest mismatches on manifest-declared
+    /// payloads stay [`Error::Artifact`] — a bad signature means the
+    /// *provenance* is wrong, a bad digest means the *contents* are.
+    Signature(String),
+
     /// A round closed below its participation quorum: only `arrived` of
     /// the `promised` uplinks made it, but the policy required at least
     /// `required`. Aggregators raise this from `finish` *before*
@@ -70,6 +77,7 @@ impl fmt::Display for Error {
             Error::Codec(m) => write!(f, "codec: {m}"),
             Error::Net(m) => write!(f, "net: {m}"),
             Error::Data(m) => write!(f, "data: {m}"),
+            Error::Signature(m) => write!(f, "signature: {m}"),
             Error::Quorum {
                 round,
                 arrived,
@@ -122,6 +130,10 @@ mod tests {
         assert_eq!(
             Error::Net("slot auth failed".into()).to_string(),
             "net: slot auth failed"
+        );
+        assert_eq!(
+            Error::Signature("hmac mismatch".into()).to_string(),
+            "signature: hmac mismatch"
         );
         let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(io.to_string().starts_with("io: "));

@@ -90,6 +90,13 @@ pub struct ExpOpts {
     /// Pipeline job deadline override, seconds (`--job-timeout-secs`;
     /// 0 = built-in default, env `FEDMRN_PIPELINE_TIMEOUT_SECS` wins).
     pub job_timeout_secs: u64,
+    /// Write a signed checkpoint artifact every N completed rounds
+    /// (`--checkpoint-every`; 0 = off). Result-neutral — see
+    /// [`crate::artifact::checkpoint`].
+    pub checkpoint_every: usize,
+    /// Checkpoint output directory (`--checkpoint-dir`); required when
+    /// `checkpoint_every > 0`.
+    pub checkpoint_dir: Option<String>,
 }
 
 impl ExpOpts {
@@ -117,6 +124,8 @@ impl ExpOpts {
                 faults: FaultModel::none(),
                 participation: ParticipationPolicy::strict(),
                 job_timeout_secs: 0,
+                checkpoint_every: 0,
+                checkpoint_dir: None,
             },
             // quick: the recorded-run default — tens of minutes for the
             // full Table-1 sweep on this CPU testbed
@@ -139,6 +148,8 @@ impl ExpOpts {
                 faults: FaultModel::none(),
                 participation: ParticipationPolicy::strict(),
                 job_timeout_secs: 0,
+                checkpoint_every: 0,
+                checkpoint_dir: None,
             },
             // full: paper-shaped topology (still scaled in rounds)
             "full" => ExpOpts {
@@ -160,6 +171,8 @@ impl ExpOpts {
                 faults: FaultModel::none(),
                 participation: ParticipationPolicy::strict(),
                 job_timeout_secs: 0,
+                checkpoint_every: 0,
+                checkpoint_dir: None,
             },
             p => return Err(Error::Config(format!("unknown preset {p:?}"))),
         };
@@ -195,50 +208,73 @@ impl ExpOpts {
         o.participation.quorum = args.take_f32("quorum", o.participation.quorum)?;
         o.participation.rescale = args.take_bool("rescale", o.participation.rescale)?;
         o.job_timeout_secs = args.take_u64("job-timeout-secs", o.job_timeout_secs)?;
+        o.checkpoint_every =
+            args.take_usize("checkpoint-every", o.checkpoint_every)?;
+        if let Some(dir) = args.take_opt_str("checkpoint-dir") {
+            o.checkpoint_dir = Some(dir);
+        }
         o.faults.validate()?;
         o.participation.validate()?;
+        if o.checkpoint_every > 0 && o.checkpoint_dir.is_none() {
+            return Err(Error::Config(
+                "--checkpoint-every requires --checkpoint-dir".into(),
+            ));
+        }
         Ok(o)
     }
 }
 
 /// Map a dataset name to (artifact config, generated split).
 pub fn dataset_split(name: &str, o: &ExpOpts) -> Result<(String, Split)> {
-    let seed = o.seed ^ 0xDA7A;
+    dataset_split_with(name, o.per_class, o.test_per_class, o.seed)
+}
+
+/// [`dataset_split`] from explicit scale knobs — the checkpoint-resume
+/// path regenerates the producing run's split from the
+/// [`crate::artifact::checkpoint::DatasetMeta`] it stored, keyed only by
+/// these three values (splits are deterministic in `run_seed ^ 0xDA7A`).
+pub fn dataset_split_with(
+    name: &str,
+    per_class: usize,
+    test_per_class: usize,
+    run_seed: u64,
+) -> Result<(String, Split)> {
+    let seed = run_seed ^ 0xDA7A;
     Ok(match name {
         "fmnist" => (
             "fmnist_cnn4".into(),
             crate::data::synthetic::make_images(ImageSpec::fmnist_like(
-                o.per_class, o.test_per_class, seed,
+                per_class, test_per_class, seed,
             )),
         ),
         "svhn" => (
             "svhn_cnn4".into(),
             crate::data::synthetic::make_images(ImageSpec::svhn_like(
-                o.per_class, o.test_per_class, seed,
+                per_class, test_per_class, seed,
             )),
         ),
         "cifar10" => (
             "cifar10_cnn8".into(),
             crate::data::synthetic::make_images(ImageSpec::cifar10_like(
-                o.per_class, o.test_per_class, seed,
+                per_class, test_per_class, seed,
             )),
         ),
         "cifar100" => (
             "cifar100_cnn8".into(),
             crate::data::synthetic::make_images(ImageSpec::cifar100_like(
                 // 100 classes: keep per-class counts smaller
-                (o.per_class / 4).max(4),
-                (o.test_per_class / 4).max(2),
+                (per_class / 4).max(4),
+                (test_per_class / 4).max(2),
                 seed,
             )),
         ),
-        "smoke" => ("smoke_mlp".into(), smoke_split(o, seed)),
+        "smoke" => ("smoke_mlp".into(), smoke_split(per_class, test_per_class, seed)),
         "charlm" => (
             "charlm_lstm".into(),
             crate::data::charlm::make_charlm(CharLmSpec::shakespeare_like(
                 40,
-                (o.per_class * 10).max(64),
-                (o.test_per_class * 8).max(32),
+                (per_class * 10).max(64),
+                (test_per_class * 8).max(32),
                 seed,
             )),
         ),
@@ -246,16 +282,16 @@ pub fn dataset_split(name: &str, o: &ExpOpts) -> Result<(String, Split)> {
             "charlm_tf".into(),
             crate::data::charlm::make_charlm(CharLmSpec::shakespeare_like(
                 64,
-                (o.per_class * 10).max(64),
-                (o.test_per_class * 8).max(32),
+                (per_class * 10).max(64),
+                (test_per_class * 8).max(32),
                 seed,
             )),
         ),
         "seg" => (
             "seg_segnet".into(),
             crate::data::segdata::make_seg(SegSpec::voc_like(
-                o.per_class * 8,
-                (o.test_per_class * 4).max(32),
+                per_class * 8,
+                (test_per_class * 4).max(32),
                 seed,
             )),
         ),
@@ -264,7 +300,7 @@ pub fn dataset_split(name: &str, o: &ExpOpts) -> Result<(String, Split)> {
 }
 
 /// Linearly-separable 16-dim toy task for the smoke preset.
-fn smoke_split(o: &ExpOpts, seed: u64) -> Split {
+fn smoke_split(per_class: usize, test_per_class: usize, seed: u64) -> Split {
     use crate::data::{Dataset, Features};
     use crate::noise::NoiseGen;
     let mut g = NoiseGen::new(seed);
@@ -291,8 +327,8 @@ fn smoke_split(o: &ExpOpts, seed: u64) -> Split {
             n_classes: classes,
         }
     };
-    let train = build(&mut g, (o.per_class * classes * 4).max(256));
-    let test = build(&mut g, (o.test_per_class * classes).max(64));
+    let train = build(&mut g, (per_class * classes * 4).max(256));
+    let test = build(&mut g, (test_per_class * classes).max(64));
     Split { train, test }
 }
 
@@ -312,19 +348,18 @@ pub fn lr_for(method: &Method, base: f32) -> f32 {
     }
 }
 
-/// Run one (dataset, partition, method) arm. The method name resolves
-/// through the coordinator's registry ([`Method::parse`] is a thin
-/// delegate), so every name a harness accepts is a name the engine's
-/// Strategy/Aggregator dispatch can serve.
-pub fn run_arm(
-    rt: &Runtime,
+/// Build the full [`RunConfig`] for one (dataset, partition, method)
+/// arm. The method name resolves through the coordinator's registry
+/// ([`Method::parse`] is a thin delegate), so every name a harness
+/// accepts is a name the engine's Strategy/Aggregator dispatch can
+/// serve.
+pub fn build_config(
     config: &str,
-    split: Split,
     method_name: &str,
     partition: Partition,
     o: &ExpOpts,
     noise_override: Option<NoiseDist>,
-) -> Result<RunResult> {
+) -> Result<RunConfig> {
     let probe_noise = NoiseDist::Uniform { alpha: 0.01 };
     let method = Method::parse(method_name, probe_noise)?;
     let noise = noise_override.unwrap_or_else(|| RunConfig::default_noise_for(&method));
@@ -347,6 +382,23 @@ pub fn run_arm(
     cfg.faults = o.faults;
     cfg.participation = o.participation;
     cfg.job_timeout_secs = o.job_timeout_secs;
+    cfg.checkpoint_every = o.checkpoint_every;
+    cfg.checkpoint_dir = o.checkpoint_dir.clone();
+    Ok(cfg)
+}
+
+/// Run one (dataset, partition, method) arm ([`build_config`] + a
+/// [`Federation`] run).
+pub fn run_arm(
+    rt: &Runtime,
+    config: &str,
+    split: Split,
+    method_name: &str,
+    partition: Partition,
+    o: &ExpOpts,
+    noise_override: Option<NoiseDist>,
+) -> Result<RunResult> {
+    let cfg = build_config(config, method_name, partition, o, noise_override)?;
     let mut fed = Federation::new(rt, cfg, split)?;
     fed.verbose = o.verbose;
     fed.run()

@@ -15,6 +15,10 @@ use crate::error::{Error, Result};
 pub enum Value {
     Null,
     Bool(bool),
+    /// Integer literal, kept out of `f64` so values above 2^53 (RNG
+    /// state words, seeds, byte counts in artifact manifests) round-trip
+    /// losslessly. `i128` covers the full `u64` and `i64` ranges.
+    Int(i128),
     Num(f64),
     Str(String),
     Arr(Vec<Value>),
@@ -53,16 +57,37 @@ impl Value {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        match self {
+            Value::Int(x) => usize::try_from(*x).ok(),
+            Value::Num(x) => Some(*x as usize),
+            _ => None,
+        }
     }
 
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|x| x as i64)
+        match self {
+            Value::Int(x) => i64::try_from(*x).ok(),
+            Value::Num(x) => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    /// Lossless `u64` accessor — the one to use for RNG state words,
+    /// seeds and byte counts (`as_f64` would truncate above 2^53).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(x) => u64::try_from(*x).ok(),
+            Value::Num(x) if x.is_finite() && *x == x.trunc() && *x >= 0.0 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -111,6 +136,9 @@ impl Value {
         match self {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Int(x) => {
+                let _ = write!(out, "{x}");
+            }
             Value::Num(x) => write_num(*x, out),
             Value::Str(s) => write_escaped(s, out),
             Value::Arr(items) => {
@@ -174,17 +202,22 @@ impl From<f64> for Value {
 }
 impl From<usize> for Value {
     fn from(x: usize) -> Value {
-        Value::Num(x as f64)
+        Value::Int(x as i128)
     }
 }
 impl From<i64> for Value {
     fn from(x: i64) -> Value {
-        Value::Num(x as f64)
+        Value::Int(x as i128)
     }
 }
 impl From<u64> for Value {
     fn from(x: u64) -> Value {
-        Value::Num(x as f64)
+        Value::Int(x as i128)
+    }
+}
+impl From<u32> for Value {
+    fn from(x: u32) -> Value {
+        Value::Int(x as i128)
     }
 }
 impl From<f32> for Value {
@@ -228,12 +261,18 @@ pub fn parse(text: &str) -> Result<Value> {
     Ok(v)
 }
 
-/// Parse the contents of a file.
+/// Parse the contents of a file. Errors carry the file path (and the
+/// parser's line/col) so a bad manifest names which file rejected.
 pub fn parse_file(path: &std::path::Path) -> Result<Value> {
     let text = std::fs::read_to_string(path).map_err(|e| {
         Error::Json(format!("read {}: {e}", path.display()))
     })?;
-    parse(&text).map_err(|e| Error::Json(format!("{}: {e}", path.display())))
+    parse(&text).map_err(|e| match e {
+        // Re-wrap the inner message rather than the Display form so the
+        // result is "json: <path>: <msg>", not "json: <path>: json: <msg>".
+        Error::Json(m) => Error::Json(format!("{}: {m}", path.display())),
+        other => other,
+    })
 }
 
 struct Parser<'a> {
@@ -243,7 +282,19 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> Error {
-        Error::Json(format!("{msg} at byte {}", self.pos))
+        // Line/column beats a raw byte offset when the manifest being
+        // rejected is a multi-kilobyte checkpoint file.
+        let mut line = 1usize;
+        let mut col = 1usize;
+        for &b in &self.bytes[..self.pos.min(self.bytes.len())] {
+            if b == b'\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+        }
+        Error::Json(format!("{msg} at line {line} col {col}"))
     }
 
     fn peek(&self) -> Option<u8> {
@@ -422,6 +473,13 @@ impl<'a> Parser<'a> {
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])
             .map_err(|_| self.err("bad number"))?;
+        // Integer literals (no fraction, no exponent) stay integers so
+        // u64-range values (seeds, RNG state words) survive round-trips.
+        if !text.contains(['.', 'e', 'E']) {
+            if let Ok(i) = text.parse::<i128>() {
+                return Ok(Value::Int(i));
+            }
+        }
         text.parse::<f64>()
             .map(Value::Num)
             .map_err(|_| self.err("bad number"))
@@ -437,7 +495,8 @@ mod tests {
         assert_eq!(parse("null").unwrap(), Value::Null);
         assert_eq!(parse("true").unwrap(), Value::Bool(true));
         assert_eq!(parse("false").unwrap(), Value::Bool(false));
-        assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse("42").unwrap(), Value::Int(42));
+        assert_eq!(parse("-7").unwrap(), Value::Int(-7));
         assert_eq!(parse("-3.5e2").unwrap(), Value::Num(-350.0));
         assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
     }
@@ -513,5 +572,64 @@ mod tests {
             let text = Value::Num(x).to_json();
             assert_eq!(parse(&text).unwrap().as_f64().unwrap(), x, "{text}");
         }
+    }
+
+    #[test]
+    fn u64_values_roundtrip_losslessly() {
+        // The values an f64 path silently corrupts: 2^53 ± 1 and
+        // u64::MAX (RNG state words live up here).
+        let probes: [u64; 5] = [
+            (1u64 << 53) - 1,
+            1u64 << 53,
+            (1u64 << 53) + 1,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &x in &probes {
+            let v: Value = x.into();
+            let text = v.to_json();
+            let back = parse(&text).unwrap();
+            assert_eq!(back.as_u64(), Some(x), "{text}");
+            assert_eq!(back, v, "{text}");
+        }
+        // ... and the same through an object emit/parse cycle.
+        let v = Value::obj()
+            .set("s0", u64::MAX)
+            .set("s1", (1u64 << 53) + 1)
+            .set("neg", -3i64);
+        let back = parse(&v.to_json()).unwrap();
+        assert_eq!(back.get("s0").unwrap().as_u64(), Some(u64::MAX));
+        assert_eq!(back.get("s1").unwrap().as_u64(), Some((1u64 << 53) + 1));
+        assert_eq!(back.get("neg").unwrap().as_i64(), Some(-3));
+        // f64 (2^53 + 1) would collapse to 2^53 — prove the Int path
+        // does not take that detour.
+        assert_ne!(((1u64 << 53) + 1) as f64 as u64, (1u64 << 53) + 1);
+    }
+
+    #[test]
+    fn as_u64_rejects_lossy_sources() {
+        assert_eq!(Value::Num(1.5).as_u64(), None);
+        assert_eq!(Value::Num(-2.0).as_u64(), None);
+        assert_eq!(Value::Int(-1).as_u64(), None);
+        assert_eq!(Value::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Value::Str("42".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn parse_file_errors_carry_the_path() {
+        let dir = std::env::temp_dir().join("fedmrn_jsonx_path_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad_manifest.json");
+        std::fs::write(&bad, "{\n  \"a\": 1,\n  oops\n}").unwrap();
+        let err = parse_file(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad_manifest.json"), "{err}");
+        assert!(err.contains("line 3"), "{err}");
+        // single "json:" prefix, not a nested one
+        assert_eq!(err.matches("json:").count(), 1, "{err}");
+
+        let missing = dir.join("definitely_not_there.json");
+        let err = parse_file(&missing).unwrap_err().to_string();
+        assert!(err.contains("definitely_not_there.json"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

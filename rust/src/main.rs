@@ -11,7 +11,11 @@
 //! Run `fedmrn help` for the flag reference. Requires `make artifacts`
 //! to have produced `artifacts/` first.
 
+use std::path::{Path, PathBuf};
+
+use fedmrn::artifact::{checkpoint, manifest::Manifest, sign};
 use fedmrn::cli::Args;
+use fedmrn::coordinator::{Federation, RunResult};
 use fedmrn::error::{Error, Result};
 use fedmrn::exp;
 use fedmrn::noise::NoiseDist;
@@ -33,6 +37,8 @@ USAGE:
               [--corrupt-p F] [--deadline-ms N] [--max-retries N]
               [--fault-seed N] [--quorum F] [--rescale]
               [--job-timeout-secs N]
+              [--checkpoint-every N] [--checkpoint-dir DIR]
+              [--resume DIR [--key FILE]]
               fault flags arm the deterministic chaos layer (replayable
               from the seed; all rates default to 0 = fault-free, which
               is byte-identical to the pre-fault engine). --quorum sets
@@ -46,6 +52,14 @@ USAGE:
               wire default, bit-exact with stored seeds) or interleaved
               (lane-parallel v2 — SIMD-width noise fills on both ends;
               a different stream, tagged in the wire seed metadata)
+              --checkpoint-every N writes a resumable run artifact under
+              --checkpoint-dir after every N completed rounds (signed
+              when FEDMRN_SIGN_KEY is set; see docs/ARTIFACT.md).
+              --resume DIR restarts from the newest checkpoint in DIR;
+              only result-neutral knobs (--threads --tile --pipeline
+              --job-timeout-secs --checkpoint-every --checkpoint-dir
+              --verbose --csv) may be combined with it — the resumed run
+              is byte-identical to an uninterrupted one
   fedmrn exp table1|fig4|fig5|fig6|table3|dropout|theory|all [--preset ...]
               dropout sweeps accuracy vs client dropout rate through the
               fault layer (--methods, --rates, --dataset; defaults to a
@@ -73,6 +87,15 @@ USAGE:
                --out defaults to the repo root). --timeout-secs is the
                per-connection and per-round deadline (env
                FEDMRN_NET_TIMEOUT_SECS overrides; default 30)
+  fedmrn artifact inspect|verify|sign PATH [--key FILE]
+  fedmrn artifact pack DIR FILE... [--kind NAME] [--key FILE]
+               signed-manifest tooling (docs/ARTIFACT.md). PATH is a
+               manifest.json or a directory holding one (checkpoint
+               dirs resolve through their LATEST pointer). verify checks
+               every payload digest plus the detached HMAC signature;
+               keys come from --key FILE or the FEDMRN_SIGN_KEY env var.
+               pack writes DIR/manifest.json over the named files (the
+               bench-trajectory path — scripts/bench.sh)
 
 DATASETS (synthetic stand-ins, see DESIGN.md §3):
   fmnist svhn cifar10 cifar100 charlm charlm_tf seg smoke
@@ -121,6 +144,7 @@ fn real_main() -> Result<()> {
         Some("exp") => cmd_exp(&mut args),
         Some("bench") => cmd_bench(&mut args),
         Some("loadgen") => cmd_loadgen(&mut args),
+        Some("artifact") => cmd_artifact(&mut args),
         Some(other) => Err(Error::Config(format!(
             "unknown subcommand {other:?} (try `fedmrn help`)"
         ))),
@@ -153,6 +177,9 @@ fn cmd_info(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_run(args: &mut Args) -> Result<()> {
+    if let Some(resume) = args.take_opt_str("resume") {
+        return cmd_run_resume(args, &resume);
+    }
     let rt = load_runtime(args)?;
     let o = exp::ExpOpts::from_args(args)?;
     let dataset = args.take_str("dataset", "smoke");
@@ -172,10 +199,92 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     } else {
         None
     };
-    let res = exp::run_arm(&rt, &config, split, &method_name, part, &o, noise)?;
+    let cfg = exp::build_config(&config, &method_name, part, &o, noise)?;
+    let mut fed = Federation::new(&rt, cfg, split)?;
+    fed.verbose = o.verbose;
+    // stamp provenance so checkpoints written by this run are
+    // CLI-resumable (the split regenerates from these three knobs)
+    fed.dataset_meta = Some(checkpoint::DatasetMeta {
+        dataset: dataset.clone(),
+        per_class: o.per_class,
+        test_per_class: o.test_per_class,
+    });
+    let res = fed.run()?;
+    print_run_summary(&dataset, &res);
+    if let Some(path) = csv {
+        res.write_csv(&path)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `fedmrn run --resume DIR`: restart from the newest checkpoint in
+/// DIR. Only result-neutral knobs are consumed here — anything else
+/// left on the command line makes `args.finish()` fail, so a resume
+/// cannot silently change the science (the config fingerprint would
+/// reject it anyway; this gives the clearer error).
+fn cmd_run_resume(args: &mut Args, resume: &str) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let key = sign::resolve_key(args.take_opt_str("key").as_deref())?;
+    let (ck, status) = checkpoint::load(Path::new(resume), key.as_deref())?;
+    let mut cfg = ck.config.clone();
+    cfg.threads = args.take_usize("threads", cfg.threads)?;
+    cfg.tile = args.take_usize("tile", cfg.tile)?;
+    cfg.pipeline = args.take_bool("pipeline", cfg.pipeline)?;
+    cfg.job_timeout_secs =
+        args.take_u64("job-timeout-secs", cfg.job_timeout_secs)?;
+    cfg.checkpoint_every =
+        args.take_usize("checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(d) = args.take_opt_str("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d);
+    }
+    let verbose = args.take_bool("verbose", false)?;
+    let csv = args.take_opt_str("csv");
+    args.finish()?;
+
+    let meta = ck.dataset.clone().ok_or_else(|| {
+        Error::Config(
+            "checkpoint carries no dataset provenance (produced with a \
+             caller-supplied split) — resume it through Federation::resume"
+                .into(),
+        )
+    })?;
+    let (config_name, split) = exp::dataset_split_with(
+        &meta.dataset,
+        meta.per_class,
+        meta.test_per_class,
+        cfg.seed,
+    )?;
+    if config_name != cfg.config {
+        return Err(Error::Config(format!(
+            "dataset {:?} maps to config {config_name:?} but the checkpoint \
+             was trained on {:?}",
+            meta.dataset, cfg.config
+        )));
+    }
+    eprintln!(
+        "resuming {resume} at round {}/{} ({})",
+        ck.next_round,
+        cfg.rounds,
+        status.name()
+    );
+    let mut fed = Federation::resume(&rt, cfg, split, ck)?;
+    fed.verbose = verbose;
+    let res = fed.run()?;
+    print_run_summary(&meta.dataset, &res);
+    if let Some(path) = csv {
+        res.write_csv(&path)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn print_run_summary(dataset: &str, res: &RunResult) {
     println!(
-        "{dataset}/{method_name}/{part_name}: final_acc {:.4} best {:.4} \
+        "{dataset}/{}/{}: final_acc {:.4} best {:.4} \
          uplink {:.2} bpp ({} B total) wall {:.1}s",
+        res.method,
+        res.partition,
         res.final_acc(),
         res.best_acc(),
         res.uplink_bpp(),
@@ -190,11 +299,117 @@ fn cmd_run(args: &mut Args) -> Result<()> {
             );
         }
     }
-    if let Some(path) = csv {
-        res.write_csv(&path)?;
-        eprintln!("wrote {path}");
+}
+
+/// Resolve an `artifact` verb target to a concrete manifest file: the
+/// path itself when it is a file, else the directory's manifest
+/// (checkpoint directories resolve through `LATEST`).
+fn resolve_manifest(p: &Path) -> Result<PathBuf> {
+    if p.is_file() {
+        return Ok(p.to_path_buf());
     }
-    Ok(())
+    Ok(checkpoint::resolve_dir(p)?.join("manifest.json"))
+}
+
+fn cmd_artifact(args: &mut Args) -> Result<()> {
+    let verb = args.positional.get(1).cloned().ok_or_else(|| {
+        Error::Config("artifact needs a verb: inspect|verify|sign|pack".into())
+    })?;
+    match verb.as_str() {
+        "inspect" | "verify" | "sign" => {
+            let target = args.positional.get(2).cloned().ok_or_else(|| {
+                Error::Config(format!(
+                    "artifact {verb} needs a path (a manifest.json or a \
+                     directory holding one)"
+                ))
+            })?;
+            let key = sign::resolve_key(args.take_opt_str("key").as_deref())?;
+            args.finish()?;
+            let mpath = resolve_manifest(Path::new(&target))?;
+            match verb.as_str() {
+                "sign" => {
+                    let key = key.ok_or_else(|| {
+                        Error::Signature(
+                            "no signing key (give --key FILE or set \
+                             FEDMRN_SIGN_KEY)"
+                                .into(),
+                        )
+                    })?;
+                    let sp = sign::sign_file(&mpath, &key)?;
+                    println!("signed {} -> {}", mpath.display(), sp.display());
+                }
+                "verify" => {
+                    let status = sign::verify_file(&mpath, key.as_deref())?;
+                    let m = Manifest::load(&mpath)?;
+                    let dir = mpath.parent().unwrap_or_else(|| Path::new("."));
+                    m.verify_payloads(dir)?;
+                    println!(
+                        "ok: {} — {} payload(s) verified, {}",
+                        mpath.display(),
+                        m.entries.len(),
+                        status.name()
+                    );
+                }
+                _ => {
+                    let m = Manifest::load(&mpath)?;
+                    let status = match sign::verify_file(&mpath, key.as_deref())
+                    {
+                        Ok(s) => s.name().to_string(),
+                        Err(e) => format!("INVALID ({e})"),
+                    };
+                    println!("{}", mpath.display());
+                    println!("  kind: {} (schema v{})", m.kind, m.schema_version);
+                    if let Some(r) = m.round {
+                        println!("  round: {r}");
+                    }
+                    if let Some(fp) = &m.config_fingerprint {
+                        println!("  config_fingerprint: {fp}");
+                    }
+                    println!("  signature: {status}");
+                    println!("  meta: {}", m.meta.to_json());
+                    for e in &m.entries {
+                        println!("  {:>12} B  {}  {}", e.bytes, e.sha256, e.path);
+                    }
+                }
+            }
+            Ok(())
+        }
+        "pack" => {
+            let dir = args.positional.get(2).cloned().ok_or_else(|| {
+                Error::Config("artifact pack needs a directory".into())
+            })?;
+            let files: Vec<String> = args.positional[3..].to_vec();
+            if files.is_empty() {
+                return Err(Error::Config(
+                    "artifact pack needs file names after the directory".into(),
+                ));
+            }
+            let kind = args.take_str("kind", "files");
+            let key = sign::resolve_key(args.take_opt_str("key").as_deref())?;
+            args.finish()?;
+            let dirp = PathBuf::from(&dir);
+            let mut m = Manifest::new(&kind);
+            for f in &files {
+                m.add_file(&dirp, f)?;
+            }
+            let mpath = dirp.join("manifest.json");
+            std::fs::write(&mpath, m.to_json())?;
+            match key {
+                Some(k) => {
+                    sign::sign_file(&mpath, &k)?;
+                    println!("wrote signed {}", mpath.display());
+                }
+                None => println!(
+                    "wrote {} (unsigned — set FEDMRN_SIGN_KEY to sign)",
+                    mpath.display()
+                ),
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown artifact verb {other:?} (inspect|verify|sign|pack)"
+        ))),
+    }
 }
 
 fn cmd_bench(args: &mut Args) -> Result<()> {

@@ -254,6 +254,30 @@ impl NoiseGen {
         self.layout
     }
 
+    /// Raw state words of the serial stream — the checkpoint snapshot
+    /// surface. The engine's run RNG is always serial-layout and its
+    /// sole consumer (`select_clients`) draws through `shuffle`, whose
+    /// Lemire rejection sampling consumes a data-dependent number of
+    /// draws — so resumable state is the 256 raw bits, not a cursor.
+    /// Client-side noise streams need no snapshot at all: they are
+    /// derived statelessly per (client, round) via [`derive_seed`] and
+    /// repositioned with [`fork_at`](NoiseGen::fork_at).
+    pub fn state_words(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Rebuild a serial-layout generator from state words captured by
+    /// [`state_words`](NoiseGen::state_words). `None` for the invalid
+    /// all-zero state (corrupt checkpoint data — it is a fixed point of
+    /// the recurrence and can never arise from a real run).
+    pub fn from_state_words(s: [u64; 4]) -> Option<NoiseGen> {
+        Some(NoiseGen {
+            rng: Xoshiro256pp::from_state(s)?,
+            layout: NoiseLayout::Serial,
+            lanes: Vec::new(),
+        })
+    }
+
     /// Fork a generator `draws` stream positions ahead of this one's
     /// current state, leaving `self` untouched. O(1) in `draws` via
     /// GF(2) jump-ahead ([`Xoshiro256pp::jump`]). For the serial layout

@@ -58,11 +58,27 @@ impl Xoshiro256pp {
         result
     }
 
-    /// Current 256-bit state (test-only introspection for the jump
-    /// identity checks).
-    #[cfg(test)]
-    pub(crate) fn state(&self) -> [u64; 4] {
+    /// Current 256-bit state. Public for checkpoint introspection: the
+    /// artifact layer snapshots the run RNG's raw state words (a draw
+    /// cursor is impossible — Lemire rejection sampling in `next_below`
+    /// consumes a data-dependent number of draws) and restores them via
+    /// [`Xoshiro256pp::from_state`]. Also used by the jump identity
+    /// tests.
+    pub fn state(&self) -> [u64; 4] {
         self.s
+    }
+
+    /// Rebuild a generator from state words captured by
+    /// [`Xoshiro256pp::state`]. The all-zero state is a fixed point of
+    /// the recurrence (it can never arise from [`seed_from`] or any
+    /// number of steps), so it is rejected as corrupt checkpoint data.
+    ///
+    /// [`seed_from`]: Xoshiro256pp::seed_from
+    pub fn from_state(s: [u64; 4]) -> Option<Self> {
+        if s == [0, 0, 0, 0] {
+            return None;
+        }
+        Some(Xoshiro256pp { s })
     }
 
     /// Advance the stream by `k` positions without generating output:

@@ -1,0 +1,406 @@
+//! Integration suite for the signed-artifact subsystem (`fedmrn::artifact`):
+//! checkpoint round-trips through the public API, and a corruption fuzz
+//! over every payload file and manifest field.
+//!
+//! The contract under fuzz: a corrupted or tampered artifact must surface
+//! as a *typed* error — [`Error::Artifact`] for content damage,
+//! [`Error::Signature`] for provenance damage, [`Error::Json`] for
+//! mangled JSON — and must never panic or over-allocate. Corruption is
+//! applied with the engine's own fault-injection mangler
+//! ([`faults::corrupt_bytes`]), so the byte-level damage model matches
+//! what the transport fuzz already exercises.
+//!
+//! No XLA artifacts are needed: checkpoints are constructed directly.
+
+use std::path::{Path, PathBuf};
+
+use fedmrn::artifact::checkpoint::{self, Checkpoint, DatasetMeta};
+use fedmrn::artifact::manifest::Manifest;
+use fedmrn::artifact::sign::{self, SignStatus};
+use fedmrn::coordinator::faults::{corrupt_bytes, Corruption};
+use fedmrn::coordinator::{Method, RoundRecord, RunConfig};
+use fedmrn::error::Error;
+use fedmrn::noise::NoiseDist;
+use fedmrn::transport::Meter;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fedmrn_artifact_it_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap().flatten() {
+        let to = dst.join(e.file_name());
+        if e.path().is_dir() {
+            copy_dir(&e.path(), &to);
+        } else {
+            std::fs::copy(e.path(), &to).unwrap();
+        }
+    }
+}
+
+fn record(round: usize) -> RoundRecord {
+    RoundRecord {
+        round,
+        train_loss: 0.25 * (round + 1) as f64,
+        test_loss: f64::NAN,
+        test_acc: f64::NAN,
+        uplink_bytes: 4096 + round as u64,
+        downlink_bytes: 8192 + round as u64,
+        train_ms: 1.0,
+        compress_ms: 0.5,
+        selected: 4,
+        participants: 4,
+        retries: 0,
+        corrupt_rejected: 0,
+        quorum_met: true,
+        dropped: Vec::new(),
+    }
+}
+
+/// A checkpoint with every optional part populated (`w_init`, dataset
+/// provenance) and bit-pattern-hostile weights.
+fn fixture(next_round: usize) -> Checkpoint {
+    let noise = NoiseDist::Uniform { alpha: 0.05 };
+    let mut cfg = RunConfig::new("smoke_mlp", Method::parse("fedpm", noise).unwrap());
+    cfg.rounds = 6;
+    cfg.noise = noise;
+    let mut meter = Meter::new();
+    for r in 0..next_round {
+        meter.round_uplink.push(4096 + r as u64);
+        meter.round_downlink.push(8192 + r as u64);
+        meter.uplink_bytes += 4096 + r as u64;
+        meter.downlink_bytes += 8192 + r as u64;
+        meter.uplink_msgs += 4;
+    }
+    Checkpoint {
+        config: cfg,
+        next_round,
+        w: vec![0.75, -0.0, f32::MIN_POSITIVE, -1.0e-30, 3.5, -127.0],
+        w_init: Some(vec![1.0, -2.0, 0.5, -0.25, 8.0, 0.125]),
+        meter,
+        rng_state: [5, 6, 7, 8],
+        records: (0..next_round).map(record).collect(),
+        dataset: Some(DatasetMeta {
+            dataset: "smoke".into(),
+            per_class: 24,
+            test_per_class: 16,
+        }),
+    }
+}
+
+/// Every payload file a full checkpoint carries.
+const PAYLOADS: &[&str] = &[
+    "config.json",
+    "w.f32le",
+    "w_init.f32le",
+    "records.json",
+    "meter_round_uplink.u64le",
+    "meter_round_downlink.u64le",
+];
+
+#[test]
+fn checkpoint_roundtrip_with_w_init_is_bit_exact() {
+    let dir = tmp("roundtrip");
+    let ck = fixture(3);
+    checkpoint::save(&ck, &dir, None).unwrap();
+    let (back, status) = checkpoint::load(&dir, None).unwrap();
+    assert_eq!(status, SignStatus::Unsigned);
+    assert_eq!(back.next_round, 3);
+    for (a, b) in back.w.iter().zip(&ck.w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "w must round-trip bit-exact");
+    }
+    let (wi_a, wi_b) = (back.w_init.as_ref().unwrap(), ck.w_init.as_ref().unwrap());
+    for (a, b) in wi_a.iter().zip(wi_b) {
+        assert_eq!(a.to_bits(), b.to_bits(), "w_init must round-trip bit-exact");
+    }
+    assert_eq!(back.rng_state, ck.rng_state);
+    assert_eq!(back.meter.round_uplink, ck.meter.round_uplink);
+    assert_eq!(back.records.len(), ck.records.len());
+    assert_eq!(back.dataset, ck.dataset);
+    assert_eq!(
+        checkpoint::config_fingerprint(&back.config),
+        checkpoint::config_fingerprint(&ck.config)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_payload_corruption_is_a_typed_error_never_a_panic() {
+    // Bit flips and truncations over every payload file, at several
+    // corruption seeds: each must reject at load with a typed error —
+    // the digest layer catches same-length damage, the size check
+    // catches truncation before any hashing.
+    let pristine = tmp("fuzz_pristine");
+    checkpoint::save(&fixture(3), &pristine, None).unwrap();
+    let round = pristine.join("round-3");
+
+    let mut cases = Vec::new();
+    for seed in [1u64, 99, 0xDEAD] {
+        cases.push(Corruption::BitFlips { seed, n: 1 });
+        cases.push(Corruption::BitFlips { seed, n: 7 });
+        cases.push(Corruption::Truncate { seed });
+    }
+
+    for name in PAYLOADS {
+        for (i, c) in cases.iter().enumerate() {
+            let work = tmp(&format!("fuzz_{}_{i}", name.replace('.', "_")));
+            copy_dir(&round, &work);
+            let mut bytes = std::fs::read(work.join(name)).unwrap();
+            let clean = bytes.clone();
+            corrupt_bytes(c, &mut bytes);
+            if bytes == clean {
+                // a truncate seed can land on len-1 of a 1-byte file;
+                // nothing was damaged, nothing to assert
+                std::fs::remove_dir_all(&work).ok();
+                continue;
+            }
+            std::fs::write(work.join(name), &bytes).unwrap();
+            match checkpoint::load(&work, None) {
+                Err(Error::Artifact(_)) | Err(Error::Json(_)) | Err(Error::Config(_)) => {}
+                Err(e) => panic!("{name} {c:?}: unexpected error type {e}"),
+                Ok(_) => panic!("{name} {c:?}: corrupted payload loaded cleanly"),
+            }
+            std::fs::remove_dir_all(&work).ok();
+        }
+    }
+
+    // deleting any payload is a typed "missing" error
+    for name in PAYLOADS {
+        let work = tmp(&format!("fuzz_missing_{}", name.replace('.', "_")));
+        copy_dir(&round, &work);
+        std::fs::remove_file(work.join(name)).unwrap();
+        let err = checkpoint::load(&work, None).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{name}: {err}");
+        assert!(err.to_string().contains("missing"), "{name}: {err}");
+        std::fs::remove_dir_all(&work).ok();
+    }
+
+    // swapping two same-schema payloads is caught by their digests
+    let work = tmp("fuzz_swap");
+    copy_dir(&round, &work);
+    let up = std::fs::read(work.join("meter_round_uplink.u64le")).unwrap();
+    let down = std::fs::read(work.join("meter_round_downlink.u64le")).unwrap();
+    std::fs::write(work.join("meter_round_uplink.u64le"), &down).unwrap();
+    std::fs::write(work.join("meter_round_downlink.u64le"), &up).unwrap();
+    let err = checkpoint::load(&work, None).unwrap_err();
+    assert!(err.to_string().contains("digest mismatch"), "{err}");
+    std::fs::remove_dir_all(&work).ok();
+    std::fs::remove_dir_all(&pristine).ok();
+}
+
+/// Rewrite one manifest field via `mutate`, then expect a typed error
+/// from load.
+fn manifest_field_case(
+    round: &Path,
+    tag: &str,
+    mutate: impl FnOnce(&mut Manifest),
+    want_in_msg: &str,
+) {
+    let work = tmp(&format!("field_{tag}"));
+    copy_dir(round, &work);
+    let mut m = Manifest::load(&work.join("manifest.json")).unwrap();
+    mutate(&mut m);
+    std::fs::write(work.join("manifest.json"), m.to_json()).unwrap();
+    let err = checkpoint::load(&work, None).unwrap_err();
+    assert!(
+        err.to_string().contains(want_in_msg),
+        "{tag}: wanted {want_in_msg:?} in {err}"
+    );
+    std::fs::remove_dir_all(&work).ok();
+}
+
+/// Rewrite the manifest text via string replacement (for fields the
+/// typed [`Manifest`] cannot represent), then expect a typed error.
+fn manifest_text_case(round: &Path, tag: &str, from: &str, to: &str, want_in_msg: &str) {
+    let work = tmp(&format!("text_{tag}"));
+    copy_dir(round, &work);
+    let mpath = work.join("manifest.json");
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    let mutated = text.replacen(from, to, 1);
+    assert_ne!(mutated, text, "{tag}: pattern {from:?} not found in manifest");
+    std::fs::write(&mpath, mutated).unwrap();
+    let err = checkpoint::load(&work, None).unwrap_err();
+    assert!(
+        err.to_string().contains(want_in_msg),
+        "{tag}: wanted {want_in_msg:?} in {err}"
+    );
+    std::fs::remove_dir_all(&work).ok();
+}
+
+#[test]
+fn every_manifest_field_tamper_is_a_typed_error() {
+    let pristine = tmp("fields_pristine");
+    checkpoint::save(&fixture(3), &pristine, None).unwrap();
+    let round = pristine.join("round-3");
+
+    manifest_field_case(&round, "kind", |m| m.kind = "files".into(), "kind");
+    manifest_field_case(&round, "round_disagrees", |m| m.round = Some(5), "disagrees");
+    manifest_field_case(
+        &round,
+        "fingerprint_wrong",
+        |m| m.config_fingerprint = Some("00".repeat(32)),
+        "fingerprint mismatch",
+    );
+    manifest_field_case(
+        &round,
+        "fingerprint_missing",
+        |m| m.config_fingerprint = None,
+        "no config_fingerprint",
+    );
+    manifest_field_case(
+        &round,
+        "digest_tamper",
+        |m| m.entries[0].sha256 = "0".repeat(64),
+        "digest mismatch",
+    );
+    manifest_field_case(
+        &round,
+        "size_tamper",
+        |m| m.entries[0].bytes += 1,
+        "bytes on disk",
+    );
+    manifest_field_case(
+        &round,
+        "entry_dropped",
+        |m| m.entries.retain(|e| e.path != "w.f32le"),
+        "no entry",
+    );
+
+    manifest_text_case(
+        &round,
+        "schema",
+        "\"schema_version\":1",
+        "\"schema_version\":3",
+        "unsupported schema_version 3",
+    );
+    manifest_text_case(
+        &round,
+        "rng_zero",
+        "\"rng_state\":[5,6,7,8]",
+        "\"rng_state\":[0,0,0,0]",
+        "all-zero",
+    );
+    manifest_text_case(
+        &round,
+        "rng_short",
+        "\"rng_state\":[5,6,7,8]",
+        "\"rng_state\":[5,6,7]",
+        "3 words",
+    );
+    manifest_text_case(
+        &round,
+        "next_round_zero",
+        "\"next_round\":3",
+        "\"next_round\":0",
+        "out of range",
+    );
+    manifest_text_case(
+        &round,
+        "next_round_past_end",
+        "\"next_round\":3",
+        "\"next_round\":7",
+        "disagrees",
+    );
+    manifest_text_case(
+        &round,
+        "broken_json",
+        "\"kind\":\"checkpoint\"",
+        "\"kind\":checkpoint",
+        "manifest.json",
+    );
+
+    std::fs::remove_dir_all(&pristine).ok();
+}
+
+#[test]
+fn signed_checkpoint_rejects_tamper_anywhere() {
+    let pristine = tmp("signed_pristine");
+    let key = b"integration-test-key";
+    checkpoint::save(&fixture(2), &pristine, Some(key)).unwrap();
+    let round = pristine.join("round-2");
+
+    // the clean artifact verifies under the right key...
+    let (_, status) = checkpoint::load(&round, Some(key)).unwrap();
+    assert_eq!(status, SignStatus::SignedVerified);
+    // ...and loads (unverified) with none
+    let (_, status) = checkpoint::load(&round, None).unwrap();
+    assert_eq!(status, SignStatus::SignedUnverified);
+    // wrong key is a provenance error
+    let err = checkpoint::load(&round, Some(b"not-the-key")).unwrap_err();
+    assert!(matches!(err, Error::Signature(_)), "{err}");
+
+    // any bit flipped in the manifest breaks the HMAC — even flips that
+    // would leave the JSON parseable and self-consistent
+    for seed in [3u64, 17, 4242] {
+        let work = tmp(&format!("signed_mflip_{seed}"));
+        copy_dir(&round, &work);
+        let mut bytes = std::fs::read(work.join("manifest.json")).unwrap();
+        corrupt_bytes(&Corruption::BitFlips { seed, n: 1 }, &mut bytes);
+        std::fs::write(work.join("manifest.json"), &bytes).unwrap();
+        let err = checkpoint::load(&work, Some(key)).unwrap_err();
+        assert!(matches!(err, Error::Signature(_)), "seed {seed}: {err}");
+        std::fs::remove_dir_all(&work).ok();
+    }
+
+    // payload damage under a verifying key is still a *content* error:
+    // the signature (over the manifest) holds, the digest does not
+    let work = tmp("signed_payload_flip");
+    copy_dir(&round, &work);
+    let mut bytes = std::fs::read(work.join("w.f32le")).unwrap();
+    corrupt_bytes(&Corruption::BitFlips { seed: 9, n: 1 }, &mut bytes);
+    std::fs::write(work.join("w.f32le"), &bytes).unwrap();
+    let err = checkpoint::load(&work, Some(key)).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+    std::fs::remove_dir_all(&work).ok();
+
+    // a mangled or missing detached signature is a provenance error
+    let work = tmp("signed_sig_damage");
+    copy_dir(&round, &work);
+    std::fs::write(work.join("manifest.json.sig"), "zz").unwrap();
+    let err = checkpoint::load(&work, Some(key)).unwrap_err();
+    assert!(matches!(err, Error::Signature(_)), "{err}");
+    std::fs::remove_file(work.join("manifest.json.sig")).unwrap();
+    let err = checkpoint::load(&work, Some(key)).unwrap_err();
+    assert!(err.to_string().contains("unsigned"), "{err}");
+    std::fs::remove_dir_all(&work).ok();
+    std::fs::remove_dir_all(&pristine).ok();
+}
+
+#[test]
+fn files_manifest_pack_flow_roundtrips_and_rejects_tamper() {
+    // The `fedmrn artifact pack` shape: a "files" manifest over
+    // arbitrary payloads (the bench-trajectory use), signed in place.
+    let dir = tmp("pack");
+    std::fs::write(dir.join("BENCH_a.json"), b"{\"suite\":\"a\"}").unwrap();
+    std::fs::write(dir.join("BENCH_b.json"), b"{\"suite\":\"b\"}").unwrap();
+    let mut m = Manifest::new("files");
+    m.add_file(&dir, "BENCH_a.json").unwrap();
+    m.add_file(&dir, "BENCH_b.json").unwrap();
+    let mpath = dir.join("manifest.json");
+    std::fs::write(&mpath, m.to_json()).unwrap();
+    sign::sign_file(&mpath, b"bench-key").unwrap();
+
+    let back = Manifest::load(&mpath).unwrap();
+    assert_eq!(back.kind, "files");
+    assert_eq!(back.round, None);
+    back.verify_payloads(&dir).unwrap();
+    assert_eq!(
+        sign::verify_file(&mpath, Some(b"bench-key")).unwrap(),
+        SignStatus::SignedVerified
+    );
+
+    // tamper one payload: digest rejects even though the sig holds
+    std::fs::write(dir.join("BENCH_b.json"), b"{\"suite\":\"x\"}").unwrap();
+    assert_eq!(
+        sign::verify_file(&mpath, Some(b"bench-key")).unwrap(),
+        SignStatus::SignedVerified
+    );
+    let err = back.verify_payloads(&dir).unwrap_err();
+    assert!(err.to_string().contains("digest mismatch"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -32,7 +32,12 @@
 //! a loopback TCP round (any connection order, with and without the
 //! FaultModel armed) must finish byte-identical to the in-process
 //! engine, and hostile frames must be typed per-connection errors that
-//! never kill the accept loop.
+//! never kill the accept loop. Section 10 pins the checkpoint/resume
+//! subsystem: a run resumed from any mid-run checkpoint must finish
+//! byte-identical to the uninterrupted run — across result-neutral
+//! engine swaps (threads, pipelining, tile) and under an armed chaos
+//! model — while result-affecting config drift at resume is a typed
+//! error.
 
 use fedmrn::bitpack;
 use fedmrn::compress::{
@@ -1872,4 +1877,269 @@ fn hostile_frames_never_kill_the_loopback_server() {
         "each hostile connection must be one typed rejection"
     );
     assert_bytes_eq(&want, &w, "fedmrn weights despite the fuzz");
+}
+
+// ---------------------------------------------------------------------------
+// 10. kill-and-resume ≡ the uninterrupted run, byte for byte
+// ---------------------------------------------------------------------------
+//
+// PR 8 adds signed, resumable run artifacts: `CheckpointSink` writes a
+// manifest-verified directory per elected round and `Federation::resume`
+// restores weights, meter, run RNG and record history from it. The
+// acceptance contract is total: resuming at round k must be
+// *indistinguishable* in every non-timing output from never having
+// stopped — same final weights bit for bit, same per-round records,
+// same metered bytes — even when the tail runs on a different engine
+// configuration (threads / pipelining / tile are result-neutral by the
+// config fingerprint), and even with the fault-injection model armed
+// (the per-(client, round) fault plans are absolute-round-indexed, so
+// chaos replays identically across the cut). Result-affecting drift in
+// the resume config must be a typed error, never a silently-forked run.
+
+use fedmrn::artifact::checkpoint;
+
+/// The §6 engine config plus the checkpoint knobs.
+#[allow(clippy::too_many_arguments)]
+fn ck_cfg(
+    name: &str,
+    threads: usize,
+    pipeline: bool,
+    faults: FaultModel,
+    participation: ParticipationPolicy,
+    every: usize,
+    dir: Option<&std::path::Path>,
+) -> RunConfig {
+    let noise = NoiseDist::Uniform { alpha: 0.05 };
+    let m = Method::parse(name, noise).unwrap();
+    let mut cfg = RunConfig::new("smoke_mlp", m);
+    cfg.rounds = 4;
+    cfg.n_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_epochs = 1;
+    cfg.lr = 0.3;
+    cfg.noise = noise;
+    cfg.seed = 42;
+    cfg.eval_every = 2;
+    cfg.threads = threads;
+    cfg.pipeline = pipeline;
+    cfg.faults = faults;
+    cfg.participation = participation;
+    cfg.checkpoint_every = every;
+    cfg.checkpoint_dir = dir.map(|p| p.to_str().unwrap().to_string());
+    cfg
+}
+
+fn ck_tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fedmrn_diff_ck_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn run_cfg(rt: &Runtime, cfg: RunConfig) -> (RunResult, Vec<f32>) {
+    let mut fed = Federation::new(rt, cfg, pipe_split(512, 64, 7)).unwrap();
+    let res = fed.run().unwrap();
+    let w = fed.w.clone();
+    (res, w)
+}
+
+#[test]
+fn resume_at_every_round_is_byte_identical_to_uninterrupted() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    for name in ["fedmrn", "fedavg"] {
+        let ctx = format!("{name} resume");
+        // the oracle: one uninterrupted run with no checkpointing at all
+        let (base, w_base) = run_cfg(
+            &rt,
+            ck_cfg(
+                name,
+                1,
+                false,
+                FaultModel::none(),
+                ParticipationPolicy::strict(),
+                0,
+                None,
+            ),
+        );
+        // the producer: the same run, checkpointed after every round —
+        // writing checkpoints must itself be result-neutral
+        let dir = ck_tmp(name);
+        let (ckd, w_ckd) = run_cfg(
+            &rt,
+            ck_cfg(
+                name,
+                1,
+                false,
+                FaultModel::none(),
+                ParticipationPolicy::strict(),
+                1,
+                Some(&dir),
+            ),
+        );
+        assert_bytes_eq(&w_base, &w_ckd, &format!("{ctx}: checkpointing is neutral"));
+        assert_records_eq_modulo_timing(&base.records, &ckd.records, &ctx);
+        // resume at every cut, across the engine grid: threads and
+        // pipelining are result-neutral, so the tail may run on a
+        // different engine than the producer did. k = 4 is the
+        // degenerate cut (zero rounds left — the records are simply
+        // replayed from history).
+        for k in 1..=4usize {
+            for threads in [1usize, 4] {
+                for pipeline in [false, true] {
+                    let c = format!("{ctx} k={k} threads={threads} pipeline={pipeline}");
+                    let (ck, _status) =
+                        checkpoint::load(&dir.join(format!("round-{k}")), None).unwrap();
+                    assert_eq!(ck.next_round, k, "{c}");
+                    assert_eq!(ck.records.len(), k, "{c}: restored history");
+                    let mut cfg = ck.config.clone();
+                    cfg.threads = threads;
+                    cfg.pipeline = pipeline;
+                    cfg.checkpoint_every = 0;
+                    cfg.checkpoint_dir = None;
+                    let mut fed =
+                        Federation::resume(&rt, cfg, pipe_split(512, 64, 7), ck).unwrap();
+                    let res = fed.run().unwrap();
+                    assert_bytes_eq(&w_base, &fed.w, &format!("{c}: final w"));
+                    assert_records_eq_modulo_timing(&base.records, &res.records, &c);
+                    assert_eq!(res.uplink_bytes, base.uplink_bytes, "{c}: uplink bytes");
+                    assert_eq!(res.uplink_msgs, base.uplink_msgs, "{c}: uplink msgs");
+                    assert_eq!(
+                        res.downlink_bytes, base.downlink_bytes,
+                        "{c}: downlink bytes"
+                    );
+                }
+            }
+        }
+        // bare-directory resolution follows LATEST to the newest cut
+        let (ck, _status) = checkpoint::load(&dir, None).unwrap();
+        assert_eq!(ck.next_round, 4, "{ctx}: LATEST resolves to the last round");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn resume_replays_chaos_faults_across_the_cut() {
+    // Fault plans are derived from (fault_seed, round, selection), all
+    // absolute under resume — so the tail of a resumed chaotic run must
+    // drop, retry and reject exactly what the uninterrupted run did.
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let chaos = FaultModel {
+        dropout: 0.25,
+        straggle_p: 0.25,
+        straggle_ms: 40,
+        corrupt_p: 0.3,
+        deadline_ms: 20,
+        max_retries: 2,
+        fault_seed: 0x5EED,
+    };
+    let policy = ParticipationPolicy { quorum: 0.25, rescale: true };
+    for name in ["fedmrn", "fedavg"] {
+        let ctx = format!("{name} chaos resume");
+        let (base, w_base) = run_cfg(&rt, ck_cfg(name, 1, false, chaos, policy, 0, None));
+        let fired: u64 = base
+            .records
+            .iter()
+            .map(|r| r.dropped.len() as u64 + r.retries + r.corrupt_rejected)
+            .sum();
+        assert!(fired > 0, "{ctx}: chaos fired nothing — the pin is vacuous");
+        let dir = ck_tmp(&format!("chaos_{name}"));
+        run_cfg(&rt, ck_cfg(name, 1, false, chaos, policy, 2, Some(&dir)));
+        let (ck, _status) = checkpoint::load(&dir.join("round-2"), None).unwrap();
+        let mut cfg = ck.config.clone();
+        cfg.checkpoint_every = 0;
+        cfg.checkpoint_dir = None;
+        // neutral engine swap across the cut
+        cfg.threads = 4;
+        cfg.pipeline = true;
+        let mut fed = Federation::resume(&rt, cfg, pipe_split(512, 64, 7), ck).unwrap();
+        let res = fed.run().unwrap();
+        assert_bytes_eq(&w_base, &fed.w, &format!("{ctx}: final w"));
+        assert_records_eq_modulo_timing(&base.records, &res.records, &ctx);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn resume_rejects_result_affecting_drift_but_not_neutral_knobs() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let dir = ck_tmp("drift");
+    run_cfg(
+        &rt,
+        ck_cfg(
+            "fedmrn",
+            1,
+            false,
+            FaultModel::none(),
+            ParticipationPolicy::strict(),
+            2,
+            Some(&dir),
+        ),
+    );
+    let load = || checkpoint::load(&dir.join("round-2"), None).unwrap().0;
+
+    // result-affecting drift: a typed Config error naming the contract
+    let ck = load();
+    let mut cfg = ck.config.clone();
+    cfg.lr = 0.31;
+    match Federation::resume(&rt, cfg, pipe_split(512, 64, 7), ck) {
+        Err(Error::Config(msg)) => {
+            assert!(msg.contains("result-affecting"), "unexpected message: {msg}")
+        }
+        Err(e) => panic!("lr drift must be a Config error, got {e}"),
+        Ok(_) => panic!("lr drift must not resume"),
+    }
+    for mutate in [
+        (|c: &mut RunConfig| c.seed ^= 1) as fn(&mut RunConfig),
+        |c| c.rounds += 1,
+        |c| c.clients_per_round += 1,
+        |c| c.faults.fault_seed ^= 1,
+    ] {
+        let ck = load();
+        let mut cfg = ck.config.clone();
+        mutate(&mut cfg);
+        assert!(
+            matches!(
+                Federation::resume(&rt, cfg, pipe_split(512, 64, 7), ck),
+                Err(Error::Config(_))
+            ),
+            "result-affecting drift must be a Config error"
+        );
+    }
+
+    // every neutral knob at once still resumes — and still lands on the
+    // uninterrupted run's weights
+    let (base, w_base) = run_cfg(
+        &rt,
+        ck_cfg(
+            "fedmrn",
+            1,
+            false,
+            FaultModel::none(),
+            ParticipationPolicy::strict(),
+            0,
+            None,
+        ),
+    );
+    let ck = load();
+    let mut cfg = ck.config.clone();
+    cfg.threads = 4;
+    cfg.tile = 64;
+    cfg.pipeline = true;
+    cfg.job_timeout_secs = 123;
+    cfg.checkpoint_every = 0;
+    cfg.checkpoint_dir = None;
+    let mut fed = Federation::resume(&rt, cfg, pipe_split(512, 64, 7), ck).unwrap();
+    let res = fed.run().unwrap();
+    assert_bytes_eq(&w_base, &fed.w, "neutral-knob resume: final w");
+    assert_records_eq_modulo_timing(&base.records, &res.records, "neutral-knob resume");
+    std::fs::remove_dir_all(&dir).ok();
 }

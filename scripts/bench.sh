@@ -51,3 +51,12 @@ fi
 
 echo "== committed perf trajectory =="
 ls -l BENCH_bitpack.json BENCH_aggregate.json BENCH_net.json
+
+# Pin the trajectory under a signed manifest (docs/ARTIFACT.md): each
+# BENCH_*.json gets its size + sha256 recorded in manifest.json, and the
+# manifest is HMAC-signed when FEDMRN_SIGN_KEY is set (CI exports it;
+# local runs without a key still get the digest pinning, unsigned).
+# `fedmrn artifact verify .` re-checks the whole set.
+cargo run --release -- artifact pack . \
+    BENCH_bitpack.json BENCH_aggregate.json BENCH_net.json --kind bench
+cargo run --release -- artifact verify manifest.json
