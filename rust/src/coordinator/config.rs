@@ -1,4 +1,9 @@
-//! Run configuration: one struct fully describing a federated run.
+//! Run configuration: one struct fully describing a federated run —
+//! plus the single env/config/default timeout resolver every
+//! deadline-bearing subsystem (pipelined engine, networked
+//! coordinator) shares.
+
+use std::time::Duration;
 
 use super::faults::{FaultModel, ParticipationPolicy};
 use crate::compress::{GradCodec, MaskType};
@@ -6,6 +11,45 @@ use crate::data::partition::Partition;
 use crate::error::{Error, Result};
 use crate::jsonx::Value;
 use crate::noise::{NoiseDist, NoiseLayout};
+
+/// Resolve a timeout as `env var → config knob → built-in default`,
+/// with an explicit contract for every env-var state. This is the one
+/// resolver behind every deadline in the system — the pipelined
+/// engine's job rendezvous (`FEDMRN_PIPELINE_TIMEOUT_SECS`) and the
+/// networked coordinator's per-connection deadlines
+/// (`FEDMRN_NET_TIMEOUT_SECS`) both delegate here, so its edge cases
+/// are load-bearing at two call sites:
+///
+/// * **unset, or set to an empty / all-whitespace string** — falls
+///   through to a nonzero `cfg_secs`, then to `default_secs`. Empty
+///   mirrors `VAR= cmd` shell usage: "no override".
+/// * **set to a positive integer (whole seconds)** — wins outright.
+/// * **set to `0` or anything unparsable** — a typed [`Error::Config`]
+///   naming the variable and the rejected value. A zero deadline is
+///   meaningless, and a typo'd override silently becoming a 30-second
+///   default is exactly the surprise this resolver exists to prevent.
+pub fn resolve_timeout_env(
+    var: &str,
+    cfg_secs: u64,
+    default_secs: u64,
+) -> Result<Duration> {
+    if let Ok(raw) = std::env::var(var) {
+        let s = raw.trim();
+        if !s.is_empty() {
+            return match s.parse::<u64>() {
+                Ok(0) => Err(Error::Config(format!(
+                    "{var}: timeout must be >= 1 second, got \"0\" \
+                     (unset the variable to use the config/default)"
+                ))),
+                Ok(secs) => Ok(Duration::from_secs(secs)),
+                Err(_) => Err(Error::Config(format!(
+                    "{var}: expected whole seconds, got {s:?}"
+                ))),
+            };
+        }
+    }
+    Ok(Duration::from_secs(if cfg_secs > 0 { cfg_secs } else { default_secs }))
+}
 
 /// FedMRN masking mode (the Figure-4 ablation axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -126,8 +170,8 @@ pub struct RunConfig {
     pub participation: ParticipationPolicy,
     /// Detached-job timeout for the pipelined engine's rendezvous
     /// paths, seconds (0 = the built-in default; the env var
-    /// `FEDMRN_PIPELINE_TIMEOUT_SECS` overrides both — see
-    /// [`crate::coordinator::pipeline::resolve_job_timeout`]).
+    /// `FEDMRN_PIPELINE_TIMEOUT_SECS` overrides both — resolved
+    /// through the shared [`resolve_timeout_env`] contract).
     pub job_timeout_secs: u64,
     /// Write a signed-manifest checkpoint every `checkpoint_every`
     /// completed rounds (0 = off; [`crate::artifact::checkpoint`]).
@@ -379,6 +423,56 @@ mod tests {
     use super::*;
 
     const NOISE: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+    #[test]
+    fn timeout_resolver_prefers_env_then_config_then_default() {
+        // A var name no other test (or call site) touches: env mutation
+        // is process-global and cargo runs tests concurrently.
+        let var = "FEDMRN_TEST_TIMEOUT_RESOLVER_SECS";
+        std::env::remove_var(var);
+        assert_eq!(
+            resolve_timeout_env(var, 0, 30).unwrap(),
+            Duration::from_secs(30),
+            "unset env + zero cfg = built-in default"
+        );
+        assert_eq!(
+            resolve_timeout_env(var, 7, 30).unwrap(),
+            Duration::from_secs(7),
+            "nonzero cfg beats the default"
+        );
+        std::env::set_var(var, "90");
+        assert_eq!(
+            resolve_timeout_env(var, 7, 30).unwrap(),
+            Duration::from_secs(90),
+            "env beats both"
+        );
+        for empty in ["", "   "] {
+            std::env::set_var(var, empty);
+            assert_eq!(
+                resolve_timeout_env(var, 7, 30).unwrap(),
+                Duration::from_secs(7),
+                "empty/whitespace env {empty:?} means unset"
+            );
+        }
+        std::env::remove_var(var);
+    }
+
+    #[test]
+    fn timeout_resolver_rejects_zero_and_garbage_env() {
+        let var = "FEDMRN_TEST_TIMEOUT_RESOLVER_BAD_SECS";
+        for bad in ["0", " 0 ", "not-a-number", "30s", "-5", "1.5"] {
+            std::env::set_var(var, bad);
+            let err = resolve_timeout_env(var, 7, 30).unwrap_err();
+            match err {
+                Error::Config(msg) => assert!(
+                    msg.contains(var),
+                    "error for {bad:?} must name the variable: {msg}"
+                ),
+                other => panic!("expected Config error for {bad:?}, got {other:?}"),
+            }
+        }
+        std::env::remove_var(var);
+    }
 
     #[test]
     fn parse_all_table1_methods() {

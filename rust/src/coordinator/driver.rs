@@ -1,0 +1,727 @@
+//! The transport-agnostic round driver: one code path for uplink
+//! delivery, shared by every way bytes can reach the fold.
+//!
+//! Before this module the repo had three divergent copies of "deliver
+//! uplinks into the streaming [`Aggregator`]": the fault-injected loop
+//! inside `pipeline::train_and_fold`, the per-connection ingest loop in
+//! `net::coordinator::serve_round`, and the loadgen replay path. Every
+//! planned direction (multi-round sessions, buffered aggregation,
+//! dynamic sampling, shufflers) needs delivery pluggable in exactly one
+//! place, so the three copies collapse onto two pieces:
+//!
+//! * [`RoundDriver`] — the server half. Owns one round's bookkeeping:
+//!   decode + ingest + meter-only-on-delivery ([`RoundDriver::offer`]),
+//!   per-slot loss / drop / retry books, and the quorum-degrading
+//!   finish. Both `pipeline::train_and_fold` and
+//!   `net::coordinator::serve_round` build one of these, so
+//!   [`RoundRecord`](super::RoundRecord) fields, meter totals, and
+//!   [`ParticipationPolicy`](super::ParticipationPolicy) handling are
+//!   computed by shared code.
+//! * [`deliver_with_faults`] — the client half: the PR-6 fault delivery
+//!   discipline (straggler-deadline → bounded retry →
+//!   corrupt-reject-resend), generic over an [`UplinkSink`] so the same
+//!   loop drives an in-process driver, a per-round TCP connection
+//!   (`net::loadgen`), or a persistent session (`net::session`).
+//!
+//! On top sits the object-safe [`UplinkSource`] trait: "resolve every
+//! promised slot of one round into the driver". Three implementations
+//! exist — the in-process source inside `pipeline::train_and_fold`
+//! (wrapping `parallel::run_streamed`), the TCP session server
+//! (`net::session::SessionServer`), and the loadgen synthetic source
+//! (`net::loadgen::SyntheticSource`) — and finished weights are
+//! byte-identical across all of them (`tests/differential.rs` §11).
+//! Identity holds because every input to the fold is already
+//! deterministic per `(seed, round, slot)`: payload bytes come from
+//! seed-derived training, scales are precomputed per slot, the
+//! aggregator is arrival-order independent, and the fault plan is pure
+//! in `(seed, FaultModel, round, client)`. The driver adds the last
+//! missing piece: one copy of the bookkeeping that turns deliveries
+//! into records.
+
+use super::faults::{self, ClientFaults, DropReason, DroppedClient};
+use super::strategy::Aggregator;
+use crate::error::{Error, Result};
+use crate::transport::{Meter, Payload};
+
+// ---------------------------------------------------------------------------
+// RoundSpec — what one round promises
+// ---------------------------------------------------------------------------
+
+/// One round's delivery contract, fixed before any uplink arrives.
+/// Slot order is the canonical fold order; `selection[slot]` is the
+/// global client id serving that slot. (Re-exported as
+/// `net::RoundSpec` — the wire protocol and the engine share it.)
+#[derive(Clone, Debug)]
+pub struct RoundSpec {
+    pub round: usize,
+    /// Parameter dimension (frame-size caps and payload validation).
+    pub d: usize,
+    /// Global client ids in slot order.
+    pub selection: Vec<u64>,
+    /// Data-proportional fold weight `p'_k` per slot.
+    pub scales: Vec<f32>,
+}
+
+impl RoundSpec {
+    pub fn promised(&self) -> usize {
+        self.selection.len()
+    }
+
+    /// Slot index of a global client id, if selected this round.
+    pub fn slot_of(&self, client: u64) -> Option<usize> {
+        self.selection.iter().position(|&c| c == client)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Offer — the typed outcome of presenting bytes to the fold
+// ---------------------------------------------------------------------------
+
+/// What happened when wire bytes were offered to the aggregator.
+#[derive(Debug)]
+pub enum Offer {
+    /// Decoded, validated, ingested, and metered.
+    Accepted,
+    /// The bytes bounced off `Payload::decode` or the aggregator's
+    /// wire-level validation (a [`Error::Codec`] rejection). Carries
+    /// the typed rejection so transports can relay it (ERR frames)
+    /// and the retry discipline can decide whether a resend is due.
+    /// Non-codec ingest failures are *not* folded into this variant —
+    /// they surface as hard errors.
+    Rejected(Error),
+}
+
+/// Retry/corruption bookkeeping accumulated while delivering one
+/// client's uplink. Transported verbatim over the wire in session
+/// mode, so the server's books match an in-process run exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AttemptBooks {
+    /// Attempts beyond the first (a dropped send or a rejected corrupt
+    /// uplink each consume one).
+    pub retries: u64,
+    /// Corrupt uplinks the server bounced at the wire boundary.
+    pub corrupt_rejected: u64,
+    /// Attempts that never reached the server (loadgen reports these
+    /// per-attempt; the round books only record the final fate).
+    pub dropped_attempts: u64,
+}
+
+/// Where a delivery attempt's bytes land: the in-process driver, a
+/// per-round TCP connection, or a persistent session. `books` carries
+/// the discipline's counters *so far*, so wire sinks can prefix them
+/// onto the frame they send.
+pub trait UplinkSink {
+    fn offer(&mut self, slot: usize, bytes: &[u8], books: &AttemptBooks) -> Result<Offer>;
+}
+
+// ---------------------------------------------------------------------------
+// deliver_with_faults — THE fault delivery discipline (single copy)
+// ---------------------------------------------------------------------------
+
+/// Deliver one client's uplink through its fault plan: the PR-6
+/// discipline, in its only copy.
+///
+/// * **Straggler deadline** — a drawn latency above `deadline_ms` (when
+///   nonzero) misses the round outright: compared, never slept, zero
+///   attempts made.
+/// * **Bounded retries** — walk [`ClientFaults::attempts`]
+///   (`max_retries + 1` long); every attempt after the first counts as
+///   a retry.
+/// * **Corrupt-reject-resend** — a corrupt attempt's bytes are mangled
+///   with [`faults::corrupt_bytes`] before the sink sees them; a
+///   rejection counts `corrupt_rejected` and the loop resends clean.
+/// * **Meter-only-on-delivery** — metering lives behind the sink
+///   ([`RoundDriver::offer`]); failed attempts never touch totals.
+///
+/// Returns `(None, books)` on delivery, or `(Some(reason), books)`
+/// with the *last* failure's [`DropReason`]. A rejection of clean
+/// (uncorrupted) bytes is an engine bug, not chaos, and surfaces as
+/// the rejection's hard error.
+///
+/// The clean bytes are encoded once and copied per attempt; encoding
+/// is deterministic, so this is byte-identical to re-encoding each
+/// attempt (what the pre-refactor engine did).
+pub fn deliver_with_faults(
+    slot: usize,
+    cf: &ClientFaults,
+    deadline_ms: u64,
+    clean_bytes: &[u8],
+    sink: &mut dyn UplinkSink,
+) -> Result<(Option<DropReason>, AttemptBooks)> {
+    let mut books = AttemptBooks::default();
+    if deadline_ms > 0 && cf.straggle_ms > deadline_ms {
+        return Ok((Some(DropReason::Straggler), books));
+    }
+    let mut last = DropReason::Dropout;
+    for (a, attempt) in cf.attempts.iter().enumerate() {
+        if a > 0 {
+            books.retries += 1;
+        }
+        if attempt.dropped {
+            books.dropped_attempts += 1;
+            last = DropReason::Dropout;
+            continue;
+        }
+        let mut bytes = clean_bytes.to_vec();
+        if let Some(c) = &attempt.corrupt {
+            faults::corrupt_bytes(c, &mut bytes);
+        }
+        match sink.offer(slot, &bytes, &books)? {
+            Offer::Accepted => return Ok((None, books)),
+            Offer::Rejected(e) => {
+                if attempt.corrupt.is_none() {
+                    return Err(e);
+                }
+                books.corrupt_rejected += 1;
+                last = DropReason::Corrupt;
+            }
+        }
+    }
+    Ok((Some(last), books))
+}
+
+// ---------------------------------------------------------------------------
+// RoundDriver — one round's shared server-side bookkeeping
+// ---------------------------------------------------------------------------
+
+/// The server half of one round: wraps the method's [`Aggregator`] and
+/// the run [`Meter`] with the delivery bookkeeping that every transport
+/// used to reimplement. Build one with [`RoundDriver::begin`], resolve
+/// every promised slot (offer / drop), then [`RoundDriver::finish`]
+/// into [`RoundBooks`].
+///
+/// The driver deliberately does *not* call `Meter::begin_round` — the
+/// engine and the net server open rounds at different points relative
+/// to downlink metering, and that ordering is part of the pinned meter
+/// traces.
+pub struct RoundDriver<'a> {
+    spec: &'a RoundSpec,
+    agg: &'a mut dyn Aggregator,
+    meter: &'a mut Meter,
+    verbose: bool,
+    delivered: Vec<bool>,
+    losses: Vec<f64>,
+    dropped: Vec<DroppedClient>,
+    n_delivered: usize,
+    retries: u64,
+    corrupt_rejected: u64,
+}
+
+impl<'a> RoundDriver<'a> {
+    /// Arm the aggregator for the round and zero the books.
+    pub fn begin(
+        spec: &'a RoundSpec,
+        agg: &'a mut dyn Aggregator,
+        meter: &'a mut Meter,
+        verbose: bool,
+    ) -> Result<RoundDriver<'a>> {
+        let n = spec.selection.len();
+        if spec.scales.len() != n {
+            return Err(Error::Config(format!(
+                "round {}: {} scales for {} selected clients",
+                spec.round,
+                spec.scales.len(),
+                n
+            )));
+        }
+        agg.begin(spec.round, spec.d, n)?;
+        Ok(RoundDriver {
+            spec,
+            agg,
+            meter,
+            verbose,
+            delivered: vec![false; n],
+            losses: vec![f64::NAN; n],
+            dropped: Vec::new(),
+            n_delivered: 0,
+            retries: 0,
+            corrupt_rejected: 0,
+        })
+    }
+
+    pub fn spec(&self) -> &RoundSpec {
+        self.spec
+    }
+
+    pub fn promised(&self) -> usize {
+        self.delivered.len()
+    }
+
+    pub fn n_delivered(&self) -> usize {
+        self.n_delivered
+    }
+
+    pub fn is_delivered(&self, slot: usize) -> bool {
+        self.delivered.get(slot).copied().unwrap_or(false)
+    }
+
+    /// Present wire bytes for `slot` to the fold: decode, ingest,
+    /// meter-on-delivery. Decode failures and the aggregator's
+    /// [`Error::Codec`] validation failures come back as
+    /// [`Offer::Rejected`] (the caller decides whether that means
+    /// chaos, a hostile peer, or an engine bug); any other ingest
+    /// error is hard.
+    pub fn offer(&mut self, slot: usize, bytes: &[u8]) -> Result<Offer> {
+        if slot >= self.delivered.len() {
+            return Err(Error::Net(format!(
+                "slot {slot} out of range for round {} ({} promised)",
+                self.spec.round,
+                self.delivered.len()
+            )));
+        }
+        let payload = match Payload::decode(bytes) {
+            Ok(p) => p,
+            Err(e) => return Ok(Offer::Rejected(e)),
+        };
+        match self.agg.ingest(slot, payload, self.spec.scales[slot]) {
+            Ok(()) => {
+                self.meter.count_uplink(bytes.len());
+                if !self.delivered[slot] {
+                    self.delivered[slot] = true;
+                    self.n_delivered += 1;
+                }
+                Ok(Offer::Accepted)
+            }
+            Err(Error::Codec(m)) => Ok(Offer::Rejected(Error::Codec(m))),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Record a delivered slot's training loss (feeds the round's mean
+    /// train loss — delivered slots only).
+    pub fn note_loss(&mut self, slot: usize, loss: f64) {
+        if let Some(l) = self.losses.get_mut(slot) {
+            *l = loss;
+        }
+    }
+
+    /// Resolve a slot as never-delivered. The books sort by slot at
+    /// finish, so resolution order (thread arrival, wire arrival) does
+    /// not leak into the record.
+    pub fn drop_slot(&mut self, slot: usize, reason: DropReason) {
+        self.dropped.push(DroppedClient {
+            slot,
+            client: self.spec.selection.get(slot).map(|&c| c as usize).unwrap_or(slot),
+            reason,
+        });
+    }
+
+    /// Fold one client's attempt books into the round totals (local
+    /// delivery, or books relayed over a session's wire).
+    pub fn absorb(&mut self, books: &AttemptBooks) {
+        self.retries += books.retries;
+        self.corrupt_rejected += books.corrupt_rejected;
+    }
+
+    /// Run the full fault discipline for one slot against this driver
+    /// and record the outcome — the in-process delivery path.
+    pub fn deliver_faulted(
+        &mut self,
+        slot: usize,
+        cf: &ClientFaults,
+        deadline_ms: u64,
+        clean_bytes: &[u8],
+        train_loss: f64,
+    ) -> Result<()> {
+        let (reason, books) = deliver_with_faults(slot, cf, deadline_ms, clean_bytes, self)?;
+        self.absorb(&books);
+        match reason {
+            None => self.note_loss(slot, train_loss),
+            Some(r) => self.drop_slot(slot, r),
+        }
+        Ok(())
+    }
+
+    /// Close the round: fold into `w` (with graceful quorum
+    /// degradation — a starved quorum carries the weights forward
+    /// unchanged and reports `quorum_met = false`; every other finish
+    /// error aborts) and surrender the books.
+    pub fn finish(self, w: &mut [f32]) -> Result<RoundBooks> {
+        let RoundDriver {
+            spec: _,
+            agg,
+            meter,
+            verbose,
+            delivered,
+            losses,
+            mut dropped,
+            n_delivered,
+            retries,
+            corrupt_rejected,
+        } = self;
+        dropped.sort_by_key(|d| d.slot);
+        let kept: Vec<f64> = losses
+            .iter()
+            .zip(&delivered)
+            .filter_map(|(&l, &k)| if k { Some(l) } else { None })
+            .collect();
+        let train_loss = crate::stats::mean(&kept);
+        let mut quorum_met = true;
+        if let Err(e) = agg.finish(w) {
+            match e {
+                Error::Quorum {
+                    round,
+                    arrived,
+                    promised,
+                    required,
+                } => {
+                    quorum_met = false;
+                    if verbose {
+                        eprintln!(
+                            "[round {round}] quorum not met ({arrived}/{promised} arrived, \
+                             {required} required): carrying weights forward"
+                        );
+                    }
+                }
+                other => return Err(other),
+            }
+        }
+        Ok(RoundBooks {
+            promised: delivered.len(),
+            participants: n_delivered,
+            train_loss,
+            retries,
+            corrupt_rejected,
+            quorum_met,
+            uplink_bytes: meter.round_uplink.last().copied().unwrap_or(0),
+            delivered,
+            dropped,
+        })
+    }
+}
+
+impl UplinkSink for RoundDriver<'_> {
+    fn offer(&mut self, slot: usize, bytes: &[u8], _books: &AttemptBooks) -> Result<Offer> {
+        RoundDriver::offer(self, slot, bytes)
+    }
+}
+
+/// Everything [`RoundDriver::finish`] learned about the round — the
+/// non-timing half of a [`RoundRecord`](super::RoundRecord), computed
+/// by shared code no matter which transport delivered the bytes.
+#[derive(Clone, Debug)]
+pub struct RoundBooks {
+    pub promised: usize,
+    pub participants: usize,
+    /// Mean training loss over *delivered* slots (NaN when none).
+    pub train_loss: f64,
+    pub retries: u64,
+    pub corrupt_rejected: u64,
+    pub quorum_met: bool,
+    /// This round's metered uplink bytes (delivered payloads only).
+    pub uplink_bytes: u64,
+    /// `delivered[slot]` — which promised slots folded.
+    pub delivered: Vec<bool>,
+    /// Never-delivered clients, sorted by slot.
+    pub dropped: Vec<DroppedClient>,
+}
+
+// ---------------------------------------------------------------------------
+// UplinkSource — the pluggable transport
+// ---------------------------------------------------------------------------
+
+/// Wall-clock spent producing the round's uplinks, when the source can
+/// see it (the in-process source sums per-client timers; remote
+/// sources report zeros — timing is the one RoundRecord axis the
+/// byte-identity guarantee excludes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTiming {
+    pub train_ms: f64,
+    pub compress_ms: f64,
+}
+
+/// One round of uplink delivery, any transport. Implementations must
+/// resolve **every** promised slot of the driver's
+/// [`RoundSpec`] — either [`RoundDriver::offer`]-accepted (plus
+/// [`RoundDriver::note_loss`] / [`RoundDriver::absorb`]) or
+/// [`RoundDriver::drop_slot`] — before returning. Object-safe: the
+/// engine holds `&dyn UplinkSource` and cannot tell the transports
+/// apart, which is exactly the point.
+pub trait UplinkSource {
+    fn deliver_round(&self, drv: &mut RoundDriver<'_>, w: &[f32]) -> Result<RoundTiming>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::RunConfig;
+    use crate::coordinator::faults::{AttemptFault, Corruption, FaultModel, ParticipationPolicy};
+    use crate::coordinator::registry;
+    use crate::coordinator::Method;
+    use crate::net::loadgen::synth_uplink;
+    use crate::noise::NoiseDist;
+
+    const NOISE: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+    fn mrn_cfg(n_clients: usize) -> RunConfig {
+        let method = Method::parse("fedmrn", NOISE).unwrap();
+        let mut cfg = RunConfig::new("smoke_mlp", method);
+        cfg.clients_per_round = n_clients;
+        cfg
+    }
+
+    /// A sink that scripts its verdicts and records what it saw.
+    struct ScriptedSink {
+        verdicts: Vec<bool>, // true = accept
+        offered: Vec<(usize, Vec<u8>, AttemptBooks)>,
+    }
+
+    impl UplinkSink for ScriptedSink {
+        fn offer(&mut self, slot: usize, bytes: &[u8], books: &AttemptBooks) -> Result<Offer> {
+            self.offered.push((slot, bytes.to_vec(), *books));
+            if self.verdicts.remove(0) {
+                Ok(Offer::Accepted)
+            } else {
+                Ok(Offer::Rejected(Error::Codec("scripted bounce".into())))
+            }
+        }
+    }
+
+    fn cf(straggle_ms: u64, attempts: Vec<AttemptFault>) -> ClientFaults {
+        ClientFaults {
+            client: 7,
+            straggle_ms,
+            attempts,
+        }
+    }
+
+    const CLEAN: AttemptFault = AttemptFault {
+        dropped: false,
+        corrupt: None,
+    };
+    const DROP: AttemptFault = AttemptFault {
+        dropped: true,
+        corrupt: None,
+    };
+
+    #[test]
+    fn discipline_straggler_deadline_short_circuits() {
+        let mut sink = ScriptedSink {
+            verdicts: vec![],
+            offered: vec![],
+        };
+        let (reason, books) =
+            deliver_with_faults(0, &cf(50, vec![CLEAN]), 20, b"payload", &mut sink).unwrap();
+        assert_eq!(reason, Some(DropReason::Straggler));
+        assert_eq!(books, AttemptBooks::default(), "no attempts, no books");
+        assert!(sink.offered.is_empty(), "a blown deadline never sends");
+
+        // deadline 0 = none: the same latency delivers
+        let mut sink = ScriptedSink {
+            verdicts: vec![true],
+            offered: vec![],
+        };
+        let (reason, _) =
+            deliver_with_faults(0, &cf(50, vec![CLEAN]), 0, b"payload", &mut sink).unwrap();
+        assert_eq!(reason, None);
+    }
+
+    #[test]
+    fn discipline_counts_retries_drops_and_corrupt_rejects() {
+        // attempt 0: corrupt (rejected), 1: dropped, 2: clean (lands)
+        let corrupt = AttemptFault {
+            dropped: false,
+            corrupt: Some(Corruption::BitFlips { seed: 9, n: 2 }),
+        };
+        let mut sink = ScriptedSink {
+            verdicts: vec![false, true],
+            offered: vec![],
+        };
+        let clean = b"some-encoded-payload".to_vec();
+        let (reason, books) =
+            deliver_with_faults(3, &cf(0, vec![corrupt, DROP, CLEAN]), 0, &clean, &mut sink)
+                .unwrap();
+        assert_eq!(reason, None, "final clean attempt delivers");
+        assert_eq!(books.retries, 2, "attempts 1 and 2 are retries");
+        assert_eq!(books.corrupt_rejected, 1);
+        assert_eq!(books.dropped_attempts, 1);
+        assert_eq!(sink.offered.len(), 2, "dropped attempt never sends");
+        assert_ne!(sink.offered[0].1, clean, "first send was mangled");
+        assert_eq!(sink.offered[1].1, clean, "resend is clean");
+        // the winning send saw the books as they stood before it
+        assert_eq!(sink.offered[1].2.retries, 2);
+        assert_eq!(sink.offered[1].2.corrupt_rejected, 1);
+
+        // all attempts dropped → Dropout; last-failure-wins reason
+        let mut sink = ScriptedSink {
+            verdicts: vec![],
+            offered: vec![],
+        };
+        let (reason, books) =
+            deliver_with_faults(0, &cf(0, vec![DROP, DROP]), 0, &clean, &mut sink).unwrap();
+        assert_eq!(reason, Some(DropReason::Dropout));
+        assert_eq!(books.retries, 1);
+
+        // corrupt-last → Corrupt
+        let mut sink = ScriptedSink {
+            verdicts: vec![false],
+            offered: vec![],
+        };
+        let (reason, _) =
+            deliver_with_faults(0, &cf(0, vec![DROP, corrupt]), 0, &clean, &mut sink).unwrap();
+        assert_eq!(reason, Some(DropReason::Corrupt));
+    }
+
+    #[test]
+    fn discipline_treats_clean_rejection_as_hard_error() {
+        let mut sink = ScriptedSink {
+            verdicts: vec![false],
+            offered: vec![],
+        };
+        let err = deliver_with_faults(0, &cf(0, vec![CLEAN]), 0, b"payload", &mut sink)
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::Codec(_)),
+            "a bounced clean uplink is an engine bug, not chaos: {err:?}"
+        );
+    }
+
+    #[test]
+    fn round_driver_books_match_the_engine_contract() {
+        let d = 257usize;
+        let n = 4usize;
+        let mut cfg = mrn_cfg(n);
+        cfg.participation = ParticipationPolicy {
+            quorum: 0.5,
+            rescale: true,
+        };
+        let strat = registry::strategy_for_config(&cfg);
+
+        // oracle: ingest the same three payloads directly
+        let payloads: Vec<Vec<u8>> =
+            (0..n).map(|c| synth_uplink(42, 0, c, d).encode()).collect();
+        let scales = vec![1.0 / n as f32; n];
+        let mut w_oracle = vec![0.25f32; d];
+        {
+            let mut agg = strat.aggregator(&cfg);
+            agg.begin(0, d, n).unwrap();
+            for slot in [2usize, 0, 1] {
+                agg.ingest(slot, Payload::decode(&payloads[slot]).unwrap(), scales[slot])
+                    .unwrap();
+            }
+            agg.finish(&mut w_oracle).unwrap();
+        }
+
+        // driver: same three slots delivered (one corrupt-then-clean),
+        // slot 3 dropped
+        let spec = RoundSpec {
+            round: 0,
+            d,
+            selection: (0..n as u64).collect(),
+            scales: scales.clone(),
+        };
+        let mut agg = strat.aggregator(&cfg);
+        let mut meter = Meter::new();
+        meter.begin_round();
+        let mut w = vec![0.25f32; d];
+        let mut drv = RoundDriver::begin(&spec, agg.as_mut(), &mut meter, false).unwrap();
+        let corrupt_first = cf(
+            0,
+            vec![
+                AttemptFault {
+                    dropped: false,
+                    corrupt: Some(Corruption::Truncate { seed: 5 }),
+                },
+                CLEAN,
+            ],
+        );
+        // out-of-order on purpose: the books must not care
+        drv.deliver_faulted(2, &cf(0, vec![CLEAN]), 0, &payloads[2], 0.5)
+            .unwrap();
+        drv.deliver_faulted(0, &corrupt_first, 0, &payloads[0], 0.3)
+            .unwrap();
+        drv.deliver_faulted(1, &cf(0, vec![CLEAN]), 0, &payloads[1], 0.4)
+            .unwrap();
+        drv.deliver_faulted(3, &cf(0, vec![DROP, DROP]), 0, &payloads[3], 0.9)
+            .unwrap();
+        assert_eq!(drv.n_delivered(), 3);
+        let books = drv.finish(&mut w).unwrap();
+
+        assert_eq!(w, w_oracle, "driver fold is byte-identical to direct ingest");
+        assert_eq!(books.promised, 4);
+        assert_eq!(books.participants, 3);
+        assert_eq!(books.delivered, vec![true, true, true, false]);
+        assert!((books.train_loss - (0.5 + 0.3 + 0.4) / 3.0).abs() < 1e-12);
+        assert_eq!(books.retries, 2, "slot 0 resend + slot 3 second attempt");
+        assert_eq!(books.corrupt_rejected, 1);
+        assert!(books.quorum_met);
+        assert_eq!(books.dropped.len(), 1);
+        assert_eq!(books.dropped[0].slot, 3);
+        assert_eq!(books.dropped[0].reason, DropReason::Dropout);
+        let expect_bytes: u64 = [0usize, 1, 2].iter().map(|&s| payloads[s].len() as u64).sum();
+        assert_eq!(books.uplink_bytes, expect_bytes, "meter-only-on-delivery");
+        assert_eq!(meter.uplink_msgs, 3, "rejected/dropped attempts unmetered");
+    }
+
+    #[test]
+    fn round_driver_degrades_below_quorum_instead_of_aborting() {
+        let d = 64usize;
+        let n = 3usize;
+        let cfg = mrn_cfg(n); // strict participation
+        let strat = registry::strategy_for_config(&cfg);
+        let spec = RoundSpec {
+            round: 2,
+            d,
+            selection: (0..n as u64).collect(),
+            scales: vec![1.0 / n as f32; n],
+        };
+        let mut agg = strat.aggregator(&cfg);
+        let mut meter = Meter::new();
+        meter.begin_round();
+        let before = vec![0.5f32; d];
+        let mut w = before.clone();
+        let mut drv = RoundDriver::begin(&spec, agg.as_mut(), &mut meter, false).unwrap();
+        let p = synth_uplink(1, 2, 0, d).encode();
+        assert!(matches!(drv.offer(0, &p).unwrap(), Offer::Accepted));
+        drv.note_loss(0, 0.7);
+        drv.drop_slot(1, DropReason::Dropout);
+        drv.drop_slot(2, DropReason::Straggler);
+        let books = drv.finish(&mut w).unwrap();
+        assert!(!books.quorum_met);
+        assert_eq!(w, before, "a starved quorum carries weights forward");
+        assert_eq!(books.participants, 1);
+        assert_eq!(books.train_loss, 0.7);
+    }
+
+    #[test]
+    fn offer_rejects_garbage_without_killing_the_round() {
+        let d = 64usize;
+        let cfg = mrn_cfg(1);
+        let strat = registry::strategy_for_config(&cfg);
+        let spec = RoundSpec {
+            round: 0,
+            d,
+            selection: vec![0],
+            scales: vec![1.0],
+        };
+        let mut agg = strat.aggregator(&cfg);
+        let mut meter = Meter::new();
+        meter.begin_round();
+        let mut drv = RoundDriver::begin(&spec, agg.as_mut(), &mut meter, false).unwrap();
+
+        let clean = synth_uplink(7, 0, 0, d).encode();
+        let truncated = &clean[..clean.len() / 2];
+        assert!(matches!(drv.offer(0, truncated).unwrap(), Offer::Rejected(_)));
+        assert_eq!(meter.uplink_msgs, 0, "rejected bytes never metered");
+        assert!(!drv.is_delivered(0));
+        assert!(drv.offer(9, &clean).is_err(), "out-of-range slot is hard");
+
+        assert!(matches!(drv.offer(0, &clean).unwrap(), Offer::Accepted));
+        assert!(drv.is_delivered(0));
+
+        // a faulted model's plan against a live aggregator: replaying
+        // the same corruption twice stays deterministic
+        let m = FaultModel {
+            dropout: 0.0,
+            straggle_p: 0.0,
+            straggle_ms: 0,
+            corrupt_p: 1.0,
+            deadline_ms: 0,
+            max_retries: 1,
+            fault_seed: 0xBEEF,
+        };
+        let a = m.client_faults(1, 0, 0);
+        let b = m.client_faults(1, 0, 0);
+        assert_eq!(a, b);
+    }
+}

@@ -42,6 +42,36 @@ pub struct RoundRecord {
 }
 
 impl RoundRecord {
+    /// Assemble a round's record from the round driver's books — every
+    /// non-timing field comes from the one shared delivery code path
+    /// ([`crate::coordinator::driver::RoundDriver::finish`]), no matter
+    /// which transport carried the uplinks. Timing and the round's
+    /// downlink bytes are the engine's to report; evaluation fields
+    /// start NaN ([`RoundRecord::set_eval`]).
+    pub fn from_books(
+        round: usize,
+        books: crate::coordinator::driver::RoundBooks,
+        timing: crate::coordinator::driver::RoundTiming,
+        downlink_bytes: u64,
+    ) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: books.train_loss,
+            test_loss: f64::NAN,
+            test_acc: f64::NAN,
+            uplink_bytes: books.uplink_bytes,
+            downlink_bytes,
+            train_ms: timing.train_ms,
+            compress_ms: timing.compress_ms,
+            selected: books.promised,
+            participants: books.participants,
+            retries: books.retries,
+            corrupt_rejected: books.corrupt_rejected,
+            quorum_met: books.quorum_met,
+            dropped: books.dropped,
+        }
+    }
+
     /// Fill in the evaluation results — deferred past the fold by the
     /// pipelined engine ([`crate::coordinator::pipeline`]), inline on
     /// the sequential one. Every other field is final at fold time.

@@ -17,7 +17,20 @@
 //!   `exp/*` rosters, results files) resolves here to a [`Method`]
 //!   description and a boxed strategy.
 //!
-//! One [`config::RunConfig`] fully describes a run;
+//! *How* uplinks reach the aggregator is decided by one more object-safe
+//! trait: [`driver::UplinkSource`]. The [`driver`] module owns the
+//! round driver — one shared copy of delivery bookkeeping (decode,
+//! ingest, meter-only-on-delivery, retry/drop books, quorum-degrading
+//! finish) plus the fault delivery discipline
+//! ([`driver::deliver_with_faults`]). The in-process engine, the TCP
+//! session server (`net::session`), and the loadgen synthetic source
+//! are just three implementations of the same trait, and finished
+//! weights are byte-identical across them (`tests/differential.rs`
+//! §11, and the "Round driver" section of `docs/API.md`).
+//!
+//! One [`config::RunConfig`] fully describes a run (and
+//! [`config::resolve_timeout_env`] is the one env → cfg → default
+//! deadline resolver every subsystem shares);
 //! [`metrics::RunResult`] is the structured output every experiment
 //! harness consumes. [`parallel`] holds the worker pools (client
 //! execution, streamed ingestion, sharded FedMRN aggregation);
@@ -32,6 +45,7 @@
 
 pub mod client;
 pub mod config;
+pub mod driver;
 pub mod faults;
 pub mod metrics;
 pub mod parallel;
@@ -41,6 +55,10 @@ pub mod server;
 pub mod strategy;
 
 pub use config::{Method, MrnMode, RunConfig};
+pub use driver::{
+    AttemptBooks, Offer, RoundBooks, RoundDriver, RoundSpec, RoundTiming, UplinkSink,
+    UplinkSource,
+};
 pub use faults::{DropReason, DroppedClient, FaultModel, FaultPlan, ParticipationPolicy};
 pub use metrics::{RoundRecord, RunResult};
 pub use server::Federation;

@@ -77,6 +77,29 @@ pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Run `body` under the worker-pool panic discipline with real
+/// (client, round) context: a panic surfaces as a typed
+/// [`Error::Worker`] instead of unwinding into the caller. This is the
+/// one catch shared by everything that runs untrusted-ish work on
+/// behalf of a round — the engines' per-client training closures
+/// (`pipeline::ClientWork::run_caught`) and the net layer's
+/// per-connection handlers (`net::coordinator`, `net::session`), where
+/// one panicking connection must degrade to a dropped slot rather than
+/// abort the round.
+pub(crate) fn catch_worker<T>(
+    client: usize,
+    round: usize,
+    body: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).unwrap_or_else(|p| {
+        Err(Error::Worker {
+            client,
+            round,
+            msg: panic_msg(p.as_ref()),
+        })
+    })
+}
+
 /// Lock a mutex, recovering the guarded data from a poisoned lock.
 /// Every critical section in this module writes one independent slot
 /// (or pushes one error), so data behind a poisoned lock is still

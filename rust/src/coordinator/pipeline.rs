@@ -62,11 +62,12 @@ use crate::error::{Error, Result};
 use crate::noise::{derive_seed, NoiseGen};
 use crate::runtime::{ConfigMeta, Runtime};
 use crate::stats::Timer;
-use crate::transport::{Meter, Payload};
+use crate::transport::Meter;
 
 use super::client::{self, Batches, TrainOutcome};
 use super::config::RunConfig;
-use super::faults::{self, DropReason, DroppedClient};
+use super::driver::{RoundDriver, RoundSpec, RoundTiming, UplinkSource};
+use super::faults::FaultPlan;
 use super::metrics::RoundRecord;
 use super::parallel;
 use super::strategy::{Strategy, TrainCtx};
@@ -75,49 +76,15 @@ use super::strategy::{Strategy, TrainCtx};
 /// seconds. See [`resolve_job_timeout`].
 pub const DEFAULT_JOB_TIMEOUT_SECS: u64 = 30;
 
-/// Resolve a timeout as `env var → config knob → built-in default`,
-/// with an explicit contract for every env-var state (the networked
-/// coordinator's per-connection deadlines reuse this resolver, so its
-/// edge cases are load-bearing):
-///
-/// * **unset, or set to an empty / all-whitespace string** — falls
-///   through to a nonzero `cfg_secs`, then to `default_secs`. Empty
-///   mirrors `VAR= cmd` shell usage: "no override".
-/// * **set to a positive integer (whole seconds)** — wins outright.
-/// * **set to `0` or anything unparsable** — a typed [`Error::Config`]
-///   naming the variable and the rejected value. A zero deadline is
-///   meaningless, and a typo'd override silently becoming a 30-second
-///   default is exactly the surprise this resolver exists to prevent.
-pub fn resolve_timeout_env(
-    var: &str,
-    cfg_secs: u64,
-    default_secs: u64,
-) -> Result<Duration> {
-    if let Ok(raw) = std::env::var(var) {
-        let s = raw.trim();
-        if !s.is_empty() {
-            return match s.parse::<u64>() {
-                Ok(0) => Err(Error::Config(format!(
-                    "{var}: timeout must be >= 1 second, got \"0\" \
-                     (unset the variable to use the config/default)"
-                ))),
-                Ok(secs) => Ok(Duration::from_secs(secs)),
-                Err(_) => Err(Error::Config(format!(
-                    "{var}: expected whole seconds, got {s:?}"
-                ))),
-            };
-        }
-    }
-    Ok(Duration::from_secs(if cfg_secs > 0 { cfg_secs } else { default_secs }))
-}
-
 /// Resolve the detached-job timeout: the `FEDMRN_PIPELINE_TIMEOUT_SECS`
 /// env var wins, then a nonzero [`RunConfig::job_timeout_secs`], then
-/// [`DEFAULT_JOB_TIMEOUT_SECS`]. Env edge cases per
-/// [`resolve_timeout_env`]: empty behaves as unset; garbage or `0` is a
-/// typed `Error::Config`, never a silent fall-through.
+/// [`DEFAULT_JOB_TIMEOUT_SECS`]. Delegates to the system-wide
+/// [`config::resolve_timeout_env`] contract (the networked
+/// coordinator's deadlines resolve through the same code): empty env
+/// behaves as unset; garbage or `0` is a typed `Error::Config`, never
+/// a silent fall-through.
 pub fn resolve_job_timeout(cfg_secs: u64) -> Result<Duration> {
-    resolve_timeout_env(
+    super::config::resolve_timeout_env(
         "FEDMRN_PIPELINE_TIMEOUT_SECS",
         cfg_secs,
         DEFAULT_JOB_TIMEOUT_SECS,
@@ -214,6 +181,128 @@ pub(crate) struct EngineCtx<'a> {
     pub strategy: &'a dyn Strategy,
     pub w_init: Option<&'a [f32]>,
     pub verbose: bool,
+    /// Where round uplinks come from. `None` = the in-process source
+    /// (local training through `parallel::run_streamed`); `Some` plugs
+    /// in a remote transport (the TCP session server) while the engine
+    /// — selection, metering, fold, eval, records — runs unchanged.
+    pub source: Option<&'a (dyn UplinkSource + Sync)>,
+}
+
+impl<'a> EngineCtx<'a> {
+    /// The per-client training closure's inputs, as a free-standing
+    /// value — what a remote client needs to produce byte-identical
+    /// uplinks outside the engine.
+    pub(crate) fn client_work(&self) -> ClientWork<'a> {
+        ClientWork {
+            rt: self.rt,
+            cfg: self.cfg,
+            meta: self.meta,
+            split: self.split,
+            shards: self.shards,
+            strategy: self.strategy,
+            w_init: self.w_init,
+        }
+    }
+}
+
+/// One client's local-training step, extracted from the engine so every
+/// transport produces identical uplink bytes: the in-process source
+/// calls it on pool workers, and §11's session clients call it on the
+/// far side of a TCP connection. Pure in `(r, client, w)` given the
+/// run config — the per-client RNG and noise seed derive from
+/// `cfg.seed`, never from engine state.
+pub struct ClientWork<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: &'a RunConfig,
+    pub meta: &'a ConfigMeta,
+    pub split: &'a Split,
+    pub shards: &'a [Vec<usize>],
+    pub strategy: &'a dyn Strategy,
+    pub w_init: Option<&'a [f32]>,
+}
+
+impl ClientWork<'_> {
+    /// Run client `client`'s round-`r` local training against global
+    /// weights `w` and produce its uplink.
+    pub fn run(&self, r: usize, client: usize, w: &[f32]) -> Result<TrainOutcome> {
+        let cfg = self.cfg;
+        let mut crng = NoiseGen::new(derive_seed(cfg.seed, client as u64, r as u64, 2));
+        let batches: Batches = client::make_batches(
+            &self.split.train,
+            &self.shards[client],
+            self.meta,
+            cfg.max_batches_per_epoch,
+            &mut crng,
+        )?;
+        let noise_seed = derive_seed(cfg.seed, client as u64, r as u64, 1);
+        let mut tctx = TrainCtx {
+            meta: self.meta,
+            cfg,
+            round: r,
+            w,
+            w_init: self.w_init,
+            batches: &batches,
+            noise_seed,
+            rng: &mut crng,
+        };
+        self.strategy.local_train(self.rt, &mut tctx)
+    }
+
+    /// [`ClientWork::run`] with the worker-pool panic discipline: a
+    /// panicking client surfaces as a typed [`Error::Worker`] with its
+    /// (client, round) context, not a cascading coordinator panic.
+    pub fn run_caught(&self, r: usize, client: usize, w: &[f32]) -> Result<TrainOutcome> {
+        parallel::catch_worker(client, r, || self.run(r, client, w))
+    }
+}
+
+/// [`UplinkSource`] (a): local training. Wraps `parallel::run_streamed`
+/// — uplinks arrive in thread-nondeterministic order and flow through
+/// the driver's shared fault discipline as each client finishes.
+pub struct InProcessSource<'a> {
+    pub work: ClientWork<'a>,
+    /// Selected clients in slot order (global ids — mirrors the
+    /// driver's `RoundSpec::selection`).
+    pub selected: &'a [usize],
+    pub threads: usize,
+}
+
+impl UplinkSource for InProcessSource<'_> {
+    fn deliver_round(&self, drv: &mut RoundDriver<'_>, w: &[f32]) -> Result<RoundTiming> {
+        let r = drv.spec().round;
+        let cfg = self.work.cfg;
+        // Fault delivery: every decision derives from (seed, round,
+        // client) — the plan is fixed before any client trains and
+        // identical across arrival orders, thread counts, pipelining,
+        // and transports. The zero-rate default walks this same path
+        // with clean attempts, which keeps the fault-free engine
+        // byte-identical (differential §8). The fault stream never
+        // touches the run rng, so client selection is unperturbed by
+        // arming a model.
+        let fplan = FaultPlan::for_round(&cfg.faults, cfg.seed, r, self.selected);
+        let deadline_ms = cfg.faults.deadline_ms;
+        let (work, selected) = (&self.work, self.selected);
+        let run_one = |i: usize| work.run_caught(r, selected[i], w);
+        let mut timing = RoundTiming::default();
+        parallel::run_streamed(
+            selected.len(),
+            self.threads,
+            run_one,
+            |slot, outcome: TrainOutcome| {
+                timing.train_ms += outcome.train_ms;
+                timing.compress_ms += outcome.compress_ms;
+                let clean = outcome.payload.encode();
+                drv.deliver_faulted(
+                    slot,
+                    &fplan.clients[slot],
+                    deadline_ms,
+                    &clean,
+                    outcome.train_loss,
+                )
+            },
+        )?;
+        Ok(timing)
+    }
 }
 
 /// Outcome of one round's train + fold: every non-evaluation
@@ -256,222 +345,52 @@ pub(crate) fn train_and_fold(
     // Data-proportional weights are known up front (shard sizes are
     // fixed), so ingestion can start with the first arrival.
     let total: f64 = selected.iter().map(|&c| ctx.shards[c].len() as f64).sum();
-
-    let mut agg = ctx.strategy.aggregator(ctx.cfg);
-    agg.begin(r, d, selected.len())?;
-
-    // copy the field refs out (all `&'a T`, Copy) so the training
-    // closure borrows them rather than `ctx` as a whole
-    let (rt, cfg, meta) = (ctx.rt, ctx.cfg, ctx.meta);
-    let (split, shards, strategy) = (ctx.split, ctx.shards, ctx.strategy);
-    let w_init = ctx.w_init;
-    let w_ref: &[f32] = w;
-    let selected_ref = &selected;
-    let run_one = |i: usize| -> Result<TrainOutcome> {
-        let c = selected_ref[i];
-        let body = || -> Result<TrainOutcome> {
-            let mut crng = NoiseGen::new(derive_seed(cfg.seed, c as u64, r as u64, 2));
-            let batches: Batches = client::make_batches(
-                &split.train,
-                &shards[c],
-                meta,
-                cfg.max_batches_per_epoch,
-                &mut crng,
-            )?;
-            let noise_seed = derive_seed(cfg.seed, c as u64, r as u64, 1);
-            let mut tctx = TrainCtx {
-                meta,
-                cfg,
-                round: r,
-                w: w_ref,
-                w_init,
-                batches: &batches,
-                noise_seed,
-                rng: &mut crng,
-            };
-            strategy.local_train(rt, &mut tctx)
-        };
-        // a panicking client worker surfaces as a typed error with its
-        // (client, round) context, not a cascading coordinator panic
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).unwrap_or_else(|p| {
-            Err(Error::Worker {
-                client: c,
-                round: r,
-                msg: parallel::panic_msg(p.as_ref()),
-            })
-        })
+    let spec = RoundSpec {
+        round: r,
+        d,
+        selection: selected.iter().map(|&c| c as u64).collect(),
+        scales: selected
+            .iter()
+            .map(|&c| (ctx.shards[c].len() as f64 / total) as f32)
+            .collect(),
     };
 
-    // Fault delivery: every decision derives from (seed, round, client)
-    // — the plan is fixed before any client trains and identical across
-    // arrival orders, thread counts and pipelining. The zero-rate
-    // default walks this same path with one clean attempt per client,
-    // which keeps the fault-free engine byte-identical (differential
-    // §8). The fault stream never touches `rng`, so client selection is
-    // unperturbed by arming a model.
-    let fplan = faults::FaultPlan::for_round(&cfg.faults, cfg.seed, r, &selected);
-    let deadline_ms = cfg.faults.deadline_ms;
-
-    let mut losses = vec![f64::NAN; selected.len()];
-    let mut delivered = vec![false; selected.len()];
-    let mut dropped: Vec<DroppedClient> = Vec::new();
-    let mut retries = 0u64;
-    let mut corrupt_rejected = 0u64;
-    let mut train_ms = 0.0f64;
-    let mut compress_ms = 0.0f64;
-    {
-        let meter = &mut *meter;
-        let agg = &mut agg;
-        let losses = &mut losses;
-        let delivered = &mut delivered;
-        let dropped = &mut dropped;
-        let retries = &mut retries;
-        let corrupt_rejected = &mut corrupt_rejected;
-        let fplan = &fplan;
-        parallel::run_streamed(
-            selected.len(),
-            cfg.threads,
-            run_one,
-            |slot, outcome: TrainOutcome| {
-                train_ms += outcome.train_ms;
-                compress_ms += outcome.compress_ms;
-                let client = selected_ref[slot];
-                let cf = &fplan.clients[slot];
-                // straggler deadline is simulated: the drawn latency is
-                // compared, never slept, so chaos runs stay fast and
-                // deterministic
-                if deadline_ms > 0 && cf.straggle_ms > deadline_ms {
-                    dropped.push(DroppedClient {
-                        slot,
-                        client,
-                        reason: DropReason::Straggler,
-                    });
-                    return Ok(());
-                }
-                let mut last_reason = DropReason::Dropout;
-                for (a, attempt) in cf.attempts.iter().enumerate() {
-                    if a > 0 {
-                        *retries += 1;
-                    }
-                    if attempt.dropped {
-                        last_reason = DropReason::Dropout;
-                        continue;
-                    }
-                    let mut bytes = outcome.payload.encode();
-                    if let Some(c) = &attempt.corrupt {
-                        faults::corrupt_bytes(c, &mut bytes);
-                    }
-                    // decode + ingest first, meter only a delivered
-                    // uplink: a rejected corrupt uplink never pollutes
-                    // the byte/message accounting
-                    let decoded = match Payload::decode(&bytes) {
-                        Ok(p) => p,
-                        Err(e) => {
-                            if attempt.corrupt.is_none() {
-                                // clean bytes must always decode — this
-                                // is an engine bug, not a chaos event
-                                return Err(e);
-                            }
-                            *corrupt_rejected += 1;
-                            last_reason = DropReason::Corrupt;
-                            continue;
-                        }
-                    };
-                    let scale = (shards[client].len() as f64 / total) as f32;
-                    match agg.ingest(slot, decoded, scale) {
-                        Ok(()) => {
-                            meter.count_uplink(bytes.len());
-                            losses[slot] = outcome.train_loss;
-                            delivered[slot] = true;
-                            return Ok(());
-                        }
-                        // a bit-flip can survive decode (no checksum on
-                        // the wire) and bounce off the aggregator's
-                        // variant/dimension validation instead — still
-                        // a rejected corrupt uplink, still retryable
-                        Err(Error::Codec(_)) if attempt.corrupt.is_some() => {
-                            *corrupt_rejected += 1;
-                            last_reason = DropReason::Corrupt;
-                        }
-                        Err(e) => return Err(e),
-                    }
-                }
-                dropped.push(DroppedClient {
-                    slot,
-                    client,
-                    reason: last_reason,
-                });
-                Ok(())
-            },
-        )?;
-    }
-    // arrival order is thread-nondeterministic; slot order is canonical
-    dropped.sort_by_key(|d| d.slot);
-    // mean local loss over the delivered clients only (a dropped
-    // client's loss never reached the server); on fault-free runs this
-    // is the all-clients mean, bit for bit
-    let kept: Vec<f64> = losses
-        .iter()
-        .zip(&delivered)
-        .filter(|(_, &k)| k)
-        .map(|(&l, _)| l)
-        .collect();
-    let train_loss = crate::stats::mean(&kept);
-    let participants = delivered.iter().filter(|&&k| k).count();
-
-    // The install: from this point round r+1 may train against `w`.
-    // A starved quorum degrades gracefully — the weights carry over
-    // unchanged (every aggregator checks quorum before mutating `w`)
-    // and the round is recorded as quorum_met = false; every other
-    // finish error still aborts.
-    let mut quorum_met = true;
-    if let Err(e) = agg.finish(w) {
-        match e {
-            Error::Quorum {
-                round,
-                arrived,
-                promised,
-                required,
-            } => {
-                quorum_met = false;
-                if ctx.verbose {
-                    eprintln!(
-                        "[round {round}] quorum not met ({arrived}/{promised} arrived, \
-                         {required} required): carrying weights forward"
-                    );
-                }
-            }
-            other => return Err(other),
+    // Delivery itself — decode, ingest, meter-only-on-delivery, the
+    // fault discipline, drop/retry books, the quorum-degrading fold —
+    // is the round driver's (`super::driver`), shared with every other
+    // transport. The engine only decides *which* source feeds it.
+    let mut agg = ctx.strategy.aggregator(ctx.cfg);
+    let mut drv = RoundDriver::begin(&spec, agg.as_mut(), meter, ctx.verbose)?;
+    let timing = match ctx.source {
+        Some(src) => src.deliver_round(&mut drv, w)?,
+        None => InProcessSource {
+            work: ctx.client_work(),
+            selected: &selected,
+            threads: ctx.cfg.threads,
         }
-    }
+        .deliver_round(&mut drv, w)?,
+    };
+    // The install: from this point round r+1 may train against `w`.
+    let books = drv.finish(w)?;
 
+    let cfg = ctx.cfg;
     let do_eval = cfg.eval_every > 0
         && ((r + 1) % cfg.eval_every == 0 || r + 1 == cfg.rounds);
     let eval = if do_eval {
         // detached per-round snapshot — the evaluation (and anything
         // downstream of it) never reads `w` again. The Arc is cheap
         // ownership plumbing (single consumer today), not sharing.
-        Some(Arc::new(strategy.eval_params(w, w_init)))
+        Some(Arc::new(ctx.strategy.eval_params(w, ctx.w_init)))
     } else {
         None
     };
 
-    let record = RoundRecord {
-        round: r,
-        train_loss,
-        test_loss: f64::NAN,
-        test_acc: f64::NAN,
-        uplink_bytes: *meter.round_uplink.last().unwrap_or(&0),
-        downlink_bytes: *meter.round_downlink.last().unwrap_or(&0),
-        train_ms,
-        compress_ms,
-        selected: selected.len(),
-        participants,
-        retries,
-        corrupt_rejected,
-        quorum_met,
-        dropped,
-    };
+    let record = RoundRecord::from_books(
+        r,
+        books,
+        timing,
+        *meter.round_downlink.last().unwrap_or(&0),
+    );
     Ok(FoldedRound { record, eval, fold_ms: t_round.ms() })
 }
 

@@ -39,6 +39,7 @@ use crate::stats::Timer;
 use crate::transport::Meter;
 
 use super::config::RunConfig;
+use super::driver::UplinkSource;
 use super::metrics::{RoundRecord, RunResult};
 use super::pipeline;
 use super::registry;
@@ -192,6 +193,31 @@ impl<'rt> Federation<'rt> {
         self.shards.iter().map(|s| s.len()).collect()
     }
 
+    /// Model parameter dimension — the `d` a networked client dials
+    /// a session with.
+    pub fn param_dim(&self) -> usize {
+        self.meta.param_dim
+    }
+
+    /// This run's per-client training step, for driving the far side of
+    /// a networked session: a session client calling
+    /// [`pipeline::ClientWork::run`] produces the same uplink bytes the
+    /// in-process worker pool would (pure in `(round, client, w)` given
+    /// the config), which is what makes [`Federation::run_over`]
+    /// byte-identical to [`Federation::run`] (`tests/differential.rs`
+    /// §11).
+    pub fn client_work(&self) -> pipeline::ClientWork<'_> {
+        pipeline::ClientWork {
+            rt: self.rt,
+            cfg: &self.cfg,
+            meta: &self.meta,
+            split: &self.split,
+            shards: &self.shards,
+            strategy: self.strategy.as_ref(),
+            w_init: self.w_init.as_deref(),
+        }
+    }
+
     /// Model parameters used for evaluation (the strategy's choice —
     /// FedPM thresholds the masked init weights; everyone else uses `w`).
     pub fn eval_params(&self) -> Vec<f32> {
@@ -221,6 +247,7 @@ impl<'rt> Federation<'rt> {
             strategy: self.strategy.as_ref(),
             w_init: self.w_init.as_deref(),
             verbose: self.verbose,
+            source: None,
         };
         pipeline::sequential_round(&ctx, r, &mut self.w, &mut self.meter, &mut self.rng)
     }
@@ -231,6 +258,22 @@ impl<'rt> Federation<'rt> {
     /// produce byte-identical weights and records (timing fields
     /// aside).
     pub fn run(&mut self) -> Result<RunResult> {
+        self.run_with(None)
+    }
+
+    /// Run the full configured number of rounds with uplink delivery
+    /// handed to `source` — e.g. a persistent-session TCP server
+    /// (`net::session::SessionServer`) — instead of the in-process
+    /// worker pool. Selection, downlink metering, aggregation, quorum,
+    /// books, eval and checkpointing all run through the exact same
+    /// engine code path, so finished weights and every non-timing
+    /// record field are byte-identical to [`Federation::run`]
+    /// (`tests/differential.rs` §11).
+    pub fn run_over(&mut self, source: &(dyn UplinkSource + Sync)) -> Result<RunResult> {
+        self.run_with(Some(source))
+    }
+
+    fn run_with(&mut self, source: Option<&(dyn UplinkSource + Sync)>) -> Result<RunResult> {
         let t = Timer::new();
         let sink = CheckpointSink::for_config(&self.cfg)?.map(|s| {
             s.with_dataset(self.dataset_meta.clone())
@@ -248,6 +291,7 @@ impl<'rt> Federation<'rt> {
                 strategy: self.strategy.as_ref(),
                 w_init: self.w_init.as_deref(),
                 verbose: self.verbose,
+                source,
             };
             pipeline::run_rounds(
                 &ctx,

@@ -77,16 +77,21 @@ USAGE:
                [--dropout F] [--straggle-p F] [--straggle-ms N]
                [--corrupt-p F] [--deadline-ms N] [--max-retries N]
                [--fault-seed N] [--quorum F] [--rescale]
-               [--timeout-secs N] [--out DIR]
+               [--timeout-secs N] [--session] [--out DIR]
                networked-coordinator load generator: N simulated clients
                replay seed-derived synthetic FedMRN uplinks over M TCP
                connections into a loopback coordinator, optionally
-               through the deterministic fault layer. Reports uplinks/s,
-               bytes/s, p50/p99 ingest latency and merges one row per
-               configuration into BENCH_net.json (no artifacts needed;
-               --out defaults to the repo root). --timeout-secs is the
-               per-connection and per-round deadline (env
-               FEDMRN_NET_TIMEOUT_SECS overrides; default 30)
+               through the deterministic fault layer. --session holds
+               one persistent frame-v2 connection per client for the
+               whole run (one handshake each; the report's handshakes/
+               reconnects fields pin it) instead of per-round v1
+               reconnects. Reports uplinks/s, bytes/s, p50/p99 ingest
+               latency and merges one row per configuration into
+               BENCH_net.json (session rows carry their own key; no
+               artifacts needed; --out defaults to the repo root).
+               --timeout-secs is the per-connection and per-round
+               deadline (env FEDMRN_NET_TIMEOUT_SECS overrides;
+               default 30)
   fedmrn artifact inspect|verify|sign PATH [--key FILE]
   fedmrn artifact pack DIR FILE... [--kind NAME] [--key FILE]
                signed-manifest tooling (docs/ARTIFACT.md). PATH is a
@@ -513,19 +518,27 @@ fn cmd_loadgen(args: &mut Args) -> Result<()> {
         faults,
         policy,
         timeout_secs: args.take_u64("timeout-secs", 0)?,
+        session: args.take_bool("session", false)?,
     };
     let out = args.take_opt_str("out");
     args.finish()?;
 
     let report = loadgen::run(&opts)?;
     println!(
-        "loadgen d={} clients={} conns={} rounds={} faults={}",
+        "loadgen d={} clients={} conns={} rounds={} faults={}{}",
         report.d,
         report.clients,
         report.conns,
         report.rounds,
-        if report.faults_on { "on" } else { "off" }
+        if report.faults_on { "on" } else { "off" },
+        if report.session { " session" } else { "" }
     );
+    if report.session {
+        println!(
+            "  {} handshakes, {} reconnects (persistent v2 session)",
+            report.handshakes, report.reconnects
+        );
+    }
     println!(
         "  delivered {} / {} promised ({} rejected, {} dropped, {} retries, \
          {} stragglers), quorum met {}/{} rounds",

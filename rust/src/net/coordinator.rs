@@ -1,4 +1,4 @@
-//! TCP coordinator front end over the streaming [`Aggregator`].
+//! TCP coordinator front end over the shared round driver.
 //!
 //! # Why this layer needs no new algorithm
 //!
@@ -6,11 +6,15 @@
 //! finished weights for **any** uplink arrival order, and the fault /
 //! quorum machinery ([`ParticipationPolicy`]) already decides what
 //! happens when promised uplinks never arrive. The network layer is
-//! therefore pure transport: frames in, typed errors out, ingest as
-//! bytes arrive. `tests/differential.rs` §9 pins a loopback round
-//! against the in-process engine byte for byte.
+//! therefore pure transport: frames in, typed errors out. Everything
+//! past the frame boundary — decode, ingest, meter-on-delivery,
+//! retry/drop books, quorum-degrading finish — happens inside the one
+//! [`RoundDriver`] the in-process engine uses too, so there is no
+//! second copy of delivery bookkeeping to drift. `tests/differential.rs`
+//! §9 and §11 pin loopback rounds against the in-process engine byte
+//! for byte.
 //!
-//! # Protocol (frame format: [`super::frame`])
+//! # Protocol v1 (frame format: [`super::frame`])
 //!
 //! Per uplink, over any connection (connections may be reused for many
 //! clients — one handshake per uplink):
@@ -23,13 +27,22 @@
 //!                                   ← OK(round, slot)
 //! ```
 //!
+//! The multi-round **session** protocol (frame version 2, HELLO once +
+//! one ASSIGN per round over a persistent connection) lives in
+//! [`super::session`]; this endpoint rejects v2 frames with a typed
+//! error pointing there.
+//!
 //! The server assigns slots from the round's selection; a client id
 //! outside the selection, an uplink before a handshake, or a slot that
 //! does not match the assignment is a typed [`Error::Net`]. Duplicate
 //! slots and wrong-variant/dimension payloads are rejected with the
-//! **same typed errors [`Aggregator::ingest`] already returns** — the
-//! server simply relays them in an ERR frame and drops the connection;
-//! the accept loop keeps serving.
+//! **same typed errors [`Aggregator::ingest`] already returns**
+//! (surfaced as [`Offer::Rejected`] by the driver) — the server simply
+//! relays them in an ERR frame and drops the connection; the accept
+//! loop keeps serving. A *panic* inside a connection handler is caught
+//! by the same guard discipline as the in-process engine's client
+//! closures and converted to a typed [`Error::Worker`]: the connection
+//! drops, its slot goes undelivered, the round completes.
 //!
 //! # Backpressure, deadlines, bounded memory
 //!
@@ -38,30 +51,38 @@
 //!   buffer is sized, so a hostile header cannot balloon memory.
 //! * Per-connection socket deadlines and the round's overall accept
 //!   deadline come from one knob, resolved as
-//!   `FEDMRN_NET_TIMEOUT_SECS → cfg → 30 s` through
-//!   [`resolve_timeout_env`] (the same airtight env contract as the
-//!   pipeline's job timeout: empty = unset, garbage or `0` = typed
-//!   error).
+//!   `FEDMRN_NET_TIMEOUT_SECS → cfg → 30 s` through the shared
+//!   [`resolve_timeout_env`] contract in `coordinator::config` (the
+//!   same resolver as the pipeline's job timeout: empty = unset,
+//!   garbage or `0` = typed error).
 //! * Ingest and metering are serialized under one lock (see
 //!   [`Meter`]'s single-writer contract): `begin_round` and reporting
 //!   happen strictly outside the serving window, so per-round
 //!   `bytes_up`/`msgs` totals can never interleave across rounds no
 //!   matter how many connections land frames concurrently.
 
+use std::cell::Cell;
 use std::net::{TcpListener, TcpStream};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use byteorder::{ByteOrder, LittleEndian};
 
+use crate::coordinator::config::resolve_timeout_env;
+use crate::coordinator::driver::{Offer, RoundDriver};
 use crate::coordinator::faults::ParticipationPolicy;
-use crate::coordinator::pipeline::resolve_timeout_env;
+use crate::coordinator::parallel::panic_msg;
 use crate::coordinator::strategy::Aggregator;
 use crate::error::{Error, Result};
-use crate::transport::{Meter, Payload};
+use crate::transport::Meter;
 
 use super::frame::{self, Frame, FrameKind};
+
+/// What the server promises for one round — the driver's
+/// [`RoundSpec`](crate::coordinator::driver::RoundSpec), re-exported
+/// because the wire protocol and the engine share it verbatim.
+pub use crate::coordinator::driver::RoundSpec;
 
 /// Default per-connection / per-round deadline, seconds.
 pub const DEFAULT_NET_TIMEOUT_SECS: u64 = 30;
@@ -100,18 +121,6 @@ impl NetOpts {
     }
 }
 
-/// What the server promises for one round: the dimension, the selected
-/// client ids (index = slot) and each slot's fold scale.
-#[derive(Clone, Debug)]
-pub struct RoundSpec {
-    pub round: usize,
-    pub d: usize,
-    /// `selection[slot]` = the global client id promised that slot.
-    pub selection: Vec<u64>,
-    /// `scales[slot]` = the Eq. 5 fold weight for that slot.
-    pub scales: Vec<f32>,
-}
-
 /// One served round's outcome.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -135,16 +144,41 @@ pub struct ServeReport {
     pub ingest_ms: Vec<f64>,
 }
 
-/// Shared per-round state: everything a connection handler touches,
-/// behind one lock — the serialization that makes the [`Meter`]
-/// single-writer contract hold under concurrent connections.
+/// Shared per-round state: the round driver (decode / ingest / meter /
+/// books — the same object the in-process engine drives) plus the
+/// wire-only counters, behind one lock — the serialization that makes
+/// the [`Meter`] single-writer contract hold under concurrent
+/// connections.
 struct RoundState<'a> {
-    agg: &'a mut dyn Aggregator,
-    meter: &'a mut Meter,
-    delivered: Vec<bool>,
-    n_delivered: usize,
+    drv: RoundDriver<'a>,
     rejected: u64,
     ingest_ms: Vec<f64>,
+}
+
+/// Lock the round state, recovering from poisoning: a handler that
+/// panicked mid-critical-section has already been converted to a
+/// dropped connection by [`conn_guard`], and the driver's per-slot
+/// effects are ordered so an interrupted ingest leaves the slot simply
+/// undelivered — the remaining handlers and the finish path must keep
+/// going.
+fn lock<'m, 'a>(m: &'m Mutex<RoundState<'a>>) -> MutexGuard<'m, RoundState<'a>> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The net half of the engine's panic discipline: any panic in a
+/// connection handler becomes the same typed [`Error::Worker`] the
+/// in-process client guard produces, so one panicking connection
+/// degrades to a dropped slot instead of aborting the round. `who`
+/// carries the slot-authed client id once known ([`usize::MAX`] =
+/// the connection never completed a handshake).
+fn conn_guard<T>(
+    round: usize,
+    who: &Cell<usize>,
+    body: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).unwrap_or_else(|p| {
+        Err(Error::Worker { client: who.get(), round, msg: panic_msg(p.as_ref()) })
+    })
 }
 
 /// Serve one round over TCP: accept connections until every promised
@@ -164,28 +198,15 @@ pub fn serve_round(
     w: &mut [f32],
     opts: &NetOpts,
 ) -> Result<ServeReport> {
-    let n = spec.selection.len();
-    if spec.scales.len() != n {
-        return Err(Error::Config(format!(
-            "serve_round: {} scales for {n} selection slots",
-            spec.scales.len()
-        )));
-    }
-    agg.begin(spec.round, spec.d, n)?;
+    let n = spec.promised();
     meter.begin_round();
+    let drv = RoundDriver::begin(spec, agg, meter, false)?;
     listener.set_nonblocking(true)?;
-    let state = Mutex::new(RoundState {
-        agg,
-        meter,
-        delivered: vec![false; n],
-        n_delivered: 0,
-        rejected: 0,
-        ingest_ms: Vec::new(),
-    });
+    let state = Mutex::new(RoundState { drv, rejected: 0, ingest_ms: Vec::new() });
     let deadline = Instant::now() + opts.timeout;
     let accept_err: Option<Error> = thread::scope(|s| {
         loop {
-            if state.lock().unwrap().n_delivered == n {
+            if lock(&state).drv.n_delivered() == n {
                 return None;
             }
             if Instant::now() >= deadline {
@@ -210,22 +231,17 @@ pub fn serve_round(
     if let Some(e) = accept_err {
         return Err(e);
     }
-    let st = state.into_inner().unwrap();
-    let RoundState { agg, meter, delivered, n_delivered, rejected, mut ingest_ms } = st;
+    let st = state.into_inner().unwrap_or_else(PoisonError::into_inner);
+    let RoundState { drv, rejected, mut ingest_ms } = st;
     ingest_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let quorum_met = match agg.finish(w) {
-        Ok(()) => true,
-        Err(Error::Quorum { .. }) => false,
-        Err(e) => return Err(e),
-    };
-    let bytes_up = meter.round_uplink.last().copied().unwrap_or(0);
+    let books = drv.finish(w)?;
     Ok(ServeReport {
-        promised: n,
-        delivered: n_delivered,
-        delivered_slots: delivered,
-        quorum_met,
+        promised: books.promised,
+        delivered: books.participants,
+        delivered_slots: books.delivered,
+        quorum_met: books.quorum_met,
         rejected,
-        bytes_up,
+        bytes_up: books.uplink_bytes,
         ingest_ms,
     })
 }
@@ -249,9 +265,11 @@ fn handle_conn(
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(timeout));
     let _ = stream.set_write_timeout(Some(timeout));
-    if let Err(e) = serve_conn(&mut stream, spec, state) {
+    let who = Cell::new(usize::MAX);
+    let served = conn_guard(spec.round, &who, || serve_conn(&mut stream, spec, state, &who));
+    if let Err(e) = served {
         send_err(&mut stream, spec.round as u32, &e);
-        state.lock().unwrap().rejected += 1;
+        lock(state).rejected += 1;
         // the connection drops here; the accept loop keeps serving
     }
 }
@@ -261,6 +279,7 @@ fn serve_conn(
     stream: &mut TcpStream,
     spec: &RoundSpec,
     state: &Mutex<RoundState<'_>>,
+    who: &Cell<usize>,
 ) -> Result<()> {
     let cap = frame::max_uplink_payload(spec.d);
     let round = spec.round as u32;
@@ -272,6 +291,13 @@ fn serve_conn(
             Some(f) => f,
             None => return Ok(()),
         };
+        if f.version != frame::FRAME_V1 {
+            return Err(Error::Net(format!(
+                "per-round endpoint: v{} session frame on a v1 connection \
+                 (dial the session server for multi-round service)",
+                f.version
+            )));
+        }
         if f.round != round {
             return Err(Error::Net(format!(
                 "round mismatch: frame for round {}, serving round {round}",
@@ -288,15 +314,12 @@ fn serve_conn(
                     )));
                 }
                 let client = LittleEndian::read_u64(&f.payload);
-                let slot = spec
-                    .selection
-                    .iter()
-                    .position(|&c| c == client)
-                    .ok_or_else(|| {
-                        Error::Net(format!(
-                            "client {client} is not in round {round}'s selection"
-                        ))
-                    })?;
+                let slot = spec.slot_of(client).ok_or_else(|| {
+                    Error::Net(format!(
+                        "client {client} is not in round {round}'s selection"
+                    ))
+                })?;
+                who.set(client as usize);
                 assigned = Some(slot as u32);
                 frame::write_frame(
                     stream,
@@ -314,17 +337,19 @@ fn serve_conn(
                     )));
                 }
                 let t0 = Instant::now();
-                let payload = Payload::decode(&f.payload)?;
                 {
-                    // ingest + metering under one lock: duplicate-slot
-                    // and wrong-variant rejections are the aggregator's
-                    // own typed errors, relayed as-is
-                    let mut st = state.lock().unwrap();
-                    st.agg.ingest(slot as usize, payload, spec.scales[slot as usize])?;
-                    st.meter.count_uplink(f.payload.len());
-                    st.delivered[slot as usize] = true;
-                    st.n_delivered += 1;
-                    st.ingest_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    // decode + ingest + metering live in the shared
+                    // driver, under one lock: duplicate-slot and
+                    // wrong-variant rejections are the aggregator's own
+                    // typed errors, surfaced as Offer::Rejected and
+                    // relayed as-is
+                    let mut st = lock(state);
+                    match st.drv.offer(slot as usize, &f.payload)? {
+                        Offer::Accepted => {
+                            st.ingest_ms.push(t0.elapsed().as_secs_f64() * 1e3)
+                        }
+                        Offer::Rejected(e) => return Err(e),
+                    }
                 }
                 frame::write_frame(
                     stream,
@@ -422,6 +447,7 @@ mod tests {
     use crate::coordinator::registry;
     use crate::coordinator::{Method, RunConfig};
     use crate::noise::NoiseDist;
+    use crate::transport::Payload;
     use std::io::{Read, Write};
 
     const DIST: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
@@ -635,5 +661,167 @@ mod tests {
             resolve_net_timeout(0).unwrap(),
             Duration::from_secs(DEFAULT_NET_TIMEOUT_SECS)
         );
+    }
+
+    /// Satellite pin (this call site of the shared resolver): garbage
+    /// and `0` in `FEDMRN_NET_TIMEOUT_SECS` are typed Config errors
+    /// naming the variable, never a silent fall-through. The env
+    /// critical section is kept as small as possible because other
+    /// net tests run in parallel with fixed (env-free) timeouts.
+    #[test]
+    fn net_timeout_env_rejects_zero_and_garbage() {
+        const VAR: &str = "FEDMRN_NET_TIMEOUT_SECS";
+        for bad in ["0", "soon", "12s"] {
+            std::env::set_var(VAR, bad);
+            let got = resolve_net_timeout(9);
+            std::env::remove_var(VAR);
+            match got {
+                Err(Error::Config(m)) => assert!(m.contains(VAR), "{bad:?}: {m}"),
+                other => panic!("{bad:?}: want Err(Config), got {other:?}"),
+            }
+        }
+        std::env::set_var(VAR, "77");
+        let got = resolve_net_timeout(9);
+        std::env::remove_var(VAR);
+        assert_eq!(got.unwrap(), Duration::from_secs(77));
+    }
+
+    /// An [`Aggregator`] that panics on one slot's ingest — the seam
+    /// for proving a panicking connection handler degrades to a
+    /// dropped slot instead of aborting the round.
+    struct PanicOnSlot {
+        inner: Box<dyn Aggregator>,
+        slot: usize,
+    }
+
+    impl Aggregator for PanicOnSlot {
+        fn begin(&mut self, round: usize, d: usize, n_uplinks: usize) -> Result<()> {
+            self.inner.begin(round, d, n_uplinks)
+        }
+        fn ingest(&mut self, slot: usize, payload: Payload, scale: f32) -> Result<()> {
+            if slot == self.slot {
+                panic!("injected ingest panic (slot {slot})");
+            }
+            self.inner.ingest(slot, payload, scale)
+        }
+        fn finish(&mut self, w: &mut [f32]) -> Result<()> {
+            self.inner.finish(w)
+        }
+    }
+
+    /// Satellite pin: a panic inside a connection handler (here: mid
+    /// ingest, while the round lock is held) is caught by the shared
+    /// guard, relayed as a typed worker error, and the round completes
+    /// with that slot undelivered — byte-identical to an in-process
+    /// fold of the uplinks that did land.
+    #[test]
+    fn panicking_connection_degrades_to_a_dropped_slot() {
+        let d = 64usize;
+        let mut cfg = fedavg_cfg();
+        cfg.participation = ParticipationPolicy { quorum: 0.5, rescale: true };
+        let strategy = registry::strategy_for_config(&cfg);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut meter = Meter::new();
+        let mut w = vec![0.0f32; d];
+        let spec = RoundSpec {
+            round: 0,
+            d,
+            selection: vec![10, 11],
+            scales: vec![0.5, 0.5],
+        };
+        let payloads: Vec<Payload> = (0..2).map(|k| dense_payload(d, k as u64)).collect();
+        let mut agg = PanicOnSlot { inner: strategy.aggregator(&cfg), slot: 0 };
+
+        let report = thread::scope(|s| {
+            let h = s.spawn(|| {
+                // slot 0's ingest panics server-side: the client sees a
+                // typed worker-error relay, not a hung or reset socket
+                let mut cl = NetClient::connect(addr, d, 0, Duration::from_secs(10)).unwrap();
+                match cl.deliver(10, &payloads[0].try_encode().unwrap()) {
+                    Err(Error::Net(m)) => assert!(m.contains("server rejected"), "{m}"),
+                    other => panic!("panicked slot: want Err(Net), got {other:?}"),
+                }
+                // the server survived: slot 1 still lands
+                let mut cl = NetClient::connect(addr, d, 0, Duration::from_secs(10)).unwrap();
+                cl.deliver(11, &payloads[1].try_encode().unwrap()).unwrap();
+            });
+            let report = serve_round(
+                &listener,
+                &spec,
+                &mut agg,
+                &mut meter,
+                &mut w,
+                &NetOpts::fixed(Duration::from_secs(3)),
+            )
+            .unwrap();
+            h.join().unwrap();
+            report
+        });
+        assert_eq!(report.delivered, 1);
+        assert_eq!(report.delivered_slots, vec![false, true]);
+        assert_eq!(report.rejected, 1);
+        assert!(report.quorum_met, "1 of 2 meets the 0.5 quorum");
+
+        // identical to an in-process fold of the one delivered uplink
+        let mut want_agg = strategy.aggregator(&cfg);
+        want_agg.begin(0, d, 2).unwrap();
+        want_agg.ingest(1, payloads[1].clone(), 0.5).unwrap();
+        let mut want = vec![0.0f32; d];
+        want_agg.finish(&mut want).unwrap();
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    /// Satellite pin: the v1 per-round endpoint rejects session (v2)
+    /// frames with a typed error pointing at the session server, and
+    /// keeps serving v1 clients.
+    #[test]
+    fn v2_frames_are_rejected_on_the_v1_endpoint() {
+        let d = 32usize;
+        let cfg = fedavg_cfg();
+        let strategy = registry::strategy_for_config(&cfg);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut meter = Meter::new();
+        let mut w = vec![0.0f32; d];
+        let spec = RoundSpec { round: 0, d, selection: vec![5], scales: vec![1.0] };
+        let payload = dense_payload(d, 0);
+        let mut agg = strategy.aggregator(&cfg);
+
+        let report = thread::scope(|s| {
+            let h = s.spawn(|| {
+                // a v2 HELLO on the per-round endpoint → ERR relay
+                let mut st = TcpStream::connect(addr).unwrap();
+                st.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                let v2 = Frame::v2(FrameKind::Hello, 0, 0, 5u64.to_le_bytes().to_vec());
+                st.write_all(&v2.to_bytes()).unwrap();
+                st.shutdown(std::net::Shutdown::Write).unwrap();
+                let mut sink = Vec::new();
+                let _ = st.read_to_end(&mut sink);
+                assert!(
+                    String::from_utf8_lossy(&sink).contains("session frame"),
+                    "v2 rejection must name the session protocol"
+                );
+                // the endpoint still serves v1
+                let mut cl = NetClient::connect(addr, d, 0, Duration::from_secs(10)).unwrap();
+                cl.deliver(5, &payload.try_encode().unwrap()).unwrap();
+            });
+            let report = serve_round(
+                &listener,
+                &spec,
+                agg.as_mut(),
+                &mut meter,
+                &mut w,
+                &NetOpts::fixed(Duration::from_secs(10)),
+            )
+            .unwrap();
+            h.join().unwrap();
+            report
+        });
+        assert_eq!(report.delivered, 1);
+        assert_eq!(report.rejected, 1);
     }
 }

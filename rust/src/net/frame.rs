@@ -7,13 +7,34 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic          "FMRN" (0x4E52_4D46 LE)
-//!      4     2  frame_version  1
-//!      6     2  kind           HELLO/ASSIGN/UPLINK/OK/ERR
+//!      4     2  frame_version  1 (per-round) or 2 (session)
+//!      6     2  kind           HELLO/ASSIGN/UPLINK/OK/ERR/DROP
 //!      8     4  round
 //!     12     4  slot
 //!     16     4  payload_len    checked against the frame-size cap
 //!                              BEFORE any buffer is sized
 //! ```
+//!
+//! Version 1 is the original one-round-per-connection protocol
+//! (HELLO → ASSIGN → UPLINK → OK, then the connection closes). Version
+//! 2 is the persistent-session protocol: a client HELLOs **once** and
+//! then receives one ASSIGN per round over the same connection until
+//! the server closes it. v2 additionally:
+//!
+//! * carries the dense `w` snapshot as the ASSIGN payload (f32 LE),
+//!   so the downlink rides the session instead of a side channel;
+//! * prefixes every UPLINK payload with 16 bytes of delivery books —
+//!   `[f64 train_loss][u32 retries][u32 corrupt_rejected]` — followed
+//!   by the encoded [`Payload`] bytes ([`UPLINK_PREFIX_LEN`]; the loss
+//!   stays f64 so the server's `RoundRecord.train_loss` is bit-equal
+//!   to the in-process engine's);
+//! * adds a DROP frame (`[u32 retries][u32 corrupt_rejected][reason]`)
+//!   a client sends instead of UPLINK when its fault plan dropped it,
+//!   so the server's books match the in-process engine byte-for-byte.
+//!
+//! A v2 server still accepts a v1 HELLO and downgrades that connection
+//! to per-round service; a v1 endpoint rejects v2 frames with a typed
+//! error. Both directions are pinned by tests.
 //!
 //! Error taxonomy: malformed frame *bytes* (bad magic, unsupported
 //! version, unknown kind, truncated header or payload) are
@@ -32,8 +53,11 @@ use crate::transport::Payload;
 /// Frame magic: the bytes `FMRN`, read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"FMRN");
 
-/// The (only) frame format version this build speaks.
+/// The original one-round-per-connection frame format.
 pub const FRAME_V1: u16 = 1;
+
+/// The persistent-session frame format (HELLO once, ASSIGN per round).
+pub const FRAME_V2: u16 = 2;
 
 /// Fixed header size, bytes.
 pub const HEADER_LEN: usize = 20;
@@ -44,21 +68,30 @@ pub const HELLO_LEN: usize = 8;
 /// Cap on an ERR frame's message payload, bytes.
 pub const ERR_MSG_CAP: usize = 512;
 
-/// What a frame means. HELLO/UPLINK flow client → server, the rest
-/// server → client.
+/// Bytes of delivery books prefixed to every v2 UPLINK payload:
+/// `[f64 train_loss][u32 retries][u32 corrupt_rejected]`.
+pub const UPLINK_PREFIX_LEN: usize = 16;
+
+/// What a frame means. HELLO/UPLINK/DROP flow client → server, the
+/// rest server → client.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FrameKind {
     /// Client → server: slot-auth handshake; payload = u64 client id.
     Hello = 1,
     /// Server → client: the slot assigned from the round's selection.
+    /// v2 payload carries the round's dense `w` snapshot (f32 LE).
     Assign = 2,
-    /// Client → server: one encoded [`Payload`] for the assigned slot.
+    /// Client → server: one encoded [`Payload`] for the assigned slot
+    /// (v2: preceded by the [`UPLINK_PREFIX_LEN`]-byte books prefix).
     Uplink = 3,
     /// Server → client: the uplink decoded, ingested and metered.
     Ok = 4,
     /// Server → client: a typed error's display text; the connection
     /// is dropped right after.
     Err = 5,
+    /// Client → server (v2 only): the client's fault plan dropped this
+    /// round; payload = `[u32 retries][u32 corrupt_rejected][reason]`.
+    Drop = 6,
 }
 
 impl FrameKind {
@@ -69,6 +102,7 @@ impl FrameKind {
             3 => Some(FrameKind::Uplink),
             4 => Some(FrameKind::Ok),
             5 => Some(FrameKind::Err),
+            6 => Some(FrameKind::Drop),
             _ => None,
         }
     }
@@ -81,6 +115,7 @@ impl FrameKind {
 /// One wire frame (header fields + owned payload bytes).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Frame {
+    pub version: u16,
     pub kind: FrameKind,
     pub round: u32,
     pub slot: u32,
@@ -88,8 +123,14 @@ pub struct Frame {
 }
 
 impl Frame {
+    /// A v1 (per-round protocol) frame.
     pub fn new(kind: FrameKind, round: u32, slot: u32, payload: Vec<u8>) -> Frame {
-        Frame { kind, round, slot, payload }
+        Frame { version: FRAME_V1, kind, round, slot, payload }
+    }
+
+    /// A v2 (session protocol) frame.
+    pub fn v2(kind: FrameKind, round: u32, slot: u32, payload: Vec<u8>) -> Frame {
+        Frame { version: FRAME_V2, kind, round, slot, payload }
     }
 
     /// Serialize header + payload. Frames are built in-process from
@@ -101,7 +142,7 @@ impl Frame {
             .expect("frame payload exceeds the u32 wire framing");
         let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
         out.extend_from_slice(&MAGIC.to_le_bytes());
-        out.extend_from_slice(&FRAME_V1.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
         out.extend_from_slice(&self.kind.wire().to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.slot.to_le_bytes());
@@ -114,6 +155,7 @@ impl Frame {
 /// A parsed, validated frame header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Header {
+    pub version: u16,
     pub kind: FrameKind,
     pub round: u32,
     pub slot: u32,
@@ -134,6 +176,92 @@ pub fn max_uplink_payload(d: usize) -> usize {
     9 + 8 * d + 64
 }
 
+/// Frame-size cap for a v2 session connection at dimension `d`: the
+/// per-round uplink cap plus the [`UPLINK_PREFIX_LEN`]-byte books
+/// prefix. Also covers the v2 ASSIGN payload (a dense `w` snapshot is
+/// `4d` bytes, strictly under the `8d`-dominated uplink bound) and the
+/// small DROP/ERR payloads.
+pub fn max_session_payload(d: usize) -> usize {
+    max_uplink_payload(d) + UPLINK_PREFIX_LEN
+}
+
+/// Build the [`UPLINK_PREFIX_LEN`]-byte v2 uplink prefix.
+pub fn encode_uplink_prefix(train_loss: f64, retries: u32, corrupt_rejected: u32) -> [u8; 16] {
+    let mut b = [0u8; UPLINK_PREFIX_LEN];
+    b[0..8].copy_from_slice(&train_loss.to_le_bytes());
+    b[8..12].copy_from_slice(&retries.to_le_bytes());
+    b[12..16].copy_from_slice(&corrupt_rejected.to_le_bytes());
+    b
+}
+
+/// Split a v2 uplink payload into its books prefix and the encoded
+/// [`Payload`] bytes that follow. Truncation is a typed [`Error::Codec`].
+pub fn split_uplink_prefix(payload: &[u8]) -> Result<(f64, u32, u32, &[u8])> {
+    if payload.len() < UPLINK_PREFIX_LEN {
+        return Err(Error::Codec(format!(
+            "frame: v2 uplink payload shorter than the {UPLINK_PREFIX_LEN}-byte \
+             books prefix ({} bytes)",
+            payload.len()
+        )));
+    }
+    let train_loss = f64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let retries = LittleEndian::read_u32(&payload[8..12]);
+    let corrupt_rejected = LittleEndian::read_u32(&payload[12..16]);
+    Ok((train_loss, retries, corrupt_rejected, &payload[UPLINK_PREFIX_LEN..]))
+}
+
+/// Build a v2 DROP payload: `[u32 retries][u32 corrupt_rejected]` then
+/// the [`crate::coordinator::DropReason`] name as UTF-8.
+pub fn encode_drop_payload(retries: u32, corrupt_rejected: u32, reason: &str) -> Vec<u8> {
+    let mut b = Vec::with_capacity(8 + reason.len());
+    b.extend_from_slice(&retries.to_le_bytes());
+    b.extend_from_slice(&corrupt_rejected.to_le_bytes());
+    b.extend_from_slice(reason.as_bytes());
+    b
+}
+
+/// Parse a v2 DROP payload. Truncation and non-UTF-8 reasons are typed
+/// [`Error::Codec`] errors.
+pub fn parse_drop_payload(payload: &[u8]) -> Result<(u32, u32, String)> {
+    if payload.len() < 8 {
+        return Err(Error::Codec(format!(
+            "frame: DROP payload shorter than its 8-byte books header \
+             ({} bytes)",
+            payload.len()
+        )));
+    }
+    let retries = LittleEndian::read_u32(&payload[0..4]);
+    let corrupt_rejected = LittleEndian::read_u32(&payload[4..8]);
+    let reason = std::str::from_utf8(&payload[8..])
+        .map_err(|_| Error::Codec("frame: DROP reason is not UTF-8".into()))?
+        .to_string();
+    Ok((retries, corrupt_rejected, reason))
+}
+
+/// Encode a dense `w` snapshot as a v2 ASSIGN payload (f32 LE).
+pub fn encode_assign_weights(w: &[f32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(4 * w.len());
+    for &x in w {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+/// Decode a v2 ASSIGN payload back into dense weights, checking the
+/// byte count against the expected dimension.
+pub fn parse_assign_weights(payload: &[u8], d: usize) -> Result<Vec<f32>> {
+    if payload.len() != 4 * d {
+        return Err(Error::Codec(format!(
+            "frame: ASSIGN weight payload is {} bytes, want {} for d={d}",
+            payload.len(),
+            4 * d
+        )));
+    }
+    let mut w = vec![0.0f32; d];
+    LittleEndian::read_f32_into(payload, &mut w);
+    Ok(w)
+}
+
 /// Parse and validate a `HEADER_LEN`-byte header. `max_payload` is the
 /// frame-size cap ([`max_uplink_payload`]) — enforced here so no
 /// caller can forget it between parsing and allocating.
@@ -146,9 +274,10 @@ pub fn parse_header(b: &[u8], max_payload: usize) -> Result<Header> {
         )));
     }
     let version = LittleEndian::read_u16(&b[4..6]);
-    if version != FRAME_V1 {
+    if version != FRAME_V1 && version != FRAME_V2 {
         return Err(Error::Codec(format!(
-            "frame: unsupported frame_version {version} (this build speaks v{FRAME_V1})"
+            "frame: unsupported frame_version {version} \
+             (this build speaks v{FRAME_V1} and v{FRAME_V2})"
         )));
     }
     let kind_raw = LittleEndian::read_u16(&b[6..8]);
@@ -163,7 +292,7 @@ pub fn parse_header(b: &[u8], max_payload: usize) -> Result<Header> {
              {max_payload}-byte cap"
         )));
     }
-    Ok(Header { kind, round, slot, payload_len })
+    Ok(Header { version, kind, round, slot, payload_len })
 }
 
 /// Read one frame off a stream with a bounded buffer.
@@ -202,7 +331,13 @@ pub fn read_frame(r: &mut impl std::io::Read, max_payload: usize) -> Result<Opti
             Error::Io(e)
         }
     })?;
-    Ok(Some(Frame { kind: h.kind, round: h.round, slot: h.slot, payload }))
+    Ok(Some(Frame {
+        version: h.version,
+        kind: h.kind,
+        round: h.round,
+        slot: h.slot,
+        payload,
+    }))
 }
 
 /// Write one frame and flush it.
@@ -280,6 +415,80 @@ mod tests {
         let hdr = Frame::new(FrameKind::Hello, 0, 0, vec![0u8; 100]).to_bytes();
         assert!(parse_header(&hdr[..HEADER_LEN], 8).is_err());
         assert!(parse_header(&hdr[..HEADER_LEN], 100).is_ok());
+    }
+
+    #[test]
+    fn v2_frames_roundtrip_and_other_versions_are_rejected() {
+        // a v2 frame round-trips with its version intact (not silently
+        // rewritten to v1 on the wire)
+        let f = Frame::v2(FrameKind::Drop, 3, 1, encode_drop_payload(2, 1, "corrupt"));
+        let bytes = f.to_bytes();
+        assert_eq!(LittleEndian::read_u16(&bytes[4..6]), FRAME_V2);
+        let got = read_frame(&mut cursor(bytes), 64).unwrap().unwrap();
+        assert_eq!(got, f);
+        assert_eq!(got.version, FRAME_V2);
+
+        // every version other than 1 and 2 is a typed Codec rejection
+        for v in [0u16, 3, 7, u16::MAX] {
+            let mut b = Frame::new(FrameKind::Hello, 0, 0, vec![0; HELLO_LEN]).to_bytes();
+            b[4..6].copy_from_slice(&v.to_le_bytes());
+            match read_frame(&mut cursor(b), 64) {
+                Err(Error::Codec(m)) => {
+                    assert!(m.contains("frame_version"), "v{v}: {m}")
+                }
+                other => panic!("v{v}: want Err(Codec), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn uplink_prefix_and_drop_payloads_roundtrip_at_every_cut() {
+        // prefix round-trip: books + trailing payload bytes survive
+        let inner = vec![9u8, 8, 7, 6];
+        let mut payload = encode_uplink_prefix(0.25, 3, 2).to_vec();
+        payload.extend_from_slice(&inner);
+        let (loss, retries, rejected, rest) = split_uplink_prefix(&payload).unwrap();
+        assert_eq!(loss, 0.25);
+        assert_eq!((retries, rejected), (3, 2));
+        assert_eq!(rest, &inner[..]);
+
+        // every truncation cut inside the prefix is a typed Codec error
+        for cut in 0..UPLINK_PREFIX_LEN {
+            match split_uplink_prefix(&payload[..cut]) {
+                Err(Error::Codec(m)) => assert!(m.contains("prefix"), "cut {cut}: {m}"),
+                other => panic!("cut {cut}: want Err(Codec), got {other:?}"),
+            }
+        }
+
+        // DROP payload round-trip, empty reason allowed, every short cut
+        // in the books header rejected, non-UTF-8 reason rejected
+        let d = encode_drop_payload(5, 1, "straggler");
+        assert_eq!(parse_drop_payload(&d).unwrap(), (5, 1, "straggler".to_string()));
+        let empty = encode_drop_payload(0, 0, "");
+        assert_eq!(parse_drop_payload(&empty).unwrap(), (0, 0, String::new()));
+        for cut in 0..8 {
+            assert!(matches!(parse_drop_payload(&d[..cut]), Err(Error::Codec(_))), "cut {cut}");
+        }
+        let mut bad = encode_drop_payload(1, 0, "x");
+        bad[8] = 0xFF;
+        assert!(matches!(parse_drop_payload(&bad), Err(Error::Codec(_))));
+    }
+
+    #[test]
+    fn assign_weight_payloads_roundtrip_and_check_dimension() {
+        let w = vec![0.0f32, -1.5, 3.25, f32::MIN_POSITIVE];
+        let b = encode_assign_weights(&w);
+        assert_eq!(b.len(), 16);
+        assert_eq!(parse_assign_weights(&b, 4).unwrap(), w);
+        // wrong dimension and truncated bytes are typed Codec errors
+        assert!(matches!(parse_assign_weights(&b, 5), Err(Error::Codec(_))));
+        assert!(matches!(parse_assign_weights(&b[..15], 4), Err(Error::Codec(_))));
+        // the session cap admits the largest uplink plus its prefix and
+        // dominates the dense ASSIGN snapshot at the same dimension
+        for d in [1usize, 64, 1000] {
+            assert_eq!(max_session_payload(d), max_uplink_payload(d) + UPLINK_PREFIX_LEN);
+            assert!(4 * d <= max_session_payload(d));
+        }
     }
 
     #[test]

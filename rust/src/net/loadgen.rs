@@ -1,27 +1,45 @@
 //! Load generator for the networked coordinator: `fedmrn loadgen`.
 //!
 //! Replays seed-derived synthetic FedMRN uplinks from N simulated
-//! clients over M reused TCP connections (N ≫ cores is the point —
-//! each connection carries many clients' handshake+uplink exchanges
-//! back to back), optionally routed through [`FaultModel`] corruption
-//! with the same per-attempt discipline as the in-process chaos path
-//! (straggler past the deadline misses the round; a dropped attempt is
-//! retried; corrupted bytes that the server rejects cost a reconnect
-//! and a retry). Reports uplinks/s, bytes/s and p50/p99 ingest latency
-//! and merges one row per configuration into the `BENCH_net.json`
-//! suite (merge-by-key, same writer discipline as every other bench
-//! suite — re-running updates rows in place, never duplicates them).
+//! clients, optionally routed through [`FaultModel`] chaos. Delivery
+//! runs through [`deliver_with_faults`] — the **same** single copy of
+//! the per-attempt discipline the in-process engine and the session
+//! client use (straggler past the deadline misses the round; a dropped
+//! attempt is retried; corrupted bytes the server rejects are retried)
+//! — so the loadgen books are the fault plan's books, not a reimplementation.
+//!
+//! Two wire modes:
+//!
+//! * **per-round** (default): M reused v1 connections carry the N
+//!   clients' handshake+uplink exchanges back to back (`client % conns
+//!   == worker`); a server rejection costs a reconnect.
+//! * **session** (`--session`): every client holds one persistent v2
+//!   connection for the whole run ([`super::session`]); the report's
+//!   `handshakes`/`reconnects` fields pin the "one handshake per
+//!   client, zero reconnects" session property.
+//!
+//! Either way the run merges one row per configuration into the
+//! `BENCH_net.json` suite (merge-by-key, same writer discipline as
+//! every other bench suite — re-running updates rows in place, never
+//! duplicates them).
 //!
 //! Everything is derived from `(seed, round, client)` through
 //! [`derive_seed`], so two runs with the same options replay the exact
-//! same uplinks and the exact same faults.
+//! same uplinks and the exact same faults. [`SyntheticSource`] exposes
+//! the identical workload as an in-process [`UplinkSource`] — the
+//! byte-identity oracle the differential harness compares the wire
+//! modes against.
 
 use std::net::TcpListener;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::bench;
-use crate::coordinator::faults::{corrupt_bytes, FaultModel, FaultPlan, ParticipationPolicy};
+use crate::coordinator::driver::{
+    deliver_with_faults, AttemptBooks, Offer, RoundDriver, RoundSpec, RoundTiming,
+    UplinkSink, UplinkSource,
+};
+use crate::coordinator::faults::{DropReason, FaultModel, FaultPlan, ParticipationPolicy};
 use crate::coordinator::registry;
 use crate::coordinator::{Method, RunConfig};
 use crate::error::{Error, Result};
@@ -30,7 +48,8 @@ use crate::noise::{derive_seed, NoiseDist, NoiseGen, NoiseLayout};
 use crate::stats;
 use crate::transport::{Meter, Payload};
 
-use super::coordinator::{serve_round, NetClient, NetOpts, RoundSpec, ServeReport};
+use super::coordinator::{serve_round, NetClient, NetOpts, ServeReport};
+use super::session::{SessionClient, SessionServer};
 
 /// Stream tag for loadgen mask bits in [`derive_seed`]'s stream slot
 /// (distinct from training/fault streams so synthetic uplinks never
@@ -62,6 +81,37 @@ pub fn synth_uplink(run_seed: u64, round: usize, client: usize, d: usize) -> Pay
     }
 }
 
+/// The loadgen workload as an in-process [`UplinkSource`]: the same
+/// `(seed, round, client)`-derived uplinks and the same fault plan,
+/// delivered straight into the round driver with no wire in between.
+/// A networked loadgen run (either mode) must finish with weights and
+/// books byte-identical to a run over this source — that is the §11
+/// differential pin for the synthetic workload.
+pub struct SyntheticSource {
+    pub seed: u64,
+    pub faults: FaultModel,
+}
+
+impl UplinkSource for SyntheticSource {
+    fn deliver_round(&self, drv: &mut RoundDriver<'_>, _w: &[f32]) -> Result<RoundTiming> {
+        let spec = drv.spec().clone();
+        let selected: Vec<usize> = spec.selection.iter().map(|&c| c as usize).collect();
+        let plan = FaultPlan::for_round(&self.faults, self.seed, spec.round, &selected);
+        for slot in 0..spec.promised() {
+            let clean =
+                synth_uplink(self.seed, spec.round, selected[slot], spec.d).try_encode()?;
+            drv.deliver_faulted(
+                slot,
+                &plan.clients[slot],
+                self.faults.deadline_ms,
+                &clean,
+                f64::NAN, // synthetic clients train nothing
+            )?;
+        }
+        Ok(RoundTiming::default())
+    }
+}
+
 /// Loadgen configuration (CLI flags map 1:1; see `fedmrn help`).
 #[derive(Clone, Debug)]
 pub struct LoadgenOpts {
@@ -69,7 +119,8 @@ pub struct LoadgenOpts {
     pub d: usize,
     /// Simulated clients per round (slot = client id).
     pub clients: usize,
-    /// TCP connections the clients are multiplexed over.
+    /// TCP connections the clients are multiplexed over (per-round
+    /// mode; a session run always holds one connection per client).
     pub conns: usize,
     pub rounds: usize,
     pub seed: u64,
@@ -78,6 +129,9 @@ pub struct LoadgenOpts {
     /// Config half of the deadline chain: `FEDMRN_NET_TIMEOUT_SECS`
     /// env, then this (if nonzero), then the 30 s default.
     pub timeout_secs: u64,
+    /// Drive a persistent v2 session instead of per-round v1
+    /// reconnects.
+    pub session: bool,
 }
 
 impl LoadgenOpts {
@@ -94,8 +148,8 @@ impl LoadgenOpts {
 
 /// What one loadgen run measured. `delivered`/`rejected`/
 /// `payload_bytes` are the **server's** accounting (the meter under
-/// the ingest lock); `dropped`/`retries`/`stragglers` are the client
-/// side's fault-plan accounting.
+/// the ingest lock); `dropped`/`retries`/`stragglers` are the fault
+/// plan's books as [`deliver_with_faults`] kept them.
 #[derive(Clone, Debug, Default)]
 pub struct LoadgenReport {
     pub d: usize,
@@ -103,9 +157,12 @@ pub struct LoadgenReport {
     pub conns: usize,
     pub rounds: usize,
     pub faults_on: bool,
+    /// Persistent-session run (v2) vs per-round reconnects (v1).
+    pub session: bool,
     /// Uplinks the server decoded, ingested and metered.
     pub delivered: u64,
-    /// Connections the server dropped with a typed error.
+    /// Uplink attempts the server rejected with a typed error (v1:
+    /// costs the connection; v2: the session survives and retries).
     pub rejected: u64,
     /// Attempts that never reached the wire (fault plan `dropped`).
     pub dropped: u64,
@@ -114,6 +171,13 @@ pub struct LoadgenReport {
     /// Clients whose straggle latency exceeded the fault deadline
     /// (missed the round entirely, no attempts).
     pub stragglers: u64,
+    /// HELLO handshakes the server performed. Per-round mode pays one
+    /// per delivery attempt reaching the wire; a session pays one per
+    /// client for the whole run.
+    pub handshakes: u64,
+    /// Handshakes beyond the first per client (session mode; 0 is the
+    /// pin the CI net-smoke leg asserts).
+    pub reconnects: u64,
     /// Server-metered uplink payload bytes (20 B/frame of header
     /// framing is intentionally not metered; see docs/BENCH.md).
     pub payload_bytes: u64,
@@ -127,17 +191,20 @@ pub struct LoadgenReport {
 
 impl LoadgenReport {
     /// One `BENCH_net.json` row, keyed like every other suite row
-    /// (suite, name, threads) so re-runs merge in place.
+    /// (suite, name, threads) so re-runs merge in place. Session rows
+    /// get their own key (` session` suffix) — the two wire modes are
+    /// different configurations, not re-runs of one.
     pub fn to_row(&self) -> Value {
         Value::obj()
             .set("suite", "net")
             .set(
                 "name",
                 format!(
-                    "loadgen d={} clients={} faults={}",
+                    "loadgen d={} clients={} faults={}{}",
                     self.d,
                     self.clients,
-                    if self.faults_on { "on" } else { "off" }
+                    if self.faults_on { "on" } else { "off" },
+                    if self.session { " session" } else { "" }
                 ),
             )
             .set("threads", self.conns)
@@ -147,6 +214,8 @@ impl LoadgenReport {
             .set("dropped", self.dropped)
             .set("retries", self.retries)
             .set("stragglers", self.stragglers)
+            .set("handshakes", self.handshakes)
+            .set("reconnects", self.reconnects)
             .set("payload_bytes", self.payload_bytes)
             .set("quorum_met_rounds", self.quorum_met_rounds)
             .set("uplinks_per_s", self.uplinks_per_s)
@@ -163,6 +232,8 @@ impl LoadgenReport {
 }
 
 /// Client-side per-worker accounting, summed after the scope joins.
+/// Field-for-field these are [`AttemptBooks`] plus the straggler
+/// count — the worker just relays what `deliver_with_faults` booked.
 #[derive(Clone, Copy, Debug, Default)]
 struct WorkerStats {
     dropped: u64,
@@ -171,18 +242,41 @@ struct WorkerStats {
     sent_rejected: u64,
 }
 
-/// Run the load generator: bind a loopback listener, then for each
-/// round serve with [`serve_round`] on this thread while `conns`
-/// worker threads replay their share of the `clients` uplinks
-/// (`client % conns == worker`) over one reused connection each.
-pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
-    opts.validate()?;
-    let net = NetOpts::resolve(opts.timeout_secs)?;
-    let faults_on = opts.faults.is_active();
+fn loadgen_cfg(opts: &LoadgenOpts) -> Result<RunConfig> {
     let method = Method::parse("fedmrn", LOADGEN_DIST)?;
     let mut cfg = RunConfig::new("smoke_mlp", method);
     cfg.noise = LOADGEN_DIST;
     cfg.participation = opts.policy;
+    Ok(cfg)
+}
+
+fn round_spec(opts: &LoadgenOpts, round: usize) -> RoundSpec {
+    RoundSpec {
+        round,
+        d: opts.d,
+        selection: (0..opts.clients as u64).collect(),
+        scales: vec![1.0 / opts.clients as f32; opts.clients],
+    }
+}
+
+/// Run the load generator in the mode `opts.session` selects.
+pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    opts.validate()?;
+    if opts.session {
+        run_session(opts)
+    } else {
+        run_per_round(opts)
+    }
+}
+
+/// Per-round (v1) mode: bind a loopback listener, then for each round
+/// serve with [`serve_round`] on this thread while `conns` worker
+/// threads replay their share of the `clients` uplinks
+/// (`client % conns == worker`) over one reused connection each.
+fn run_per_round(opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    let net = NetOpts::resolve(opts.timeout_secs)?;
+    let faults_on = opts.faults.is_active();
+    let cfg = loadgen_cfg(opts)?;
     let strategy = registry::strategy_for_config(&cfg);
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
@@ -202,20 +296,15 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
 
     for round in 0..opts.rounds {
         let selected: Vec<usize> = (0..opts.clients).collect();
-        let plan = faults_on.then(|| {
-            FaultPlan::for_round(&opts.faults, opts.seed, round, &selected)
-        });
-        let spec = RoundSpec {
-            round,
-            d: opts.d,
-            selection: (0..opts.clients as u64).collect(),
-            scales: vec![1.0 / opts.clients as f32; opts.clients],
-        };
+        // always plan — an inactive FaultModel plans one clean attempt
+        // per client, so the clean path and the chaos path are one path
+        let plan = FaultPlan::for_round(&opts.faults, opts.seed, round, &selected);
+        let spec = round_spec(opts, round);
         let mut agg = strategy.aggregator(&cfg);
         let (served, worker_stats) = thread::scope(|s| -> Result<(ServeReport, WorkerStats)> {
             let handles: Vec<_> = (0..opts.conns)
                 .map(|c| {
-                    let plan = plan.as_ref();
+                    let plan = &plan;
                     let timeout = net.timeout;
                     s.spawn(move || {
                         run_worker(addr, opts, round, c, plan, timeout)
@@ -249,9 +338,103 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
         report.dropped += worker_stats.dropped;
         report.retries += worker_stats.retries;
         report.stragglers += worker_stats.stragglers;
+        // v1 pays a fresh HELLO for every attempt that reaches the wire
+        report.handshakes +=
+            served.delivered as u64 + worker_stats.sent_rejected;
         all_ingest_ms.extend(served.ingest_ms);
     }
 
+    finish_report(report, all_ingest_ms, t0)
+}
+
+/// Session (v2) mode: one [`SessionServer`] serves every round over
+/// persistent connections — one per client, one handshake each for the
+/// whole run. The server side is the same [`RoundDriver`] engine; the
+/// client side is [`SessionClient::serve`], whose delivery runs through
+/// the shared fault discipline.
+fn run_session(opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    let net = NetOpts::resolve(opts.timeout_secs)?;
+    let timeout = net.timeout;
+    let faults_on = opts.faults.is_active();
+    let cfg = loadgen_cfg(opts)?;
+    let strategy = registry::strategy_for_config(&cfg);
+    let server = SessionServer::bind("127.0.0.1:0", net)?;
+    let addr = server.local_addr()?;
+
+    let mut report = LoadgenReport {
+        d: opts.d,
+        clients: opts.clients,
+        // a session run's real concurrency is one connection per client
+        conns: opts.clients,
+        rounds: opts.rounds,
+        faults_on,
+        session: true,
+        ..LoadgenReport::default()
+    };
+    let mut meter = Meter::new();
+    let mut w = vec![0.0f32; opts.d];
+    let t0 = Instant::now();
+    let (seed, d, faults, rounds) = (opts.seed, opts.d, opts.faults, opts.rounds);
+
+    thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|client| {
+                s.spawn(move || -> Result<()> {
+                    let mut cl =
+                        SessionClient::connect(addr, d, client as u64, timeout)?;
+                    cl.serve(seed, &faults, |round, _slot, _w| {
+                        Ok((
+                            synth_uplink(seed, round, client, d).try_encode()?,
+                            f64::NAN,
+                        ))
+                    })?;
+                    Ok(())
+                })
+            })
+            .collect();
+        for round in 0..rounds {
+            let spec = round_spec(opts, round);
+            let mut agg = strategy.aggregator(&cfg);
+            meter.begin_round();
+            let mut drv =
+                RoundDriver::begin(&spec, agg.as_mut(), &mut meter, false)?;
+            server.deliver_round(&mut drv, &w)?;
+            let books = drv.finish(&mut w)?;
+            report.delivered += books.participants as u64;
+            report.rejected += books.corrupt_rejected;
+            report.retries += books.retries;
+            report.payload_bytes += books.uplink_bytes;
+            report.quorum_met_rounds += books.quorum_met as usize;
+            // in session books, `dropped` are whole clients that missed
+            // the round (the plan exhausted), not individual attempts
+            report.dropped += books
+                .dropped
+                .iter()
+                .filter(|c| c.reason != DropReason::Straggler)
+                .count() as u64;
+            report.stragglers += books
+                .dropped
+                .iter()
+                .filter(|c| c.reason == DropReason::Straggler)
+                .count() as u64;
+        }
+        server.close();
+        for h in handles {
+            h.join()
+                .map_err(|_| Error::Net("loadgen session client panicked".into()))??;
+        }
+        Ok(())
+    })?;
+    report.handshakes = server.handshakes();
+    report.reconnects = report.handshakes.saturating_sub(opts.clients as u64);
+    finish_report(report, Vec::new(), t0)
+}
+
+fn finish_report(
+    mut report: LoadgenReport,
+    mut all_ingest_ms: Vec<f64>,
+    t0: Instant,
+) -> Result<LoadgenReport> {
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
     report.wall_secs = wall;
     report.uplinks_per_s = report.delivered as f64 / wall;
@@ -264,76 +447,78 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     Ok(report)
 }
 
+/// A [`UplinkSink`] that puts each attempt on the v1 wire through a
+/// reused [`NetClient`]: a server rejection surfaces as
+/// [`Offer::Rejected`] (the shared discipline decides whether that is
+/// a retryable corrupt attempt or a hard error) and costs the
+/// connection, exactly as the v1 protocol specifies.
+struct WireSink<'c> {
+    addr: std::net::SocketAddr,
+    d: usize,
+    round: usize,
+    timeout: Duration,
+    conn: &'c mut Option<NetClient>,
+}
+
+impl UplinkSink for WireSink<'_> {
+    fn offer(&mut self, slot: usize, bytes: &[u8], _books: &AttemptBooks) -> Result<Offer> {
+        let cl = match self.conn {
+            Some(cl) => cl,
+            None => {
+                *self.conn =
+                    Some(NetClient::connect(self.addr, self.d, self.round, self.timeout)?);
+                self.conn.as_mut().unwrap()
+            }
+        };
+        match cl.deliver(slot as u64, bytes) {
+            Ok(_) => Ok(Offer::Accepted),
+            Err(e @ Error::Net(_)) | Err(e @ Error::Codec(_)) => {
+                // typed rejection: the server dropped the connection,
+                // reconnect lazily before any retry (or the next client)
+                *self.conn = None;
+                Ok(Offer::Rejected(e))
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
 /// One connection worker: replay clients `worker, worker + conns, ...`
-/// over a single reused [`NetClient`], applying the fault plan's
-/// per-attempt discipline (mirroring the in-process chaos oracle in
-/// `tests/differential.rs` §8):
-///
-/// * straggle past the fault deadline → the client misses the round,
-///   no attempts;
-/// * a `dropped` attempt never reaches the wire, the next attempt (if
-///   any) is a retry;
-/// * a `corrupt` attempt's bytes are mangled first; if the server
-///   rejects them (typed ERR, connection dropped) the worker
-///   reconnects and retries. Mangled bytes that still decode to a
-///   well-formed payload are delivered — exactly what a real server
-///   could not distinguish either.
+/// over a single reused [`NetClient`]. All fault handling — straggler
+/// deadlines, dropped attempts, corruption, retry budgets — lives in
+/// [`deliver_with_faults`]; this worker only owns the wire (the
+/// [`WireSink`]) and relays the books.
 fn run_worker(
     addr: std::net::SocketAddr,
     opts: &LoadgenOpts,
     round: usize,
     worker: usize,
-    plan: Option<&FaultPlan>,
+    plan: &FaultPlan,
     timeout: Duration,
 ) -> Result<WorkerStats> {
     let mut stats = WorkerStats::default();
     let mut conn: Option<NetClient> = None;
     for client in (worker..opts.clients).step_by(opts.conns) {
-        let clean = synth_uplink(opts.seed, round, client, opts.d)
-            .try_encode()?;
-        let attempts: Vec<(bool, Option<crate::coordinator::faults::Corruption>)> =
-            match plan {
-                None => vec![(false, None)],
-                Some(p) => {
-                    let cf = &p.clients[client];
-                    let deadline = opts.faults.deadline_ms;
-                    if deadline > 0 && cf.straggle_ms > deadline {
-                        stats.stragglers += 1;
-                        continue;
-                    }
-                    cf.attempts.iter().map(|a| (a.dropped, a.corrupt)).collect()
-                }
-            };
-        for (i, (dropped, corrupt)) in attempts.iter().enumerate() {
-            if i > 0 {
-                stats.retries += 1;
-            }
-            if *dropped {
-                stats.dropped += 1;
-                continue;
-            }
-            let mut bytes = clean.clone();
-            if let Some(c) = corrupt {
-                corrupt_bytes(c, &mut bytes);
-            }
-            let cl = match conn.as_mut() {
-                Some(cl) => cl,
-                None => {
-                    conn = Some(NetClient::connect(addr, opts.d, round, timeout)?);
-                    conn.as_mut().unwrap()
-                }
-            };
-            match cl.deliver(client as u64, &bytes) {
-                Ok(_) => break,
-                Err(Error::Net(_)) | Err(Error::Codec(_)) => {
-                    // the server rejected the bytes (typed ERR) and
-                    // dropped the connection; reconnect before any
-                    // retry — and before the next client's exchange
-                    stats.sent_rejected += 1;
-                    conn = None;
-                }
-                Err(e) => return Err(e),
-            }
+        let clean = synth_uplink(opts.seed, round, client, opts.d).try_encode()?;
+        let mut sink = WireSink {
+            addr,
+            d: opts.d,
+            round,
+            timeout,
+            conn: &mut conn,
+        };
+        let (reason, books) = deliver_with_faults(
+            client,
+            &plan.clients[client],
+            opts.faults.deadline_ms,
+            &clean,
+            &mut sink,
+        )?;
+        stats.dropped += books.dropped_attempts;
+        stats.retries += books.retries;
+        stats.sent_rejected += books.corrupt_rejected;
+        if reason == Some(DropReason::Straggler) {
+            stats.stragglers += 1;
         }
     }
     Ok(stats)
@@ -342,6 +527,7 @@ fn run_worker(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::corrupt_bytes;
     use crate::jsonx;
 
     fn base_opts() -> LoadgenOpts {
@@ -354,6 +540,7 @@ mod tests {
             faults: FaultModel::none(),
             policy: ParticipationPolicy::strict(),
             timeout_secs: 10,
+            session: false,
         }
     }
 
@@ -401,6 +588,9 @@ mod tests {
         assert_eq!(rep.rejected, 0);
         assert_eq!(rep.dropped + rep.retries + rep.stragglers, 0);
         assert_eq!(rep.quorum_met_rounds, opts.rounds);
+        // per-round mode re-handshakes for every delivery
+        assert_eq!(rep.handshakes, total);
+        assert_eq!(rep.reconnects, 0);
         let per_uplink = synth_uplink(opts.seed, 0, 0, opts.d).encoded_len() as u64;
         assert_eq!(rep.payload_bytes, per_uplink * total);
         assert!(rep.uplinks_per_s > 0.0);
@@ -431,7 +621,7 @@ mod tests {
         let rep2 = run(&opts).unwrap();
 
         // replay the pure fault plan to get the EXACT expected books
-        // (the worker discipline: skip dropped attempts, bounce at the
+        // (the shared discipline: skip dropped attempts, bounce at the
         // server on bytes that fail decode/ingest validation, break on
         // the first accepted attempt)
         let (mut e_del, mut e_drop, mut e_retry, mut e_rej) = (0u64, 0u64, 0u64, 0u64);
@@ -472,6 +662,48 @@ mod tests {
         rep2.write_row(spath).unwrap();
         let rows = jsonx::parse_file(&path).unwrap();
         assert_eq!(rows.as_arr().unwrap().len(), 2);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Session mode: same workload over persistent v2 connections —
+    /// zero reconnects, one handshake per client, and a bench row
+    /// keyed separately from the per-round row.
+    #[test]
+    fn session_loadgen_holds_one_handshake_per_client() {
+        let path = std::env::temp_dir()
+            .join(format!("fedmrn_loadgen_sess_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        let mut opts = base_opts();
+        opts.rounds = 3;
+        opts.session = true;
+        let rep = run(&opts).unwrap();
+        let total = (opts.clients * opts.rounds) as u64;
+        assert!(rep.session);
+        assert_eq!(rep.delivered, total);
+        assert_eq!(rep.rejected + rep.dropped + rep.retries + rep.stragglers, 0);
+        assert_eq!(rep.quorum_met_rounds, opts.rounds);
+        assert_eq!(
+            rep.handshakes,
+            opts.clients as u64,
+            "a session handshakes once per client, not once per uplink"
+        );
+        assert_eq!(rep.reconnects, 0);
+        let per_uplink = synth_uplink(opts.seed, 0, 0, opts.d).encoded_len() as u64;
+        assert_eq!(rep.payload_bytes, per_uplink * total);
+
+        // weights parity with the in-process synthetic source: run the
+        // session books through SyntheticSource and compare the bench
+        // row's server-side accounting
+        let spath = path.to_str().unwrap();
+        rep.write_row(spath).unwrap();
+        let rows = jsonx::parse_file(&path).unwrap();
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        let name = rows[0].get("name").unwrap().as_str().unwrap().to_string();
+        assert!(name.ends_with(" session"), "session rows get their own key: {name}");
+        assert_eq!(rows[0].get("reconnects").unwrap().as_f64().unwrap(), 0.0);
 
         let _ = std::fs::remove_file(&path);
     }

@@ -1,38 +1,56 @@
 //! Networked coordinator front end: TCP transport over the [`Payload`]
-//! codec (arXiv:2408.03220 reproduction, PR 7).
+//! codec (arXiv:2408.03220 reproduction, PR 7; sessions PR 9).
 //!
-//! Three layers, bottom up:
+//! Four layers, bottom up:
 //!
 //! * [`frame`] — length-prefixed wire frames: a versioned 20-byte
 //!   header (magic, frame_version, kind, round, slot, payload_len)
 //!   with a hard frame-size cap derived from
 //!   [`Payload::encoded_len`] bounds, enforced before any buffer is
-//!   sized.
-//! * [`coordinator`] — [`serve_round`]: slot-auth handshake, bounded
-//!   per-connection reads, per-connection deadlines from the shared
-//!   env/config timeout resolver, ingest-as-bytes-arrive into the
-//!   streaming [`Aggregator`] behind the quorum /
-//!   `ParticipationPolicy` path. Plus [`NetClient`], the client half.
+//!   sized. Two versions share the header: v1 (per-round) and v2
+//!   (session), plus the v2 books prefix and DROP payloads.
+//! * [`coordinator`] — [`serve_round`]: the v1 per-round endpoint
+//!   (slot-auth handshake, bounded reads, per-connection deadlines
+//!   from the shared env/config timeout resolver) feeding the shared
+//!   [`RoundDriver`]. Plus [`NetClient`], the v1 client half.
+//! * [`session`] — the v2 endpoint: [`SessionServer`] keeps one
+//!   connection per client alive across rounds (HELLO once, ASSIGN
+//!   per round) and implements [`UplinkSource`], so `Federation::
+//!   run_over` drives a whole run over TCP through the same engine
+//!   code path; [`SessionClient`] is the persistent client half,
+//!   delivering through the same fault discipline as the in-process
+//!   engine.
 //! * [`loadgen`] — the `fedmrn loadgen` harness: N simulated clients
-//!   replaying seed-derived synthetic uplinks over M reused
-//!   connections (N ≫ cores), optionally through `FaultModel`
-//!   corruption, reporting uplinks/s, bytes/s and p99 ingest latency
-//!   into the `BENCH_net.json` suite.
+//!   replaying seed-derived synthetic uplinks, per-round or over a
+//!   persistent session (`--session`), optionally through
+//!   `FaultModel` chaos, reporting uplinks/s, bytes/s, p99 ingest
+//!   latency and handshake counts into the `BENCH_net.json` suite.
+//!   [`SyntheticSource`] is the same workload as an in-process
+//!   [`UplinkSource`].
 //!
-//! Byte-identity with the in-process engine (any arrival order, any
-//! connection interleaving) is pinned in `tests/differential.rs` §9.
+//! Every mode converges on one round driver
+//! ([`crate::coordinator::driver`]) — decode, validation, metering,
+//! quorum and fault books live there, not per transport. Byte-identity
+//! of finished weights across in-process / per-round / session
+//! delivery is pinned in `tests/differential.rs` §9 and §11.
 //!
 //! [`Payload`]: crate::transport::Payload
 //! [`Payload::encoded_len`]: crate::transport::Payload::encoded_len
-//! [`Aggregator`]: crate::coordinator::strategy::Aggregator
+//! [`RoundDriver`]: crate::coordinator::driver::RoundDriver
+//! [`UplinkSource`]: crate::coordinator::driver::UplinkSource
 
 pub mod coordinator;
 pub mod frame;
 pub mod loadgen;
+pub mod session;
 
 pub use coordinator::{
     resolve_net_timeout, serve_round, NetClient, NetOpts, RoundSpec, ServeReport,
     DEFAULT_NET_TIMEOUT_SECS,
 };
-pub use frame::{max_uplink_payload, Frame, FrameKind, FRAME_V1, HEADER_LEN, MAGIC};
-pub use loadgen::{LoadgenOpts, LoadgenReport};
+pub use frame::{
+    max_session_payload, max_uplink_payload, Frame, FrameKind, FRAME_V1, FRAME_V2,
+    HEADER_LEN, MAGIC,
+};
+pub use loadgen::{LoadgenOpts, LoadgenReport, SyntheticSource};
+pub use session::{SessionClient, SessionServer, SessionStats};

@@ -1,0 +1,950 @@
+//! Multi-round persistent sessions: frame protocol v2.
+//!
+//! The v1 endpoint ([`super::coordinator::serve_round`]) serves one
+//! round per call and clients re-handshake every uplink. A **session**
+//! keeps connections alive for the whole run:
+//!
+//! ```text
+//! client                               server
+//!   HELLO v2 (payload=client id)   →
+//!                                  ←  OK v2                [once]
+//!   ... per round the client is selected ...
+//!                                  ←  ASSIGN v2 (round, slot, w bits)
+//!   UPLINK v2 (books ++ payload)   →
+//!                                  ←  OK v2  (or ERR: resend / DROP)
+//!   ... server closes the socket = end of session ...
+//! ```
+//!
+//! [`SessionServer`] implements [`UplinkSource`], so
+//! `Federation::run_over` drives an entire federated run over TCP
+//! through the exact engine code path the in-process source uses — the
+//! round driver does every bit of decode / ingest / meter / books
+//! work, and finished weights are byte-identical across transports
+//! (`tests/differential.rs` §11).
+//!
+//! Chaos parity: the client half ([`SessionClient::serve`]) routes
+//! every uplink through the same [`deliver_with_faults`] discipline as
+//! the in-process engine, then ships the resulting books over the wire
+//! (the UPLINK books prefix, or a DROP frame with the final drop
+//! reason). The server *absorbs* those books instead of re-deriving
+//! them, so an identical `(seed, FaultModel)` plan produces identical
+//! drop/retry/corrupt bookkeeping on both transports. Unlike v1, a v2
+//! rejection (ERR) keeps the connection open — the retry discipline
+//! resends over the same session, which is what makes "zero
+//! re-handshakes" hold even under wire corruption.
+//!
+//! Version negotiation: a v1 HELLO on the session port downgrades that
+//! connection to per-round service (ASSIGN with no weight payload, raw
+//! v1 uplinks, connection not pooled across rounds); unknown versions
+//! are rejected at the frame parser. The v1 endpoint conversely
+//! rejects v2 frames with a typed error pointing here.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use byteorder::{ByteOrder, LittleEndian};
+
+use crate::coordinator::driver::{
+    deliver_with_faults, AttemptBooks, Offer, RoundDriver, RoundSpec, RoundTiming,
+    UplinkSink, UplinkSource,
+};
+use crate::coordinator::faults::{DropReason, FaultModel};
+use crate::coordinator::parallel::catch_worker;
+use crate::error::{Error, Result};
+
+use super::coordinator::NetOpts;
+use super::frame::{self, Frame, FrameKind};
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Per-round shared state behind one lock: the driver plus which slots
+/// are resolved / mid-service this round.
+struct RoundShared<'d, 'a> {
+    drv: &'d mut RoundDriver<'a>,
+    /// `resolved[slot]`: offer accepted or DROP recorded this round.
+    resolved: Vec<bool>,
+    /// `serving[slot]`: a handler thread currently owns this slot.
+    serving: Vec<bool>,
+}
+
+fn lock<'m, 'd, 'a>(
+    m: &'m Mutex<RoundShared<'d, 'a>>,
+) -> MutexGuard<'m, RoundShared<'d, 'a>> {
+    // a handler that panicked mid-critical-section was already
+    // converted to a dropped connection by the shared worker guard;
+    // the slot it held simply stays unresolved
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The session coordinator: a bound listener plus the pool of
+/// persistent v2 connections, keyed by client id. One instance serves
+/// every round of a run through [`UplinkSource::deliver_round`].
+pub struct SessionServer {
+    listener: TcpListener,
+    opts: NetOpts,
+    pool: Mutex<HashMap<u64, TcpStream>>,
+    handshakes: AtomicU64,
+}
+
+impl SessionServer {
+    /// Bind a session server (loopback-or-wherever; port 0 = ephemeral).
+    pub fn bind(addr: &str, opts: NetOpts) -> Result<SessionServer> {
+        Ok(SessionServer {
+            listener: TcpListener::bind(addr)?,
+            opts,
+            pool: Mutex::new(HashMap::new()),
+            handshakes: AtomicU64::new(0),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// HELLO handshakes accepted so far — a persistent session does
+    /// exactly one per client for the whole run (pinned by the CI
+    /// net-smoke leg: zero *re*-handshakes).
+    pub fn handshakes(&self) -> u64 {
+        self.handshakes.load(Ordering::SeqCst)
+    }
+
+    /// Live pooled connections (diagnostics / tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    /// End the run: drop every pooled connection. Clients see a clean
+    /// EOF, which is [`SessionClient::serve`]'s normal return.
+    pub fn close(&self) {
+        self.pool.lock().unwrap_or_else(PoisonError::into_inner).clear();
+    }
+
+    /// Serve one slot over an already-handshaked v2 connection: send
+    /// ASSIGN with the round's weights, then arbitrate UPLINK / DROP
+    /// frames until the slot resolves. Returns the stream for
+    /// re-pooling. A v2 rejection keeps the connection: the client's
+    /// retry discipline resends over the same session.
+    fn serve_slot(
+        &self,
+        mut stream: TcpStream,
+        spec: &RoundSpec,
+        slot: usize,
+        assign: &[u8],
+        state: &Mutex<RoundShared<'_, '_>>,
+    ) -> Result<TcpStream> {
+        let cap = frame::max_session_payload(spec.d);
+        let round = spec.round as u32;
+        frame::write_frame(
+            &mut stream,
+            &Frame::v2(FrameKind::Assign, round, slot as u32, assign.to_vec()),
+        )?;
+        loop {
+            let f = frame::read_frame(&mut stream, cap)?.ok_or_else(|| {
+                Error::Net("session: client closed mid-round".into())
+            })?;
+            if f.version != frame::FRAME_V2 || f.round != round || f.slot != slot as u32 {
+                return Err(Error::Net(format!(
+                    "session: expected a v2 frame for round {round} slot {slot}, \
+                     got v{} round {} slot {}",
+                    f.version, f.round, f.slot
+                )));
+            }
+            match f.kind {
+                FrameKind::Uplink => {
+                    let (loss, retries, rejected, inner) =
+                        frame::split_uplink_prefix(&f.payload)?;
+                    let verdict = {
+                        let mut st = lock(state);
+                        match st.drv.offer(slot, inner)? {
+                            Offer::Accepted => {
+                                st.drv.absorb(&AttemptBooks {
+                                    retries: retries as u64,
+                                    corrupt_rejected: rejected as u64,
+                                    dropped_attempts: 0,
+                                });
+                                st.drv.note_loss(slot, loss);
+                                st.resolved[slot] = true;
+                                None
+                            }
+                            Offer::Rejected(e) => Some(e),
+                        }
+                    };
+                    match verdict {
+                        None => {
+                            frame::write_frame(
+                                &mut stream,
+                                &Frame::v2(FrameKind::Ok, round, slot as u32, Vec::new()),
+                            )?;
+                            return Ok(stream);
+                        }
+                        Some(e) => {
+                            // rejection without dropping the session:
+                            // relay the typed error, await the resend
+                            let msg = e.to_string().into_bytes();
+                            let cut = msg.len().min(frame::ERR_MSG_CAP);
+                            frame::write_frame(
+                                &mut stream,
+                                &Frame::v2(
+                                    FrameKind::Err,
+                                    round,
+                                    slot as u32,
+                                    msg[..cut].to_vec(),
+                                ),
+                            )?;
+                        }
+                    }
+                }
+                FrameKind::Drop => {
+                    let (retries, rejected, reason) =
+                        frame::parse_drop_payload(&f.payload)?;
+                    let reason = DropReason::parse(&reason).ok_or_else(|| {
+                        Error::Net(format!("session: unknown drop reason {reason:?}"))
+                    })?;
+                    {
+                        let mut st = lock(state);
+                        st.drv.absorb(&AttemptBooks {
+                            retries: retries as u64,
+                            corrupt_rejected: rejected as u64,
+                            dropped_attempts: 0,
+                        });
+                        st.drv.drop_slot(slot, reason);
+                        st.resolved[slot] = true;
+                    }
+                    frame::write_frame(
+                        &mut stream,
+                        &Frame::v2(FrameKind::Ok, round, slot as u32, Vec::new()),
+                    )?;
+                    return Ok(stream);
+                }
+                other => {
+                    return Err(Error::Net(format!(
+                        "session: unexpected {other:?} frame mid-round"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// First contact on a fresh connection: a v2 HELLO joins the
+    /// session (and is served immediately if its client is promised an
+    /// unresolved slot this round); a v1 HELLO downgrades the
+    /// connection to per-round service. Returns a stream to pool for
+    /// future rounds (v2 only).
+    fn greet(
+        &self,
+        mut stream: TcpStream,
+        spec: &RoundSpec,
+        assign: &[u8],
+        state: &Mutex<RoundShared<'_, '_>>,
+    ) -> Result<Option<(u64, TcpStream)>> {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(self.opts.timeout));
+        let _ = stream.set_write_timeout(Some(self.opts.timeout));
+        let cap = frame::max_session_payload(spec.d);
+        let f = match frame::read_frame(&mut stream, cap)? {
+            Some(f) => f,
+            None => return Ok(None), // connected and left
+        };
+        if f.kind != FrameKind::Hello {
+            return Err(Error::Net(format!(
+                "session: expected a HELLO, got {:?}",
+                f.kind
+            )));
+        }
+        if f.payload.len() != frame::HELLO_LEN {
+            return Err(Error::Net(format!(
+                "hello payload must be {} bytes, got {}",
+                frame::HELLO_LEN,
+                f.payload.len()
+            )));
+        }
+        let client = LittleEndian::read_u64(&f.payload);
+        if f.version == frame::FRAME_V1 {
+            // downgrade: one-round v1 service on this connection, no
+            // pooling — exactly what a v1 client expects
+            self.serve_v1(stream, spec, state, client, f.round)?;
+            return Ok(None);
+        }
+        self.handshakes.fetch_add(1, Ordering::SeqCst);
+        frame::write_frame(
+            &mut stream,
+            &Frame::v2(FrameKind::Ok, 0, 0, Vec::new()),
+        )?;
+        // serve this round right away if the client is promised an
+        // unresolved slot nobody else is mid-serving
+        let slot = spec.slot_of(client);
+        if let Some(slot) = slot {
+            let take = {
+                let mut st = lock(state);
+                let free = !st.resolved[slot] && !st.serving[slot];
+                if free {
+                    st.serving[slot] = true;
+                }
+                free
+            };
+            if take {
+                let stream = self.serve_slot(stream, spec, slot, assign, state)?;
+                return Ok(Some((client, stream)));
+            }
+        }
+        Ok(Some((client, stream)))
+    }
+
+    /// v1 downgrade service: the already-read HELLO starts a
+    /// `serve_round`-style exchange (ASSIGN with no payload, raw
+    /// uplink bytes, OK), driven against the same shared driver.
+    fn serve_v1(
+        &self,
+        mut stream: TcpStream,
+        spec: &RoundSpec,
+        state: &Mutex<RoundShared<'_, '_>>,
+        mut client: u64,
+        hello_round: u32,
+    ) -> Result<()> {
+        let cap = frame::max_uplink_payload(spec.d);
+        let round = spec.round as u32;
+        let mut pending_hello = Some((client, hello_round));
+        let mut assigned: Option<u32> = None;
+        loop {
+            let (hello_client, hello_rnd) = match pending_hello.take() {
+                Some(h) => h,
+                None => match frame::read_frame(&mut stream, cap)? {
+                    None => return Ok(()),
+                    Some(f) => match f.kind {
+                        FrameKind::Hello if f.version == frame::FRAME_V1 => {
+                            if f.payload.len() != frame::HELLO_LEN {
+                                return Err(Error::Net(format!(
+                                    "hello payload must be {} bytes, got {}",
+                                    frame::HELLO_LEN,
+                                    f.payload.len()
+                                )));
+                            }
+                            (LittleEndian::read_u64(&f.payload), f.round)
+                        }
+                        FrameKind::Uplink if f.version == frame::FRAME_V1 => {
+                            let slot = assigned.take().ok_or_else(|| {
+                                Error::Net(
+                                    "uplink before a slot-auth handshake".into(),
+                                )
+                            })?;
+                            if f.round != round || f.slot != slot {
+                                return Err(Error::Net(format!(
+                                    "slot auth: frame claims round {} slot {}, \
+                                     assigned round {round} slot {slot}",
+                                    f.round, f.slot
+                                )));
+                            }
+                            let accepted = {
+                                let mut st = lock(state);
+                                match st.drv.offer(slot as usize, &f.payload)? {
+                                    Offer::Accepted => {
+                                        st.resolved[slot as usize] = true;
+                                        true
+                                    }
+                                    Offer::Rejected(e) => return Err(e),
+                                }
+                            };
+                            debug_assert!(accepted);
+                            frame::write_frame(
+                                &mut stream,
+                                &Frame::new(FrameKind::Ok, round, slot, Vec::new()),
+                            )?;
+                            continue;
+                        }
+                        other => {
+                            return Err(Error::Net(format!(
+                                "session: unexpected v1 {other:?} frame"
+                            )))
+                        }
+                    },
+                },
+            };
+            client = hello_client;
+            if hello_rnd != round {
+                return Err(Error::Net(format!(
+                    "round mismatch: frame for round {hello_rnd}, serving round {round}"
+                )));
+            }
+            let slot = spec.slot_of(client).ok_or_else(|| {
+                Error::Net(format!(
+                    "client {client} is not in round {round}'s selection"
+                ))
+            })?;
+            assigned = Some(slot as u32);
+            frame::write_frame(
+                &mut stream,
+                &Frame::new(FrameKind::Assign, round, slot as u32, Vec::new()),
+            )?;
+        }
+    }
+}
+
+impl UplinkSource for SessionServer {
+    /// Serve one round of the session: re-arm every pooled connection
+    /// whose client is promised a slot, accept newcomers (v2 joins, v1
+    /// downgrades), and return once every promised slot is resolved or
+    /// the deadline passes (unresolved slots simply don't participate,
+    /// exactly like the v1 endpoint's timeout semantics).
+    fn deliver_round(&self, drv: &mut RoundDriver<'_>, w: &[f32]) -> Result<RoundTiming> {
+        let spec = drv.spec().clone();
+        let n = spec.promised();
+        let assign = frame::encode_assign_weights(w);
+        let state = Mutex::new(RoundShared {
+            drv,
+            resolved: vec![false; n],
+            serving: vec![false; n],
+        });
+        self.listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + self.opts.timeout;
+        let mut accept_err = None;
+        let keep: Vec<(u64, TcpStream)> = thread::scope(|s| {
+            let mut handles = Vec::new();
+            // re-arm pooled connections for this round's selection
+            {
+                let mut pool =
+                    self.pool.lock().unwrap_or_else(PoisonError::into_inner);
+                let mut st = lock(&state);
+                for (slot, &client) in spec.selection.iter().enumerate() {
+                    if let Some(stream) = pool.remove(&client) {
+                        st.serving[slot] = true;
+                        let (spec, assign, state) = (&spec, &assign, &state);
+                        handles.push(s.spawn(move || {
+                            catch_worker(client as usize, spec.round, || {
+                                self.serve_slot(stream, spec, slot, assign, state)
+                                    .map(|stream| Some((client, stream)))
+                            })
+                        }));
+                    }
+                }
+            }
+            loop {
+                if lock(&state).resolved.iter().all(|&r| r) {
+                    break;
+                }
+                if Instant::now() >= deadline {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let (spec, assign, state) = (&spec, &assign, &state);
+                        handles.push(s.spawn(move || {
+                            catch_worker(usize::MAX, spec.round, || {
+                                self.greet(stream, spec, assign, state)
+                            })
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(self.opts.poll);
+                    }
+                    Err(e) => {
+                        accept_err = Some(Error::Io(e));
+                        break;
+                    }
+                }
+            }
+            // join everything: a handler error just means that
+            // connection is gone (its slot stays unresolved); the
+            // round itself keeps its books
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().ok().and_then(|r| r.ok()).flatten())
+                .collect()
+        });
+        self.listener.set_nonblocking(false)?;
+        if let Some(e) = accept_err {
+            return Err(e);
+        }
+        let mut pool = self.pool.lock().unwrap_or_else(PoisonError::into_inner);
+        for (client, stream) in keep {
+            pool.insert(client, stream);
+        }
+        Ok(RoundTiming::default())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// What one session client did over its lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// ASSIGN frames received (rounds this client was selected).
+    pub assigned: usize,
+    /// Rounds whose uplink the server accepted.
+    pub delivered: usize,
+    /// Rounds resolved with a DROP frame (fault plan exhausted).
+    pub dropped: usize,
+}
+
+/// A sink that ships each delivery attempt as a v2 UPLINK frame with
+/// the books-so-far prefix, and maps OK/ERR to the typed [`Offer`].
+struct SessionSink<'s> {
+    stream: &'s mut TcpStream,
+    cap: usize,
+    round: u32,
+    slot: u32,
+    train_loss: f64,
+}
+
+impl UplinkSink for SessionSink<'_> {
+    fn offer(&mut self, _slot: usize, bytes: &[u8], books: &AttemptBooks) -> Result<Offer> {
+        let mut payload = frame::encode_uplink_prefix(
+            self.train_loss,
+            books.retries as u32,
+            books.corrupt_rejected as u32,
+        )
+        .to_vec();
+        payload.extend_from_slice(bytes);
+        frame::write_frame(
+            self.stream,
+            &Frame::v2(FrameKind::Uplink, self.round, self.slot, payload),
+        )?;
+        let f = frame::read_frame(self.stream, self.cap)?.ok_or_else(|| {
+            Error::Net("session: server closed mid-exchange".into())
+        })?;
+        match f.kind {
+            FrameKind::Ok => Ok(Offer::Accepted),
+            FrameKind::Err => Ok(Offer::Rejected(Error::Net(format!(
+                "server rejected: {}",
+                String::from_utf8_lossy(&f.payload)
+            )))),
+            other => Err(Error::Net(format!(
+                "session: expected OK or ERR, got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Client half of a session: HELLO once, then serve ASSIGN frames
+/// until the server ends the run.
+pub struct SessionClient {
+    stream: TcpStream,
+    d: usize,
+    cap: usize,
+    pub client: u64,
+}
+
+impl SessionClient {
+    /// Dial and handshake (v2 HELLO → OK). One handshake for the whole
+    /// run — the "zero re-handshakes" the CI smoke leg pins.
+    pub fn connect(
+        addr: SocketAddr,
+        d: usize,
+        client: u64,
+        timeout: Duration,
+    ) -> Result<SessionClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let cap = frame::max_session_payload(d);
+        frame::write_frame(
+            &mut stream,
+            &Frame::v2(FrameKind::Hello, 0, 0, client.to_le_bytes().to_vec()),
+        )?;
+        let f = frame::read_frame(&mut stream, cap)?.ok_or_else(|| {
+            Error::Net("session: server closed during the handshake".into())
+        })?;
+        match f.kind {
+            FrameKind::Ok => Ok(SessionClient { stream, d, cap, client }),
+            FrameKind::Err => Err(Error::Net(format!(
+                "server rejected: {}",
+                String::from_utf8_lossy(&f.payload)
+            ))),
+            other => Err(Error::Net(format!(
+                "session: expected an OK handshake ack, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Serve rounds until the server closes the session (clean EOF —
+    /// the normal end of a run).
+    ///
+    /// Per ASSIGN, `work(round, slot, w) -> (clean uplink bytes, train
+    /// loss)` produces the client's clean payload; delivery then runs
+    /// through the **same** [`deliver_with_faults`] discipline as the
+    /// in-process engine — `(run_seed, faults)` here and on an
+    /// in-process run replay the identical per-(round, client) plan,
+    /// which is what makes the two transports' books match bit for bit.
+    pub fn serve(
+        &mut self,
+        run_seed: u64,
+        faults: &FaultModel,
+        mut work: impl FnMut(usize, usize, &[f32]) -> Result<(Vec<u8>, f64)>,
+    ) -> Result<SessionStats> {
+        let mut stats = SessionStats::default();
+        loop {
+            let f = match frame::read_frame(&mut self.stream, self.cap)? {
+                Some(f) => f,
+                None => return Ok(stats), // run over
+            };
+            match f.kind {
+                FrameKind::Assign => {}
+                FrameKind::Err => {
+                    return Err(Error::Net(format!(
+                        "server rejected: {}",
+                        String::from_utf8_lossy(&f.payload)
+                    )))
+                }
+                other => {
+                    return Err(Error::Net(format!(
+                        "session: expected an ASSIGN, got {other:?}"
+                    )))
+                }
+            }
+            stats.assigned += 1;
+            let round = f.round as usize;
+            let slot = f.slot as usize;
+            let w = frame::parse_assign_weights(&f.payload, self.d)?;
+            let (clean, train_loss) = work(round, slot, &w)?;
+            let cf = faults.client_faults(run_seed, round, self.client as usize);
+            let mut sink = SessionSink {
+                stream: &mut self.stream,
+                cap: self.cap,
+                round: f.round,
+                slot: f.slot,
+                train_loss,
+            };
+            let (reason, books) =
+                deliver_with_faults(slot, &cf, faults.deadline_ms, &clean, &mut sink)?;
+            match reason {
+                None => stats.delivered += 1,
+                Some(r) => {
+                    frame::write_frame(
+                        &mut self.stream,
+                        &Frame::v2(
+                            FrameKind::Drop,
+                            f.round,
+                            f.slot,
+                            frame::encode_drop_payload(
+                                books.retries as u32,
+                                books.corrupt_rejected as u32,
+                                r.name(),
+                            ),
+                        ),
+                    )?;
+                    let ack = frame::read_frame(&mut self.stream, self.cap)?
+                        .ok_or_else(|| {
+                            Error::Net("session: server closed mid-exchange".into())
+                        })?;
+                    if ack.kind != FrameKind::Ok {
+                        return Err(Error::Net(format!(
+                            "session: expected a DROP ack, got {:?}",
+                            ack.kind
+                        )));
+                    }
+                    stats.dropped += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry;
+    use crate::coordinator::{Method, ParticipationPolicy, RunConfig};
+    use crate::net::coordinator::NetClient;
+    use crate::net::loadgen::synth_uplink;
+    use crate::noise::NoiseDist;
+    use crate::transport::Meter;
+
+    const DIST: NoiseDist = NoiseDist::Uniform { alpha: 0.01 };
+
+    fn mrn_cfg() -> RunConfig {
+        let mut cfg = RunConfig::new("smoke_mlp", Method::parse("fedmrn", DIST).unwrap());
+        cfg.noise = DIST;
+        cfg
+    }
+
+    fn opts() -> NetOpts {
+        NetOpts::fixed(Duration::from_secs(10))
+    }
+
+    /// Drive `rounds` rounds of synthetic uplinks through a source and
+    /// return (final w bits, per-round books) — the oracle harness for
+    /// the session tests below.
+    fn run_rounds_over(
+        source: &dyn UplinkSource,
+        cfg: &RunConfig,
+        d: usize,
+        clients: &[u64],
+        rounds: usize,
+        meter: &mut Meter,
+    ) -> (Vec<u32>, Vec<crate::coordinator::driver::RoundBooks>) {
+        let strategy = registry::strategy_for_config(cfg);
+        let mut w = vec![0.0f32; d];
+        let mut books = Vec::new();
+        for round in 0..rounds {
+            let spec = RoundSpec {
+                round,
+                d,
+                selection: clients.to_vec(),
+                scales: vec![1.0 / clients.len() as f32; clients.len()],
+            };
+            let mut agg = strategy.aggregator(cfg);
+            meter.begin_round();
+            let mut drv =
+                RoundDriver::begin(&spec, agg.as_mut(), meter, false).unwrap();
+            source.deliver_round(&mut drv, &w).unwrap();
+            books.push(drv.finish(&mut w).unwrap());
+        }
+        (w.iter().map(|x| x.to_bits()).collect(), books)
+    }
+
+    /// An in-process UplinkSource replaying the same synthetic uplinks
+    /// the session clients send — the byte-identity oracle.
+    struct SynthInProcess {
+        seed: u64,
+        faults: FaultModel,
+    }
+
+    impl UplinkSource for SynthInProcess {
+        fn deliver_round(
+            &self,
+            drv: &mut RoundDriver<'_>,
+            _w: &[f32],
+        ) -> Result<RoundTiming> {
+            let spec = drv.spec().clone();
+            let selected: Vec<usize> =
+                spec.selection.iter().map(|&c| c as usize).collect();
+            let plan = crate::coordinator::faults::FaultPlan::for_round(
+                &self.faults,
+                self.seed,
+                spec.round,
+                &selected,
+            );
+            for slot in 0..spec.promised() {
+                let clean = synth_uplink(self.seed, spec.round, selected[slot], spec.d)
+                    .try_encode()?;
+                drv.deliver_faulted(
+                    slot,
+                    &plan.clients[slot],
+                    self.faults.deadline_ms,
+                    &clean,
+                    0.5 + slot as f64,
+                )?;
+            }
+            Ok(RoundTiming::default())
+        }
+    }
+
+    fn spawn_session_clients<'s>(
+        s: &'s thread::Scope<'s, '_>,
+        addr: SocketAddr,
+        d: usize,
+        clients: &[u64],
+        seed: u64,
+        faults: FaultModel,
+    ) -> Vec<thread::ScopedJoinHandle<'s, SessionStats>> {
+        clients
+            .iter()
+            .map(|&c| {
+                s.spawn(move || {
+                    let mut cl =
+                        SessionClient::connect(addr, d, c, Duration::from_secs(10))
+                            .unwrap();
+                    cl.serve(seed, &faults, |round, slot, _w| {
+                        Ok((
+                            synth_uplink(seed, round, c as usize, d)
+                                .try_encode()
+                                .unwrap(),
+                            0.5 + slot as f64,
+                        ))
+                    })
+                    .unwrap()
+                })
+            })
+            .collect()
+    }
+
+    /// Multi-round persistent session: one handshake per client, final
+    /// weights and all books byte-identical to the in-process source
+    /// replaying the same uplinks, downlink weights visible to clients.
+    #[test]
+    fn session_run_matches_in_process_bytes_with_one_handshake_per_client() {
+        let d = 257usize;
+        let clients: Vec<u64> = (0..6).collect();
+        let rounds = 3usize;
+        let seed = 11u64;
+        let cfg = mrn_cfg();
+        let faults = FaultModel::none();
+
+        let server = SessionServer::bind("127.0.0.1:0", opts()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let mut net_meter = Meter::new();
+        let (net_w, net_books) = thread::scope(|s| {
+            let handles =
+                spawn_session_clients(s, addr, d, &clients, seed, faults.clone());
+            let out = run_rounds_over(
+                &server, &cfg, d, &clients, rounds, &mut net_meter,
+            );
+            server.close();
+            for h in handles {
+                let stats = h.join().unwrap();
+                assert_eq!(stats.assigned, rounds);
+                assert_eq!(stats.delivered, rounds);
+                assert_eq!(stats.dropped, 0);
+            }
+            out
+        });
+        assert_eq!(
+            server.handshakes(),
+            clients.len() as u64,
+            "a persistent session handshakes exactly once per client"
+        );
+
+        let oracle = SynthInProcess { seed, faults: faults.clone() };
+        let mut ip_meter = Meter::new();
+        let (ip_w, ip_books) =
+            run_rounds_over(&oracle, &cfg, d, &clients, rounds, &mut ip_meter);
+
+        assert_eq!(net_w, ip_w, "session weights differ from in-process");
+        assert_eq!(net_meter.round_uplink, ip_meter.round_uplink);
+        assert_eq!(net_meter.uplink_msgs, ip_meter.uplink_msgs);
+        for (r, (a, b)) in net_books.iter().zip(&ip_books).enumerate() {
+            assert_eq!(a.participants, b.participants, "round {r}");
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {r}");
+            assert_eq!(a.retries, b.retries, "round {r}");
+            assert_eq!(a.corrupt_rejected, b.corrupt_rejected, "round {r}");
+            assert_eq!(a.uplink_bytes, b.uplink_bytes, "round {r}");
+            assert_eq!(a.delivered, b.delivered, "round {r}");
+            assert_eq!(a.dropped, b.dropped, "round {r}");
+        }
+    }
+
+    /// Chaos parity over the session: the same `(seed, FaultModel)`
+    /// replays the identical plan through the TCP session and the
+    /// in-process source — matching drop/retry/corrupt books, matching
+    /// weights, zero re-handshakes even though corrupt uplinks bounce.
+    #[test]
+    fn session_chaos_books_match_the_in_process_plan() {
+        let d = 193usize;
+        let clients: Vec<u64> = (0..8).collect();
+        let rounds = 2usize;
+        let seed = 23u64;
+        let mut cfg = mrn_cfg();
+        cfg.participation = ParticipationPolicy { quorum: 0.25, rescale: true };
+        let faults = FaultModel {
+            dropout: 0.25,
+            corrupt_p: 0.35,
+            max_retries: 2,
+            ..FaultModel::none()
+        };
+
+        let server = SessionServer::bind("127.0.0.1:0", opts()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let mut net_meter = Meter::new();
+        let (net_w, net_books) = thread::scope(|s| {
+            let handles =
+                spawn_session_clients(s, addr, d, &clients, seed, faults.clone());
+            let out = run_rounds_over(
+                &server, &cfg, d, &clients, rounds, &mut net_meter,
+            );
+            server.close();
+            for h in handles {
+                h.join().unwrap();
+            }
+            out
+        });
+        assert_eq!(server.handshakes(), clients.len() as u64);
+
+        let oracle = SynthInProcess { seed, faults: faults.clone() };
+        let mut ip_meter = Meter::new();
+        let (ip_w, ip_books) =
+            run_rounds_over(&oracle, &cfg, d, &clients, rounds, &mut ip_meter);
+
+        assert_eq!(net_w, ip_w, "chaos session weights differ from in-process");
+        assert_eq!(net_meter.round_uplink, ip_meter.round_uplink);
+        let mut any_fault = false;
+        for (r, (a, b)) in net_books.iter().zip(&ip_books).enumerate() {
+            assert_eq!(a.participants, b.participants, "round {r}");
+            assert_eq!(a.retries, b.retries, "round {r}");
+            assert_eq!(a.corrupt_rejected, b.corrupt_rejected, "round {r}");
+            assert_eq!(a.delivered, b.delivered, "round {r}");
+            assert_eq!(a.dropped, b.dropped, "round {r}");
+            assert_eq!(a.quorum_met, b.quorum_met, "round {r}");
+            any_fault |= !a.dropped.is_empty() || a.retries > 0;
+        }
+        assert!(any_fault, "fault plan drew nothing at these rates");
+    }
+
+    /// Version negotiation: a v1 client on the session port is served
+    /// per-round (downgrade), alongside v2 session clients.
+    #[test]
+    fn v1_client_downgrades_on_the_session_port() {
+        let d = 129usize;
+        let clients: Vec<u64> = vec![0, 1, 2];
+        let rounds = 2usize;
+        let seed = 31u64;
+        let cfg = mrn_cfg();
+        let faults = FaultModel::none();
+
+        let server = SessionServer::bind("127.0.0.1:0", opts()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let mut net_meter = Meter::new();
+        let (net_w, _) = thread::scope(|s| {
+            // clients 0, 1 hold persistent sessions
+            let v2 =
+                spawn_session_clients(s, addr, d, &clients[..2], seed, faults.clone());
+            // client 2 dials per-round with the v1 protocol
+            let v1 = s.spawn(move || {
+                for round in 0..rounds {
+                    loop {
+                        let mut cl = NetClient::connect(
+                            addr,
+                            d,
+                            round,
+                            Duration::from_secs(10),
+                        )
+                        .unwrap();
+                        let bytes =
+                            synth_uplink(seed, round, 2, d).try_encode().unwrap();
+                        // the round opens server-side at its own pace;
+                        // a too-early HELLO is rejected with a typed
+                        // round mismatch — reconnect and retry
+                        match cl.deliver(2, &bytes) {
+                            Ok(slot) => {
+                                assert_eq!(slot, 2);
+                                break;
+                            }
+                            Err(Error::Net(m))
+                                if m.contains("round mismatch")
+                                    || m.contains("closed") =>
+                            {
+                                thread::sleep(Duration::from_millis(5))
+                            }
+                            Err(e) => panic!("v1 downgrade deliver: {e:?}"),
+                        }
+                    }
+                }
+            });
+            let out = run_rounds_over(
+                &server, &cfg, d, &clients, rounds, &mut net_meter,
+            );
+            server.close();
+            for h in v2 {
+                h.join().unwrap();
+            }
+            v1.join().unwrap();
+            out
+        });
+        // only the two v2 clients handshake into the session pool
+        assert_eq!(server.handshakes(), 2);
+
+        let oracle = SynthInProcess { seed, faults };
+        let mut ip_meter = Meter::new();
+        let (ip_w, _) =
+            run_rounds_over(&oracle, &cfg, d, &clients, rounds, &mut ip_meter);
+        assert_eq!(net_w, ip_w, "mixed v1/v2 round differs from in-process");
+        assert_eq!(net_meter.round_uplink, ip_meter.round_uplink);
+    }
+}

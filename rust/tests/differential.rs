@@ -1854,6 +1854,11 @@ fn hostile_frames_never_kill_the_loopback_server() {
                     .to_bytes(),
             );
             count += 1;
+            // a well-formed v2 session frame on the per-round (v1)
+            // endpoint: version negotiation rejects it with a typed
+            // error pointing at the session server
+            hostile(&Frame::v2(FrameKind::Hello, 0, 0, vec![0; 8]).to_bytes());
+            count += 1;
 
             // the server is still serving: a clean round lands through
             // one reused connection, interleaved with one more breach
@@ -2142,4 +2147,463 @@ fn resume_rejects_result_affecting_drift_but_not_neutral_knobs() {
     assert_bytes_eq(&w_base, &fed.w, "neutral-knob resume: final w");
     assert_records_eq_modulo_timing(&base.records, &res.records, "neutral-knob resume");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 11. one round driver: session ≡ per-round ≡ in-process, byte for byte
+// ---------------------------------------------------------------------------
+//
+// PR 9 collapses uplink delivery into a single transport-agnostic round
+// driver behind the `UplinkSource` trait, and promotes the net layer to
+// multi-round sessions (frame v2: HELLO once, one ASSIGN per round over
+// a persistent connection). The acceptance contract: a multi-round run
+// delivered over a persistent session must be byte-identical — final
+// weights, every non-timing `RoundBooks` field, meter totals — to the
+// same run over per-round v1 reconnects and to the in-process engine,
+// clean or chaos-armed. Identity is not a coincidence to re-derive per
+// transport: decode, validation, metering, quorum and the PR-6 fault
+// delivery discipline live in exactly one code path
+// (`coordinator::driver`), and these pins are what keep them there.
+
+use fedmrn::coordinator::driver::{RoundBooks, RoundDriver, RoundTiming, UplinkSource};
+use fedmrn::net::{SessionClient, SessionServer};
+
+/// Deterministic per-(round, slot) scripted uplink for the §11 pins:
+/// payload variety across rounds via the §5 per-method generator.
+/// Selection is `0..n`, so slot and client id coincide.
+fn s11_bytes(name: &str, d: usize, n: usize, r: usize, slot: usize) -> Vec<u8> {
+    ing_payload(name, d, r * n + slot).try_encode().unwrap()
+}
+
+/// Scripted per-(round, slot) training loss, carried end to end so
+/// `RoundBooks::train_loss` participates in the identity.
+fn s11_loss(n: usize, r: usize, slot: usize) -> f64 {
+    0.5 + (r * n + slot) as f64 * 0.25
+}
+
+/// The in-process end of the §11 identity: scripted payloads delivered
+/// through `RoundDriver::deliver_faulted` — the same call
+/// `pipeline::train_and_fold`'s in-process source makes per slot.
+struct ScriptedSource<'a> {
+    name: &'a str,
+    faults: FaultModel,
+    seed: u64,
+}
+
+impl UplinkSource for ScriptedSource<'_> {
+    fn deliver_round(
+        &self,
+        drv: &mut RoundDriver<'_>,
+        _w: &[f32],
+    ) -> fedmrn::error::Result<RoundTiming> {
+        let spec = drv.spec().clone();
+        let n = spec.promised();
+        let selected: Vec<usize> = spec.selection.iter().map(|&c| c as usize).collect();
+        let plan = FaultPlan::for_round(&self.faults, self.seed, spec.round, &selected);
+        for slot in 0..n {
+            let clean = s11_bytes(self.name, spec.d, n, spec.round, slot);
+            drv.deliver_faulted(
+                slot,
+                &plan.clients[slot],
+                self.faults.deadline_ms,
+                &clean,
+                s11_loss(n, spec.round, slot),
+            )?;
+        }
+        Ok(RoundTiming::default())
+    }
+}
+
+/// Drive `rounds` scripted rounds through any `UplinkSource`, exactly
+/// as the engine does: begin meter + driver, let the source resolve the
+/// promised slots, fold via `finish`.
+fn s11_drive(
+    name: &str,
+    d: usize,
+    n: usize,
+    rounds: usize,
+    policy: ParticipationPolicy,
+    source: &dyn UplinkSource,
+) -> (Vec<f32>, Vec<RoundBooks>, Meter) {
+    let m = Method::parse(name, ING_DIST).unwrap();
+    let mut cfg = RunConfig::new("smoke_mlp", m);
+    cfg.noise = ING_DIST;
+    cfg.participation = policy;
+    let strategy = registry::strategy_for_config(&cfg);
+    let mut meter = Meter::new();
+    let mut w = ing_start_w(d);
+    let mut books = Vec::new();
+    for r in 0..rounds {
+        let spec = RoundSpec {
+            round: r,
+            d,
+            selection: (0..n as u64).collect(),
+            scales: (0..n).map(|k| 1.0 / (k + 2) as f32).collect(),
+        };
+        let mut agg = strategy.aggregator(&cfg);
+        meter.begin_round();
+        let mut drv = RoundDriver::begin(&spec, agg.as_mut(), &mut meter, false).unwrap();
+        source.deliver_round(&mut drv, &w).unwrap();
+        books.push(drv.finish(&mut w).unwrap());
+    }
+    (w, books, meter)
+}
+
+/// Every non-timing field of every round's books, bit for bit.
+fn assert_books_eq(a: &[RoundBooks], b: &[RoundBooks], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: round count");
+    for (r, (x, y)) in a.iter().zip(b).enumerate() {
+        let c = format!("{ctx} round {r}");
+        assert_eq!(x.promised, y.promised, "{c}: promised");
+        assert_eq!(x.participants, y.participants, "{c}: participants");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{c}: train_loss {} vs {}",
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(x.retries, y.retries, "{c}: retries");
+        assert_eq!(x.corrupt_rejected, y.corrupt_rejected, "{c}: corrupt_rejected");
+        assert_eq!(x.quorum_met, y.quorum_met, "{c}: quorum verdict");
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{c}: metered uplink bytes");
+        assert_eq!(x.delivered, y.delivered, "{c}: delivered set");
+        assert_eq!(x.dropped, y.dropped, "{c}: dropped roster");
+    }
+}
+
+/// The same scripted rounds over a persistent v2 session: `n` clients
+/// HELLO once, then serve every ASSIGN through the client-side fault
+/// discipline (`deliver_with_faults` against the wire). Returns the
+/// driver outputs plus the server's total handshake count.
+fn s11_session(
+    name: &str,
+    d: usize,
+    n: usize,
+    rounds: usize,
+    policy: ParticipationPolicy,
+    faults: FaultModel,
+    seed: u64,
+) -> (Vec<f32>, Vec<RoundBooks>, Meter, u64) {
+    let timeout = std::time::Duration::from_secs(20);
+    let server = SessionServer::bind("127.0.0.1:0", NetOpts::fixed(timeout)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_ref = &server;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n as u64)
+            .map(|client| {
+                s.spawn(move || {
+                    let mut cl = SessionClient::connect(addr, d, client, timeout).unwrap();
+                    cl.serve(seed, &faults, |r, slot, _w| {
+                        Ok((s11_bytes(name, d, n, r, slot), s11_loss(n, r, slot)))
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let (w, books, meter) = s11_drive(name, d, n, rounds, policy, server_ref);
+        server.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        (w, books, meter, server.handshakes())
+    })
+}
+
+/// The same scripted rounds over the v1 per-round endpoint: a fresh
+/// handshake every round (the reconnect cost sessions remove), same
+/// driver underneath `serve_round`.
+fn s11_per_round(
+    name: &str,
+    d: usize,
+    n: usize,
+    rounds: usize,
+    policy: ParticipationPolicy,
+) -> (Vec<f32>, Vec<ServeReport>, Meter) {
+    let m = Method::parse(name, ING_DIST).unwrap();
+    let mut cfg = RunConfig::new("smoke_mlp", m);
+    cfg.noise = ING_DIST;
+    cfg.participation = policy;
+    let strategy = registry::strategy_for_config(&cfg);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut meter = Meter::new();
+    let mut w = ing_start_w(d);
+    let mut reports = Vec::new();
+    for r in 0..rounds {
+        let spec = RoundSpec {
+            round: r,
+            d,
+            selection: (0..n as u64).collect(),
+            scales: (0..n).map(|k| 1.0 / (k + 2) as f32).collect(),
+        };
+        let mut agg = strategy.aggregator(&cfg);
+        let report = std::thread::scope(|s| {
+            let h = s.spawn(move || {
+                let timeout = std::time::Duration::from_secs(20);
+                let mut cl = NetClient::connect(addr, d, r, timeout).unwrap();
+                for slot in 0..n {
+                    cl.deliver(slot as u64, &s11_bytes(name, d, n, r, slot)).unwrap();
+                }
+            });
+            let report = serve_round(
+                &listener,
+                &spec,
+                agg.as_mut(),
+                &mut meter,
+                &mut w,
+                &NetOpts::fixed(std::time::Duration::from_secs(20)),
+            )
+            .unwrap();
+            h.join().unwrap();
+            report
+        });
+        reports.push(report);
+    }
+    (w, reports, meter)
+}
+
+#[test]
+fn session_run_is_byte_identical_to_per_round_and_in_process_for_table1_roster() {
+    // Three transports, one driver: for every Table-1 method, a clean
+    // 3-round run delivered (a) in process, (b) over one persistent v2
+    // session per client — exactly one HELLO each, ever — and (c) over
+    // per-round v1 reconnects agrees bit for bit on finished weights
+    // and meter totals, and (a)/(b) on every RoundBooks field.
+    let d = 521usize;
+    let n = 4usize;
+    let rounds = 3usize;
+    let policy = ParticipationPolicy::strict();
+    for name in registry::table1_names() {
+        let script = ScriptedSource { name, faults: FaultModel::none(), seed: 7 };
+        let (w_in, books_in, meter_in) = s11_drive(name, d, n, rounds, policy, &script);
+        for b in &books_in {
+            assert_eq!(b.participants, n, "{name}: clean script must deliver all");
+        }
+
+        let (w_se, books_se, meter_se, handshakes) =
+            s11_session(name, d, n, rounds, policy, FaultModel::none(), 7);
+        assert_eq!(handshakes, n as u64, "{name}: one HELLO per client, ever");
+        assert_bytes_eq(&w_in, &w_se, &format!("{name}: session vs in-process"));
+        assert_books_eq(&books_in, &books_se, &format!("{name}: session books"));
+        assert_eq!(
+            meter_in.round_uplink, meter_se.round_uplink,
+            "{name}: session uplink bytes per round"
+        );
+        assert_eq!(
+            meter_in.uplink_msgs, meter_se.uplink_msgs,
+            "{name}: session uplink messages"
+        );
+
+        let (w_pr, reports, meter_pr) = s11_per_round(name, d, n, rounds, policy);
+        assert_bytes_eq(&w_in, &w_pr, &format!("{name}: per-round vs in-process"));
+        assert_eq!(
+            meter_in.round_uplink, meter_pr.round_uplink,
+            "{name}: v1 uplink bytes per round"
+        );
+        assert_eq!(
+            meter_in.uplink_msgs, meter_pr.uplink_msgs,
+            "{name}: v1 uplink messages"
+        );
+        for (r, (report, books)) in reports.iter().zip(&books_in).enumerate() {
+            assert_eq!(report.delivered, books.participants, "{name} r{r}: delivered");
+            assert_eq!(report.quorum_met, books.quorum_met, "{name} r{r}: quorum");
+            assert_eq!(report.bytes_up, books.uplink_bytes, "{name} r{r}: bytes");
+            assert_eq!(report.rejected, 0, "{name} r{r}: clean run rejects nothing");
+        }
+    }
+}
+
+#[test]
+fn chaos_session_replays_the_in_process_fault_plan_byte_for_byte() {
+    // Arm the same `(seed, FaultModel)` on both ends: session clients
+    // run `deliver_with_faults` against the wire (corrupt rejects cost
+    // an ERR round-trip, never a reconnect; exhausted and straggling
+    // slots resolve with a DROP frame carrying their books), while the
+    // in-process source runs the identical discipline against the
+    // driver. Drop / retry / corrupt bookkeeping, quorum verdicts,
+    // losses and weights must replay exactly — the plan is pure in
+    // `(fault_seed, round, client)` and the discipline exists once.
+    let model = FaultModel {
+        dropout: 0.3,
+        straggle_p: 0.25,
+        straggle_ms: 40,
+        corrupt_p: 0.35,
+        deadline_ms: 20,
+        max_retries: 2,
+        fault_seed: 0xC0DE,
+    };
+    let policy = ParticipationPolicy { quorum: 0.25, rescale: true };
+    let d = 521usize;
+    let n = 6usize;
+    let rounds = 3usize;
+    let mut any_fault = false;
+    for (name, seed) in [("fedmrn", 42u64), ("fedavg", 43u64)] {
+        let script = ScriptedSource { name, faults: model, seed };
+        let (w_in, books_in, meter_in) = s11_drive(name, d, n, rounds, policy, &script);
+        for b in &books_in {
+            any_fault |= !b.dropped.is_empty() || b.retries > 0 || b.corrupt_rejected > 0;
+        }
+
+        let (w_se, books_se, meter_se, handshakes) =
+            s11_session(name, d, n, rounds, policy, model, seed);
+        assert_eq!(handshakes, n as u64, "{name}: chaos costs no re-handshake");
+        assert_bytes_eq(&w_in, &w_se, &format!("{name}: chaos weights over session"));
+        assert_books_eq(&books_in, &books_se, &format!("{name}: chaos books"));
+        assert_eq!(
+            meter_in.round_uplink, meter_se.round_uplink,
+            "{name}: chaos uplink bytes per round"
+        );
+        assert_eq!(
+            meter_in.uplink_msgs, meter_se.uplink_msgs,
+            "{name}: chaos uplink messages"
+        );
+    }
+    assert!(any_fault, "fault model fired nothing — the session pin is vacuous");
+}
+
+#[test]
+fn hostile_frames_never_kill_the_session_server() {
+    // The v2 endpoint under the §9 fuzz: bad magic, unknown versions,
+    // non-HELLO openings, short HELLOs, raw garbage, and an unselected
+    // client that handshakes but is never assigned — each costs exactly
+    // its own connection while n honest sessions deliver a full
+    // multi-round run byte-identically around them.
+    use std::io::{Read, Write};
+    let d = 257usize;
+    let n = 4usize;
+    let rounds = 2usize;
+    let policy = ParticipationPolicy::strict();
+    let script = ScriptedSource { name: "fedmrn", faults: FaultModel::none(), seed: 7 };
+    let (w_in, books_in, _meter) = s11_drive("fedmrn", d, n, rounds, policy, &script);
+
+    let timeout = std::time::Duration::from_secs(20);
+    let server = SessionServer::bind("127.0.0.1:0", NetOpts::fixed(timeout)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_ref = &server;
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let hostile = |bytes: &[u8]| {
+                let mut st = std::net::TcpStream::connect(addr).unwrap();
+                st.set_read_timeout(Some(std::time::Duration::from_secs(2))).unwrap();
+                st.write_all(bytes).unwrap();
+                st.shutdown(std::net::Shutdown::Write).unwrap();
+                let mut sink = Vec::new();
+                let _ = st.read_to_end(&mut sink);
+            };
+            // bad magic
+            hostile(&[0xAB; frame::HEADER_LEN]);
+            // unknown frame_version
+            let mut b = Frame::v2(FrameKind::Hello, 0, 0, vec![0; 8]).to_bytes();
+            b[4] = 0x7F;
+            hostile(&b);
+            // an UPLINK before any HELLO
+            hostile(&Frame::v2(FrameKind::Uplink, 0, 0, vec![0; 4]).to_bytes());
+            // short HELLO payload
+            hostile(&Frame::v2(FrameKind::Hello, 0, 0, vec![0; 3]).to_bytes());
+            // not a frame at all
+            hostile(b"definitely not a frame");
+            // a client outside every round's selection: greeted and
+            // pooled, never assigned, starved out at close
+            hostile(
+                &Frame::v2(FrameKind::Hello, 0, 0, 999u64.to_le_bytes().to_vec())
+                    .to_bytes(),
+            );
+        });
+        let handles: Vec<_> = (0..n as u64)
+            .map(|client| {
+                s.spawn(move || {
+                    let mut cl = SessionClient::connect(addr, d, client, timeout).unwrap();
+                    cl.serve(7, &FaultModel::none(), |r, slot, _w| {
+                        Ok((s11_bytes("fedmrn", d, n, r, slot), s11_loss(n, r, slot)))
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let (w_se, books_se, _m) = s11_drive("fedmrn", d, n, rounds, policy, server_ref);
+        server.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_bytes_eq(&w_in, &w_se, "fedmrn weights despite session fuzz");
+        assert_books_eq(&books_in, &books_se, "session books despite fuzz");
+    });
+}
+
+#[test]
+fn federation_run_over_session_matches_the_in_process_run() {
+    // The whole-run contract behind `Federation::run_over`: a full run
+    // whose every uplink travels a persistent TCP session — with real
+    // training on the far side via `client_work()` — lands on the same
+    // bytes, records and meter totals as `Federation::run`, clean and
+    // chaos-armed. Per-round selection happens inside the engine; the
+    // session server assigns each round's slots to whichever pooled
+    // clients were selected, everyone else idles.
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let chaos = FaultModel {
+        dropout: 0.25,
+        straggle_p: 0.2,
+        straggle_ms: 40,
+        corrupt_p: 0.3,
+        deadline_ms: 20,
+        max_retries: 2,
+        fault_seed: 0xFEED,
+    };
+    let cases = [
+        ("fedmrn", FaultModel::none(), ParticipationPolicy::strict()),
+        ("fedmrn", chaos, ParticipationPolicy { quorum: 0.25, rescale: true }),
+        ("fedavg", FaultModel::none(), ParticipationPolicy::strict()),
+    ];
+    for (name, faults, policy) in cases {
+        let cfg = ck_cfg(name, 1, false, faults, policy, 0, None);
+        let (base, w_base) = run_cfg(&rt, cfg.clone());
+
+        let mut fed = Federation::new(&rt, cfg.clone(), pipe_split(512, 64, 7)).unwrap();
+        // the far side: same config, same shards — `ClientWork::run` is
+        // pure in (round, client, w), so a second Federation's training
+        // step is the in-process worker pool's, verbatim
+        let far = Federation::new(&rt, cfg.clone(), pipe_split(512, 64, 7)).unwrap();
+        let d = fed.param_dim();
+        let timeout = std::time::Duration::from_secs(20);
+        let server = SessionServer::bind("127.0.0.1:0", NetOpts::fixed(timeout)).unwrap();
+        let addr = server.local_addr().unwrap();
+        let far_ref = &far;
+        let (res, w_net) = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..cfg.n_clients as u64)
+                .map(|client| {
+                    s.spawn(move || {
+                        let work = far_ref.client_work();
+                        let mut cl =
+                            SessionClient::connect(addr, d, client, timeout).unwrap();
+                        cl.serve(far_ref.cfg.seed, &far_ref.cfg.faults, |r, _slot, w| {
+                            let out = work.run(r, client as usize, w)?;
+                            Ok((out.payload.encode(), out.train_loss))
+                        })
+                        .unwrap()
+                    })
+                })
+                .collect();
+            let res = fed.run_over(&server).unwrap();
+            server.close();
+            for h in handles {
+                h.join().unwrap();
+            }
+            (res, fed.w.clone())
+        });
+        let ctx = format!("{name} faults={}", faults.is_active());
+        assert_eq!(
+            server.handshakes(),
+            cfg.n_clients as u64,
+            "{ctx}: one HELLO per client for the whole run"
+        );
+        assert_bytes_eq(&w_base, &w_net, &format!("{ctx}: final w over session"));
+        assert_records_eq_modulo_timing(&base.records, &res.records, &ctx);
+        assert_eq!(base.uplink_bytes, res.uplink_bytes, "{ctx}: uplink bytes");
+        assert_eq!(base.downlink_bytes, res.downlink_bytes, "{ctx}: downlink bytes");
+        assert_eq!(base.uplink_msgs, res.uplink_msgs, "{ctx}: uplink messages");
+    }
 }
