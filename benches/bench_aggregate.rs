@@ -17,6 +17,10 @@
 //! (AVX2 where detected): regen is the dominant cost of the fused tile
 //! loop, so this is the headline row pair of the noise-layout-v2 PR.
 
+// Non-lib target: the workspace deny on unwrap/expect guards library
+// code; harness code asserts and may unwrap (docs/LINT.md, rule L1).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use fedmrn::bench::suites;
 use fedmrn::noise::NoiseLayout;
 

@@ -3,6 +3,10 @@
 //! scalar oracles. Writes `BENCH_bitpack.json` at the repo root (schema:
 //! docs/BENCH.md).
 
+// Non-lib target: the workspace deny on unwrap/expect guards library
+// code; harness code asserts and may unwrap (docs/LINT.md, rule L1).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use fedmrn::bench::suites;
 
 fn main() {

@@ -5,6 +5,10 @@
 //! compression-cost ordering of Figure 6 (EDEN/DRIVE pay the rotation,
 //! FedMRN decode pays only noise-regen + masked accumulate).
 
+// Non-lib target: the workspace deny on unwrap/expect guards library
+// code; harness code asserts and may unwrap (docs/LINT.md, rule L1).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use fedmrn::bench::Bench;
 use fedmrn::compress::{fedmrn as mrn, GradCodec, MaskType};
 use fedmrn::noise::{NoiseDist, NoiseGen, NoiseLayout};

@@ -1,6 +1,10 @@
 //! FWHT scaling (the DRIVE/EDEN rotation substrate): O(d log d) across
 //! sizes, plus the full rotate/rotate_inv round trip.
 
+// Non-lib target: the workspace deny on unwrap/expect guards library
+// code; harness code asserts and may unwrap (docs/LINT.md, rule L1).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use fedmrn::bench::Bench;
 use fedmrn::fwht;
 use fedmrn::noise::{NoiseDist, NoiseGen};

@@ -8,6 +8,10 @@
 //! weights, pinned by tests/differential.rs); the gap between them is
 //! exactly the evaluation tail the pipeline hides.
 
+// Non-lib target: the workspace deny on unwrap/expect guards library
+// code; harness code asserts and may unwrap (docs/LINT.md, rule L1).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use fedmrn::bench::Bench;
 use fedmrn::cli::Args;
 use fedmrn::coordinator::{Federation, Method, RunConfig};

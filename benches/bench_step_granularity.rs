@@ -6,6 +6,10 @@
 //! Measured on smoke_mlp and fmnist_cnn4 (the configs exporting the
 //! `*_epoch` variants).
 
+// Non-lib target: the workspace deny on unwrap/expect guards library
+// code; harness code asserts and may unwrap (docs/LINT.md, rule L1).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use fedmrn::bench::Bench;
 use fedmrn::noise::{NoiseDist, NoiseGen};
 use fedmrn::runtime::{

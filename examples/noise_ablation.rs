@@ -10,6 +10,10 @@
 //! cargo run --release --example noise_ablation
 //! ```
 
+// Non-lib target: the workspace deny on unwrap/expect guards library
+// code; harness code asserts and may unwrap (docs/LINT.md, rule L1).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use fedmrn::cli::Args;
 use fedmrn::coordinator::{Federation, Method, RunConfig};
 use fedmrn::exp;

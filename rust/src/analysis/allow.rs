@@ -1,0 +1,226 @@
+//! The `fedmrn-lint: allow(...)` suppression grammar.
+//!
+//! A finding can be suppressed only by an annotation of the exact form
+//!
+//! ```text
+//! // fedmrn-lint: allow(L1) -- <non-empty reason>
+//! ```
+//!
+//! The reason is mandatory: an allow without one is itself a finding
+//! (rule `A1`), as is an unknown rule id or otherwise malformed
+//! annotation. A trailing annotation (code on the same line) applies
+//! to that line; a standalone annotation applies to the next line that
+//! carries code, so consecutive standalone allows stack onto the same
+//! statement. An allow that suppresses nothing is *stale* and is
+//! reported as rule `A2` — suppressions can never rot silently.
+
+use std::collections::BTreeSet;
+
+use super::lexer::Comment;
+use super::rules::RULE_IDS;
+
+/// One parsed allow annotation.
+pub struct Allow {
+    pub rule: &'static str,
+    /// Line the comment sits on.
+    pub line: u32,
+    /// Line whose findings it suppresses.
+    pub target: u32,
+    /// Set once a finding matched; unused allows become A2 findings.
+    pub used: bool,
+}
+
+/// A malformed annotation: line + what is wrong with it.
+pub struct Malformed {
+    pub line: u32,
+    pub msg: String,
+}
+
+enum Parsed {
+    Ok { rule: &'static str },
+    Bad(String),
+}
+
+/// Parse one comment's `fedmrn-lint` annotation. Mirrors the grammar
+/// `fedmrn-lint:\s*allow\(RULE\)(\s*--\s*reason)?` with an optional
+/// trailing `*/` for block comments.
+fn parse_annotation(text: &str) -> Parsed {
+    let Some(at) = text.find("fedmrn-lint") else {
+        return Parsed::Bad("malformed fedmrn-lint annotation".into());
+    };
+    let rest = text[at + "fedmrn-lint".len()..].trim_start();
+    let Some(rest) = rest.strip_prefix(':') else {
+        return Parsed::Bad("malformed fedmrn-lint annotation".into());
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Parsed::Bad("malformed fedmrn-lint annotation".into());
+    };
+    let Some(close) = rest.find(')') else {
+        return Parsed::Bad("malformed fedmrn-lint annotation".into());
+    };
+    let rule_txt = &rest[..close];
+    if rule_txt.is_empty() || !rule_txt.chars().all(|c| c.is_ascii_alphanumeric()) {
+        return Parsed::Bad("malformed fedmrn-lint annotation".into());
+    }
+    let mut tail = rest[close + 1..].trim();
+    if let Some(t) = tail.strip_suffix("*/") {
+        tail = t.trim();
+    }
+    let reason = if tail.is_empty() {
+        ""
+    } else if let Some(r) = tail.strip_prefix("--") {
+        r.trim()
+    } else {
+        return Parsed::Bad("malformed fedmrn-lint annotation".into());
+    };
+    let Some(rule) = RULE_IDS.iter().find(|r| **r == rule_txt) else {
+        return Parsed::Bad(format!("unknown rule `{rule_txt}`"));
+    };
+    if reason.is_empty() {
+        return Parsed::Bad(format!("allow({rule}) missing a `-- <reason>`"));
+    }
+    Parsed::Ok { rule }
+}
+
+/// The annotation-bearing content of a comment, or `None` for doc
+/// comments (`///`, `//!`, `/**`, `/*!`) — those are documentation
+/// (prose mentions, rustdoc examples of the grammar) and can never
+/// carry a suppression.
+fn annotation_content(text: &str) -> Option<&str> {
+    if let Some(rest) = text.strip_prefix("//") {
+        if rest.starts_with('/') || rest.starts_with('!') {
+            return None;
+        }
+        return Some(rest);
+    }
+    if let Some(rest) = text.strip_prefix("/*") {
+        if (rest.starts_with('*') || rest.starts_with('!')) && !rest.starts_with("*/") {
+            return None;
+        }
+        return Some(rest.strip_suffix("*/").unwrap_or(rest));
+    }
+    Some(text)
+}
+
+/// Collect the allow annotations (and malformed ones) from a file's
+/// comments. `code_lines` is the set of lines carrying at least one
+/// token, used to resolve each standalone allow to its target line.
+/// An annotation must *start* the comment's content; a mid-sentence
+/// mention is inert.
+pub fn collect_allows(
+    comments: &[Comment],
+    code_lines: &BTreeSet<u32>,
+) -> (Vec<Allow>, Vec<Malformed>) {
+    let mut allows = Vec::new();
+    let mut malformed = Vec::new();
+    for c in comments {
+        let Some(content) = annotation_content(&c.text) else {
+            continue;
+        };
+        if !content.trim_start().starts_with("fedmrn-lint") {
+            continue;
+        }
+        match parse_annotation(content) {
+            Parsed::Bad(msg) => malformed.push(Malformed { line: c.line, msg }),
+            Parsed::Ok { rule } => {
+                let target = if code_lines.contains(&c.line) {
+                    c.line
+                } else {
+                    code_lines
+                        .range(c.line + 1..)
+                        .next()
+                        .copied()
+                        .unwrap_or(c.line)
+                };
+                allows.push(Allow { rule, line: c.line, target, used: false });
+            }
+        }
+    }
+    (allows, malformed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run(src: &str) -> (Vec<Allow>, Vec<Malformed>) {
+        let (toks, comments) = lex(src);
+        let code_lines: BTreeSet<u32> = toks.iter().map(|t| t.line).collect();
+        collect_allows(&comments, &code_lines)
+    }
+
+    #[test]
+    fn trailing_allow_targets_its_own_line() {
+        let (allows, bad) = run(
+            "let x = y.unwrap(); // fedmrn-lint: allow(L1) -- checked above\n",
+        );
+        assert!(bad.is_empty());
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].rule, "L1");
+        assert_eq!(allows[0].target, 1);
+    }
+
+    #[test]
+    fn standalone_allow_targets_next_code_line() {
+        let (allows, bad) = run(
+            "// fedmrn-lint: allow(L1) -- reason here\n\nlet x = y.unwrap();\n",
+        );
+        assert!(bad.is_empty());
+        assert_eq!(allows[0].line, 1);
+        assert_eq!(allows[0].target, 3);
+    }
+
+    #[test]
+    fn missing_reason_is_malformed() {
+        let (allows, bad) = run("// fedmrn-lint: allow(L1)\nlet x = 1;\n");
+        assert!(allows.is_empty());
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].msg.contains("missing"), "{}", bad[0].msg);
+    }
+
+    #[test]
+    fn unknown_rule_is_malformed() {
+        let (allows, bad) = run("// fedmrn-lint: allow(L99) -- why\nlet x = 1;\n");
+        assert!(allows.is_empty());
+        assert!(bad[0].msg.contains("unknown rule"), "{}", bad[0].msg);
+    }
+
+    #[test]
+    fn garbage_tail_is_malformed() {
+        let (allows, bad) = run("// fedmrn-lint: allow(L1) because\nlet x = 1;\n");
+        assert!(allows.is_empty());
+        assert_eq!(bad.len(), 1);
+    }
+
+    #[test]
+    fn doc_comment_mentions_are_inert() {
+        // rustdoc prose and examples of the grammar are documentation,
+        // not suppressions — neither allows nor malformed findings
+        let (allows, bad) = run(
+            "//! The `fedmrn-lint: allow(...)` suppression grammar.\n\
+             //! // fedmrn-lint: allow(L1) -- <non-empty reason>\n\
+             /// Mirrors `fedmrn-lint:\\s*allow\\(RULE\\)`.\n\
+             let x = 1;\n",
+        );
+        assert!(allows.is_empty());
+        assert!(bad.is_empty(), "{}", bad[0].msg);
+    }
+
+    #[test]
+    fn mid_sentence_mentions_are_inert() {
+        let (allows, bad) =
+            run("// see fedmrn-lint: allow(L1) for the grammar\nlet x = 1;\n");
+        assert!(allows.is_empty());
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn block_comment_allow_parses() {
+        let (allows, bad) = run("/* fedmrn-lint: allow(L5) -- vetted */\nunsafe { op() }\n");
+        assert!(bad.is_empty(), "{}", bad.first().map(|b| b.msg.as_str()).unwrap_or(""));
+        assert_eq!(allows[0].rule, "L5");
+        assert_eq!(allows[0].target, 2);
+    }
+}

@@ -1,0 +1,412 @@
+//! A hand-rolled Rust lexer, just deep enough for invariant linting.
+//!
+//! The goal is not a faithful grammar: the rule engine only needs a
+//! token stream where *strings and comments can never masquerade as
+//! code*. That means the tricky parts of Rust's lexical syntax are
+//! handled for real — nested `/* /* */ */` block comments, `r#"…"#`
+//! raw strings with any hash count, `b"…"`/`br#"…"#` byte strings,
+//! raw identifiers (`r#fn`), and the `'a'`-char versus `'a`-lifetime
+//! tick ambiguity — while everything else degrades to one-character
+//! punctuation tokens.
+//!
+//! Comments are not tokens: they are collected into a separate side
+//! channel (with their starting line) because two rule-engine features
+//! read them — `// SAFETY:` discipline (L5) and the
+//! `// fedmrn-lint: allow(...)` suppression grammar.
+
+/// Token classes the rule engine distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Num,
+    Str,
+    Char,
+    Punct,
+}
+
+/// One token: its class, verbatim text, and 1-based starting line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line `//…` or block `/*…*/`, text verbatim) and the
+/// 1-based line it starts on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn starts(cs: &[char], i: usize, pat: &str) -> bool {
+    let mut j = i;
+    for p in pat.chars() {
+        if j >= cs.len() || cs[j] != p {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+fn collect(cs: &[char], a: usize, b: usize) -> String {
+    cs[a..b.min(cs.len())].iter().collect()
+}
+
+/// Match a raw/byte-string opener at `i`: one of `r#*"`, `br#*"`,
+/// `b"`, `rb#*"`. Returns `(prefix_len_including_quote, hash_count)`.
+fn raw_string_prefix(cs: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = cs.len();
+    match cs[i] {
+        'r' => {
+            // r#*"  |  rb#*"
+            let body = if i + 1 < n && cs[i + 1] == 'b' { i + 2 } else { i + 1 };
+            let mut j = body;
+            while j < n && cs[j] == '#' {
+                j += 1;
+            }
+            if j < n && cs[j] == '"' {
+                Some((j - i + 1, j - body))
+            } else {
+                None
+            }
+        }
+        'b' => {
+            if i + 1 < n && cs[i + 1] == '"' {
+                return Some((2, 0));
+            }
+            // br#*"
+            if i + 1 < n && cs[i + 1] == 'r' {
+                let mut j = i + 2;
+                while j < n && cs[j] == '#' {
+                    j += 1;
+                }
+                if j < n && cs[j] == '"' {
+                    return Some((j - i + 1, j - (i + 2)));
+                }
+            }
+            None
+        }
+        _ => None,
+    }
+}
+
+/// Does `"` at position `q` close a raw string with `hashes` hashes?
+fn closes_raw(cs: &[char], q: usize, hashes: usize) -> bool {
+    if cs[q] != '"' {
+        return false;
+    }
+    for k in 0..hashes {
+        if q + 1 + k >= cs.len() || cs[q + 1 + k] != '#' {
+            return false;
+        }
+    }
+    true
+}
+
+/// Tokenize `src`, returning `(tokens, comments)`.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if starts(&cs, i, "//") {
+            let mut j = i;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: collect(&cs, i, j) });
+            i = j;
+            continue;
+        }
+        if starts(&cs, i, "/*") {
+            let start = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if starts(&cs, j, "/*") {
+                    depth += 1;
+                    j += 2;
+                } else if starts(&cs, j, "*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            comments.push(Comment { line: start, text: collect(&cs, i, j) });
+            i = j;
+            continue;
+        }
+        // raw / byte strings (r"…", r#"…"#, b"…", br#"…"#, rb"…")
+        if (c == 'r' || c == 'b') && raw_string_prefix(&cs, i).is_some() {
+            let Some((plen, hashes)) = raw_string_prefix(&cs, i) else {
+                unreachable!()
+            };
+            let mut q = i + plen;
+            let mut close = None;
+            while q < n {
+                if closes_raw(&cs, q, hashes) {
+                    close = Some(q);
+                    break;
+                }
+                q += 1;
+            }
+            let end = match close {
+                Some(q) => q + 1 + hashes,
+                None => n,
+            };
+            let text = collect(&cs, i, end);
+            let newlines = text.matches('\n').count() as u32;
+            toks.push(Tok { kind: TokKind::Str, text, line });
+            line += newlines;
+            i = end;
+            continue;
+        }
+        // raw identifier r#ident — token text drops the r# prefix so
+        // `r#fn` and `fn` compare equal in the rule engine
+        if starts(&cs, i, "r#") && i + 2 < n && is_ident_start(cs[i + 2]) {
+            let mut j = i + 2;
+            while j < n && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: collect(&cs, i + 2, j), line });
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: collect(&cs, i, j), line });
+            i = j;
+            continue;
+        }
+        // byte char b'x'
+        if c == 'b' && starts(&cs, i, "b'") {
+            let mut j = i + 2;
+            if j < n && cs[j] == '\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && cs[j] != '\'' {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Char, text: collect(&cs, i, j + 1), line });
+            i = j + 1;
+            continue;
+        }
+        if c == '\'' {
+            // escaped char literal: '\n', '\'', '\u{1F600}'
+            if i + 1 < n && cs[i + 1] == '\\' {
+                let mut j = i + 2;
+                if j < n {
+                    j += 1; // the escaped char itself
+                }
+                if j < n && cs[j - 1] == 'u' && cs[j] == '{' {
+                    while j < n && cs[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Char, text: collect(&cs, i, j + 1), line });
+                i = j + 1;
+                continue;
+            }
+            // plain char 'a' (tick, one ident-start char, tick)
+            if i + 2 < n && is_ident_start(cs[i + 1]) && cs[i + 2] == '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: collect(&cs, i, i + 3), line });
+                i += 3;
+                continue;
+            }
+            // lifetime 'a / 'static (tick + ident, no closing tick)
+            if i + 1 < n && is_ident_start(cs[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(cs[j]) {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Lifetime, text: collect(&cs, i, j), line });
+                i = j;
+                continue;
+            }
+            // odd char literal like '(' — scan to the closing tick
+            let mut j = i + 1;
+            while j < n && cs[j] != '\'' {
+                j += 1;
+            }
+            let end = if j < n { j } else { i + 1 };
+            toks.push(Tok { kind: TokKind::Char, text: collect(&cs, i, end + 1), line });
+            i = end + 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: collect(&cs, i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_ident_cont(cs[j]) || cs[j] == '.') {
+                // don't eat `0..n` ranges or `1.max(...)` method calls
+                if cs[j] == '.'
+                    && j + 1 < n
+                    && (cs[j + 1] == '.' || is_ident_start(cs[j + 1]))
+                {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Num, text: collect(&cs, i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn golden_nested_block_comments() {
+        let (toks, comments) = lex("a /* x /* y */ z */ b");
+        assert_eq!(
+            toks.iter().map(|t| t.text.as_str()).collect::<Vec<_>>(),
+            ["a", "b"],
+        );
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].text, "/* x /* y */ z */");
+    }
+
+    #[test]
+    fn golden_block_comment_line_tracking() {
+        let (toks, comments) = lex("/* a\nb\nc */ unwrap");
+        assert_eq!(comments[0].line, 1);
+        assert_eq!(toks[0].line, 3);
+        assert_eq!(toks[0].text, "unwrap");
+    }
+
+    #[test]
+    fn golden_raw_strings_hide_code() {
+        // an unwrap() inside a raw string must not become tokens
+        let toks = kinds(r####"let s = r#"x.unwrap()"#;"####);
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, ["let", "s", "=", "r#\"x.unwrap()\"#", ";"]);
+        assert_eq!(toks[3].0, TokKind::Str);
+    }
+
+    #[test]
+    fn golden_raw_string_hash_counts() {
+        // "#" inside an r##"…"## string does not close it
+        let (toks, _) = lex(r#####"r##"a "# b"## trailing"#####);
+        assert_eq!(toks[0].kind, TokKind::Str);
+        assert_eq!(toks[0].text, r#####"r##"a "# b"##"#####);
+        assert_eq!(toks[1].text, "trailing");
+    }
+
+    #[test]
+    fn golden_byte_strings() {
+        let toks = kinds(r#"b"bytes" br"raw" x"#);
+        assert_eq!(toks[0], (TokKind::Str, "b\"bytes\"".to_string()));
+        assert_eq!(toks[1], (TokKind::Str, "br\"raw\"".to_string()));
+        assert_eq!(toks[2], (TokKind::Ident, "x".to_string()));
+    }
+
+    #[test]
+    fn golden_char_vs_lifetime_ticks() {
+        let toks = kinds("'a' 'static '\\n' &'b T");
+        assert_eq!(toks[0], (TokKind::Char, "'a'".to_string()));
+        assert_eq!(toks[1], (TokKind::Lifetime, "'static".to_string()));
+        assert_eq!(toks[2], (TokKind::Char, "'\\n'".to_string()));
+        assert_eq!(toks[4], (TokKind::Lifetime, "'b".to_string()));
+    }
+
+    #[test]
+    fn golden_string_escapes() {
+        // an escaped quote does not end the string; the unwrap inside
+        // stays string data
+        let toks = kinds(r#""a\".unwrap()\"b" end"#);
+        assert_eq!(toks[0].0, TokKind::Str);
+        assert_eq!(toks[1], (TokKind::Ident, "end".to_string()));
+    }
+
+    #[test]
+    fn raw_ident_normalizes() {
+        let toks = kinds("r#fn r#unwrap");
+        assert_eq!(toks[0], (TokKind::Ident, "fn".to_string()));
+        assert_eq!(toks[1], (TokKind::Ident, "unwrap".to_string()));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let toks = kinds("0..n 1.max(2) 3.5f64");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, ["0", ".", ".", "n", "1", ".", "max", "(", "2", ")", "3.5f64"]);
+    }
+
+    #[test]
+    fn line_comments_collected_with_lines() {
+        let (toks, comments) = lex("x // one\ny // two");
+        assert_eq!(comments[0], _c(1, "// one"));
+        assert_eq!(comments[1], _c(2, "// two"));
+        assert_eq!(toks[1].line, 2);
+    }
+
+    fn _c(line: u32, text: &str) -> Comment {
+        Comment { line, text: text.to_string() }
+    }
+}

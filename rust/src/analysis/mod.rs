@@ -1,0 +1,371 @@
+//! `fedmrn lint` — a dependency-free static analyzer for the repo's
+//! own invariants.
+//!
+//! FedMRN's correctness story is bit-exact determinism plus
+//! hostile-input hardening, and both rest on coding invariants that no
+//! compiler pass checks: size-before-allocate, meter-only-after-decode,
+//! typed-error-never-panic, `catch_unwind` on every worker,
+//! runtime-dispatched `#[target_feature]`. This module makes those
+//! invariants mechanical. It tokenizes the repo's Rust sources with a
+//! hand-rolled lexer ([`lexer`]), scopes out test code ([`scope`]),
+//! and runs the rule engine ([`rules`]) codifying L1–L8; findings are
+//! rendered by [`report`] and suppressible only through the reasoned
+//! allow grammar in [`allow`].
+//!
+//! The analyzer has no third-party dependencies and no reliance on a
+//! Rust toolchain being installed — it reads source text, so it runs
+//! anywhere the `fedmrn` binary does, and its behavior is pinned by
+//! fixture tests per rule plus a self-run over the checked-in tree
+//! (`rust/tests/lint.rs`).
+//!
+//! See `docs/LINT.md` for the rule catalog and how to allow.
+
+pub mod allow;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod scope;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+pub use report::{render_json, render_text, Finding};
+pub use rules::{lint_file, lint_sources, RULE_IDS};
+
+/// The directory roots (relative to the repo root) a tree lint scans.
+/// `rust/src` is library scope; the rest are test scope. Anything
+/// under a `vendor` directory is skipped.
+pub const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "benches", "examples"];
+
+fn io_ctx(e: &std::io::Error, what: &str) -> Error {
+    Error::Io(std::io::Error::new(e.kind(), format!("{what}: {e}")))
+}
+
+fn walk_dir(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir)
+        .map_err(|e| io_ctx(&e, &format!("lint: read_dir {}", dir.display())))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| io_ctx(&e, "lint: walk"))?;
+        let path = entry.path();
+        if path.is_dir() {
+            if entry.file_name() == "vendor" {
+                continue;
+            }
+            walk_dir(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Collect the repo-relative paths + sources a tree lint covers.
+pub fn collect_sources(root: &Path) -> Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk_dir(&dir, &mut files)?;
+        }
+    }
+    let mut rels: BTreeSet<String> = BTreeSet::new();
+    let mut sources = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rels.insert(rel.clone()) {
+            let src = fs::read_to_string(&path)
+                .map_err(|e| io_ctx(&e, &format!("lint: read {}", path.display())))?;
+            sources.push((rel, src));
+        }
+    }
+    sources.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(sources)
+}
+
+/// Lint the tree rooted at `root` (the repo root: the directory
+/// holding `rust/src`). Returns the findings, sorted; empty = clean.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    Ok(lint_sources(&collect_sources(root)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lib(src: &str) -> Vec<(String, String)> {
+        vec![("rust/src/demo.rs".to_string(), src.to_string())]
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    // ------------------------------------------------ L1 fixtures
+
+    #[test]
+    fn l1_fires_on_unwrap_in_lib_code() {
+        let f = lint_sources(&lib("pub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n"));
+        assert_eq!(rules_of(&f), ["L1"]);
+    }
+
+    #[test]
+    fn l1_passes_in_test_scope_and_strings() {
+        let src = "\
+pub fn f() -> &'static str { \"x.unwrap() and panic! in a string\" }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1).unwrap();
+        panic!(\"fine in tests\");
+    }
+}
+";
+        assert!(lint_sources(&lib(src)).is_empty());
+    }
+
+    // ------------------------------------------------ L2 fixtures
+
+    #[test]
+    fn l2_fires_on_narrowing_cast_on_wire_path() {
+        let src = "pub fn f(n: usize) -> u32 { n as u32 }\n";
+        let f = lint_sources(&[("rust/src/transport/demo.rs".to_string(), src.to_string())]);
+        assert_eq!(rules_of(&f), ["L2"]);
+    }
+
+    #[test]
+    fn l2_passes_off_wire_paths_and_on_widening() {
+        let widen = "pub fn f(n: u32) -> u64 { n as u64 }\n";
+        assert!(lint_sources(&[(
+            "rust/src/transport/demo.rs".to_string(),
+            widen.to_string()
+        )])
+        .is_empty());
+        let narrow_elsewhere = "pub fn f(n: usize) -> u32 { n as u32 }\n";
+        assert!(lint_sources(&[(
+            "rust/src/noise/demo.rs".to_string(),
+            narrow_elsewhere.to_string()
+        )])
+        .is_empty());
+    }
+
+    // ------------------------------------------------ L3 fixtures
+
+    #[test]
+    fn l3_fires_on_unchecked_wire_sized_alloc() {
+        let src = "\
+pub fn f(declared: usize) -> Vec<u8> {
+    let mut v = Vec::with_capacity(declared);
+    v
+}
+";
+        let f = lint_sources(&[("rust/src/transport/demo.rs".to_string(), src.to_string())]);
+        assert_eq!(rules_of(&f), ["L3"]);
+    }
+
+    #[test]
+    fn l3_passes_when_a_cap_check_precedes() {
+        let src = "\
+pub fn f(declared: usize, cap: usize) -> Result<Vec<u8>> {
+    if declared > cap {
+        return Err(Error::Codec(\"too big\".into()));
+    }
+    let mut v = Vec::with_capacity(declared);
+    Ok(v)
+}
+";
+        let f = lint_sources(&[("rust/src/transport/demo.rs".to_string(), src.to_string())]);
+        assert!(f.is_empty(), "{:?}", f);
+    }
+
+    // ------------------------------------------------ L4 fixtures
+
+    #[test]
+    fn l4_fires_on_meter_mutation_outside_driver() {
+        let src = "pub fn f(m: &mut Meter) { m.begin_round(); }\n";
+        let f = lint_sources(&lib(src));
+        assert_eq!(rules_of(&f), ["L4"]);
+    }
+
+    #[test]
+    fn l4_passes_in_the_round_driver() {
+        let src = "pub fn f(m: &mut Meter) { m.begin_round(); }\n";
+        let f = lint_sources(&[(
+            "rust/src/coordinator/driver.rs".to_string(),
+            src.to_string(),
+        )]);
+        assert!(f.is_empty());
+    }
+
+    // ------------------------------------------------ L5 fixtures
+
+    #[test]
+    fn l5_fires_on_bare_unsafe() {
+        let src = "pub fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let f = lint_sources(&lib(src));
+        assert_eq!(rules_of(&f), ["L5"]);
+    }
+
+    #[test]
+    fn l5_passes_with_safety_comment() {
+        let src = "\
+pub fn f(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads
+    unsafe { *p }
+}
+";
+        assert!(lint_sources(&lib(src)).is_empty());
+    }
+
+    // ------------------------------------------------ L6 fixtures
+
+    #[test]
+    fn l6_fires_on_ungated_target_feature_call() {
+        let src = "\
+#[target_feature(enable = \"avx2\")]
+// SAFETY: caller checked avx2
+pub unsafe fn kernel(x: &mut [u64]) {}
+
+pub fn run(x: &mut [u64]) {
+    unsafe { kernel(x) } // SAFETY: (not actually gated)
+}
+";
+        let f = lint_sources(&lib(src));
+        assert_eq!(rules_of(&f), ["L6"]);
+    }
+
+    #[test]
+    fn l6_passes_behind_a_detection_gate() {
+        let src = "\
+#[target_feature(enable = \"avx2\")]
+// SAFETY: caller checked avx2
+pub unsafe fn kernel(x: &mut [u64]) {}
+
+pub fn run(x: &mut [u64]) {
+    if is_x86_feature_detected!(\"avx2\") {
+        // SAFETY: gate above proves the feature is present
+        unsafe { kernel(x) }
+    }
+}
+";
+        let f = lint_sources(&lib(src));
+        assert!(f.is_empty(), "{:?}", f);
+    }
+
+    // ------------------------------------------------ L7 fixtures
+
+    #[test]
+    fn l7_fires_on_unwrapped_spawn() {
+        let src = "\
+pub fn f() {
+    std::thread::spawn(|| do_work());
+}
+";
+        let f = lint_sources(&lib(src));
+        assert_eq!(rules_of(&f), ["L7"]);
+    }
+
+    #[test]
+    fn l7_passes_via_catch_unwind_and_discovered_wrappers() {
+        let direct = "\
+pub fn f() {
+    std::thread::spawn(|| std::panic::catch_unwind(|| do_work()));
+}
+";
+        assert!(lint_sources(&lib(direct)).is_empty());
+        // wrapper discovery: guard() calls catch_unwind, handle()
+        // calls guard(), and the spawn body calls handle()
+        let delegated = "\
+fn guard() { let _ = std::panic::catch_unwind(|| do_work()); }
+fn handle() { guard(); }
+pub fn f() {
+    std::thread::spawn(|| handle());
+}
+";
+        let f = lint_sources(&lib(delegated));
+        assert!(f.is_empty(), "{:?}", f);
+    }
+
+    // ------------------------------------------------ L8 fixtures
+
+    #[test]
+    fn l8_fires_on_hashmap_in_det_path() {
+        let src = "use std::collections::HashMap;\npub fn f() {}\n";
+        let f = lint_sources(&[("rust/src/artifact/demo.rs".to_string(), src.to_string())]);
+        assert_eq!(rules_of(&f), ["L8"]);
+    }
+
+    #[test]
+    fn l8_passes_with_btreemap_and_off_det_paths() {
+        let bt = "use std::collections::BTreeMap;\npub fn f() {}\n";
+        assert!(lint_sources(&[(
+            "rust/src/artifact/demo.rs".to_string(),
+            bt.to_string()
+        )])
+        .is_empty());
+        let hm = "use std::collections::HashMap;\npub fn f() {}\n";
+        assert!(lint_sources(&[(
+            "rust/src/coordinator/demo.rs".to_string(),
+            hm.to_string()
+        )])
+        .is_empty());
+    }
+
+    // ------------------------------------- allow grammar / staleness
+
+    #[test]
+    fn allow_with_reason_suppresses() {
+        let src = "pub fn f(x: Option<u8>) -> u8 { x.unwrap() } // fedmrn-lint: allow(L1) -- demo contract\n";
+        assert!(lint_sources(&lib(src)).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a1() {
+        let src = "pub fn f(x: Option<u8>) -> u8 { x.unwrap() } // fedmrn-lint: allow(L1)\n";
+        let f = lint_sources(&lib(src));
+        // the annotation is malformed AND the finding still fires
+        assert_eq!(rules_of(&f), ["A1", "L1"]);
+    }
+
+    #[test]
+    fn stale_allow_is_a2() {
+        let src = "\
+// fedmrn-lint: allow(L1) -- nothing here actually unwraps
+pub fn f() -> u8 { 3 }
+";
+        let f = lint_sources(&lib(src));
+        assert_eq!(rules_of(&f), ["A2"]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn wrong_rule_allow_is_stale_and_finding_survives() {
+        let src = "pub fn f(x: Option<u8>) -> u8 { x.unwrap() } // fedmrn-lint: allow(L2) -- wrong rule id\n";
+        let f = lint_sources(&lib(src));
+        assert_eq!(rules_of(&f), ["A2", "L1"]);
+    }
+
+    #[test]
+    fn stacked_standalone_allows_cover_one_line() {
+        let src = "\
+pub fn f(m: &mut Meter, x: Option<u8>) -> u8 {
+    // fedmrn-lint: allow(L1) -- demo: both rules fire on one line
+    // fedmrn-lint: allow(L4) -- demo: both rules fire on one line
+    m.begin_round(); let y = x.unwrap();
+    y
+}
+";
+        let f = lint_sources(&lib(src));
+        // both standalone allows resolve to line 4 and each suppresses
+        // its own rule's finding there
+        assert!(f.is_empty(), "{:?}", f);
+    }
+}

@@ -1,0 +1,79 @@
+//! Finding type and rendering: clickable `file:line` text lines, or a
+//! machine-readable JSON document built on the in-repo [`crate::jsonx`]
+//! emitter.
+
+use crate::jsonx::Value;
+
+/// One lint finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// `L1`–`L8`, or `A1` (malformed allow) / `A2` (stale allow).
+    pub rule: String,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: u32, rule: &str, msg: &str) -> Finding {
+        Finding {
+            file: file.to_string(),
+            line,
+            rule: rule.to_string(),
+            msg: msg.to_string(),
+        }
+    }
+
+    /// The `file:line: [rule] message` form editors make clickable.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Render findings as text, one per line.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render findings as a JSON document:
+/// `{"findings": [{file, line, rule, msg}...], "count": N}`.
+pub fn render_json(findings: &[Finding]) -> String {
+    let arr: Vec<Value> = findings
+        .iter()
+        .map(|f| {
+            Value::obj()
+                .set("file", Value::Str(f.file.clone()))
+                .set("line", Value::Int(f.line as i128))
+                .set("rule", Value::Str(f.rule.clone()))
+                .set("msg", Value::Str(f.msg.clone()))
+        })
+        .collect();
+    Value::obj()
+        .set("count", Value::Int(findings.len() as i128))
+        .set("findings", Value::Arr(arr))
+        .to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_forms() {
+        let f = Finding::new("rust/src/x.rs", 7, "L1", "boom");
+        assert_eq!(f.render(), "rust/src/x.rs:7: [L1] boom");
+        let json = render_json(std::slice::from_ref(&f));
+        let v = crate::jsonx::parse(&json).unwrap();
+        assert_eq!(v.req("count").unwrap().as_usize(), Some(1));
+        let arr = v.req("findings").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].req("rule").unwrap().as_str(), Some("L1"));
+        assert_eq!(arr[0].req("line").unwrap().as_usize(), Some(7));
+    }
+}

@@ -1,0 +1,561 @@
+//! The rule engine: project invariants L1–L8 over the token stream.
+//!
+//! Every rule is an *operational* approximation — no type inference,
+//! no name resolution — tuned so that on this codebase it has zero
+//! false negatives for the invariant it encodes and its false
+//! positives are each worth a reasoned `allow` (the annotation doubles
+//! as documentation at the call site). The rules:
+//!
+//! | id | invariant                                                    |
+//! |----|--------------------------------------------------------------|
+//! | L1 | no `unwrap()` / `expect()` / `panic!` in non-test lib code   |
+//! | L2 | no truncating `as` casts on wire paths (use `try_from`)      |
+//! | L3 | no unchecked `with_capacity`/`vec![_; n]` on wire sizes      |
+//! | L4 | `Meter` mutation only in the round driver / allowlist        |
+//! | L5 | every `unsafe` carries a `// SAFETY:` argument               |
+//! | L6 | `#[target_feature]` fns called only behind detection gates   |
+//! | L7 | spawned worker bodies wrapped in `catch_unwind`              |
+//! | L8 | no `SystemTime` / `HashMap` in deterministic codec paths     |
+//!
+//! Two meta-rules police the suppression grammar itself: `A1` flags a
+//! malformed / reasonless / unknown-rule annotation, `A2` a stale
+//! allow that suppresses nothing.
+//!
+//! Files under `rust/tests/`, `benches/` and `examples/` are test
+//! scope (exempt from everything except L5), as are `#[cfg(test)]`
+//! regions inside library files.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::allow::collect_allows;
+use super::lexer::{lex, Tok, TokKind};
+use super::report::Finding;
+use super::scope::{attr_spans, in_regions, test_regions};
+
+/// The rule ids an `allow(...)` may name.
+pub const RULE_IDS: [&str; 8] = ["L1", "L2", "L3", "L4", "L5", "L6", "L7", "L8"];
+
+/// Methods that mutate [`crate::transport::Meter`] accounting.
+const METER_MUT: [&str; 5] =
+    ["begin_round", "uplink", "uplink_wire", "count_uplink", "downlink_dense"];
+
+/// Files allowed to call meter-mutating methods. `transport` owns the
+/// meter; the driver and the two engine loops call `begin_round` /
+/// `downlink_dense` in the order the pinned meter traces require (see
+/// the contract note in `coordinator::driver`).
+const METER_ALLOW_FILES: [&str; 4] = [
+    "rust/src/transport/mod.rs",
+    "rust/src/coordinator/driver.rs",
+    "rust/src/coordinator/pipeline.rs",
+    "rust/src/net/coordinator.rs",
+];
+
+/// Paths where narrowing `as` casts are wire-affecting (L2).
+const WIRE_CAST_PATHS: [&str; 3] =
+    ["rust/src/transport/", "rust/src/net/", "rust/src/artifact/"];
+
+/// Paths whose allocations may be sized by hostile wire input (L3).
+const ALLOC_PATHS: [&str; 4] = [
+    "rust/src/transport/",
+    "rust/src/artifact/",
+    "rust/src/jsonx/",
+    "rust/src/net/frame.rs",
+];
+
+/// Deterministic-serialization paths (L8): byte output must not depend
+/// on wall clock or unordered map iteration.
+const DET_PATHS: [&str; 4] = [
+    "rust/src/transport/",
+    "rust/src/artifact/",
+    "rust/src/jsonx/",
+    "rust/src/net/frame.rs",
+];
+
+/// Narrowing target types for L2.
+const NARROW: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Identifiers that gate AVX2 dispatch (L6).
+const GATE_IDENTS: [&str; 2] = ["is_x86_feature_detected", "use_avx2"];
+
+/// Identifier substrings that mark a size-guard line for L3.
+const GUARD_SUBSTRINGS: [&str; 8] =
+    ["cap", "max", "need", "remain", "check", "min", "bound", "len"];
+
+/// How many preceding lines count as "right before" for gate / guard
+/// window checks (L3, L6).
+const WINDOW_LINES: u32 = 15;
+
+fn has_prefix(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// Token index of the matching close bracket for the open bracket at
+/// `open_idx` (any of `(` `[` `{`).
+fn match_paren_span(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open_idx;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct && matches!(t.text.as_str(), "(" | "[" | "{") {
+            depth += 1;
+        } else if t.kind == TokKind::Punct && matches!(t.text.as_str(), ")" | "]" | "}") {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Every `fn name … { body }` in the stream, with the set of
+/// identifiers its body mentions. Used by catch-wrapper discovery.
+fn fn_bodies(toks: &[Tok]) -> Vec<(String, BTreeSet<String>)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let n = toks.len();
+    while i < n {
+        if toks[i].kind == TokKind::Ident
+            && toks[i].text == "fn"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            let name = toks[i + 1].text.clone();
+            // find the body's `{`; a `;` first means a trait decl
+            let mut j = i + 2;
+            let mut open = None;
+            while j < n {
+                if toks[j].kind == TokKind::Punct && toks[j].text == "{" {
+                    open = Some(j);
+                    break;
+                }
+                if toks[j].kind == TokKind::Punct && toks[j].text == ";" {
+                    break;
+                }
+                j += 1;
+            }
+            let Some(open_idx) = open else {
+                i += 2;
+                continue;
+            };
+            let close = match_paren_span(toks, open_idx);
+            let idents: BTreeSet<String> = toks[open_idx..=close]
+                .iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.clone())
+                .collect();
+            out.push((name, idents));
+            i = close + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Two-level catch-wrapper discovery across the whole source set: a fn
+/// whose body directly contains `catch_unwind` is a catch wrapper; a
+/// fn whose body directly calls such a wrapper is also recognized
+/// (delegating wrapper, e.g. `handle_conn` → `conn_guard`).
+/// Deliberately NOT a transitive fixpoint — closing over the full call
+/// graph would recognize nearly every fn and make L7 vacuous.
+pub fn discover_wrappers(sources: &[(String, String)]) -> BTreeSet<String> {
+    let mut fns = Vec::new();
+    for (_, src) in sources {
+        let (toks, _) = lex(src);
+        fns.extend(fn_bodies(&toks));
+    }
+    let direct: BTreeSet<String> = fns
+        .iter()
+        .filter(|(_, idents)| idents.contains("catch_unwind"))
+        .map(|(name, _)| name.clone())
+        .collect();
+    let delegating: BTreeSet<String> = fns
+        .iter()
+        .filter(|(name, idents)| {
+            !direct.contains(name) && idents.iter().any(|id| direct.contains(id))
+        })
+        .map(|(name, _)| name.clone())
+        .collect();
+    direct.union(&delegating).cloned().collect()
+}
+
+/// Lint one file. `wrappers` is the cross-file catch-wrapper set from
+/// [`discover_wrappers`].
+pub fn lint_file(rel: &str, src: &str, wrappers: &BTreeSet<String>) -> Vec<Finding> {
+    let (toks, comments) = lex(src);
+    let mut findings: Vec<Finding> = Vec::new();
+    let is_test_file =
+        rel.starts_with("rust/tests/") || rel.starts_with("benches/") || rel.starts_with("examples/");
+    let regions = test_regions(&toks);
+    let tscope = |line: u32| is_test_file || in_regions(line, &regions);
+    let in_lib = rel.starts_with("rust/src/");
+
+    let code_lines: BTreeSet<u32> = toks.iter().map(|t| t.line).collect();
+    let (mut allows, malformed) = collect_allows(&comments, &code_lines);
+    for m in &malformed {
+        findings.push(Finding::new(rel, m.line, "A1", &m.msg));
+    }
+
+    // comment text per physical line (block comments span several)
+    let mut comment_by_line: BTreeMap<u32, Vec<String>> = BTreeMap::new();
+    for c in &comments {
+        for (k, part) in c.text.split('\n').enumerate() {
+            comment_by_line
+                .entry(c.line + k as u32)
+                .or_default()
+                .push(part.to_string());
+        }
+    }
+    let comment_window_has = |line: u32, needle: &str, span: u32| {
+        let lo = line.saturating_sub(span);
+        (lo..=line).any(|l| {
+            comment_by_line
+                .get(&l)
+                .is_some_and(|v| v.iter().any(|t| t.contains(needle)))
+        })
+    };
+
+    let mut lines_tokens: BTreeMap<u32, Vec<&Tok>> = BTreeMap::new();
+    for t in &toks {
+        lines_tokens.entry(t.line).or_default().push(t);
+    }
+    let line_window_has = |line: u32, pred: &dyn Fn(&Tok) -> bool, inclusive: bool| {
+        let lo = line.saturating_sub(WINDOW_LINES);
+        let hi = if inclusive { line } else { line.saturating_sub(1) };
+        (lo..=hi).any(|l| {
+            lines_tokens.get(&l).is_some_and(|v| v.iter().any(|t| pred(t)))
+        })
+    };
+
+    // ---------------------------------------------------------- L1
+    if in_lib {
+        for (i, t) in toks.iter().enumerate() {
+            if tscope(t.line) || t.kind != TokKind::Ident {
+                continue;
+            }
+            let nxt = toks.get(i + 1);
+            let prv = if i > 0 { toks.get(i - 1) } else { None };
+            if (t.text == "unwrap" || t.text == "expect")
+                && nxt.is_some_and(|n| n.text == "(")
+                && prv.is_some_and(|p| p.text == ".")
+            {
+                findings.push(Finding::new(
+                    rel,
+                    t.line,
+                    "L1",
+                    &format!("`{}()` in non-test library code (return a typed Error)", t.text),
+                ));
+            }
+            if t.text == "panic" && nxt.is_some_and(|n| n.text == "!") {
+                findings.push(Finding::new(
+                    rel,
+                    t.line,
+                    "L1",
+                    "`panic!` in non-test library code (return a typed Error)",
+                ));
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- L2
+    if has_prefix(rel, &WIRE_CAST_PATHS) {
+        for (i, t) in toks.iter().enumerate() {
+            if tscope(t.line) || t.kind != TokKind::Ident || t.text != "as" {
+                continue;
+            }
+            if let Some(nt) = toks.get(i + 1) {
+                if nt.kind == TokKind::Ident && NARROW.contains(&nt.text.as_str()) {
+                    findings.push(Finding::new(
+                        rel,
+                        t.line,
+                        "L2",
+                        &format!("truncating `as {}` on a wire path (use try_from)", nt.text),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- L3
+    if has_prefix(rel, &ALLOC_PATHS) {
+        let arg_is_safe = |span: &[&Tok]| {
+            if span.len() == 1 && span[0].kind == TokKind::Num {
+                return true;
+            }
+            if span.len() == 1
+                && span[0].kind == TokKind::Ident
+                && span[0]
+                    .text
+                    .chars()
+                    .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+            {
+                return true;
+            }
+            span.iter()
+                .any(|t| t.kind == TokKind::Ident && (t.text == "len" || t.text == "min"))
+        };
+        let guarded = |line: u32| {
+            line_window_has(
+                line,
+                &|t: &Tok| {
+                    t.kind == TokKind::Ident && {
+                        let low = t.text.to_ascii_lowercase();
+                        GUARD_SUBSTRINGS.iter().any(|g| low.contains(g))
+                    }
+                },
+                false,
+            )
+        };
+        for (i, t) in toks.iter().enumerate() {
+            if tscope(t.line) || t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text == "with_capacity" && toks.get(i + 1).is_some_and(|n| n.text == "(") {
+                let close = match_paren_span(&toks, i + 1);
+                let span: Vec<&Tok> = toks[i + 2..close].iter().collect();
+                if !arg_is_safe(&span) && !guarded(t.line) {
+                    findings.push(Finding::new(
+                        rel,
+                        t.line,
+                        "L3",
+                        "unchecked `with_capacity` on a wire-derived size (cap it first)",
+                    ));
+                }
+            }
+            if t.text == "vec"
+                && toks.get(i + 1).is_some_and(|n| n.text == "!")
+                && toks.get(i + 2).is_some_and(|n| n.text == "(" || n.text == "[")
+            {
+                let close = match_paren_span(&toks, i + 2);
+                let span: Vec<&Tok> = toks[i + 3..close].iter().collect();
+                // repeat form: a `;` at bracket depth 0 of the span
+                let mut depth = 0i32;
+                let mut semi = None;
+                for (k, st) in span.iter().enumerate() {
+                    if st.kind == TokKind::Punct {
+                        match st.text.as_str() {
+                            "(" | "[" | "{" => depth += 1,
+                            ")" | "]" | "}" => depth -= 1,
+                            ";" if depth == 0 => {
+                                semi = Some(k);
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                if let Some(semi) = semi {
+                    let count = &span[semi + 1..];
+                    if !arg_is_safe(count) && !guarded(t.line) {
+                        findings.push(Finding::new(
+                            rel,
+                            t.line,
+                            "L3",
+                            "unchecked `vec![_; n]` on a wire-derived size (cap it first)",
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- L4
+    if in_lib && !METER_ALLOW_FILES.contains(&rel) {
+        for (i, t) in toks.iter().enumerate() {
+            if tscope(t.line) || t.kind != TokKind::Ident {
+                continue;
+            }
+            if METER_MUT.contains(&t.text.as_str())
+                && toks.get(i + 1).is_some_and(|n| n.text == "(")
+                && i > 0
+                && toks[i - 1].text == "."
+            {
+                findings.push(Finding::new(
+                    rel,
+                    t.line,
+                    "L4",
+                    &format!("Meter mutation `.{}()` outside the round driver", t.text),
+                ));
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- L5
+    // checked everywhere, including tests: an unvetted unsafe block is
+    // never fine just because it lives in a test
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let mut ok = comment_window_has(t.line, "SAFETY:", 4);
+        if !ok && toks.get(i + 1).is_some_and(|n| n.text == "fn") {
+            // an `unsafe fn` may carry the argument above its
+            // attribute/doc block, so the window is wider
+            ok = comment_window_has(t.line, "SAFETY:", 10)
+                || comment_window_has(t.line, "# Safety", 10);
+        }
+        if !ok {
+            findings.push(Finding::new(
+                rel,
+                t.line,
+                "L5",
+                "`unsafe` without a `// SAFETY:` comment",
+            ));
+        }
+    }
+
+    // ---------------------------------------------------------- L6
+    if in_lib {
+        let spans = attr_spans(&toks);
+        let mut tf_names: BTreeSet<String> = BTreeSet::new();
+        for span in &spans {
+            if !span.idents.iter().any(|s| s == "target_feature") {
+                continue;
+            }
+            // the fn item follows the attribute; find its name and
+            // whether it is declared unsafe
+            let mut is_unsafe = false;
+            let mut name = None;
+            let mut j = span.end;
+            while j < toks.len() && j < span.end + 12 {
+                if toks[j].text == "unsafe" {
+                    is_unsafe = true;
+                }
+                if toks[j].text == "fn" {
+                    name = toks.get(j + 1).map(|t| t.text.clone());
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(name) = name {
+                if !is_unsafe {
+                    findings.push(Finding::new(
+                        rel,
+                        toks[span.start].line,
+                        "L6",
+                        &format!("#[target_feature] fn `{name}` must be `unsafe fn`"),
+                    ));
+                }
+                tf_names.insert(name);
+            }
+        }
+        for (i, t) in toks.iter().enumerate() {
+            if tscope(t.line) || t.kind != TokKind::Ident || !tf_names.contains(&t.text) {
+                continue;
+            }
+            let called = toks.get(i + 1).is_some_and(|n| n.text == "(")
+                && i > 0
+                && toks[i - 1].text != "."
+                && toks[i - 1].text != "fn";
+            if !called {
+                continue;
+            }
+            let gated = line_window_has(
+                t.line,
+                &|gt: &Tok| gt.kind == TokKind::Ident && GATE_IDENTS.contains(&gt.text.as_str()),
+                true,
+            );
+            if !gated {
+                findings.push(Finding::new(
+                    rel,
+                    t.line,
+                    "L6",
+                    &format!("call to #[target_feature] fn `{}` outside a detection gate", t.text),
+                ));
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- L7
+    if in_lib {
+        for (i, t) in toks.iter().enumerate() {
+            if tscope(t.line) || t.kind != TokKind::Ident || t.text != "spawn" {
+                continue;
+            }
+            if !toks.get(i + 1).is_some_and(|n| n.text == "(") {
+                continue;
+            }
+            let close = match_paren_span(&toks, i + 1);
+            let wrapped = toks[i + 2..close].iter().any(|st| {
+                st.kind == TokKind::Ident
+                    && (st.text == "catch_unwind" || wrappers.contains(&st.text))
+            });
+            if !wrapped {
+                findings.push(Finding::new(
+                    rel,
+                    t.line,
+                    "L7",
+                    "spawned worker body not wrapped in catch_unwind",
+                ));
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- L8
+    if has_prefix(rel, &DET_PATHS) {
+        for t in &toks {
+            if tscope(t.line) || t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text == "SystemTime" {
+                findings.push(Finding::new(
+                    rel,
+                    t.line,
+                    "L8",
+                    "`SystemTime` in a deterministic serialization path",
+                ));
+            }
+            if t.text == "HashMap" {
+                findings.push(Finding::new(
+                    rel,
+                    t.line,
+                    "L8",
+                    "`HashMap` (unordered iteration) in a deterministic serialization path",
+                ));
+            }
+        }
+    }
+
+    // -------------------------------------------- apply suppressions
+    let mut kept: Vec<Finding> = Vec::new();
+    for f in findings {
+        let mut matched = false;
+        for a in allows.iter_mut() {
+            if a.rule == f.rule && a.target == f.line {
+                a.used = true;
+                matched = true;
+            }
+        }
+        if !matched {
+            kept.push(f);
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            kept.push(Finding::new(
+                rel,
+                a.line,
+                "A2",
+                &format!("stale allow({}) suppresses nothing", a.rule),
+            ));
+        }
+    }
+    kept
+}
+
+/// Lint a set of `(relative_path, source)` pairs: cross-file wrapper
+/// discovery, then the per-file rule pass; findings sorted by
+/// `(file, line, rule)`.
+pub fn lint_sources(sources: &[(String, String)]) -> Vec<Finding> {
+    let wrappers = discover_wrappers(sources);
+    let mut findings: Vec<Finding> = Vec::new();
+    for (rel, src) in sources {
+        findings.extend(lint_file(rel, src, &wrappers));
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+    });
+    findings
+}

@@ -1,0 +1,200 @@
+//! Test-scope detection: which lines of a file belong to `#[test]`
+//! functions or `#[cfg(test)]` modules.
+//!
+//! The rule engine exempts test code from most invariants (a test may
+//! `unwrap()` freely), so it needs the *line ranges* of test items.
+//! Detection is attribute-driven: each `#[…]` span whose first path
+//! segment is `test`, or is `cfg` with a `test` argument, marks the
+//! item that follows it; the item's extent is found by brace matching
+//! from its opening `{`.
+
+use super::lexer::{Tok, TokKind};
+
+/// One `#[…]` attribute occurrence: token index range (end exclusive)
+/// plus every identifier that appears inside the brackets.
+pub struct AttrSpan {
+    pub start: usize,
+    pub end: usize,
+    pub idents: Vec<String>,
+}
+
+/// Find every `#[…]` attribute span in the token stream.
+pub fn attr_spans(toks: &[Tok]) -> Vec<AttrSpan> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && toks[i + 1].text == "["
+        {
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut idents = Vec::new();
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.kind == TokKind::Punct && t.text == "[" {
+                    depth += 1;
+                } else if t.kind == TokKind::Punct && t.text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Ident {
+                    idents.push(t.text.clone());
+                }
+                j += 1;
+            }
+            out.push(AttrSpan { start: i, end: j + 1, idents });
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Inclusive line ranges of `#[cfg(test)]` / `#[test]` items.
+pub fn test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut regions = Vec::new();
+    for span in attr_spans(toks) {
+        let is_test = match span.idents.first().map(String::as_str) {
+            Some("test") => true,
+            Some("cfg") => span.idents[1..].iter().any(|s| s == "test"),
+            _ => false,
+        };
+        if !is_test {
+            continue;
+        }
+        // skip any further attributes stacked on the same item
+        let mut j = span.end;
+        while j < toks.len() {
+            if toks[j].text == "#" && j + 1 < toks.len() && toks[j + 1].text == "[" {
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    if toks[j].text == "[" {
+                        depth += 1;
+                    } else if toks[j].text == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                j += 1;
+                continue;
+            }
+            break;
+        }
+        // scan to the item's opening `{` (or a `;` ending a braceless
+        // item like `mod name;`)
+        let mut k = j;
+        let mut open = None;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.kind == TokKind::Punct && t.text == "{" {
+                open = Some(k);
+                break;
+            }
+            if t.kind == TokKind::Punct && t.text == ";" {
+                break;
+            }
+            k += 1;
+        }
+        let Some(open_idx) = open else {
+            let last = k.min(toks.len().saturating_sub(1));
+            regions.push((toks[span.start].line, toks[last].line));
+            continue;
+        };
+        let mut depth = 0i32;
+        let mut m = open_idx;
+        while m < toks.len() {
+            let t = &toks[m];
+            if t.kind == TokKind::Punct && t.text == "{" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            m += 1;
+        }
+        let last = m.min(toks.len().saturating_sub(1));
+        regions.push((toks[span.start].line, toks[last].line));
+    }
+    regions
+}
+
+/// Is `line` inside any of the (inclusive) `regions`?
+pub fn in_regions(line: u32, regions: &[(u32, u32)]) -> bool {
+    regions.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    #[test]
+    fn cfg_test_module_span_boundaries() {
+        let src = "\
+pub fn lib_code() {}          // line 1
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn inner() { x.unwrap(); }
+}
+
+pub fn more_lib_code() {}     // line 9
+";
+        let (toks, _) = lex(src);
+        let regions = test_regions(&toks);
+        // the cfg(test) attr starts at line 3, the module closes line 7
+        assert!(in_regions(3, &regions));
+        assert!(in_regions(6, &regions));
+        assert!(in_regions(7, &regions));
+        assert!(!in_regions(1, &regions));
+        assert!(!in_regions(9, &regions));
+    }
+
+    #[test]
+    fn test_attr_fn_span() {
+        let src = "\
+fn a() {}
+#[test]
+fn t() {
+    boom();
+}
+fn b() {}
+";
+        let (toks, _) = lex(src);
+        let regions = test_regions(&toks);
+        assert!(in_regions(2, &regions));
+        assert!(in_regions(4, &regions));
+        assert!(!in_regions(1, &regions));
+        assert!(!in_regions(6, &regions));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_region() {
+        let src = "#[cfg(feature = \"x\")]\nfn f() { y.unwrap(); }\n";
+        let (toks, _) = lex(src);
+        assert!(test_regions(&toks).is_empty());
+    }
+
+    #[test]
+    fn stacked_attrs_still_find_the_item() {
+        let src = "\
+#[test]
+#[ignore]
+fn t() {
+    boom();
+}
+";
+        let (toks, _) = lex(src);
+        let regions = test_regions(&toks);
+        assert!(in_regions(4, &regions));
+    }
+}

@@ -61,6 +61,8 @@ impl Sha256 {
         }
         while data.len() >= 64 {
             let (block, rest) = data.split_at(64);
+            #[allow(clippy::expect_used)]
+            // fedmrn-lint: allow(L1) -- split_at(64) guarantees the slice is exactly 64 bytes
             self.compress(block.try_into().expect("64-byte block"));
             data = rest;
         }
@@ -94,6 +96,8 @@ impl Sha256 {
     fn compress(&mut self, block: &[u8; 64]) {
         let mut w = [0u32; 64];
         for (i, chunk) in block.chunks_exact(4).enumerate() {
+            #[allow(clippy::expect_used)]
+            // fedmrn-lint: allow(L1) -- chunks_exact(4) guarantees each chunk is 4 bytes
             w[i] = u32::from_be_bytes(chunk.try_into().expect("4 bytes"));
         }
         for i in 16..64 {

@@ -140,6 +140,7 @@ fn decode_hex64(s: &str) -> Option<[u8; 32]> {
     for (i, chunk) in s.as_bytes().chunks_exact(2).enumerate() {
         let hi = (chunk[0] as char).to_digit(16)?;
         let lo = (chunk[1] as char).to_digit(16)?;
+        // fedmrn-lint: allow(L2) -- hi/lo are hex digits < 16, so (hi << 4) | lo < 256
         out[i] = ((hi << 4) | lo) as u8;
     }
     Some(out)

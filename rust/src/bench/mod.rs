@@ -313,7 +313,7 @@ impl Bench {
                 error: Some(error),
             }
         } else {
-            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            samples.sort_by(f64::total_cmp);
             Measurement {
                 suite: self.suite.clone(),
                 name: name.to_string(),
@@ -327,8 +327,9 @@ impl Bench {
                 error: None,
             }
         };
+        let idx = self.results.len();
         self.results.push(m);
-        self.results.last().unwrap()
+        &self.results[idx]
     }
 
     /// Merge this runner's rows into `path` by row key

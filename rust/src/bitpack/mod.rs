@@ -388,6 +388,7 @@ pub fn words_to_bytes(bits: &[u64], out: &mut Vec<u8>) {
 
 /// Parse little-endian bytes back to words. A payload whose length is not
 /// word-aligned is a transport error, not a panic.
+#[allow(clippy::unwrap_used)] // the one unwrap is length-guaranteed, see below
 pub fn bytes_to_words(bytes: &[u8]) -> Result<Vec<u64>> {
     if bytes.len() % 8 != 0 {
         return Err(Error::Codec(format!(
@@ -397,6 +398,7 @@ pub fn bytes_to_words(bytes: &[u8]) -> Result<Vec<u64>> {
     }
     Ok(bytes
         .chunks_exact(8)
+        // fedmrn-lint: allow(L1) -- chunks_exact(8) guarantees each chunk is 8 bytes
         .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
         .collect())
 }

@@ -36,8 +36,9 @@ impl Args {
                     // value is the next token unless it is another option
                     match it.peek() {
                         Some(next) if !next.starts_with("--") => {
-                            let v = it.next().unwrap();
-                            opts.insert(stripped.to_string(), v);
+                            if let Some(v) = it.next() {
+                                opts.insert(stripped.to_string(), v);
+                            }
                         }
                         _ => {
                             opts.insert(stripped.to_string(), "true".to_string());

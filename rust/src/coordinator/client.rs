@@ -45,6 +45,14 @@ pub struct TrainOutcome {
     pub n_samples: usize,
 }
 
+/// Pull the next literal out of a step's output list, as a typed error
+/// (never a panic) if the computation returned fewer outputs than the
+/// registry promised.
+fn next_out(outs: &mut std::vec::IntoIter<Literal>, step: &str) -> Result<Literal> {
+    outs.next()
+        .ok_or_else(|| Error::Xla(format!("step `{step}` returned fewer outputs than expected")))
+}
+
 /// Mini-batches as literals, rebuilt per round from the client's shard.
 pub struct Batches {
     pub x: Vec<Literal>,
@@ -135,8 +143,8 @@ pub fn train_plain(
                 &[&w_lit, x, y, &lr_lit],
             )?;
             let mut outs = outs.into_iter();
-            w_lit = outs.next().unwrap();
-            loss_sum += scalar_f32(&outs.next().unwrap())? as f64;
+            w_lit = next_out(&mut outs, "plain_step")?;
+            loss_sum += scalar_f32(&next_out(&mut outs, "plain_step")?)? as f64;
             steps += 1;
         }
     }
@@ -194,8 +202,8 @@ pub fn train_mrn(
                 ],
             )?;
             let mut outs = outs.into_iter();
-            u_lit = outs.next().unwrap();
-            loss_sum += scalar_f32(&outs.next().unwrap())? as f64;
+            u_lit = next_out(&mut outs, "mrn_step")?;
+            loss_sum += scalar_f32(&next_out(&mut outs, "mrn_step")?)? as f64;
         }
     }
     // Finalize: sample the wire mask from the final u (line 20).
@@ -273,8 +281,8 @@ pub fn train_fedpm(
                 &[&w_lit, &s_lit, x, y, &lit_key(rng.next_u64()), &lr_lit],
             )?;
             let mut outs = outs.into_iter();
-            s_lit = outs.next().unwrap();
-            loss_sum += scalar_f32(&outs.next().unwrap())? as f64;
+            s_lit = next_out(&mut outs, "fedpm_step")?;
+            loss_sum += scalar_f32(&next_out(&mut outs, "fedpm_step")?)? as f64;
             steps += 1;
         }
     }

@@ -152,6 +152,7 @@ where
             }
             match j {
                 Some(jv) => {
+                    // fedmrn-lint: allow(L7) -- a job panic is recovered at the join below and surfaced as Error::Worker, not propagated
                     let h = s.spawn(move || job(jv));
                     pending = Some((r, p, h));
                 }

@@ -73,6 +73,7 @@ impl Dataset {
     /// Gather features of sample `i` into `out`.
     pub fn copy_feats_f32(&self, i: usize, out: &mut [f32]) {
         let Features::F32(v) = &self.feats else {
+            // fedmrn-lint: allow(L1) -- type-dispatch contract: callers select the copy_* variant by the registry's feature dtype; a mismatch is a programming error, not a data error
             panic!("copy_feats_f32 on i32 features");
         };
         out.copy_from_slice(&v[i * self.sample_len..(i + 1) * self.sample_len]);
@@ -80,6 +81,7 @@ impl Dataset {
 
     pub fn copy_feats_i32(&self, i: usize, out: &mut [i32]) {
         let Features::I32(v) = &self.feats else {
+            // fedmrn-lint: allow(L1) -- type-dispatch contract: same invariant as copy_feats_f32 above
             panic!("copy_feats_i32 on f32 features");
         };
         out.copy_from_slice(&v[i * self.sample_len..(i + 1) * self.sample_len]);

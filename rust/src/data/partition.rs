@@ -136,17 +136,21 @@ fn rebalance_min(shards: &mut [Vec<usize>], min_per_client: usize) {
         let Some(small) = shards.iter().position(|s| s.len() < min_per_client) else {
             break;
         };
-        let (big, big_len) = shards
+        let Some((big, big_len)) = shards
             .iter()
             .enumerate()
             .max_by_key(|(_, s)| s.len())
             .map(|(i, s)| (i, s.len()))
-            .unwrap();
+        else {
+            break; // no shards at all
+        };
         if big == small || big_len <= min_per_client {
             break; // cannot rebalance further
         }
-        let moved = shards[big].pop().unwrap();
-        shards[small].push(moved);
+        match shards[big].pop() {
+            Some(moved) => shards[small].push(moved),
+            None => break,
+        }
     }
 }
 
@@ -164,7 +168,7 @@ pub fn skew(ds: &Dataset, shards: &[Vec<usize>]) -> f64 {
         for &i in shard {
             counts[ds.partition_label(i)] += 1;
         }
-        total += counts.iter().max().copied().unwrap() as f64 / shard.len() as f64;
+        total += counts.iter().max().copied().unwrap_or(0) as f64 / shard.len() as f64;
         counted += 1;
     }
     total / counted.max(1) as f64

@@ -33,7 +33,9 @@ pub fn fig5(rt: &Runtime, args: &mut Args) -> Result<()> {
         for dist_name in &dists {
             let mut vals = Vec::new();
             for &alpha in &ALPHAS {
-                let dist = NoiseDist::parse(dist_name, alpha).unwrap();
+                let dist = NoiseDist::parse(dist_name, alpha).ok_or_else(|| {
+                    crate::Error::Config(format!("unknown noise dist `{dist_name}`"))
+                })?;
                 let (config, split) = dataset_split(&dataset, &o)?;
                 let res = run_arm(rt, &config, split, m, part, &o, Some(dist))?;
                 eprintln!(

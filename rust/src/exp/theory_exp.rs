@@ -29,7 +29,7 @@ pub fn theory_exp(args: &mut Args) -> Result<()> {
     ] {
         let res = simulate(&prob, method, rounds, s_local, n_clients / 2, seed);
         let half = res.err[rounds / 2];
-        let last = *res.err.last().unwrap();
+        let last = res.err.last().copied().unwrap_or(f64::NAN);
         md.push_str(&format!(
             "| {name} | {last:.3e} | {:.2} | {:.2} |\n",
             half / last,

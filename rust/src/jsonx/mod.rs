@@ -307,7 +307,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<()> {
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -339,7 +339,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut entries = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -350,7 +350,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let v = self.value()?;
             entries.push((key, v));
@@ -367,7 +367,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -390,7 +390,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {

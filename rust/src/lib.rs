@@ -23,6 +23,7 @@
 //! cargo run --release -- exp table1 --preset quick
 //! ```
 
+pub mod analysis;
 pub mod artifact;
 pub mod bench;
 pub mod bitpack;

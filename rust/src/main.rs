@@ -6,6 +6,7 @@
 //! fedmrn exp <table1|fig4|fig5|fig6|table3|dropout|theory|all> [--flags]
 //! fedmrn bench  [--flags]             hot-path kernel + aggregation bench
 //! fedmrn loadgen [--flags]            TCP loopback load generator
+//! fedmrn lint   [--root DIR] [--json] project-invariant static analyzer
 //! ```
 //!
 //! Run `fedmrn help` for the flag reference. Requires `make artifacts`
@@ -92,6 +93,18 @@ USAGE:
                --timeout-secs is the per-connection and per-round
                deadline (env FEDMRN_NET_TIMEOUT_SECS overrides;
                default 30)
+  fedmrn lint [--root DIR] [--json]
+               run the project-invariant static analyzer (docs/LINT.md)
+               over the repo's Rust sources (rust/src rust/tests benches
+               examples; vendored code skipped). Rules L1–L8 cover
+               panic-free lib code, lossless wire casts, size-checked
+               allocations, meter discipline, SAFETY comments, gated
+               #[target_feature], catch_unwind on spawns, and
+               deterministic serialization. Findings print as file:line
+               (or a JSON document with --json) and exit nonzero; a
+               finding is suppressible only by
+               `// fedmrn-lint: allow(RULE) -- <reason>`. --root
+               defaults to the repo root this binary was built from
   fedmrn artifact inspect|verify|sign PATH [--key FILE]
   fedmrn artifact pack DIR FILE... [--kind NAME] [--key FILE]
                signed-manifest tooling (docs/ARTIFACT.md). PATH is a
@@ -150,6 +163,7 @@ fn real_main() -> Result<()> {
         Some("bench") => cmd_bench(&mut args),
         Some("loadgen") => cmd_loadgen(&mut args),
         Some("artifact") => cmd_artifact(&mut args),
+        Some("lint") => cmd_lint(&mut args),
         Some(other) => Err(Error::Config(format!(
             "unknown subcommand {other:?} (try `fedmrn help`)"
         ))),
@@ -414,6 +428,34 @@ fn cmd_artifact(args: &mut Args) -> Result<()> {
         other => Err(Error::Config(format!(
             "unknown artifact verb {other:?} (inspect|verify|sign|pack)"
         ))),
+    }
+}
+
+/// `fedmrn lint`: run the project-invariant analyzer over the tree.
+/// Exits nonzero (via the `Err` path in `main`) when findings exist,
+/// so CI can gate on it directly.
+fn cmd_lint(args: &mut Args) -> Result<()> {
+    use fedmrn::analysis;
+    let root = match args.take_opt_str("root") {
+        Some(r) => PathBuf::from(r),
+        // the repo root this binary was built from (crate dir is rust/)
+        None => PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/..")),
+    };
+    let json = args.take_bool("json", false)?;
+    args.finish()?;
+    let findings = analysis::lint_tree(&root)?;
+    if json {
+        println!("{}", analysis::render_json(&findings));
+    } else {
+        print!("{}", analysis::render_text(&findings));
+    }
+    if findings.is_empty() {
+        if !json {
+            eprintln!("lint: clean ({})", root.display());
+        }
+        Ok(())
+    } else {
+        Err(Error::Config(format!("lint: {} finding(s)", findings.len())))
     }
 }
 

@@ -233,7 +233,7 @@ pub fn serve_round(
     }
     let st = state.into_inner().unwrap_or_else(PoisonError::into_inner);
     let RoundState { drv, rejected, mut ingest_ms } = st;
-    ingest_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ingest_ms.sort_by(f64::total_cmp);
     let books = drv.finish(w)?;
     Ok(ServeReport {
         promised: books.promised,
@@ -268,7 +268,9 @@ fn handle_conn(
     let who = Cell::new(usize::MAX);
     let served = conn_guard(spec.round, &who, || serve_conn(&mut stream, spec, state, &who));
     if let Err(e) = served {
-        send_err(&mut stream, spec.round as u32, &e);
+        // no Result context here: saturate rather than truncate the
+        // round tag on the best-effort error frame
+        send_err(&mut stream, u32::try_from(spec.round).unwrap_or(u32::MAX), &e);
         lock(state).rejected += 1;
         // the connection drops here; the accept loop keeps serving
     }
@@ -282,7 +284,7 @@ fn serve_conn(
     who: &Cell<usize>,
 ) -> Result<()> {
     let cap = frame::max_uplink_payload(spec.d);
-    let round = spec.round as u32;
+    let round = frame::wire_u32("round", spec.round as u64)?;
     // slot-auth state: one assignment per handshake, consumed by the
     // uplink that follows it (connection reuse = HELLO again)
     let mut assigned: Option<u32> = None;
@@ -320,10 +322,11 @@ fn serve_conn(
                     ))
                 })?;
                 who.set(client as usize);
-                assigned = Some(slot as u32);
+                let slot_w = frame::wire_u32("slot", slot as u64)?;
+                assigned = Some(slot_w);
                 frame::write_frame(
                     stream,
-                    &Frame::new(FrameKind::Assign, round, slot as u32, Vec::new()),
+                    &Frame::new(FrameKind::Assign, round, slot_w, Vec::new()),
                 )?;
             }
             FrameKind::Uplink => {
@@ -387,7 +390,7 @@ impl NetClient {
         Ok(NetClient {
             stream,
             cap: frame::max_uplink_payload(d),
-            round: round as u32,
+            round: frame::wire_u32("round", round as u64)?,
         })
     }
 
@@ -407,17 +410,17 @@ impl NetClient {
                 client.to_le_bytes().to_vec(),
             ),
         )?;
-        let assign = self.expect(FrameKind::Assign)?;
+        let assign = self.expect_frame(FrameKind::Assign)?;
         let slot = assign.slot;
         frame::write_frame(
             &mut self.stream,
             &Frame::new(FrameKind::Uplink, self.round, slot, payload_bytes.to_vec()),
         )?;
-        self.expect(FrameKind::Ok)?;
+        self.expect_frame(FrameKind::Ok)?;
         Ok(slot)
     }
 
-    fn expect(&mut self, want: FrameKind) -> Result<Frame> {
+    fn expect_frame(&mut self, want: FrameKind) -> Result<Frame> {
         let f = frame::read_frame(&mut self.stream, self.cap)?.ok_or_else(|| {
             Error::Net("server closed the connection mid-exchange".into())
         })?;

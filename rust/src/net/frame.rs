@@ -108,6 +108,7 @@ impl FrameKind {
     }
 
     pub fn wire(self) -> u16 {
+        // fedmrn-lint: allow(L2) -- enum discriminants are the fixed wire tags 1..=6, always in u16 range
         self as u16
     }
 }
@@ -138,7 +139,9 @@ impl Frame {
     /// bug, not a wire condition — asserted, mirroring the
     /// [`Payload::try_encode`] count contract at the layer below.
     pub fn to_bytes(&self) -> Vec<u8> {
+        #[allow(clippy::expect_used)]
         let len = u32::try_from(self.payload.len())
+            // fedmrn-lint: allow(L1) -- documented panic contract (doc comment above): in-process caller bug, mirrors Payload::try_encode
             .expect("frame payload exceeds the u32 wire framing");
         let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
         out.extend_from_slice(&MAGIC.to_le_bytes());
@@ -160,6 +163,15 @@ pub struct Header {
     pub round: u32,
     pub slot: u32,
     pub payload_len: usize,
+}
+
+/// Checked narrowing for header fields: values that must fit the u32
+/// wire framing (rounds, slots, counts) go through here so an
+/// out-of-range value is a typed [`Error::Net`], never a silent
+/// truncation. `usize` callers widen with `as u64`, which is lossless.
+pub fn wire_u32(what: &str, v: u64) -> Result<u32> {
+    u32::try_from(v)
+        .map_err(|_| Error::Net(format!("{what} {v} exceeds the u32 wire framing")))
 }
 
 /// Hard per-connection frame-size cap for rounds at dimension `d`,
@@ -204,7 +216,9 @@ pub fn split_uplink_prefix(payload: &[u8]) -> Result<(f64, u32, u32, &[u8])> {
             payload.len()
         )));
     }
-    let train_loss = f64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let mut loss_bytes = [0u8; 8];
+    loss_bytes.copy_from_slice(&payload[0..8]);
+    let train_loss = f64::from_le_bytes(loss_bytes);
     let retries = LittleEndian::read_u32(&payload[8..12]);
     let corrupt_rejected = LittleEndian::read_u32(&payload[12..16]);
     Ok((train_loss, retries, corrupt_rejected, &payload[UPLINK_PREFIX_LEN..]))

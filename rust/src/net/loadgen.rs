@@ -40,6 +40,7 @@ use crate::coordinator::driver::{
     UplinkSink, UplinkSource,
 };
 use crate::coordinator::faults::{DropReason, FaultModel, FaultPlan, ParticipationPolicy};
+use crate::coordinator::parallel::catch_worker;
 use crate::coordinator::registry;
 use crate::coordinator::{Method, RunConfig};
 use crate::error::{Error, Result};
@@ -75,6 +76,7 @@ pub fn synth_uplink(run_seed: u64, round: usize, client: usize, d: usize) -> Pay
     }
     Payload::MaskedSeed {
         seed,
+        // fedmrn-lint: allow(L2) -- LoadgenOpts::validate rejects d > u32::MAX before any uplink is synthesized
         d: d as u32,
         layout: NoiseLayout::Serial,
         bits,
@@ -140,6 +142,12 @@ impl LoadgenOpts {
             return Err(Error::Config(
                 "loadgen: d, clients, conns and rounds must all be >= 1".into(),
             ));
+        }
+        if u32::try_from(self.d).is_err() {
+            return Err(Error::Config(format!(
+                "loadgen: d {} exceeds the u32 payload header",
+                self.d
+            )));
         }
         self.faults.validate()?;
         self.policy.validate()
@@ -307,7 +315,9 @@ fn run_per_round(opts: &LoadgenOpts) -> Result<LoadgenReport> {
                     let plan = &plan;
                     let timeout = net.timeout;
                     s.spawn(move || {
-                        run_worker(addr, opts, round, c, plan, timeout)
+                        catch_worker(c, round, || {
+                            run_worker(addr, opts, round, c, plan, timeout)
+                        })
                     })
                 })
                 .collect();
@@ -380,21 +390,24 @@ fn run_session(opts: &LoadgenOpts) -> Result<LoadgenReport> {
         let handles: Vec<_> = (0..opts.clients)
             .map(|client| {
                 s.spawn(move || -> Result<()> {
-                    let mut cl =
-                        SessionClient::connect(addr, d, client as u64, timeout)?;
-                    cl.serve(seed, &faults, |round, _slot, _w| {
-                        Ok((
-                            synth_uplink(seed, round, client, d).try_encode()?,
-                            f64::NAN,
-                        ))
-                    })?;
-                    Ok(())
+                    catch_worker(client, 0, || {
+                        let mut cl =
+                            SessionClient::connect(addr, d, client as u64, timeout)?;
+                        cl.serve(seed, &faults, |round, _slot, _w| {
+                            Ok((
+                                synth_uplink(seed, round, client, d).try_encode()?,
+                                f64::NAN,
+                            ))
+                        })?;
+                        Ok(())
+                    })
                 })
             })
             .collect();
         for round in 0..rounds {
             let spec = round_spec(opts, round);
             let mut agg = strategy.aggregator(&cfg);
+            // fedmrn-lint: allow(L4) -- session-mode loadgen is its own engine loop; begin_round here mirrors the in-process engine's documented meter ordering
             meter.begin_round();
             let mut drv =
                 RoundDriver::begin(&spec, agg.as_mut(), &mut meter, false)?;
@@ -439,7 +452,7 @@ fn finish_report(
     report.wall_secs = wall;
     report.uplinks_per_s = report.delivered as f64 / wall;
     report.bytes_per_s = report.payload_bytes as f64 / wall;
-    all_ingest_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all_ingest_ms.sort_by(f64::total_cmp);
     if !all_ingest_ms.is_empty() {
         report.p50_ingest_ms = stats::percentile(&all_ingest_ms, 0.50);
         report.p99_ingest_ms = stats::percentile(&all_ingest_ms, 0.99);
@@ -462,13 +475,14 @@ struct WireSink<'c> {
 
 impl UplinkSink for WireSink<'_> {
     fn offer(&mut self, slot: usize, bytes: &[u8], _books: &AttemptBooks) -> Result<Offer> {
-        let cl = match self.conn {
-            Some(cl) => cl,
-            None => {
-                *self.conn =
-                    Some(NetClient::connect(self.addr, self.d, self.round, self.timeout)?);
-                self.conn.as_mut().unwrap()
-            }
+        let cl = match self.conn.take() {
+            Some(cl) => self.conn.insert(cl),
+            None => self.conn.insert(NetClient::connect(
+                self.addr,
+                self.d,
+                self.round,
+                self.timeout,
+            )?),
         };
         match cl.deliver(slot as u64, bytes) {
             Ok(_) => Ok(Offer::Accepted),

@@ -139,16 +139,17 @@ impl SessionServer {
         state: &Mutex<RoundShared<'_, '_>>,
     ) -> Result<TcpStream> {
         let cap = frame::max_session_payload(spec.d);
-        let round = spec.round as u32;
+        let round = frame::wire_u32("session round", spec.round as u64)?;
+        let slot_w = frame::wire_u32("session slot", slot as u64)?;
         frame::write_frame(
             &mut stream,
-            &Frame::v2(FrameKind::Assign, round, slot as u32, assign.to_vec()),
+            &Frame::v2(FrameKind::Assign, round, slot_w, assign.to_vec()),
         )?;
         loop {
             let f = frame::read_frame(&mut stream, cap)?.ok_or_else(|| {
                 Error::Net("session: client closed mid-round".into())
             })?;
-            if f.version != frame::FRAME_V2 || f.round != round || f.slot != slot as u32 {
+            if f.version != frame::FRAME_V2 || f.round != round || f.slot != slot_w {
                 return Err(Error::Net(format!(
                     "session: expected a v2 frame for round {round} slot {slot}, \
                      got v{} round {} slot {}",
@@ -179,7 +180,7 @@ impl SessionServer {
                         None => {
                             frame::write_frame(
                                 &mut stream,
-                                &Frame::v2(FrameKind::Ok, round, slot as u32, Vec::new()),
+                                &Frame::v2(FrameKind::Ok, round, slot_w, Vec::new()),
                             )?;
                             return Ok(stream);
                         }
@@ -193,7 +194,7 @@ impl SessionServer {
                                 &Frame::v2(
                                     FrameKind::Err,
                                     round,
-                                    slot as u32,
+                                    slot_w,
                                     msg[..cut].to_vec(),
                                 ),
                             )?;
@@ -218,7 +219,7 @@ impl SessionServer {
                     }
                     frame::write_frame(
                         &mut stream,
-                        &Frame::v2(FrameKind::Ok, round, slot as u32, Vec::new()),
+                        &Frame::v2(FrameKind::Ok, round, slot_w, Vec::new()),
                     )?;
                     return Ok(stream);
                 }
@@ -308,7 +309,7 @@ impl SessionServer {
         hello_round: u32,
     ) -> Result<()> {
         let cap = frame::max_uplink_payload(spec.d);
-        let round = spec.round as u32;
+        let round = frame::wire_u32("session round", spec.round as u64)?;
         let mut pending_hello = Some((client, hello_round));
         let mut assigned: Option<u32> = None;
         loop {
@@ -376,10 +377,11 @@ impl SessionServer {
                     "client {client} is not in round {round}'s selection"
                 ))
             })?;
-            assigned = Some(slot as u32);
+            let slot_w = frame::wire_u32("session slot", slot as u64)?;
+            assigned = Some(slot_w);
             frame::write_frame(
                 &mut stream,
-                &Frame::new(FrameKind::Assign, round, slot as u32, Vec::new()),
+                &Frame::new(FrameKind::Assign, round, slot_w, Vec::new()),
             )?;
         }
     }
@@ -497,8 +499,8 @@ impl UplinkSink for SessionSink<'_> {
     fn offer(&mut self, _slot: usize, bytes: &[u8], books: &AttemptBooks) -> Result<Offer> {
         let mut payload = frame::encode_uplink_prefix(
             self.train_loss,
-            books.retries as u32,
-            books.corrupt_rejected as u32,
+            frame::wire_u32("uplink retries", books.retries)?,
+            frame::wire_u32("uplink corrupt_rejected", books.corrupt_rejected)?,
         )
         .to_vec();
         payload.extend_from_slice(bytes);
@@ -624,8 +626,11 @@ impl SessionClient {
                             f.round,
                             f.slot,
                             frame::encode_drop_payload(
-                                books.retries as u32,
-                                books.corrupt_rejected as u32,
+                                frame::wire_u32("drop retries", books.retries)?,
+                                frame::wire_u32(
+                                    "drop corrupt_rejected",
+                                    books.corrupt_rejected,
+                                )?,
                                 r.name(),
                             ),
                         ),

@@ -234,6 +234,11 @@ mod avx2 {
 
     use super::{Xoshiro256pp, LANES};
 
+    // SAFETY: `#[target_feature(enable = "avx2")]` makes this fn unsafe to
+    // call; the only call site is behind the `use_avx2()` runtime detection
+    // gate in `fill_u64_interleaved`, so the AVX2 intrinsics below never
+    // execute on a CPU that lacks them. The intrinsics themselves operate
+    // on stack arrays and in-bounds slice indices only.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn fill(lanes: &mut [Xoshiro256pp], out: &mut [u64]) {
         debug_assert_eq!(lanes.len(), LANES);

@@ -38,6 +38,15 @@ pub struct Runtime {
     pub exec_count: AtomicU64,
 }
 
+/// Lock the executable cache, recovering the map from a poisoned lock:
+/// every critical section is a whole-entry get/insert, so the contents
+/// stay valid even if a panicking thread held the guard.
+fn lock_cache(
+    m: &Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+) -> std::sync::MutexGuard<'_, HashMap<String, Arc<xla::PjRtLoadedExecutable>>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 impl Runtime {
     /// Load the registry and spin up the CPU PJRT client.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
@@ -90,7 +99,7 @@ impl Runtime {
         step: &str,
     ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let key = format!("{config}__{step}");
-        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+        if let Some(exe) = lock_cache(&self.cache).get(&key) {
             return Ok(exe.clone());
         }
         let meta = self.registry.step(config, step)?;
@@ -101,7 +110,7 @@ impl Runtime {
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Arc::new(self.client.compile(&comp)?);
-        self.cache.lock().unwrap().insert(key, exe.clone());
+        lock_cache(&self.cache).insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -141,7 +150,7 @@ impl Runtime {
 
     /// Number of compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        lock_cache(&self.cache).len()
     }
 }
 

@@ -70,7 +70,7 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 
 pub fn median(xs: &[f64]) -> f64 {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile(&v, 0.5)
 }
 

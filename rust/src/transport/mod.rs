@@ -103,7 +103,9 @@ impl Payload {
     /// (instead of truncating) if a count field exceeds the `u32` wire
     /// framing — which no in-range model dimension can produce.
     pub fn encode(&self) -> Vec<u8> {
+        #[allow(clippy::expect_used)]
         self.check_wire_counts()
+            // fedmrn-lint: allow(L1) -- documented panic contract (doc comment above): trusted in-process payloads; wire-facing callers use try_encode
             .expect("payload count exceeds the u32 wire framing");
         self.encode_unchecked()
     }
@@ -113,7 +115,7 @@ impl Payload {
         match self {
             Payload::Dense(v) => {
                 out.push(TAG_DENSE);
-                push_u32(&mut out, v.len() as u32);
+                push_u32(&mut out, v.len() as u32); // fedmrn-lint: allow(L2) -- count validated by check_wire_counts before encode_unchecked runs
                 push_f32s(&mut out, v);
             }
             Payload::MaskedSeed { seed, d, layout, bits } => {
@@ -127,21 +129,21 @@ impl Payload {
                 out.push(TAG_SIGN);
                 push_u64(&mut out, *seed);
                 push_u32(&mut out, *d);
-                push_u32(&mut out, scales.len() as u32);
+                push_u32(&mut out, scales.len() as u32); // fedmrn-lint: allow(L2) -- count validated by check_wire_counts before encode_unchecked runs
                 push_u64s(&mut out, bits);
                 push_f32s(&mut out, scales);
             }
             Payload::Ternary { d, codes, scales } => {
                 out.push(TAG_TERN);
                 push_u32(&mut out, *d);
-                push_u32(&mut out, scales.len() as u32);
+                push_u32(&mut out, scales.len() as u32); // fedmrn-lint: allow(L2) -- count validated by check_wire_counts before encode_unchecked runs
                 push_u64s(&mut out, codes);
                 push_f32s(&mut out, scales);
             }
             Payload::Sparse { d, idx, val } => {
                 out.push(TAG_SPARSE);
                 push_u32(&mut out, *d);
-                push_u32(&mut out, idx.len() as u32);
+                push_u32(&mut out, idx.len() as u32); // fedmrn-lint: allow(L2) -- count validated by check_wire_counts before encode_unchecked runs
                 for &i in idx {
                     push_u32(&mut out, i);
                 }

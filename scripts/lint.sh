@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Run the full lint surface locally, in the same order CI gates on it:
+#
+#   1. `fedmrn lint`  — the project-invariant analyzer (docs/LINT.md):
+#      rules L1–L8 over rust/src, rust/tests, benches, examples.
+#      Findings are file:line and the exit is nonzero; suppress only
+#      with `// fedmrn-lint: allow(RULE) -- <reason>`.
+#   2. cargo fmt --check and cargo clippy -D warnings, picking up the
+#      workspace [lints] table (deny unwrap/expect in lib code) and
+#      clippy.toml (tests may unwrap).
+#
+# Extra flags are forwarded to `fedmrn lint`, e.g.:
+#   scripts/lint.sh --json
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: no Rust toolchain on PATH — cannot run the lint gate" >&2
+    exit 1
+fi
+
+cargo build --release
+cargo run --release -- lint "$@"
+
+cargo fmt --all --check
+cargo clippy --all-targets -- -D warnings
+
+echo "lint gate: clean"
